@@ -1,0 +1,69 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): the paper's
+//! experiment-1 workload — 10-client federated training of the 784-200-10
+//! MLP — run for a few hundred iterations on the MNIST-like stream, with
+//! the full scheme lineup (SGD, SLAQ, QRR p=0.3/0.1), logging the loss
+//! curve and writing every figure series to `results/e2e/`.
+//!
+//! ```sh
+//! cargo run --release --example e2e_mnist            # 300 iterations
+//! cargo run --release --example e2e_mnist -- 1000    # paper scale
+//! ```
+
+use qrr::config::{ExperimentConfig, PPolicy, SchemeConfig};
+use qrr::coordinator::Coordinator;
+use qrr::fl::metrics::markdown_table;
+
+fn main() -> anyhow::Result<()> {
+    qrr::util::logging::init();
+    let iters: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let schemes = [
+        SchemeConfig::Sgd,
+        SchemeConfig::Slaq,
+        SchemeConfig::Qrr(PPolicy::Fixed(0.3)),
+        SchemeConfig::Qrr(PPolicy::Fixed(0.1)),
+    ];
+
+    let mut rows = Vec::new();
+    for scheme in schemes {
+        let mut cfg = ExperimentConfig::table1_default(); // 10 clients, β=8, α=0.001, batch 512
+        cfg.iters = iters;
+        cfg.train_n = 20_000; // synthetic stream size (paper: 60k MNIST)
+        cfg.test_n = 4_000;
+        cfg.eval_every = (iters / 12).max(1);
+        cfg.scheme = scheme;
+        println!("\n=== {} ({iters} iterations, 10 clients) ===", scheme.label());
+        let t = qrr::util::Timer::start();
+        let report = Coordinator::from_config(&cfg)?.run()?;
+        println!("wall time {:.1}s", t.secs());
+
+        // loss curve to stdout (the "few hundred steps, log the loss")
+        print!("loss curve:");
+        for e in &report.history.evals {
+            print!("  {}:{:.3}", e.iter + 1, e.loss);
+        }
+        println!();
+        qrr::experiments::write_run_outputs(
+            "results/e2e",
+            &format!("e2e_{}", scheme.label().replace(['(', ')', '=', '.'], "_")),
+            &report,
+        )?;
+        rows.push(report.history.table_row());
+    }
+
+    println!("\n=== E2E summary (paper Table I shape) ===\n{}", markdown_table(&rows));
+    let sgd_bits = rows[0].bits as f64;
+    for r in &rows[2..] {
+        println!(
+            "{}: {:.2}% of SGD bits, accuracy {:+.2}% vs SGD",
+            r.algorithm,
+            100.0 * r.bits as f64 / sgd_bits,
+            100.0 * (r.accuracy - rows[0].accuracy)
+        );
+    }
+    println!("\nseries written to results/e2e/*.csv");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time python package: JAX models (L2) + Pallas kernels (L1) and
+the AOT lowering pipeline that emits ``artifacts/*.hlo.txt`` for the Rust
+runtime. Never imported on the request path."""

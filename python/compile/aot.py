@@ -1,0 +1,150 @@
+"""AOT lowering: JAX/Pallas → HLO **text** → ``artifacts/``.
+
+Python runs exactly once (``make artifacts``); the Rust runtime then
+loads + compiles the HLO through PJRT and python never appears on the
+request path.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and aot_recipe.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--models mlp,cnn,vgg] [--batches 32,512] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quantize import quantize_pallas
+from .kernels.rangefinder import rangefinder_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unpacks one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model_fn(model: str, fn_name: str, batch: int) -> str:
+    """Lower <model>_{grad|eval} at a static batch size to HLO text."""
+    fn = M.grad_fn(model) if fn_name == "grad" else M.eval_fn(model)
+    d = M.input_dim(model)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in M.param_shapes(model)]
+    specs += [
+        jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        jax.ShapeDtypeStruct((batch, M.NUM_CLASSES), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.float32),
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def lower_quantize(n: int, beta: int = 8) -> str:
+    """Standalone LAQ quantize kernel artifact: (g[n], prev[n]) →
+    (radius, codes[n], new_val[n])."""
+
+    def fn(g, prev):
+        return quantize_pallas(g, prev, beta=beta)
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_rangefinder(m: int, n: int, l: int) -> str:
+    """Standalone range-finder artifact: (a[m,n], omega[n,l]) → y[m,l]."""
+
+    def fn(a, omega):
+        return (rangefinder_pallas(a, omega),)
+
+    return to_hlo_text(
+        jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, l), jnp.float32),
+        )
+    )
+
+
+def build(out_dir: str, models, batches, quick: bool) -> dict:
+    """Lower everything; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    def emit(name: str, text: str, **meta):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": fname, **meta}
+        artifacts.append(entry)
+        print(f"  {name:<24} {len(text) / 1024:8.1f} KiB")
+
+    for model in models:
+        for fn_name in ("grad", "eval"):
+            for b in batches:
+                # the big-batch VGG graphs are heavy to lower; skip in quick mode
+                if quick and b > 64:
+                    continue
+                name = f"{model}_{fn_name}_b{b}"
+                print(f"lowering {name} …", flush=True)
+                emit(
+                    name,
+                    lower_model_fn(model, fn_name, b),
+                    model=model,
+                    fn=fn_name,
+                    batch=b,
+                )
+
+    # standalone kernel artifacts (runtime integration tests + compress path)
+    print("lowering kernel artifacts …", flush=True)
+    emit("quantize_16384", lower_quantize(16384), fn="quantize", batch=16384)
+    emit("rangefinder_256x192_l24", lower_rangefinder(256, 192, 24), fn="rangefinder")
+
+    manifest = {
+        "version": 1,
+        "jax": jax.__version__,
+        "artifacts": artifacts,
+        "models": {
+            m: {"params": [[n, list(s)] for n, s in M.SPECS[m]["params"]]} for m in models
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts + manifest.json to {out_dir}")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,vgg")
+    ap.add_argument("--batches", default="32,512")
+    ap.add_argument(
+        "--quick", action="store_true", help="small batches only (CI / tests)"
+    )
+    args = ap.parse_args(argv)
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    for m in models:
+        if m not in M.SPECS:
+            print(f"unknown model {m!r}", file=sys.stderr)
+            return 2
+    batches = sorted({int(b) for b in args.batches.split(",")})
+    build(args.out_dir, models, batches, args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

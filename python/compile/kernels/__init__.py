@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (interpret=True for CPU-PJRT execution) and
+their pure-jnp oracles (``ref.py``)."""
+
+from .matmul import matmul_pallas
+from .quantize import quantize_pallas
+from .rangefinder import rangefinder_pallas
+
+__all__ = ["matmul_pallas", "quantize_pallas", "rangefinder_pallas"]

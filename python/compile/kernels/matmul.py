@@ -1,0 +1,96 @@
+"""Blocked Pallas matmul — the MXU-shaped GEMM behind the models' dense
+layers (DESIGN.md §3 Hardware-Adaptation).
+
+TPU mapping: (BM, BN) output tiles with a BK-deep accumulation loop;
+BlockSpec expresses the HBM→VMEM schedule the paper's GPU formulation
+did with thread blocks. Block sizes default to 128×128×128: one f32
+output tile (64 KiB) + two input tiles fit comfortably in ~16 MiB VMEM
+and feed the 128×128 MXU systolic array. ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls; numerics are
+identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile sizes.
+BM, BK, BN = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: O[i,j] += X[i,k] @ Y[k,j].
+
+    The output tile is revisited along the k axis (its index_map ignores
+    k), so it doubles as the VMEM accumulator — zeroed at k == 0.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def _matmul_pallas_impl(x, y, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """C = x @ y for f32 matrices of any shape (internally padded to the
+    block grid, result sliced back)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    # shrink blocks for small operands so the grid is never empty
+    bm_ = min(bm, _ceil_to(m, 8))
+    bk_ = min(bk, _ceil_to(k, 8))
+    bn_ = min(bn, _ceil_to(n, 8))
+    mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_, kp // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+# pallas_call has no automatic differentiation rule; define the VJP with
+# the same blocked kernel so the backward GEMMs (dX = dC·Yᵀ, dY = Xᵀ·dC)
+# also run on the MXU-shaped Pallas path.
+@jax.custom_vjp
+def matmul_pallas(x, y):
+    """Differentiable blocked Pallas matmul: C = x @ y (f32)."""
+    return _matmul_pallas_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_pallas_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, dc):
+    x, y = res
+    dx = _matmul_pallas_impl(dc, y.T)
+    dy = _matmul_pallas_impl(x.T, dc)
+    return dx, dy
+
+
+matmul_pallas.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    """Estimated per-step VMEM residency of the kernel (DESIGN.md §7):
+    one X tile, one Y tile and the resident O/accumulator tile, f32."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

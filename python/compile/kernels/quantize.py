@@ -1,0 +1,78 @@
+"""Pallas LAQ grid quantizer (paper eq. (15)–(17)) — the elementwise
+hot-spot of every upload, mapped to the TPU VPU.
+
+Given the gradient ``g``, the previous quantized value ``prev`` and the
+scalar radius ``R = max|g − prev|`` (computed by the caller — a global
+reduction belongs in XLA, not inside a tile kernel), each block computes
+
+    codes   = floor((g − prev + R) / (2τR) + 1/2)   clipped to [0, 2^β−1]
+    new_val = prev + 2τR·codes − R
+
+with τ = 1/(2^β − 1). Blocks are 1-D slices of the flattened tensor.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _quantize_kernel(g_ref, p_ref, r_ref, o_codes, o_val, *, beta: int):
+    levels = (1 << beta) - 1
+    tau = 1.0 / levels
+    r = r_ref[0]
+    g = g_ref[...]
+    p = p_ref[...]
+    step = 2.0 * tau * r
+    # degenerate grid (R == 0): center code, value = prev
+    safe_step = jnp.where(step > 0.0, step, 1.0)
+    t = (g - p + r) / safe_step + 0.5
+    codes = jnp.clip(jnp.floor(t), 0.0, float(levels))
+    codes = jnp.where(step > 0.0, codes, float(levels // 2))
+    o_codes[...] = codes
+    o_val[...] = p + step * codes - r
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block"))
+def quantize_pallas(g, prev, *, beta: int = 8, block: int = BLOCK):
+    """Quantize ``g`` against ``prev``; returns ``(radius, codes, new_val)``
+    with ``codes`` as f32 integers in [0, 2^β−1].
+
+    Works on any shape (flattened internally)."""
+    shape = g.shape
+    gf = g.reshape(-1).astype(jnp.float32)
+    pf = prev.reshape(-1).astype(jnp.float32)
+    n = gf.shape[0]
+    radius = jnp.max(jnp.abs(gf - pf))
+    blk = min(block, _ceil_to(n, 8))
+    npad = _ceil_to(n, blk)
+    gp = jnp.pad(gf, (0, npad - n))
+    pp = jnp.pad(pf, (0, npad - n))
+    r1 = radius.reshape(1)
+    codes, val = pl.pallas_call(
+        functools.partial(_quantize_kernel, beta=beta),
+        grid=(npad // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            # the radius is a broadcast scalar: same (single) block everywhere
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+        ],
+        interpret=True,
+    )(gp, pp, r1)
+    return radius, codes[:n].reshape(shape), val[:n].reshape(shape)

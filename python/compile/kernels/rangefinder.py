@@ -1,0 +1,24 @@
+"""Pallas randomized-SVD range finder (DESIGN.md §3).
+
+The GEMM-dominant core of randomized truncated SVD — the TPU-friendly
+reformulation of the paper's per-layer SVD: sketch ``Y = A·Ω`` and
+project ``B = Qᵀ·A``. Both are straight (tall×skinny / skinny×wide)
+GEMMs over the blocked Pallas matmul kernel; the tiny ν×ν finishing
+factorization stays on the host (L3).
+"""
+
+import jax
+
+from .matmul import matmul_pallas
+
+
+@jax.jit
+def rangefinder_pallas(a, omega):
+    """Sketch Y = A @ Ω (m×n · n×l)."""
+    return matmul_pallas(a, omega)
+
+
+@jax.jit
+def project_pallas(q, a):
+    """Project B = Qᵀ @ A (l×m · m×n)."""
+    return matmul_pallas(q.T, a)

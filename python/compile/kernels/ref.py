@@ -1,0 +1,33 @@
+"""Pure-jnp correctness oracles for the Pallas kernels — the CORE
+correctness signal: pytest sweeps the kernels against these references
+(hypothesis over shapes/dtypes) before anything is lowered."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul (f32)."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def quantize_ref(g, prev, beta: int = 8):
+    """LAQ quantizer, paper eq. (15)–(17), straight-line jnp.
+
+    Returns (radius, codes(f32), new_val)."""
+    g = g.astype(jnp.float32)
+    prev = prev.astype(jnp.float32)
+    levels = (1 << beta) - 1
+    tau = 1.0 / levels
+    radius = jnp.max(jnp.abs(g - prev))
+    step = 2.0 * tau * radius
+    safe = jnp.where(step > 0.0, step, 1.0)
+    t = (g - prev + radius) / safe + 0.5
+    codes = jnp.clip(jnp.floor(t), 0.0, float(levels))
+    codes = jnp.where(step > 0.0, codes, float(levels // 2))
+    new_val = prev + step * codes - radius
+    return radius, codes, new_val
+
+
+def rangefinder_ref(a, omega):
+    """Sketch Y = A @ Ω."""
+    return matmul_ref(a, omega)

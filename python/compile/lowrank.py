@@ -1,0 +1,112 @@
+"""Build-time JAX implementations of the paper's compression operator ℂ:
+randomized truncated SVD (over the Pallas range-finder) and Tucker/HOSVD.
+
+These mirror ``rust/src/compress`` and serve three purposes:
+1. pytest cross-checks the two implementations' *behaviour* (reconstruction
+   error bounds) so the Rust engine isn't self-certifying,
+2. the ``qrr_compress`` artifacts let the Rust runtime run compression
+   through PJRT for fixed shapes (integration test), and
+3. they document how ℂ maps onto TPU GEMMs (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rangefinder import project_pallas, rangefinder_pallas
+
+
+def randomized_svd(a, k: int, *, oversample: int = 8, power_iters: int = 2, seed: int = 0):
+    """Truncated SVD via the randomized range finder (Halko et al.).
+
+    Returns (u[m,k], s[k], v[n,k])."""
+    m, n = a.shape
+    l = min(k + oversample, min(m, n))
+    key = jax.random.PRNGKey(seed)
+    omega = jax.random.normal(key, (n, l), jnp.float32)
+    y = rangefinder_pallas(a, omega)  # Pallas GEMM
+    q, _ = jnp.linalg.qr(y)
+    for _ in range(power_iters):
+        z = project_pallas(q, a).T  # Aᵀ Q, n×l
+        qz, _ = jnp.linalg.qr(z)
+        y = rangefinder_pallas(a, qz)
+        q, _ = jnp.linalg.qr(y)
+    b = project_pallas(q, a)  # l×n
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    return u[:, :k], s[:k], vt[:k, :].T
+
+
+def svd_reconstruct(u, s, v):
+    """U diag(s) Vᵀ."""
+    return (u * s[None, :]) @ v.T
+
+
+def _unfold(x, mode: int):
+    """Mode-n matricization, row-major ordering of the other modes."""
+    perm = (mode,) + tuple(i for i in range(x.ndim) if i != mode)
+    return jnp.transpose(x, perm).reshape(x.shape[mode], -1)
+
+
+def _fold(m, mode: int, shape):
+    """Inverse of :func:`_unfold`."""
+    other = tuple(s for i, s in enumerate(shape) if i != mode)
+    full = m.reshape((shape[mode],) + other)
+    inv = [0] * len(shape)
+    src = 1
+    for i in range(len(shape)):
+        if i == mode:
+            inv[i] = 0
+        else:
+            inv[i] = src
+            src += 1
+    return jnp.transpose(full, inv)
+
+
+def mode_n_product(x, mode: int, f):
+    """X ×_n F (paper eq. (10))."""
+    unf = _unfold(x, mode)
+    out = f @ unf
+    shape = list(x.shape)
+    shape[mode] = f.shape[0]
+    return _fold(out, mode, shape)
+
+
+def tucker_hosvd(x, ranks):
+    """HOSVD: per-mode truncated factor matrices + core (paper eq. (9)).
+
+    Returns (core, [F_1…F_N])."""
+    factors = []
+    for mode, r in enumerate(ranks):
+        unf = _unfold(x, mode)
+        u, _, _ = jnp.linalg.svd(unf, full_matrices=False)
+        factors.append(u[:, :r])
+    core = x
+    for mode, f in enumerate(factors):
+        core = mode_n_product(core, mode, f.T)
+    return core, factors
+
+
+def tucker_reconstruct(core, factors):
+    """𝔊 ×₁ F₁ … ×_N F_N (paper eq. (25))."""
+    out = core
+    for mode, f in enumerate(factors):
+        out = mode_n_product(out, mode, f)
+    return out
+
+
+def qrr_compress_matrix(g, prev_u, prev_s, prev_v, *, k: int, beta: int = 8, seed: int = 0):
+    """One full client-side QRR step for a matrix gradient, as a single
+    jittable computation: truncated SVD + LAQ quantization of each factor
+    against its previous quantized state.
+
+    Returns (radius_u, codes_u, qu, radius_s, codes_s, qs,
+    radius_v, codes_v, qv)."""
+    from .kernels.quantize import quantize_pallas
+
+    u, s, v = randomized_svd(g, k, seed=seed)
+    ru, cu, qu = quantize_pallas(u, prev_u, beta=beta)
+    rs, cs, qs = quantize_pallas(s, prev_s, beta=beta)
+    rv, cv, qv = quantize_pallas(v, prev_v, beta=beta)
+    return (ru, cu, qu, rs, cs, qs, rv, cv, qv)

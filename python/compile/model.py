@@ -1,0 +1,213 @@
+"""Layer-2 JAX models — the paper's three architectures, with forward,
+weighted-loss gradients and evaluation, matching the Rust-side
+``ModelSpec`` layout exactly (names, shapes, traversal order).
+
+Dense layers run on the Layer-1 Pallas matmul kernel so the blocked GEMM
+lowers into the same HLO the Rust runtime executes; convolutions use
+XLA's native conv (on TPU that is already an MXU op — DESIGN.md §3).
+
+Calling convention shared with ``rust/src/runtime/model.rs``:
+
+* ``grad``: ``(param_0…param_{P-1}, x[B,D], y_onehot[B,K], w[B])`` →
+  ``(loss, grad_0…grad_{P-1})`` — w-weighted mean cross-entropy.
+* ``eval``: same inputs → ``(loss_sum, correct)`` (w-weighted sums).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_pallas
+
+# Set to False to lower the dense layers with plain jnp instead of the
+# Pallas kernel (debug / ablation).
+USE_PALLAS = True
+
+NUM_CLASSES = 10
+
+SPECS = {
+    "mlp": {
+        "input_shape": (784,),
+        "params": [
+            ("fc1.weight", (200, 784)),
+            ("fc1.bias", (200,)),
+            ("fc2.weight", (10, 200)),
+            ("fc2.bias", (10,)),
+        ],
+    },
+    "cnn": {
+        "input_shape": (1, 28, 28),
+        "params": [
+            ("conv1.weight", (16, 1, 3, 3)),
+            ("conv1.bias", (16,)),
+            ("conv2.weight", (32, 16, 3, 3)),
+            ("conv2.bias", (32,)),
+            ("fc.weight", (10, 32 * 14 * 14)),
+            ("fc.bias", (10,)),
+        ],
+    },
+    "vgg": {
+        "input_shape": (3, 32, 32),
+        "params": [
+            ("conv1.weight", (32, 3, 3, 3)),
+            ("conv1.bias", (32,)),
+            ("conv2.weight", (64, 32, 3, 3)),
+            ("conv2.bias", (64,)),
+            ("conv3.weight", (128, 64, 3, 3)),
+            ("conv3.bias", (128,)),
+            ("fc.weight", (10, 128 * 4 * 4)),
+            ("fc.bias", (10,)),
+        ],
+    },
+}
+
+
+def param_shapes(model: str):
+    """Ordered parameter shapes for a model."""
+    return [shape for _, shape in SPECS[model]["params"]]
+
+
+def input_dim(model: str) -> int:
+    d = 1
+    for s in SPECS[model]["input_shape"]:
+        d *= s
+    return d
+
+
+def init_params(model: str, seed: int = 0):
+    """He-style init (biases zero), mirroring the Rust initializer."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for _, shape in SPECS[model]["params"]:
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for s in shape[1:]:
+                fan_in *= s
+            key, sub = jax.random.split(key)
+            std = (2.0 / fan_in) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# ------------------------------------------------------------- layers
+
+
+def dense(x, w, b):
+    """y = x @ Wᵀ + b via the Pallas GEMM (W stored [out, in])."""
+    if USE_PALLAS:
+        return matmul_pallas(x, w.T) + b
+    return x @ w.T + b
+
+
+def conv2d_same(x, w, b):
+    """3×3 stride-1 same-padding conv, NCHW."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2(x):
+    """2×2 max-pool, stride 2, NCHW."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+# ------------------------------------------------------------ forward
+
+
+def forward(model: str, params, x):
+    """Logits [B, 10] from flat inputs [B, D]."""
+    b = x.shape[0]
+    if model == "mlp":
+        w1, b1, w2, b2 = params
+        h = jax.nn.relu(dense(x, w1, b1))
+        return dense(h, w2, b2)
+    if model == "cnn":
+        w1, b1, w2, b2, wf, bf = params
+        img = x.reshape(b, 1, 28, 28)
+        h = jax.nn.relu(conv2d_same(img, w1, b1))
+        h = jax.nn.relu(conv2d_same(h, w2, b2))
+        h = maxpool2(h)
+        return dense(h.reshape(b, -1), wf, bf)
+    if model == "vgg":
+        (w1, b1, w2, b2, w3, b3, wf, bf) = params
+        img = x.reshape(b, 3, 32, 32)
+        h = maxpool2(jax.nn.relu(conv2d_same(img, w1, b1)))
+        h = maxpool2(jax.nn.relu(conv2d_same(h, w2, b2)))
+        h = maxpool2(jax.nn.relu(conv2d_same(h, w3, b3)))
+        return dense(h.reshape(b, -1), wf, bf)
+    raise ValueError(f"unknown model {model!r}")
+
+
+def _weighted_xent(logits, y_onehot, w):
+    """(weighted loss sum, weight sum)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_row = -jnp.sum(y_onehot * logp, axis=-1)
+    return jnp.sum(w * per_row), jnp.sum(w)
+
+
+def loss_fn(model: str, params, x, y_onehot, w):
+    """w-weighted mean cross-entropy (padding rows contribute nothing)."""
+    logits = forward(model, params, x)
+    s, n = _weighted_xent(logits, y_onehot, w)
+    return s / jnp.maximum(n, 1.0)
+
+
+def grad_fn(model: str):
+    """The artifact body: (params…, x, y, w) → (loss, grads…)."""
+
+    def f(*args):
+        n_params = len(SPECS[model]["params"])
+        params = list(args[:n_params])
+        x, y_onehot, w = args[n_params:]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(model, ps, x, y_onehot, w)
+        )(params)
+        return (loss, *grads)
+
+    return f
+
+
+def eval_fn(model: str):
+    """The eval artifact body: (params…, x, y, w) → (loss_sum, correct)."""
+
+    def f(*args):
+        n_params = len(SPECS[model]["params"])
+        params = list(args[:n_params])
+        x, y_onehot, w = args[n_params:]
+        logits = forward(model, params, x)
+        s, _ = _weighted_xent(logits, y_onehot, w)
+        pred = jnp.argmax(logits, axis=-1)
+        label = jnp.argmax(y_onehot, axis=-1)
+        correct = jnp.sum(w * (pred == label).astype(jnp.float32))
+        return (s, correct)
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_grad(model: str):
+    """Cached jitted grad fn (tests)."""
+    return jax.jit(grad_fn(model))
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_eval(model: str):
+    """Cached jitted eval fn (tests)."""
+    return jax.jit(eval_fn(model))

@@ -1,0 +1,63 @@
+"""AOT pipeline: lowering produces parseable HLO text and a coherent
+manifest (the Rust side's load path is tested in rust/tests/)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_lower_mlp_grad_has_hlo_text(tmp_path):
+    text = aot.lower_model_fn("mlp", "grad", 4)
+    assert "HloModule" in text
+    assert len(text) > 1000
+    # all parameters + x, y, w appear as entry parameters
+    n_inputs = len(M.SPECS["mlp"]["params"]) + 3
+    assert text.count("parameter(") >= n_inputs
+
+
+def test_lower_eval_smaller_than_grad():
+    g = aot.lower_model_fn("mlp", "grad", 4)
+    e = aot.lower_model_fn("mlp", "eval", 4)
+    assert "HloModule" in e
+    assert len(e) < len(g)  # no backward pass
+
+
+def test_quantize_artifact_lowering():
+    text = aot.lower_quantize(64, beta=8)
+    assert "HloModule" in text
+
+
+def test_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build(out, ["mlp"], [8], quick=False)
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["artifacts"] == manifest["artifacts"]
+    names = {a["name"] for a in on_disk["artifacts"]}
+    assert "mlp_grad_b8" in names
+    assert "mlp_eval_b8" in names
+    assert "quantize_16384" in names
+    for a in on_disk["artifacts"]:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            assert "HloModule" in f.read(200)
+    # model param layout recorded for the Rust side
+    assert on_disk["models"]["mlp"]["params"][0] == ["fc1.weight", [200, 784]]
+
+
+def test_quick_mode_skips_big_batches(tmp_path):
+    out = str(tmp_path / "q")
+    manifest = aot.build(out, ["mlp"], [8, 512], quick=True)
+    batches = {a["batch"] for a in manifest["artifacts"] if a.get("model") == "mlp"}
+    assert 512 not in batches
+    assert 8 in batches
+
+
+def test_cli_rejects_unknown_model(capsys):
+    rc = aot.main(["--models", "transformer", "--out-dir", "/tmp/x"])
+    assert rc == 2

@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against the
+reference is the core signal gating AOT lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_pallas, quantize_pallas, rangefinder_pallas
+from compile.kernels.ref import matmul_ref, quantize_ref, rangefinder_ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    r = np.random.RandomState(seed)
+    x = r.randn(m, k).astype(np.float32)
+    y = r.randn(k, n).astype(np.float32)
+    got = np.array(matmul_pallas(jnp.array(x), jnp.array(y)))
+    want = np.array(matmul_ref(jnp.array(x), jnp.array(y)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    mkn=st.tuples(st.integers(100, 300), st.integers(100, 300), st.integers(1, 64)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_beyond_one_block(mkn, seed):
+    # shapes larger than one 128-block: exercises the k-accumulation loop
+    m, k, n = mkn
+    r = np.random.RandomState(seed)
+    x = r.randn(m, k).astype(np.float32)
+    y = r.randn(k, n).astype(np.float32)
+    got = np.array(matmul_pallas(jnp.array(x), jnp.array(y)))
+    np.testing.assert_allclose(got, x @ y, rtol=2e-4, atol=2e-3)
+
+
+def test_matmul_block_shape_ablation():
+    # different tilings must give the same numbers
+    from compile.kernels.matmul import _matmul_pallas_impl
+
+    r = np.random.RandomState(0)
+    x = jnp.array(r.randn(200, 150).astype(np.float32))
+    y = jnp.array(r.randn(150, 90).astype(np.float32))
+    base = np.array(_matmul_pallas_impl(x, y))
+    for bm, bk, bn in [(32, 32, 32), (64, 128, 32), (128, 64, 128)]:
+        other = np.array(_matmul_pallas_impl(x, y, bm=bm, bk=bk, bn=bn))
+        np.testing.assert_allclose(base, other, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_flows_through_custom_vjp():
+    import jax
+
+    r = np.random.RandomState(1)
+    x = jnp.array(r.randn(20, 30).astype(np.float32))
+    y = jnp.array(r.randn(30, 10).astype(np.float32))
+
+    def f(a, b):
+        return jnp.sum(matmul_pallas(a, b) ** 2)
+
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    # reference gradients: d/dA sum((AB)^2) = 2(AB)Bᵀ
+    c = np.array(x) @ np.array(y)
+    np.testing.assert_allclose(np.array(gx), 2 * c @ np.array(y).T, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.array(gy), 2 * np.array(x).T @ c, rtol=1e-3, atol=1e-3)
+
+
+@SET
+@given(
+    n=st.integers(1, 5000),
+    beta=st.sampled_from([1, 2, 4, 8, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(n, beta, seed):
+    r = np.random.RandomState(seed)
+    g = r.randn(n).astype(np.float32)
+    prev = r.randn(n).astype(np.float32)
+    rad_p, codes_p, val_p = quantize_pallas(jnp.array(g), jnp.array(prev), beta=beta)
+    rad_r, codes_r, val_r = quantize_ref(jnp.array(g), jnp.array(prev), beta=beta)
+    np.testing.assert_allclose(float(rad_p), float(rad_r), rtol=1e-6)
+    np.testing.assert_allclose(np.array(val_p), np.array(val_r), rtol=1e-4, atol=1e-5)
+    # codes may differ by 1 at exact grid boundaries; bound the fraction
+    diff = np.abs(np.array(codes_p) - np.array(codes_r))
+    assert (diff > 0.5).mean() < 1e-3
+
+
+@SET
+@given(
+    n=st.integers(1, 2000),
+    beta=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_error_bound_eq18(n, beta, seed):
+    # paper eq. (18): ||g - Q(g)||_inf <= tau * R
+    r = np.random.RandomState(seed)
+    g = r.randn(n).astype(np.float32)
+    prev = r.randn(n).astype(np.float32)
+    rad, _, val = quantize_pallas(jnp.array(g), jnp.array(prev), beta=beta)
+    tau = 1.0 / ((1 << beta) - 1)
+    err = np.abs(np.array(val) - g).max()
+    assert err <= tau * float(rad) * (1 + 1e-4) + 1e-7
+
+
+def test_quantize_zero_innovation():
+    g = jnp.array(np.array([1.0, -2.0, 3.0], np.float32))
+    rad, codes, val = quantize_pallas(g, g, beta=8)
+    assert float(rad) == 0.0
+    np.testing.assert_allclose(np.array(val), np.array(g))
+    assert set(np.array(codes).tolist()) == {127.0}
+
+
+def test_quantize_codes_within_beta_bits():
+    r = np.random.RandomState(3)
+    g = jnp.array(r.randn(512).astype(np.float32))
+    p = jnp.array(r.randn(512).astype(np.float32))
+    for beta in (1, 4, 8):
+        _, codes, _ = quantize_pallas(g, p, beta=beta)
+        assert np.array(codes).max() <= (1 << beta) - 1
+        assert np.array(codes).min() >= 0
+
+
+@SET
+@given(
+    m=st.integers(1, 100),
+    n=st.integers(1, 100),
+    l=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rangefinder_matches_ref(m, n, l, seed):
+    r = np.random.RandomState(seed)
+    a = r.randn(m, n).astype(np.float32)
+    omega = r.randn(n, l).astype(np.float32)
+    got = np.array(rangefinder_pallas(jnp.array(a), jnp.array(omega)))
+    want = np.array(rangefinder_ref(jnp.array(a), jnp.array(omega)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_within_budget():
+    # DESIGN.md §7: default tiles must fit VMEM (~16 MiB) comfortably
+    from compile.kernels.matmul import vmem_footprint_bytes
+
+    assert vmem_footprint_bytes() == 4 * 3 * 128 * 128
+    assert vmem_footprint_bytes() < 1 << 20  # < 1 MiB: triple-buffer headroom

@@ -1,0 +1,118 @@
+"""Compression-operator correctness on the python side, cross-checking
+behaviour with the Rust engine (same error bounds, eq. (7))."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.lowrank import (
+    mode_n_product,
+    qrr_compress_matrix,
+    randomized_svd,
+    svd_reconstruct,
+    tucker_hosvd,
+    tucker_reconstruct,
+)
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def lowrank_matrix(m, n, r, seed):
+    rs = np.random.RandomState(seed)
+    u = rs.randn(m, r).astype(np.float32)
+    v = rs.randn(r, n).astype(np.float32)
+    return jnp.array(u @ v)
+
+
+@SET
+@given(
+    m=st.integers(20, 120),
+    n=st.integers(20, 120),
+    r=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_randomized_svd_recovers_lowrank(m, n, r, seed):
+    a = lowrank_matrix(m, n, r, seed)
+    u, s, v = randomized_svd(a, r, seed=seed)
+    rec = svd_reconstruct(u, s, v)
+    err = float(jnp.linalg.norm(a - rec) / jnp.maximum(jnp.linalg.norm(a), 1e-9))
+    assert err < 1e-2, err
+
+
+def test_svd_singular_values_descend():
+    a = lowrank_matrix(50, 40, 8, 0)
+    _, s, _ = randomized_svd(a, 8, seed=1)
+    s = np.array(s)
+    assert (np.diff(s) <= 1e-4).all()
+
+
+def test_truncation_error_eq7():
+    # build known spectrum, truncate, check ||err||_F^2 == tail energy
+    rs = np.random.RandomState(2)
+    qa, _ = np.linalg.qr(rs.randn(30, 5))
+    qb, _ = np.linalg.qr(rs.randn(25, 5))
+    sig = np.array([8.0, 4.0, 2.0, 1.0, 0.5], np.float32)
+    a = jnp.array((qa * sig) @ qb.T, jnp.float32)
+    u, s, v = randomized_svd(a, 2, oversample=3, power_iters=3, seed=3)
+    rec = svd_reconstruct(u, s, v)
+    err2 = float(jnp.sum((a - rec) ** 2))
+    tail = float((sig[2:] ** 2).sum())
+    assert abs(err2 - tail) / tail < 0.05, (err2, tail)
+
+
+def test_mode_n_product_identity():
+    rs = np.random.RandomState(4)
+    x = jnp.array(rs.randn(4, 5, 3).astype(np.float32))
+    for mode, dim in enumerate(x.shape):
+        y = mode_n_product(x, mode, jnp.eye(dim, dtype=jnp.float32))
+        np.testing.assert_allclose(np.array(y), np.array(x), rtol=1e-5)
+
+
+def test_tucker_exact_rank_reconstruction():
+    rs = np.random.RandomState(5)
+    core = rs.randn(3, 2, 2, 2).astype(np.float32)
+    factors = []
+    dims = (8, 6, 3, 3)
+    x = jnp.array(core)
+    for mode, d in enumerate(dims):
+        f, _ = np.linalg.qr(rs.randn(d, core.shape[mode]))
+        f = jnp.array(f.astype(np.float32))
+        factors.append(f)
+        x = mode_n_product(x, mode, f)
+    core2, factors2 = tucker_hosvd(x, [3, 2, 2, 2])
+    rec = tucker_reconstruct(core2, factors2)
+    err = float(jnp.linalg.norm(x - rec) / jnp.linalg.norm(x))
+    assert err < 1e-3, err
+
+
+def test_tucker_error_decreases_with_rank():
+    rs = np.random.RandomState(6)
+    x = jnp.array(rs.randn(12, 8, 3, 3).astype(np.float32))
+    errs = []
+    for p in (0.2, 0.5, 1.0):
+        ranks = [max(1, int(np.ceil(p * d))) for d in x.shape]
+        core, factors = tucker_hosvd(x, ranks)
+        rec = tucker_reconstruct(core, factors)
+        errs.append(float(jnp.linalg.norm(x - rec)))
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[2] < 1e-3
+
+
+def test_qrr_compress_matrix_pipeline():
+    # full ℂ∘ℚ client step: factors quantized against zero state
+    a = lowrank_matrix(40, 30, 3, 7)
+    k = 6
+    zu = jnp.zeros((40, k), jnp.float32)
+    zs = jnp.zeros((k,), jnp.float32)
+    zv = jnp.zeros((30, k), jnp.float32)
+    (ru, cu, qu, rs_, cs, qs, rv, cv, qv) = qrr_compress_matrix(
+        a, zu, zs, zv, k=k, beta=8
+    )
+    rec = svd_reconstruct(qu, qs, qv)
+    err = float(jnp.linalg.norm(a - rec) / jnp.linalg.norm(a))
+    # rank-3 signal, rank-6 kept, 8-bit factors: small reconstruction error
+    assert err < 0.1, err
+    for c in (cu, cs, cv):
+        arr = np.array(c)
+        assert arr.min() >= 0 and arr.max() <= 255

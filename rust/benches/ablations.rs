@@ -1,0 +1,93 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. SVD engine: randomized power-iteration depth / oversampling vs
+//!    accuracy and speed (why the default is q=2, o=8).
+//! 2. Quantization depth β: reconstruction error vs wire bits (why the
+//!    paper's β=8 sits at the knee).
+//! 3. Compression fraction p: factor size vs reconstruction error
+//!    (the inequality-(8) regime the paper targets).
+
+use qrr::bench_util::Bench;
+use qrr::compress::{compress_svd, decompress_svd, svd_rank};
+use qrr::linalg::{matmul, qr_thin, svd_truncated, SvdMethod};
+use qrr::qrr::{ClientCodec, QrrConfig, ServerCodec};
+use qrr::tensor::Tensor;
+use qrr::util::Rng;
+
+/// Gradient-shaped matrix: strong low-rank head + broadband tail.
+fn gradient_like(m: usize, n: usize, head: usize, rng: &mut Rng) -> Tensor {
+    let qa = qr_thin(&Tensor::randn(&[m, head], rng)).q;
+    let qb = qr_thin(&Tensor::randn(&[n, head], rng)).q;
+    let mut us = qa.clone();
+    for i in 0..m {
+        for j in 0..head {
+            let v = us.get2(i, j) * 20.0 / (1 + j * j) as f32;
+            us.set2(i, j, v);
+        }
+    }
+    let mut a = qrr::linalg::matmul_nt(&us, &qb);
+    let noise = Tensor::randn(&[m, n], rng);
+    a.axpy(0.05, &noise);
+    a
+}
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut rng = Rng::new(99);
+    let g = gradient_like(200, 784, 12, &mut rng);
+    let k = 40;
+
+    println!("-- ablation 1: randomized SVD (power iters q, oversample o) --");
+    let exact = svd_truncated(&g, k, SvdMethod::Jacobi);
+    let exact_err = g.sub(&exact.reconstruct()).fro_norm();
+    println!("exact Jacobi truncation error: {exact_err:.4} (reference)");
+    for (q, o) in [(0usize, 8usize), (1, 8), (2, 8), (2, 4), (2, 16), (3, 8)] {
+        let m = SvdMethod::Randomized { oversample: o, power_iters: q, seed: 5 };
+        let svd = svd_truncated(&g, k, m);
+        let err = g.sub(&svd.reconstruct()).fro_norm();
+        let r = bench.run(&format!("svd_rand/q{q}_o{o}"), None, || {
+            svd_truncated(&g, k, m)
+        });
+        println!(
+            "    q={q} o={o}: err {err:.4} ({:+.2}% vs exact), {:.1} ms",
+            100.0 * (err - exact_err) / exact_err,
+            r.median.as_secs_f64() * 1e3
+        );
+    }
+
+    println!("\n-- ablation 2: quantization depth beta (QRR p=0.2, MLP fc1 shape) --");
+    let shapes = vec![vec![200usize, 784]];
+    for beta in [2u8, 4, 6, 8, 12] {
+        let cfg = QrrConfig { p: 0.2, beta, method: SvdMethod::Auto };
+        let mut c = ClientCodec::new(&shapes, cfg);
+        let mut s = ServerCodec::new(&shapes, cfg);
+        let msgs = c.encode(std::slice::from_ref(&g));
+        let bits: u64 = msgs.iter().map(|m| m.wire_bits()).sum();
+        let rec = s.decode(&msgs);
+        println!(
+            "    beta={beta:>2}: {:>9} bits ({:5.2}% of raw), rel err {:.4}",
+            bits,
+            100.0 * bits as f64 / (32 * g.len()) as f64,
+            g.rel_err(&rec[0])
+        );
+    }
+
+    println!("\n-- ablation 3: compression fraction p (SVD path, eq. (8) regime) --");
+    for p in [0.05, 0.1, 0.2, 0.3, 0.5] {
+        let nu = svd_rank(200, 784, p);
+        let c = compress_svd(&g, nu, SvdMethod::Auto);
+        let rec = decompress_svd(&c);
+        println!(
+            "    p={p:<4} nu={nu:>3}: factors {:>6} elems ({:5.1}% of raw), rel err {:.4}",
+            c.factor_elems(),
+            100.0 * c.factor_elems() as f64 / g.len() as f64,
+            g.rel_err(&rec)
+        );
+    }
+
+    println!("\n-- ablation 4: GEMM block size (L3 matmul kernel) --");
+    let a = Tensor::randn(&[512, 784], &mut rng);
+    let b = Tensor::randn(&[784, 200], &mut rng);
+    let flops = 2.0 * (512 * 784 * 200) as f64;
+    bench.run("gemm/default_block64", Some(flops), || matmul(&a, &b));
+}

@@ -1,0 +1,15 @@
+//! Paper Table I / Figure 2: MLP on MNIST — SGD vs SLAQ vs QRR(p).
+//! Reduced-scale regeneration; `qrr exp table1 --iters 1000` for the
+//! paper's full scale.
+
+mod common;
+
+fn main() {
+    let mut base = qrr::config::ExperimentConfig::table1_default();
+    base.clients = 10;
+    base.batch = 128;
+    base.train_n = 8_000;
+    base.test_n = 1_500;
+    base.lr_schedule = vec![(0, 0.01)];
+    common::run_table_bench("table1_mlp_mnist", base, &common::fixed_p_lineup());
+}

@@ -1,0 +1,15 @@
+//! Paper Table II / Figure 3: CNN on MNIST (Tucker-compressed conv
+//! gradients). Reduced-scale regeneration; `qrr exp table2 --iters 1000`
+//! for full scale.
+
+mod common;
+
+fn main() {
+    let mut base = qrr::config::ExperimentConfig::table2_default();
+    base.clients = 10;
+    base.batch = 32;
+    base.train_n = 2_000;
+    base.test_n = 400;
+    base.lr_schedule = vec![(0, 0.02)];
+    common::run_table_bench("table2_cnn_mnist", base, &common::fixed_p_lineup());
+}

@@ -1,0 +1,31 @@
+//! Paper Table III / Figure 4: VGG-like CNN on CIFAR-10 with per-client
+//! adaptive p ∈ [0.1, 0.3] and the lr 0.01 → 0.001 schedule.
+//! Reduced-scale regeneration; `qrr exp table3 --iters 2000` for full
+//! scale.
+
+mod common;
+
+use qrr::config::{PPolicy, SchemeConfig};
+
+fn main() {
+    let mut base = qrr::config::ExperimentConfig::table3_default();
+    base.clients = 10;
+    base.batch = 16;
+    base.train_n = 1_200;
+    base.test_n = 200;
+    // keep the two-phase schedule, scaled to the reduced run
+    let iters: u64 = std::env::var("QRR_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    base.lr_schedule = vec![(0, 0.01), (iters / 2, 0.001)];
+    common::run_table_bench(
+        "table3_vgg_cifar10",
+        base,
+        &[
+            SchemeConfig::Sgd,
+            SchemeConfig::Slaq,
+            SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }),
+        ],
+    );
+}

@@ -1,0 +1,61 @@
+//! Shared bench scaffolding: reduced-scale table regeneration used by the
+//! per-table bench binaries. Scale with `QRR_BENCH_ITERS` (default 40).
+
+use qrr::config::{ExperimentConfig, SchemeConfig};
+use qrr::coordinator::Coordinator;
+use qrr::fl::metrics::{markdown_table, TableRow};
+use qrr::util::Timer;
+
+/// Reduced-scale run of one table's scheme lineup; prints timings + the
+/// paper-shaped markdown table and the QRR/SGD bit ratios.
+pub fn run_table_bench(name: &str, base: ExperimentConfig, schemes: &[SchemeConfig]) {
+    let iters: u64 = std::env::var("QRR_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    let mut rows: Vec<TableRow> = Vec::new();
+    println!("== {name} (reduced: {iters} iterations; QRR_BENCH_ITERS to change) ==");
+    for &scheme in schemes {
+        let mut cfg = base.clone();
+        cfg.scheme = scheme;
+        cfg.iters = iters;
+        cfg.eval_every = (iters / 4).max(1);
+        let t = Timer::start();
+        let report = Coordinator::from_config(&cfg)
+            .expect("coordinator")
+            .run()
+            .expect("run");
+        println!(
+            "{:<44} {:>10.2} ms/iter  ({} total)",
+            format!("{name}/{}", scheme.label()),
+            t.millis() / iters as f64,
+            format!("{:.1}s", t.secs()),
+        );
+        rows.push(report.history.table_row());
+    }
+    println!("\n{}", markdown_table(&rows));
+    if let Some(sgd) = rows.iter().find(|r| r.algorithm == "SGD") {
+        for r in rows.iter().filter(|r| r.algorithm.starts_with("QRR")) {
+            println!(
+                "{}: {:.2}% of SGD bits, accuracy {:+.2}%",
+                r.algorithm,
+                100.0 * r.bits as f64 / sgd.bits as f64,
+                100.0 * (r.accuracy - sgd.accuracy)
+            );
+        }
+    }
+    println!();
+}
+
+/// The paper's lineup for tables I & II.
+#[allow(dead_code)] // table3 links this module but uses its own lineup
+pub fn fixed_p_lineup() -> Vec<SchemeConfig> {
+    use qrr::config::PPolicy::*;
+    vec![
+        SchemeConfig::Sgd,
+        SchemeConfig::Slaq,
+        SchemeConfig::Qrr(Fixed(0.3)),
+        SchemeConfig::Qrr(Fixed(0.2)),
+        SchemeConfig::Qrr(Fixed(0.1)),
+    ]
+}

@@ -1,0 +1,24 @@
+//! Paper §III-B: client-side memory and compute overhead of QRR / SLAQ
+//! relative to SGD (paper: QRR 1.2× mem, 3.82× time; SLAQ 13× mem,
+//! 1.08× time).
+
+fn main() {
+    let kind = if std::env::var("QRR_BENCH_FAST").is_ok() {
+        qrr::model::ModelKind::Mlp
+    } else {
+        qrr::model::ModelKind::Vgg // the paper measures on the VGG setup
+    };
+    let batch = if std::env::var("QRR_BENCH_FAST").is_ok() { 16 } else { 64 };
+    let rows = qrr::experiments::overhead::measure(kind, batch).expect("measure");
+    println!("\nscheme        mem(bytes)    mem xSGD   step(ms)   time xSGD  (paper: QRR 1.2x/3.82x, SLAQ 13x/1.08x)");
+    for r in &rows {
+        println!(
+            "{:<12} {:>11} {:>10.2}x {:>10.1} {:>10.2}x",
+            r.scheme,
+            r.mem_bytes,
+            r.mem_ratio,
+            r.step_secs * 1e3,
+            r.time_ratio
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (the offline substitute for `criterion` —
+//! DESIGN.md §4): warmup, fixed-duration sampling, median + MAD, and a
+//! uniform report line so `cargo bench` output is comparable across
+//! benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// case label
+    pub name: String,
+    /// number of timed iterations
+    pub samples: usize,
+    /// median per-iteration time
+    pub median: Duration,
+    /// median absolute deviation
+    pub mad: Duration,
+    /// optional throughput unit count per iteration (elements, bits, …)
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// One human-readable line: `name  median ± mad  (throughput)`.
+    pub fn line(&self) -> String {
+        let med = self.median.as_secs_f64();
+        let mad = self.mad.as_secs_f64();
+        let mut s = format!(
+            "{:<44} {:>12} ± {:>10}  ({} samples)",
+            self.name,
+            fmt_time(med),
+            fmt_time(mad),
+            self.samples
+        );
+        if let Some(u) = self.units_per_iter {
+            if med > 0.0 {
+                s.push_str(&format!("  {:>12}/s", fmt_count(u / med)));
+            }
+        }
+        s
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bench {
+    /// warmup duration before sampling
+    pub warmup: Duration,
+    /// sampling budget
+    pub budget: Duration,
+    /// hard cap on samples
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bench {
+    /// Fast settings for CI (`QRR_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("QRR_BENCH_FAST").is_ok() {
+            Bench {
+                warmup: Duration::from_millis(20),
+                budget: Duration::from_millis(200),
+                max_samples: 20,
+            }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Time `f` repeatedly; `units` (optional) is per-iteration work for
+    /// throughput reporting. Prints and returns the result.
+    pub fn run<T>(&self, name: &str, units: Option<f64>, mut f: impl FnMut() -> T) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // sample
+        let mut times = Vec::with_capacity(64);
+        let s0 = Instant::now();
+        while s0.elapsed() < self.budget && times.len() < self.max_samples {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        if times.is_empty() {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        times.sort_unstable();
+        let median = times[times.len() / 2];
+        let mut devs: Vec<Duration> = times
+            .iter()
+            .map(|&t| if t > median { t - median } else { median - t })
+            .collect();
+        devs.sort_unstable();
+        let mad = devs[devs.len() / 2];
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: times.len(),
+            median,
+            mad,
+            units_per_iter: units,
+        };
+        println!("{}", result.line());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_samples: 50,
+        };
+        let r = b.run("spin", Some(1000.0), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.median > Duration::ZERO);
+        assert!(r.samples > 0);
+        assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains("s"));
+        assert_eq!(fmt_count(2_500_000.0), "2.50M");
+    }
+}

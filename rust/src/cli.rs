@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §4).
+//!
+//! Grammar: `qrr <command> [positional…] [--key value | --flag]…`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// first non-flag token (subcommand)
+    pub command: String,
+    /// remaining non-flag tokens
+    pub positional: Vec<String>,
+    /// `--key value` pairs
+    pub options: BTreeMap<String, String>,
+    /// bare `--flag`s
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (e.g. `std::env::args().skip(1)`).
+    pub fn parse(tokens: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option parsed into any FromStr type.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_and_positional() {
+        let a = parse("exp table1 extra");
+        assert_eq!(a.command, "exp");
+        assert_eq!(a.positional, vec!["table1", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse("exp table1 --iters 50 --out=results");
+        assert_eq!(a.get("iters"), Some("50"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("train --quiet --config cfg.json --verbose");
+        assert!(a.has_flag("quiet"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("config"), Some("cfg.json"));
+    }
+
+    #[test]
+    fn parsed_typed() {
+        let a = parse("exp --iters 50");
+        assert_eq!(a.get_parsed::<u64>("iters").unwrap(), Some(50));
+        assert_eq!(a.get_parsed::<u64>("missing").unwrap(), None);
+        let b = parse("exp --iters abc");
+        assert!(b.get_parsed::<u64>("iters").is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("exp --offset -5");
+        assert_eq!(a.get("offset"), Some("-5"));
+    }
+}

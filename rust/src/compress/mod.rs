@@ -1,0 +1,18 @@
+//! The compression operator ℂ and its inverse ℂ⁻¹ (paper §II-A, §III-A).
+//!
+//! * Matrix gradients (fully connected layers) → truncated SVD with
+//!   rank ν = ⌈p·min(D_out, D_in)⌉ (eq. (20), (22)).
+//! * 4-D tensor gradients (convolution kernels) → Tucker/HOSVD with
+//!   per-mode ranks rᵢ = ⌈p·Iᵢ⌉ (eq. (21), (23)).
+//! * Bias vectors are not compressed, only quantized (eq. (26)).
+//!
+//! [`rank`] computes the paper's rank rules and the wire-size
+//! inequalities (8)/(11) that decide whether compression pays off.
+
+pub mod rank;
+mod svd;
+mod tucker;
+
+pub use rank::{svd_rank, tucker_ranks, svd_is_smaller, tucker_is_smaller};
+pub use svd::{SvdCompressed, compress_svd, decompress_svd};
+pub use tucker::{TuckerCompressed, compress_tucker, decompress_tucker};

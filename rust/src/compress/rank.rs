@@ -1,0 +1,86 @@
+//! Rank-selection rules and communication-efficiency inequalities.
+
+/// SVD rank ν = ⌈p·min(m, n)⌉, clamped to [1, min(m,n)] (paper eq. (22)).
+pub fn svd_rank(m: usize, n: usize, p: f64) -> usize {
+    let r = (p * m.min(n) as f64).ceil() as usize;
+    r.clamp(1, m.min(n))
+}
+
+/// Tucker per-mode ranks rᵢ = ⌈p·Iᵢ⌉, clamped to [1, Iᵢ] (paper eq. (23)).
+pub fn tucker_ranks(dims: &[usize], p: f64) -> Vec<usize> {
+    dims.iter()
+        .map(|&d| ((p * d as f64).ceil() as usize).clamp(1, d))
+        .collect()
+}
+
+/// Element count of the truncated-SVD factors (U, diag Σ, V).
+pub fn svd_factor_elems(m: usize, n: usize, nu: usize) -> usize {
+    m * nu + nu + n * nu
+}
+
+/// Paper inequality (8): is the truncated SVD smaller than the raw matrix?
+pub fn svd_is_smaller(m: usize, n: usize, nu: usize) -> bool {
+    svd_factor_elems(m, n, nu) < m * n
+}
+
+/// Element count of the Tucker factors (core + Fᵢ).
+pub fn tucker_factor_elems(dims: &[usize], ranks: &[usize]) -> usize {
+    assert_eq!(dims.len(), ranks.len());
+    let core: usize = ranks.iter().product();
+    let factors: usize = dims.iter().zip(ranks.iter()).map(|(d, r)| d * r).sum();
+    core + factors
+}
+
+/// Paper inequality (11): is the Tucker form smaller than the raw tensor?
+pub fn tucker_is_smaller(dims: &[usize], ranks: &[usize]) -> bool {
+    tucker_factor_elems(dims, ranks) < dims.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svd_rank_rule() {
+        // paper MLP layer: 200x784, p=0.1 -> ceil(0.1*200)=20
+        assert_eq!(svd_rank(200, 784, 0.1), 20);
+        assert_eq!(svd_rank(200, 784, 0.3), 60);
+        assert_eq!(svd_rank(10, 200, 0.1), 1);
+        // clamped at min dim
+        assert_eq!(svd_rank(4, 6, 2.0), 4);
+        // never zero
+        assert_eq!(svd_rank(100, 100, 0.0), 1);
+    }
+
+    #[test]
+    fn tucker_rank_rule() {
+        // paper conv layer: 32x16x3x3, p=0.3
+        assert_eq!(tucker_ranks(&[32, 16, 3, 3], 0.3), vec![10, 5, 1, 1]);
+        assert_eq!(tucker_ranks(&[32, 16, 3, 3], 0.1), vec![4, 2, 1, 1]);
+    }
+
+    #[test]
+    fn inequality_8_for_paper_shapes() {
+        // 200x784 with p=0.3 (nu=60): 200*60+60+784*60 = 59100 < 156800
+        assert!(svd_is_smaller(200, 784, 60));
+        // full rank never smaller
+        assert!(!svd_is_smaller(200, 784, 200));
+        // tiny output layer 10x200, nu=3: 10*3+3+200*3 = 633 < 2000
+        assert!(svd_is_smaller(10, 200, 3));
+    }
+
+    #[test]
+    fn inequality_11_for_paper_shapes() {
+        let dims = [32usize, 16, 3, 3];
+        let r = tucker_ranks(&dims, 0.3);
+        // 10*5*1*1 + 32*10 + 16*5 + 3 + 3 = 50+320+80+6 = 456 < 4608
+        assert!(tucker_is_smaller(&dims, &r));
+        assert!(!tucker_is_smaller(&dims, &[32, 16, 3, 3]));
+    }
+
+    #[test]
+    fn factor_elem_counts() {
+        assert_eq!(svd_factor_elems(4, 6, 2), 8 + 2 + 12);
+        assert_eq!(tucker_factor_elems(&[4, 4], &[2, 2]), 4 + 8 + 8);
+    }
+}

@@ -1,0 +1,122 @@
+//! Truncated-SVD compression of matrix gradients (paper eq. (20), (24)).
+
+use crate::linalg::{svd_truncated, Svd, SvdMethod};
+use crate::tensor::Tensor;
+
+/// The SVD factors of a compressed matrix gradient, as transmitted.
+#[derive(Debug, Clone)]
+pub struct SvdCompressed {
+    /// m×ν left singular vectors.
+    pub u: Tensor,
+    /// ν singular values (the diagonal of Σ).
+    pub s: Vec<f32>,
+    /// n×ν right singular vectors.
+    pub v: Tensor,
+    /// original shape (m, n)
+    pub shape: (usize, usize),
+}
+
+impl SvdCompressed {
+    /// Rank ν.
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Total f32 elements across factors (U, diag Σ, V) — the quantity
+    /// inequality (8) compares against m·n.
+    pub fn factor_elems(&self) -> usize {
+        self.u.len() + self.s.len() + self.v.len()
+    }
+}
+
+/// ℂ for matrices: truncated SVD keeping `nu` singular values.
+pub fn compress_svd(g: &Tensor, nu: usize, method: SvdMethod) -> SvdCompressed {
+    assert_eq!(g.ndim(), 2, "compress_svd expects a matrix");
+    let (m, n) = (g.shape()[0], g.shape()[1]);
+    let svd = svd_truncated(g, nu, method);
+    SvdCompressed { u: svd.u, s: svd.s, v: svd.v, shape: (m, n) }
+}
+
+/// ℂ⁻¹ for matrices: U·diag(s)·Vᵀ (paper eq. (24)).
+pub fn decompress_svd(c: &SvdCompressed) -> Tensor {
+    let svd = Svd { u: c.u.clone(), s: c.s.clone(), v: c.v.clone() };
+    svd.reconstruct()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::rank::svd_rank;
+    use crate::linalg::qr_thin;
+    use crate::util::Rng;
+
+    /// Low-rank-plus-noise matrix similar to real FC-layer gradients.
+    fn lowrank_noise(m: usize, n: usize, r: usize, noise: f32, rng: &mut Rng) -> Tensor {
+        let qa = qr_thin(&Tensor::randn(&[m, r], rng)).q;
+        let qb = qr_thin(&Tensor::randn(&[n, r], rng)).q;
+        let mut us = qa.clone();
+        for i in 0..m {
+            for j in 0..r {
+                let v = us.get2(i, j) * (10.0 / (1 + j) as f32);
+                us.set2(i, j, v);
+            }
+        }
+        let mut a = crate::linalg::matmul_nt(&us, &qb);
+        let eps = Tensor::randn(&[m, n], rng);
+        a.axpy(noise, &eps);
+        a
+    }
+
+    #[test]
+    fn roundtrip_small_error_on_lowrank_gradient() {
+        let mut rng = Rng::new(50);
+        let g = lowrank_noise(40, 60, 5, 0.01, &mut rng);
+        let nu = svd_rank(40, 60, 0.3); // 12 >= true rank 5
+        let c = compress_svd(&g, nu, SvdMethod::Jacobi);
+        let rec = decompress_svd(&c);
+        assert!(g.rel_err(&rec) < 0.05, "err {}", g.rel_err(&rec));
+    }
+
+    #[test]
+    fn compression_reduces_elements() {
+        let mut rng = Rng::new(51);
+        let g = Tensor::randn(&[200, 784], &mut rng);
+        for p in [0.1, 0.2, 0.3] {
+            let nu = svd_rank(200, 784, p);
+            let c = compress_svd(&g, nu, SvdMethod::Auto);
+            assert!(c.factor_elems() < g.len(), "p={p}");
+            assert_eq!(c.rank(), nu);
+        }
+    }
+
+    #[test]
+    fn decompress_shape_matches_original() {
+        let mut rng = Rng::new(52);
+        let g = Tensor::randn(&[17, 9], &mut rng);
+        let c = compress_svd(&g, 3, SvdMethod::Jacobi);
+        let rec = decompress_svd(&c);
+        assert_eq!(rec.shape(), g.shape());
+    }
+
+    #[test]
+    fn full_rank_is_lossless() {
+        let mut rng = Rng::new(53);
+        let g = Tensor::randn(&[12, 8], &mut rng);
+        let c = compress_svd(&g, 8, SvdMethod::Jacobi);
+        let rec = decompress_svd(&c);
+        assert!(g.rel_err(&rec) < 1e-4);
+    }
+
+    #[test]
+    fn wide_and_tall_matrices() {
+        let mut rng = Rng::new(54);
+        for shape in [[8, 30], [30, 8]] {
+            let g = Tensor::randn(&shape, &mut rng);
+            let c = compress_svd(&g, 4, SvdMethod::Jacobi);
+            assert_eq!(c.u.shape(), &[shape[0], 4]);
+            assert_eq!(c.v.shape(), &[shape[1], 4]);
+            let rec = decompress_svd(&c);
+            assert_eq!(rec.shape(), g.shape());
+        }
+    }
+}

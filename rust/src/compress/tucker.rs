@@ -1,0 +1,158 @@
+//! Tucker (HOSVD) compression of 4-D convolution gradients
+//! (paper eq. (9), (21), (25)).
+//!
+//! HOSVD: factor matrix Fᵢ = the rᵢ leading left singular vectors of the
+//! mode-i unfolding; core 𝔊 = 𝔛 ×₁ F₁ᵀ ×₂ F₂ᵀ … ×_N F_Nᵀ.
+//! Reconstruction is 𝔊 ×₁ F₁ ×₂ F₂ … ×_N F_N.
+
+use crate::linalg::{svd_truncated, SvdMethod};
+use crate::tensor::{mode_n_product, unfold, Tensor};
+
+/// The Tucker factors of a compressed tensor gradient, as transmitted.
+#[derive(Debug, Clone)]
+pub struct TuckerCompressed {
+    /// Core tensor 𝔊 ∈ R^{r₁×…×r_N}.
+    pub core: Tensor,
+    /// Factor matrices Fᵢ ∈ R^{Iᵢ×rᵢ}.
+    pub factors: Vec<Tensor>,
+    /// Original shape (I₁, …, I_N).
+    pub shape: Vec<usize>,
+}
+
+impl TuckerCompressed {
+    /// Per-mode ranks.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.core.shape().to_vec()
+    }
+
+    /// Total f32 elements across core + factors — the quantity
+    /// inequality (11) compares against ∏Iᵢ.
+    pub fn factor_elems(&self) -> usize {
+        self.core.len() + self.factors.iter().map(|f| f.len()).sum::<usize>()
+    }
+}
+
+/// ℂ for tensors: HOSVD with per-mode ranks `ranks`.
+pub fn compress_tucker(g: &Tensor, ranks: &[usize], method: SvdMethod) -> TuckerCompressed {
+    let ndim = g.ndim();
+    assert_eq!(ranks.len(), ndim, "one rank per mode");
+    for (i, (&r, &d)) in ranks.iter().zip(g.shape().iter()).enumerate() {
+        assert!(r >= 1 && r <= d, "rank {r} invalid for mode {i} (dim {d})");
+    }
+
+    // Factor matrices: leading left singular vectors of each unfolding.
+    let mut factors = Vec::with_capacity(ndim);
+    for mode in 0..ndim {
+        let unf = unfold(g, mode); // I_mode × rest
+        let svd = svd_truncated(&unf, ranks[mode], method);
+        factors.push(svd.u); // I_mode × r_mode
+    }
+
+    // Core: project onto the factor bases, G = X ×_i Fᵢᵀ.
+    let mut core = g.clone();
+    for (mode, f) in factors.iter().enumerate() {
+        core = mode_n_product(&core, mode, &f.transpose());
+    }
+
+    TuckerCompressed { core, factors, shape: g.shape().to_vec() }
+}
+
+/// ℂ⁻¹ for tensors: 𝔊 ×₁ F₁ … ×_N F_N (paper eq. (25)).
+pub fn decompress_tucker(c: &TuckerCompressed) -> Tensor {
+    let mut out = c.core.clone();
+    for (mode, f) in c.factors.iter().enumerate() {
+        out = mode_n_product(&out, mode, f);
+    }
+    debug_assert_eq!(out.shape(), &c.shape[..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::rank::tucker_ranks;
+    use crate::util::Rng;
+
+    /// Build a tensor with exact multilinear rank `ranks`.
+    fn exact_rank_tensor(dims: &[usize], ranks: &[usize], rng: &mut Rng) -> Tensor {
+        let core = Tensor::randn(ranks, rng);
+        let mut x = core;
+        for (mode, (&d, &r)) in dims.iter().zip(ranks.iter()).enumerate() {
+            let f = crate::linalg::qr_thin(&Tensor::randn(&[d, r], rng)).q;
+            x = mode_n_product(&x, mode, &f);
+        }
+        x
+    }
+
+    #[test]
+    fn exact_rank_tensor_reconstructs_losslessly() {
+        let mut rng = Rng::new(60);
+        let dims = [8, 6, 3, 3];
+        let true_ranks = [3, 2, 2, 2];
+        let x = exact_rank_tensor(&dims, &true_ranks, &mut rng);
+        let c = compress_tucker(&x, &true_ranks, SvdMethod::Jacobi);
+        let rec = decompress_tucker(&c);
+        assert!(x.rel_err(&rec) < 1e-3, "err {}", x.rel_err(&rec));
+    }
+
+    #[test]
+    fn full_ranks_are_lossless() {
+        let mut rng = Rng::new(61);
+        let dims = [4, 5, 3, 2];
+        let x = Tensor::randn(&dims, &mut rng);
+        let c = compress_tucker(&x, &dims, SvdMethod::Jacobi);
+        let rec = decompress_tucker(&c);
+        assert!(x.rel_err(&rec) < 1e-3, "err {}", x.rel_err(&rec));
+    }
+
+    #[test]
+    fn paper_conv_shapes_reduce_size() {
+        let mut rng = Rng::new(62);
+        // conv2 of the MNIST CNN: 32x16x3x3
+        let dims = [32usize, 16, 3, 3];
+        let x = Tensor::randn(&dims, &mut rng);
+        for p in [0.1, 0.2, 0.3] {
+            let ranks = tucker_ranks(&dims, p);
+            let c = compress_tucker(&x, &ranks, SvdMethod::Auto);
+            assert!(c.factor_elems() < x.len(), "p={p}");
+            assert_eq!(c.ranks(), ranks);
+            let rec = decompress_tucker(&c);
+            assert_eq!(rec.shape(), &dims);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let mut rng = Rng::new(63);
+        let dims = [16, 8, 3, 3];
+        let x = exact_rank_tensor(&dims, &[8, 4, 3, 3], &mut rng);
+        let mut last = f32::MAX;
+        for p in [0.15, 0.4, 0.8, 1.0] {
+            let ranks = tucker_ranks(&dims, p);
+            let c = compress_tucker(&x, &ranks, SvdMethod::Jacobi);
+            let err = x.rel_err(&decompress_tucker(&c));
+            assert!(err <= last + 1e-4, "p={p}: {err} > {last}");
+            last = err;
+        }
+        assert!(last < 1e-3);
+    }
+
+    #[test]
+    fn core_energy_equals_projection() {
+        // HOSVD property: ||G||_F <= ||X||_F (orthogonal projections)
+        let mut rng = Rng::new(64);
+        let x = Tensor::randn(&[6, 5, 4], &mut rng);
+        let c = compress_tucker(&x, &[3, 3, 2], SvdMethod::Jacobi);
+        assert!(c.core.fro_norm() <= x.fro_norm() * (1.0 + 1e-5));
+    }
+
+    #[test]
+    fn works_on_matrices_too() {
+        // Tucker on a 2-D tensor degenerates to a two-sided SVD projection.
+        let mut rng = Rng::new(65);
+        let x = Tensor::randn(&[10, 8], &mut rng);
+        let c = compress_tucker(&x, &[10, 8], SvdMethod::Jacobi);
+        let rec = decompress_tucker(&c);
+        assert!(x.rel_err(&rec) < 1e-3);
+    }
+}

@@ -1,0 +1,469 @@
+//! Experiment configuration: programmatic presets for every paper
+//! experiment plus JSON round-trip for config files.
+
+pub mod json;
+
+pub use json::{Json, JsonError};
+
+use crate::data::DatasetKind;
+use crate::fl::SchemeKind;
+use crate::model::ModelKind;
+
+/// How QRR's `p` is assigned across clients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PPolicy {
+    /// same p for every client (experiments 1–2)
+    Fixed(f64),
+    /// evenly spaced in [lo, hi] by client link speed (experiment 3)
+    Adaptive {
+        /// p for the slowest link
+        lo: f64,
+        /// p for the fastest link
+        hi: f64,
+    },
+}
+
+/// How the training data is distributed across clients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sharding {
+    /// equal random split (the paper's setup)
+    Iid,
+    /// label-sorted shards, `n` per client (McMahan-style pathological)
+    LabelSkew(usize),
+    /// Dirichlet(α) class proportions per client
+    Dirichlet(f64),
+}
+
+/// Which scheme to run, with its parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchemeConfig {
+    /// full-precision FedAvg
+    Sgd,
+    /// SLAQ baseline
+    Slaq,
+    /// the paper's QRR
+    Qrr(PPolicy),
+    /// QRR with error feedback (extension — see `qrr::error_feedback`)
+    QrrEf(PPolicy),
+}
+
+impl SchemeConfig {
+    /// Display label ("QRR(p=0.3)", "QRR(adaptive)", …).
+    pub fn label(&self) -> String {
+        match self {
+            SchemeConfig::Sgd => "SGD".into(),
+            SchemeConfig::Slaq => "SLAQ".into(),
+            SchemeConfig::Qrr(PPolicy::Fixed(p)) => format!("QRR(p={p})"),
+            SchemeConfig::Qrr(PPolicy::Adaptive { .. }) => "QRR".into(),
+            SchemeConfig::QrrEf(PPolicy::Fixed(p)) => format!("EF-QRR(p={p})"),
+            SchemeConfig::QrrEf(PPolicy::Adaptive { .. }) => "EF-QRR".into(),
+        }
+    }
+
+    /// The [`SchemeKind`] for client `i` of `n` given its link.
+    pub fn kind_for_client(&self, link: &crate::net::LinkModel, slow: f64, fast: f64) -> SchemeKind {
+        match self {
+            SchemeConfig::Sgd => SchemeKind::Sgd,
+            SchemeConfig::Slaq => SchemeKind::Slaq,
+            SchemeConfig::Qrr(PPolicy::Fixed(p)) => SchemeKind::Qrr { p: *p },
+            SchemeConfig::Qrr(PPolicy::Adaptive { lo, hi }) => {
+                SchemeKind::Qrr { p: link.adaptive_p(slow, fast, *lo, *hi) }
+            }
+            SchemeConfig::QrrEf(PPolicy::Fixed(p)) => SchemeKind::QrrEf { p: *p },
+            SchemeConfig::QrrEf(PPolicy::Adaptive { lo, hi }) => {
+                SchemeKind::QrrEf { p: link.adaptive_p(slow, fast, *lo, *hi) }
+            }
+        }
+    }
+}
+
+/// Which compute backend evaluates gradients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// pure-Rust reference implementation
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts through PJRT
+    Pjrt,
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// run label (used in file names)
+    pub name: String,
+    /// architecture
+    pub model: ModelKind,
+    /// data stream
+    pub dataset: DatasetKind,
+    /// scheme + parameters
+    pub scheme: SchemeConfig,
+    /// number of clients C
+    pub clients: usize,
+    /// FL iterations
+    pub iters: u64,
+    /// per-client batch size
+    pub batch: usize,
+    /// learning-rate schedule: (from_iteration, alpha) pairs, ascending
+    pub lr_schedule: Vec<(u64, f32)>,
+    /// quantization bits β
+    pub beta: u8,
+    /// RNG seed (data, init, batches)
+    pub seed: u64,
+    /// evaluate on the test set every this many iterations
+    pub eval_every: u64,
+    /// training samples (synthetic stream size / subset of real data)
+    pub train_n: usize,
+    /// test samples
+    pub test_n: usize,
+    /// gradient backend
+    pub backend: Backend,
+    /// slowest client uplink (bit/s)
+    pub link_slow_bps: f64,
+    /// fastest client uplink (bit/s)
+    pub link_fast_bps: f64,
+    /// data distribution across clients
+    pub sharding: Sharding,
+    /// fraction of clients participating each round (1.0 = all, the
+    /// paper's synchronous setting)
+    pub participation: f64,
+}
+
+impl ExperimentConfig {
+    /// Shared paper defaults: 10 clients, β=8, α=0.001, batch 512.
+    fn paper_base(name: &str, model: ModelKind, dataset: DatasetKind) -> Self {
+        ExperimentConfig {
+            name: name.into(),
+            model,
+            dataset,
+            scheme: SchemeConfig::Sgd,
+            clients: 10,
+            iters: 1000,
+            batch: 512,
+            lr_schedule: vec![(0, 0.001)],
+            beta: 8,
+            seed: 42,
+            eval_every: 25,
+            train_n: 60_000,
+            test_n: 10_000,
+            backend: Backend::Native,
+            link_slow_bps: 250e3,
+            link_fast_bps: 10e6,
+            sharding: Sharding::Iid,
+            participation: 1.0,
+        }
+    }
+
+    /// Experiment 1 (Table I / Fig. 2): MLP on MNIST.
+    pub fn table1_default() -> Self {
+        Self::paper_base("table1", ModelKind::Mlp, DatasetKind::Mnist)
+    }
+
+    /// Experiment 2 (Table II / Fig. 3): CNN on MNIST.
+    pub fn table2_default() -> Self {
+        Self::paper_base("table2", ModelKind::Cnn, DatasetKind::Mnist)
+    }
+
+    /// Experiment 3 (Table III / Fig. 4): VGG-like on CIFAR-10,
+    /// 2000 iterations, lr 0.01 → 0.001 at iteration 1000, per-client p.
+    pub fn table3_default() -> Self {
+        let mut c = Self::paper_base("table3", ModelKind::Vgg, DatasetKind::Cifar10);
+        c.iters = 2000;
+        c.lr_schedule = vec![(0, 0.01), (1000, 0.001)];
+        c.train_n = 50_000;
+        c
+    }
+
+    /// The learning rate in force at `iter`.
+    pub fn alpha_at(&self, iter: u64) -> f32 {
+        let mut a = self.lr_schedule.first().map(|x| x.1).unwrap_or(0.001);
+        for &(from, alpha) in &self.lr_schedule {
+            if iter >= from {
+                a = alpha;
+            }
+        }
+        a
+    }
+
+    /// Initial learning rate.
+    pub fn alpha0(&self) -> f32 {
+        self.alpha_at(0)
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let scheme = match self.scheme {
+            SchemeConfig::Sgd => Json::obj(vec![("kind", Json::Str("sgd".into()))]),
+            SchemeConfig::Slaq => Json::obj(vec![("kind", Json::Str("slaq".into()))]),
+            SchemeConfig::Qrr(PPolicy::Fixed(p)) => Json::obj(vec![
+                ("kind", Json::Str("qrr".into())),
+                ("p", Json::Num(p)),
+            ]),
+            SchemeConfig::Qrr(PPolicy::Adaptive { lo, hi }) => Json::obj(vec![
+                ("kind", Json::Str("qrr".into())),
+                ("p_lo", Json::Num(lo)),
+                ("p_hi", Json::Num(hi)),
+            ]),
+            SchemeConfig::QrrEf(PPolicy::Fixed(p)) => Json::obj(vec![
+                ("kind", Json::Str("qrr_ef".into())),
+                ("p", Json::Num(p)),
+            ]),
+            SchemeConfig::QrrEf(PPolicy::Adaptive { lo, hi }) => Json::obj(vec![
+                ("kind", Json::Str("qrr_ef".into())),
+                ("p_lo", Json::Num(lo)),
+                ("p_hi", Json::Num(hi)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("model", Json::Str(self.model.name().into())),
+            (
+                "dataset",
+                Json::Str(
+                    match self.dataset {
+                        DatasetKind::Mnist => "mnist",
+                        DatasetKind::Cifar10 => "cifar10",
+                    }
+                    .into(),
+                ),
+            ),
+            ("scheme", scheme),
+            ("clients", Json::Num(self.clients as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            (
+                "lr_schedule",
+                Json::Arr(
+                    self.lr_schedule
+                        .iter()
+                        .map(|&(i, a)| {
+                            Json::Arr(vec![Json::Num(i as f64), Json::Num(a as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("beta", Json::Num(self.beta as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("train_n", Json::Num(self.train_n as f64)),
+            ("test_n", Json::Num(self.test_n as f64)),
+            (
+                "backend",
+                Json::Str(match self.backend {
+                    Backend::Native => "native".into(),
+                    Backend::Pjrt => "pjrt".into(),
+                }),
+            ),
+            ("link_slow_bps", Json::Num(self.link_slow_bps)),
+            ("link_fast_bps", Json::Num(self.link_fast_bps)),
+            (
+                "sharding",
+                match self.sharding {
+                    Sharding::Iid => Json::Str("iid".into()),
+                    Sharding::LabelSkew(k) => Json::obj(vec![
+                        ("kind", Json::Str("label_skew".into())),
+                        ("shards_per_client", Json::Num(k as f64)),
+                    ]),
+                    Sharding::Dirichlet(a) => Json::obj(vec![
+                        ("kind", Json::Str("dirichlet".into())),
+                        ("alpha", Json::Num(a)),
+                    ]),
+                },
+            ),
+            ("participation", Json::Num(self.participation)),
+        ])
+    }
+
+    /// Parse from JSON (fields missing fall back to table1 defaults).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut c = Self::table1_default();
+        if let Some(v) = j.get("name").and_then(Json::as_str) {
+            c.name = v.into();
+        }
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            c.model = ModelKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {v:?}"))?;
+        }
+        if let Some(v) = j.get("dataset").and_then(Json::as_str) {
+            c.dataset = DatasetKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {v:?}"))?;
+        }
+        if let Some(s) = j.get("scheme") {
+            let kind = s.get("kind").and_then(Json::as_str).unwrap_or("sgd");
+            c.scheme = match kind {
+                "sgd" => SchemeConfig::Sgd,
+                "slaq" => SchemeConfig::Slaq,
+                "qrr" | "qrr_ef" => {
+                    let policy = if let Some(p) = s.get("p").and_then(Json::as_f64) {
+                        PPolicy::Fixed(p)
+                    } else {
+                        let lo = s.get("p_lo").and_then(Json::as_f64).unwrap_or(0.1);
+                        let hi = s.get("p_hi").and_then(Json::as_f64).unwrap_or(0.3);
+                        PPolicy::Adaptive { lo, hi }
+                    };
+                    if kind == "qrr" {
+                        SchemeConfig::Qrr(policy)
+                    } else {
+                        SchemeConfig::QrrEf(policy)
+                    }
+                }
+                k => anyhow::bail!("unknown scheme {k:?}"),
+            };
+        }
+        if let Some(v) = j.get("clients").and_then(Json::as_usize) {
+            c.clients = v;
+        }
+        if let Some(v) = j.get("iters").and_then(Json::as_u64) {
+            c.iters = v;
+        }
+        if let Some(v) = j.get("batch").and_then(Json::as_usize) {
+            c.batch = v;
+        }
+        if let Some(arr) = j.get("lr_schedule").and_then(Json::as_arr) {
+            c.lr_schedule = arr
+                .iter()
+                .filter_map(|pair| {
+                    let p = pair.as_arr()?;
+                    Some((p[0].as_u64()?, p[1].as_f64()? as f32))
+                })
+                .collect();
+            anyhow::ensure!(!c.lr_schedule.is_empty(), "empty lr_schedule");
+        }
+        if let Some(v) = j.get("beta").and_then(Json::as_u64) {
+            anyhow::ensure!((1..=16).contains(&v), "beta out of range");
+            c.beta = v as u8;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_u64) {
+            c.seed = v;
+        }
+        if let Some(v) = j.get("eval_every").and_then(Json::as_u64) {
+            c.eval_every = v.max(1);
+        }
+        if let Some(v) = j.get("train_n").and_then(Json::as_usize) {
+            c.train_n = v;
+        }
+        if let Some(v) = j.get("test_n").and_then(Json::as_usize) {
+            c.test_n = v;
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            c.backend = match v {
+                "native" => Backend::Native,
+                "pjrt" => Backend::Pjrt,
+                b => anyhow::bail!("unknown backend {b:?}"),
+            };
+        }
+        if let Some(v) = j.get("link_slow_bps").and_then(Json::as_f64) {
+            c.link_slow_bps = v;
+        }
+        if let Some(v) = j.get("link_fast_bps").and_then(Json::as_f64) {
+            c.link_fast_bps = v;
+        }
+        if let Some(sh) = j.get("sharding") {
+            c.sharding = if let Some(name) = sh.as_str() {
+                match name {
+                    "iid" => Sharding::Iid,
+                    o => anyhow::bail!("unknown sharding {o:?}"),
+                }
+            } else {
+                match sh.get("kind").and_then(Json::as_str) {
+                    Some("label_skew") => Sharding::LabelSkew(
+                        sh.get("shards_per_client").and_then(Json::as_usize).unwrap_or(2),
+                    ),
+                    Some("dirichlet") => Sharding::Dirichlet(
+                        sh.get("alpha").and_then(Json::as_f64).unwrap_or(0.5),
+                    ),
+                    _ => anyhow::bail!("bad sharding object"),
+                }
+            };
+        }
+        if let Some(v) = j.get("participation").and_then(Json::as_f64) {
+            anyhow::ensure!((0.0..=1.0).contains(&v) && v > 0.0, "participation in (0,1]");
+            c.participation = v;
+        }
+        anyhow::ensure!(c.clients > 0, "need at least one client");
+        anyhow::ensure!(c.batch > 0, "batch must be positive");
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let t1 = ExperimentConfig::table1_default();
+        assert_eq!(t1.clients, 10);
+        assert_eq!(t1.batch, 512);
+        assert_eq!(t1.beta, 8);
+        assert_eq!(t1.alpha0(), 0.001);
+        assert_eq!(t1.iters, 1000);
+
+        let t3 = ExperimentConfig::table3_default();
+        assert_eq!(t3.iters, 2000);
+        assert_eq!(t3.alpha_at(0), 0.01);
+        assert_eq!(t3.alpha_at(999), 0.01);
+        assert_eq!(t3.alpha_at(1000), 0.001);
+        assert_eq!(t3.model, ModelKind::Vgg);
+    }
+
+    #[test]
+    fn json_roundtrip_all_schemes() {
+        for scheme in [
+            SchemeConfig::Sgd,
+            SchemeConfig::Slaq,
+            SchemeConfig::Qrr(PPolicy::Fixed(0.2)),
+            SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }),
+        ] {
+            let mut c = ExperimentConfig::table2_default();
+            c.scheme = scheme;
+            c.iters = 123;
+            let j = c.to_json();
+            let back = ExperimentConfig::from_json(&j).unwrap();
+            assert_eq!(back.scheme, c.scheme);
+            assert_eq!(back.iters, 123);
+            assert_eq!(back.model, c.model);
+            assert_eq!(back.lr_schedule, c.lr_schedule);
+        }
+    }
+
+    #[test]
+    fn from_json_validates() {
+        let j = Json::parse(r#"{"beta": 99}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"clients": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "transformer"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn scheme_labels() {
+        assert_eq!(SchemeConfig::Sgd.label(), "SGD");
+        assert_eq!(SchemeConfig::Qrr(PPolicy::Fixed(0.1)).label(), "QRR(p=0.1)");
+        assert_eq!(
+            SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }).label(),
+            "QRR"
+        );
+    }
+
+    #[test]
+    fn adaptive_kind_for_client_uses_link() {
+        let cfg = SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 });
+        let slow = crate::net::LinkModel { bandwidth_bps: 1e5, latency: std::time::Duration::ZERO };
+        let fast = crate::net::LinkModel { bandwidth_bps: 1e7, latency: std::time::Duration::ZERO };
+        match (cfg.kind_for_client(&slow, 1e5, 1e7), cfg.kind_for_client(&fast, 1e5, 1e7)) {
+            (SchemeKind::Qrr { p: ps }, SchemeKind::Qrr { p: pf }) => {
+                assert!((ps - 0.1).abs() < 1e-9);
+                assert!((pf - 0.3).abs() < 1e-9);
+            }
+            _ => panic!("wrong kinds"),
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! CIFAR-10 binary-format loader (used when `CIFAR_DIR` is set).
+//!
+//! Expects the standard `data_batch_{1..5}.bin` and `test_batch.bin`
+//! (each record: 1 label byte + 3072 pixel bytes, CHW order).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::Dataset;
+
+const REC: usize = 1 + 3072;
+
+/// Load (train, test) from a CIFAR-10 binary directory.
+pub fn load_dir(dir: &str) -> Result<(Dataset, Dataset)> {
+    let d = Path::new(dir);
+    let mut train_parts = Vec::new();
+    for i in 1..=5 {
+        let p = d.join(format!("data_batch_{i}.bin"));
+        if p.exists() {
+            train_parts.push(read_batch(&p)?);
+        }
+    }
+    if train_parts.is_empty() {
+        bail!("no data_batch_*.bin found in {dir:?}");
+    }
+    let train = concat(train_parts);
+    let test = read_batch(&d.join("test_batch.bin"))?;
+    Ok((train, test))
+}
+
+/// Parse one batch file into a [`Dataset`].
+pub fn read_batch(path: &Path) -> Result<Dataset> {
+    let bytes = fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % REC != 0 {
+        bail!("{path:?}: length {} not a multiple of {REC}", bytes.len());
+    }
+    let n = bytes.len() / REC;
+    let mut x = Tensor::zeros(&[n, 3072]);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let rec = &bytes[i * REC..(i + 1) * REC];
+        let label = rec[0];
+        if label > 9 {
+            bail!("{path:?}: record {i} has label {label} > 9");
+        }
+        y.push(label as u32);
+        let row = &mut x.data_mut()[i * 3072..(i + 1) * 3072];
+        for (dst, &b) in row.iter_mut().zip(rec[1..].iter()) {
+            *dst = b as f32 / 255.0;
+        }
+    }
+    Ok(Dataset { x, y, source: "cifar10".into() })
+}
+
+fn concat(parts: Vec<Dataset>) -> Dataset {
+    let dim = parts[0].dim();
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut x = Tensor::zeros(&[total, dim]);
+    let mut y = Vec::with_capacity(total);
+    let mut row = 0usize;
+    for p in parts {
+        let n = p.len();
+        x.data_mut()[row * dim..(row + n) * dim].copy_from_slice(p.x.data());
+        y.extend_from_slice(&p.y);
+        row += n;
+    }
+    Dataset { x, y, source: "cifar10".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_batch(path: &Path, labels: &[u8]) {
+        let mut bytes = Vec::new();
+        for (i, &l) in labels.iter().enumerate() {
+            bytes.push(l);
+            bytes.extend(std::iter::repeat_n((i * 10) as u8, 3072));
+        }
+        fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_tiny_batches() {
+        let dir = std::env::temp_dir().join("qrr_cifar_test");
+        fs::create_dir_all(&dir).unwrap();
+        write_batch(&dir.join("data_batch_1.bin"), &[0, 1]);
+        write_batch(&dir.join("data_batch_2.bin"), &[2]);
+        write_batch(&dir.join("test_batch.bin"), &[9]);
+        let (tr, te) = load_dir(dir.to_str().unwrap()).unwrap();
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.y, vec![0, 1, 2]);
+        assert_eq!(te.y, vec![9]);
+        assert_eq!(tr.dim(), 3072);
+        // second record's pixels are 10/255
+        assert!((tr.x.data()[3072] - 10.0 / 255.0).abs() < 1e-6);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_length_rejected() {
+        let dir = std::env::temp_dir().join("qrr_cifar_bad");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("test_batch.bin");
+        fs::write(&p, [0u8; 100]).unwrap();
+        assert!(read_batch(&p).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_label_rejected() {
+        let dir = std::env::temp_dir().join("qrr_cifar_bad2");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("test_batch.bin");
+        let mut bytes = vec![42u8]; // label 42 invalid
+        bytes.extend(std::iter::repeat_n(0u8, 3072));
+        fs::write(&p, bytes).unwrap();
+        assert!(read_batch(&p).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,142 @@
+//! MNIST IDX-format loader (used when `MNIST_DIR` is set).
+//!
+//! Expects the standard four files (optionally without the `-idx?-ubyte`
+//! suffix dots):
+//! `train-images-idx3-ubyte`, `train-labels-idx1-ubyte`,
+//! `t10k-images-idx3-ubyte`, `t10k-labels-idx1-ubyte`.
+
+use std::fs;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::Dataset;
+
+/// Load (train, test) from a directory of IDX files.
+pub fn load_dir(dir: &str) -> Result<(Dataset, Dataset)> {
+    let d = Path::new(dir);
+    let train = load_pair(
+        &find(d, "train-images")?,
+        &find(d, "train-labels")?,
+    )?;
+    let test = load_pair(&find(d, "t10k-images")?, &find(d, "t10k-labels")?)?;
+    Ok((train, test))
+}
+
+fn find(dir: &Path, prefix: &str) -> Result<std::path::PathBuf> {
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {dir:?}"))? {
+        let p = entry?.path();
+        if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+            if name.starts_with(prefix) && !name.ends_with(".gz") {
+                return Ok(p);
+            }
+        }
+    }
+    bail!("no file starting with {prefix:?} in {dir:?}")
+}
+
+fn load_pair(images: &Path, labels: &Path) -> Result<Dataset> {
+    let x = read_images(images)?;
+    let y = read_labels(labels)?;
+    if x.shape()[0] != y.len() {
+        bail!(
+            "image/label count mismatch: {} vs {}",
+            x.shape()[0],
+            y.len()
+        );
+    }
+    Ok(Dataset { x, y, source: "mnist".into() })
+}
+
+fn read_u32be(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Parse an IDX3 image file into `[n, rows*cols]` with values in [0,1].
+pub fn read_images(path: &Path) -> Result<Tensor> {
+    let mut f = fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let magic = read_u32be(&mut f)?;
+    if magic != 0x0000_0803 {
+        bail!("bad IDX3 magic {magic:#x} in {path:?}");
+    }
+    let n = read_u32be(&mut f)? as usize;
+    let rows = read_u32be(&mut f)? as usize;
+    let cols = read_u32be(&mut f)? as usize;
+    let mut buf = vec![0u8; n * rows * cols];
+    f.read_exact(&mut buf)?;
+    let data: Vec<f32> = buf.iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(Tensor::from_vec(&[n, rows * cols], data))
+}
+
+/// Parse an IDX1 label file.
+pub fn read_labels(path: &Path) -> Result<Vec<u32>> {
+    let mut f = fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let magic = read_u32be(&mut f)?;
+    if magic != 0x0000_0801 {
+        bail!("bad IDX1 magic {magic:#x} in {path:?}");
+    }
+    let n = read_u32be(&mut f)? as usize;
+    let mut buf = vec![0u8; n];
+    f.read_exact(&mut buf)?;
+    Ok(buf.into_iter().map(|b| b as u32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_idx3(path: &Path, n: usize, rows: usize, cols: usize, pix: &[u8]) {
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(&0x0000_0803u32.to_be_bytes()).unwrap();
+        f.write_all(&(n as u32).to_be_bytes()).unwrap();
+        f.write_all(&(rows as u32).to_be_bytes()).unwrap();
+        f.write_all(&(cols as u32).to_be_bytes()).unwrap();
+        f.write_all(pix).unwrap();
+    }
+
+    fn write_idx1(path: &Path, labels: &[u8]) {
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(&0x0000_0801u32.to_be_bytes()).unwrap();
+        f.write_all(&(labels.len() as u32).to_be_bytes()).unwrap();
+        f.write_all(labels).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_tiny_idx() {
+        let dir = std::env::temp_dir().join("qrr_mnist_test");
+        fs::create_dir_all(&dir).unwrap();
+        let pix: Vec<u8> = (0..2 * 4).map(|v| (v * 30) as u8).collect();
+        write_idx3(&dir.join("train-images-idx3-ubyte"), 2, 2, 2, &pix);
+        write_idx1(&dir.join("train-labels-idx1-ubyte"), &[3, 7]);
+        write_idx3(&dir.join("t10k-images-idx3-ubyte"), 2, 2, 2, &pix);
+        write_idx1(&dir.join("t10k-labels-idx1-ubyte"), &[1, 2]);
+        let (tr, te) = load_dir(dir.to_str().unwrap()).unwrap();
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr.dim(), 4);
+        assert_eq!(tr.y, vec![3, 7]);
+        assert_eq!(te.y, vec![1, 2]);
+        assert!((tr.x.data()[1] - 30.0 / 255.0).abs() < 1e-6);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("qrr_mnist_bad");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("train-images-idx3-ubyte");
+        fs::write(&p, [0u8; 16]).unwrap();
+        assert!(read_images(&p).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load_dir("/nonexistent/definitely/missing").is_err());
+    }
+}

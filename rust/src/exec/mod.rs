@@ -1,0 +1,24 @@
+//! Execution substrate: a small work-stealing-free thread pool and
+//! scoped parallel iteration.
+//!
+//! The offline crate cache has neither `tokio` nor `rayon`; FL rounds are
+//! compute-bound fan-out/fan-in over ~10 clients, which this pool covers
+//! with far less machinery (see DESIGN.md §4).
+
+mod pool;
+
+pub use pool::{parallel_for, ThreadPool};
+
+/// Number of worker threads to use by default: `QRR_THREADS` env var or
+/// available parallelism, capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("QRR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}

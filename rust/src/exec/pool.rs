@@ -1,0 +1,218 @@
+//! A fixed-size thread pool with scoped parallel-for.
+//!
+//! Design: long-lived workers block on an injector channel of boxed
+//! closures. `scope`-style safety is achieved the simple way — jobs are
+//! `'static`, and `parallel_for` wraps borrowed data in `Arc` + index
+//! partitioning, joining before return so borrows stay sound via
+//! `std::thread::scope` instead when lifetimes are needed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("qrr-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Pool with [`super::default_threads`] workers.
+    pub fn default_size() -> Self {
+        Self::new(super::default_threads())
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("worker alive");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p != 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool and wait. `f` may borrow
+    /// from the caller: uses `std::thread::scope` internally when the pool
+    /// is bypassed (n small), otherwise chunks indices over workers.
+    pub fn for_each<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let threads = self.size().min(n);
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait_idle();
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Standalone scoped parallel-for over `0..n` with up to `threads`
+/// OS threads (spawned ad hoc; fine for coarse-grained work).
+pub fn parallel_for<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn for_each_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool.for_each(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_borrows() {
+        let data: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        parallel_for(8, data.len(), |i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 499_500);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.for_each(0, |_| panic!("should not run"));
+        parallel_for(4, 0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

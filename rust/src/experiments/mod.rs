@@ -1,0 +1,293 @@
+//! Experiment drivers that regenerate every table and figure in the
+//! paper's evaluation section (DESIGN.md §2):
+//!
+//! * `table1` — Table I + Figure 2 (MLP / MNIST)
+//! * `table2` — Table II + Figure 3 (CNN / MNIST)
+//! * `table3` — Table III + Figure 4 (VGG-like / CIFAR-10, adaptive p)
+//! * `fig1`   — Figure 1 (singular-value spectrum of an FC gradient)
+//! * `overhead` — §III-B client-side memory / compute overhead
+//!
+//! Each driver writes per-scheme CSV series (`<out>/<exp>_<scheme>_
+//! rounds.csv`, `…_evals.csv`) for the "vs iterations" / "vs bits"
+//! figures plus a markdown table mirroring the paper's columns.
+
+pub mod fig1;
+pub mod overhead;
+pub mod plot;
+pub mod serve;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::config::{Backend, ExperimentConfig, PPolicy, SchemeConfig};
+use crate::coordinator::{Coordinator, RunReport};
+use crate::fl::metrics::{markdown_table, TableRow};
+
+/// Dispatch `qrr exp <id>`.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("table1");
+    let out = args.get("out").unwrap_or("results");
+    match id {
+        "table1" => run_table(1, args, out),
+        "table2" => run_table(2, args, out),
+        "table3" => run_table(3, args, out),
+        "fig1" => fig1::run(args, out),
+        "overhead" => overhead::run(args, out),
+        "all" => {
+            fig1::run(args, out)?;
+            run_table(1, args, out)?;
+            run_table(2, args, out)?;
+            run_table(3, args, out)?;
+            overhead::run(args, out)
+        }
+        other => bail!("unknown experiment {other:?} (table1|table2|table3|fig1|overhead|all)"),
+    }
+}
+
+/// Apply common CLI overrides to a config.
+pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
+    if let Some(v) = args.get_parsed::<u64>("iters")? {
+        cfg.iters = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("clients")? {
+        cfg.clients = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("train-n")? {
+        cfg.train_n = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("test-n")? {
+        cfg.test_n = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("eval-every")? {
+        cfg.eval_every = v.max(1);
+    }
+    if let Some(v) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = match v {
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            other => bail!("unknown backend {other:?}"),
+        };
+    }
+    Ok(())
+}
+
+/// Parse `--schemes sgd,slaq,qrr:0.3,qrr:adaptive` into configs.
+pub fn parse_schemes(spec: &str) -> Result<Vec<SchemeConfig>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(match tok {
+            "sgd" => SchemeConfig::Sgd,
+            "slaq" => SchemeConfig::Slaq,
+            "qrr:adaptive" => SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }),
+            "ef:adaptive" => SchemeConfig::QrrEf(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }),
+            t if t.starts_with("qrr:") => {
+                let p: f64 = t[4..]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad qrr p in {t:?}"))?;
+                SchemeConfig::Qrr(PPolicy::Fixed(p))
+            }
+            t if t.starts_with("ef:") => {
+                let p: f64 = t[3..]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad ef p in {t:?}"))?;
+                SchemeConfig::QrrEf(PPolicy::Fixed(p))
+            }
+            t => bail!("unknown scheme {t:?}"),
+        });
+    }
+    if out.is_empty() {
+        bail!("--schemes parsed to nothing");
+    }
+    Ok(out)
+}
+
+/// The paper's scheme lineup for each table.
+fn default_schemes(table: u8) -> Vec<SchemeConfig> {
+    match table {
+        1 | 2 => vec![
+            SchemeConfig::Sgd,
+            SchemeConfig::Slaq,
+            SchemeConfig::Qrr(PPolicy::Fixed(0.3)),
+            SchemeConfig::Qrr(PPolicy::Fixed(0.2)),
+            SchemeConfig::Qrr(PPolicy::Fixed(0.1)),
+        ],
+        _ => vec![
+            SchemeConfig::Sgd,
+            SchemeConfig::Slaq,
+            SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }),
+        ],
+    }
+}
+
+/// Run one of the three table experiments across its scheme lineup.
+pub fn run_table(table: u8, args: &Args, out_dir: &str) -> Result<()> {
+    let base = match table {
+        1 => ExperimentConfig::table1_default(),
+        2 => ExperimentConfig::table2_default(),
+        3 => ExperimentConfig::table3_default(),
+        _ => bail!("no table {table}"),
+    };
+    let schemes = match args.get("schemes") {
+        Some(s) => parse_schemes(s)?,
+        None => default_schemes(table),
+    };
+
+    let mut rows: Vec<TableRow> = Vec::new();
+    let mut histories = Vec::new();
+    for scheme in schemes {
+        let mut cfg = base.clone();
+        cfg.scheme = scheme;
+        apply_overrides(&mut cfg, args)?;
+        cfg.name = format!("table{table}");
+        log::info!(
+            "=== table{table}: {} ({:?}, {} iters, {} clients) ===",
+            scheme.label(),
+            cfg.model,
+            cfg.iters,
+            cfg.clients
+        );
+        let mut coord = Coordinator::from_config(&cfg)?;
+        let report = coord.run()?;
+        write_run_outputs(out_dir, &format!("table{table}_{}", slug(&scheme.label())), &report)?;
+        rows.push(report.history.table_row());
+        histories.push(report.history);
+    }
+
+    // the figure panels (Figures 2/3/4) as ASCII plots
+    let fig_num = table + 1; // Table I -> Figure 2, etc.
+    let panels = plot::figure_panels(&histories);
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/figure{fig_num}.txt"), &panels)?;
+
+    let md = markdown_table(&rows);
+    let table_path = format!("{out_dir}/table{table}.md");
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(&table_path, &md)?;
+    println!("\nTABLE {table} (paper: Table {})\n{md}", roman(table));
+    println!("series CSVs + markdown in {out_dir}/");
+    print_ratios(&rows);
+    Ok(())
+}
+
+/// Print QRR-vs-baseline bit ratios (the paper's headline comparison).
+fn print_ratios(rows: &[TableRow]) {
+    let sgd = rows.iter().find(|r| r.algorithm == "SGD");
+    let slaq = rows.iter().find(|r| r.algorithm == "SLAQ");
+    for r in rows.iter().filter(|r| r.algorithm.starts_with("QRR")) {
+        let mut line = format!("{}: ", r.algorithm);
+        if let Some(s) = sgd {
+            line.push_str(&format!(
+                "{:.2}% of SGD bits",
+                100.0 * r.bits as f64 / s.bits as f64
+            ));
+        }
+        if let Some(s) = slaq {
+            line.push_str(&format!(
+                ", {:.2}% of SLAQ bits",
+                100.0 * r.bits as f64 / s.bits as f64
+            ));
+        }
+        if let (Some(s), true) = (sgd, r.accuracy.is_finite()) {
+            line.push_str(&format!(
+                ", accuracy {:+.2}% vs SGD",
+                100.0 * (r.accuracy - s.accuracy)
+            ));
+        }
+        println!("{line}");
+    }
+}
+
+/// Write per-run CSV outputs.
+pub fn write_run_outputs(out_dir: &str, name: &str, report: &RunReport) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(
+        format!("{out_dir}/{name}_rounds.csv"),
+        report.history.rounds_csv(),
+    )?;
+    std::fs::write(
+        format!("{out_dir}/{name}_evals.csv"),
+        report.history.evals_csv(),
+    )?;
+    Ok(())
+}
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+fn roman(t: u8) -> &'static str {
+    match t {
+        1 => "I",
+        2 => "II",
+        3 => "III",
+        _ => "?",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parsing() {
+        let s = parse_schemes("sgd,slaq,qrr:0.3,qrr:adaptive").unwrap();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0], SchemeConfig::Sgd);
+        assert_eq!(s[2], SchemeConfig::Qrr(PPolicy::Fixed(0.3)));
+        assert!(matches!(s[3], SchemeConfig::Qrr(PPolicy::Adaptive { .. })));
+        assert!(parse_schemes("nope").is_err());
+        assert!(parse_schemes("").is_err());
+        assert!(parse_schemes("qrr:abc").is_err());
+    }
+
+    #[test]
+    fn default_lineups_match_paper() {
+        assert_eq!(default_schemes(1).len(), 5);
+        assert_eq!(default_schemes(3).len(), 3);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = ExperimentConfig::table1_default();
+        let args = crate::cli::Args::parse(
+            "exp table1 --iters 7 --clients 3 --seed 9"
+                .split_whitespace()
+                .map(String::from),
+        );
+        apply_overrides(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.iters, 7);
+        assert_eq!(cfg.clients, 3);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn tiny_end_to_end_table_run() {
+        let dir = std::env::temp_dir().join("qrr_exp_test");
+        let args = crate::cli::Args::parse(
+            "exp table1 --iters 4 --clients 2 --batch 8 --train-n 100 --test-n 40 --eval-every 2 --schemes sgd,qrr:0.2"
+                .split_whitespace()
+                .map(String::from),
+        );
+        run_table(1, &args, dir.to_str().unwrap()).unwrap();
+        assert!(dir.join("table1.md").exists());
+        assert!(dir.join("table1_sgd_rounds.csv").exists());
+        assert!(dir.join("table1_qrr_p_0_2__evals.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,133 @@
+//! §III-B last paragraph: client-side memory and compute overhead of
+//! QRR and SLAQ relative to plain SGD.
+//!
+//! The paper (VGG-like / CIFAR-10 setup) reports:
+//! * QRR:  ~1.2× memory, ~3.82× compute time vs SGD
+//! * SLAQ: ~13× memory, ~1.08× compute time vs SGD
+//!
+//! Memory here = scheme state bytes relative to one gradient copy
+//! (SGD's working set). Compute = median wall-clock of one full client
+//! step (gradient + encode).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::bench_util::Bench;
+use crate::cli::Args;
+use crate::data::synth;
+use crate::fl::{make_client_scheme, FlClient, SchemeKind};
+use crate::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
+use crate::net::LinkModel;
+
+/// One scheme's overhead measurements.
+#[derive(Debug, Clone)]
+pub struct OverheadRow {
+    /// scheme label
+    pub scheme: String,
+    /// client state bytes
+    pub mem_bytes: usize,
+    /// memory relative to one gradient copy
+    pub mem_ratio: f64,
+    /// median client-step seconds
+    pub step_secs: f64,
+    /// step time relative to SGD
+    pub time_ratio: f64,
+}
+
+/// Run the overhead experiment; writes `<out>/overhead.md`.
+pub fn run(args: &Args, out_dir: &str) -> Result<()> {
+    let model_kind = args
+        .get("model")
+        .map(|m| crate::model::ModelKind::parse(m).ok_or_else(|| anyhow::anyhow!("bad model {m}")))
+        .transpose()?
+        .unwrap_or(ModelKind::Vgg);
+    let batch: usize = args.get_parsed::<usize>("batch")?.unwrap_or(64);
+    let rows = measure(model_kind, batch)?;
+
+    let mut md = String::from("| Scheme | Memory (bytes) | Memory ×SGD | Step time | Time ×SGD |\n|---|---|---|---|---|\n");
+    for r in &rows {
+        md.push_str(&format!(
+            "| {} | {} | {:.2}x | {:.1} ms | {:.2}x |\n",
+            r.scheme,
+            crate::util::fmt::bytes_human(r.mem_bytes as u64),
+            r.mem_ratio,
+            r.step_secs * 1e3,
+            r.time_ratio
+        ));
+    }
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/overhead.md"), &md)?;
+    println!("Client-side overhead ({:?}, batch {batch}) — paper: QRR 1.2x mem / 3.82x time, SLAQ 13x mem / 1.08x time\n{md}", model_kind);
+    Ok(())
+}
+
+/// Measure memory + step time for SGD / SLAQ / QRR(0.2).
+pub fn measure(kind: ModelKind, batch: usize) -> Result<Vec<OverheadRow>> {
+    let spec = ModelSpec::new(kind);
+    let shapes = spec.shapes();
+    let grad_bytes: usize = spec.num_params() * 4; // one gradient copy
+    let weights = spec.init_params(11);
+    let bench = Bench::from_env();
+
+    let schemes = [
+        ("SGD", SchemeKind::Sgd),
+        ("SLAQ", SchemeKind::Slaq),
+        ("QRR(p=0.2)", SchemeKind::Qrr { p: 0.2 }),
+    ];
+    let mut rows = Vec::new();
+    let mut sgd_time = None;
+    for (label, sk) in schemes {
+        let model: Arc<dyn ModelOps + Sync> = Arc::new(NativeModel::new(kind));
+        let data = synth::stream_for_input(batch * 4, 13, spec.input_dim());
+        let scheme = make_client_scheme(sk, &shapes, 8, 0.001, 10);
+        let mut client = FlClient::new(
+            0,
+            data,
+            model,
+            scheme,
+            LinkModel::broadband(),
+            batch,
+            17,
+        );
+        let r = bench.run(&format!("client_step/{label}"), None, || {
+            client.round(&weights)
+        });
+        let mem = client.scheme_mem_bytes();
+        let secs = r.median.as_secs_f64();
+        if label == "SGD" {
+            sgd_time = Some(secs);
+        }
+        rows.push(OverheadRow {
+            scheme: label.to_string(),
+            mem_bytes: mem,
+            // SGD baseline working memory = one gradient copy
+            mem_ratio: (grad_bytes + mem) as f64 / grad_bytes as f64,
+            step_secs: secs,
+            time_ratio: secs / sgd_time.unwrap_or(secs),
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_paper() {
+        std::env::set_var("QRR_BENCH_FAST", "1");
+        // small model for test speed
+        let rows = measure(ModelKind::Mlp, 16).unwrap();
+        let sgd = &rows[0];
+        let slaq = &rows[1];
+        let qrr = &rows[2];
+        assert_eq!(sgd.mem_bytes, 0);
+        // SLAQ keeps full-gradient state: much more memory than QRR
+        assert!(slaq.mem_bytes > 3 * qrr.mem_bytes, "{} vs {}", slaq.mem_bytes, qrr.mem_bytes);
+        // QRR pays compute for SVD: slower than SGD
+        assert!(qrr.time_ratio >= 1.0);
+        // SLAQ time close to SGD (within noise, generous bound)
+        assert!(slaq.time_ratio < qrr.time_ratio * 2.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! ASCII line plots — renders the paper's figure panels (loss /
+//! gradient-norm / accuracy vs iterations and vs transmitted bits) as
+//! text, so `qrr exp` reproduces the *figures* too, without a plotting
+//! stack. Written alongside the CSV series.
+
+use std::fmt::Write as _;
+
+/// One named series of (x, y) points.
+pub struct Series {
+    /// legend label
+    pub label: String,
+    /// sorted-by-x data points
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series into a `width`×`height` character grid with axes.
+/// `log_x` plots x on a log10 scale (used for the vs-bits panels).
+pub fn ascii_plot(title: &str, series: &[Series], width: usize, height: usize, log_x: bool) -> String {
+    let width = width.max(20);
+    let height = height.max(5);
+    let tx = |x: f64| if log_x { x.max(1.0).log10() } else { x };
+
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for s in series {
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let x = tx(x);
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+    }
+    if x0 >= x1 {
+        x1 = x0 + 1.0;
+    }
+    if y0 >= y1 {
+        y1 = y0 + 1.0;
+    }
+
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        // draw with linear interpolation between consecutive points
+        let proj = |x: f64, y: f64| -> (usize, usize) {
+            let cx = ((tx(x) - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            (cx.min(width - 1), height - 1 - cy.min(height - 1))
+        };
+        for w in s.points.windows(2) {
+            let (xa, ya) = w[0];
+            let (xb, yb) = w[1];
+            if ![xa, ya, xb, yb].iter().all(|v| v.is_finite()) {
+                continue;
+            }
+            let steps = width.max(16);
+            for t in 0..=steps {
+                let f = t as f64 / steps as f64;
+                let (cx, cy) = proj(xa + f * (xb - xa), ya + f * (yb - ya));
+                grid[cy][cx] = mark;
+            }
+        }
+        if s.points.len() == 1 {
+            let (cx, cy) = proj(s.points[0].0, s.points[0].1);
+            grid[cy][cx] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(out, "{:>9.3} ┤", y1);
+    for row in &grid {
+        let line: String = row.iter().collect();
+        let _ = writeln!(out, "          │{line}");
+    }
+    let _ = writeln!(out, "{:>9.3} └{}", y0, "─".repeat(width));
+    let xl = if log_x { format!("10^{x0:.1}") } else { format!("{x0:.0}") };
+    let xr = if log_x { format!("10^{x1:.1}") } else { format!("{x1:.0}") };
+    let pad = width.saturating_sub(xl.len() + xr.len());
+    let _ = writeln!(out, "           {xl}{}{xr}", " ".repeat(pad));
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "           {} {}", marks[si % marks.len()], s.label);
+    }
+    out
+}
+
+/// Build the three paper panels (test loss, accuracy, gradient norm —
+/// each vs iterations and vs cumulative bits) for a set of histories.
+pub fn figure_panels(histories: &[crate::fl::History]) -> String {
+    let mut out = String::new();
+    let evals = |f: &dyn Fn(&crate::fl::EvalPoint) -> f64, vs_bits: bool| -> Vec<Series> {
+        histories
+            .iter()
+            .map(|h| Series {
+                label: h.label.clone(),
+                points: h
+                    .evals
+                    .iter()
+                    .map(|e| {
+                        let x = if vs_bits { e.cum_bits as f64 } else { (e.iter + 1) as f64 };
+                        (x, f(e))
+                    })
+                    .collect(),
+            })
+            .collect()
+    };
+    out += &ascii_plot(
+        "test loss vs iterations",
+        &evals(&|e| e.loss as f64, false),
+        72,
+        14,
+        false,
+    );
+    out += "\n";
+    out += &ascii_plot(
+        "test loss vs transmitted bits (log x)",
+        &evals(&|e| e.loss as f64, true),
+        72,
+        14,
+        true,
+    );
+    out += "\n";
+    out += &ascii_plot(
+        "accuracy vs iterations",
+        &evals(&|e| e.accuracy, false),
+        72,
+        14,
+        false,
+    );
+    out += "\n";
+    out += &ascii_plot(
+        "accuracy vs transmitted bits (log x)",
+        &evals(&|e| e.accuracy, true),
+        72,
+        14,
+        true,
+    );
+    // gradient norm comes from the per-round series
+    let grad_series: Vec<Series> = histories
+        .iter()
+        .map(|h| Series {
+            label: h.label.clone(),
+            points: h
+                .rounds
+                .iter()
+                .map(|r| ((r.iter + 1) as f64, r.grad_norm))
+                .collect(),
+        })
+        .collect();
+    out += "\n";
+    out += &ascii_plot("gradient l2 norm vs iterations", &grad_series, 72, 14, false);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_renders_axes_and_legend() {
+        let s = vec![
+            Series { label: "a".into(), points: (0..20).map(|i| (i as f64, (i * i) as f64)).collect() },
+            Series { label: "b".into(), points: (0..20).map(|i| (i as f64, (20 * i) as f64)).collect() },
+        ];
+        let out = ascii_plot("demo", &s, 40, 10, false);
+        assert!(out.contains("demo"));
+        assert!(out.contains("* a"));
+        assert!(out.contains("+ b"));
+        assert!(out.lines().count() > 12);
+        // marks actually drawn
+        assert!(out.contains('*') && out.contains('+'));
+    }
+
+    #[test]
+    fn log_x_labels() {
+        let s = vec![Series {
+            label: "bits".into(),
+            points: vec![(1e6, 1.0), (1e9, 0.5), (1e10, 0.2)],
+        }];
+        let out = ascii_plot("loss vs bits", &s, 40, 8, true);
+        assert!(out.contains("10^"));
+    }
+
+    #[test]
+    fn degenerate_inputs_no_panic() {
+        let out = ascii_plot("empty", &[], 30, 6, false);
+        assert!(out.contains("empty"));
+        let s = vec![Series { label: "one".into(), points: vec![(1.0, 2.0)] }];
+        let _ = ascii_plot("single", &s, 30, 6, false);
+        let s = vec![Series { label: "nan".into(), points: vec![(f64::NAN, 1.0), (2.0, 1.0)] }];
+        let _ = ascii_plot("nan", &s, 30, 6, true);
+    }
+}

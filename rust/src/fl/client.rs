@@ -1,0 +1,171 @@
+//! An FL client: local data shard + model backend + update scheme +
+//! simulated uplink.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::data::Dataset;
+use crate::model::ModelOps;
+use crate::net::{ClientUpdate, Encoder, LinkModel};
+use crate::util::{PhaseTimes, Rng, Timer};
+
+use super::scheme::ClientScheme;
+
+/// Everything a client reports back for one round.
+pub struct ClientRoundOutput {
+    /// serialized wire message (None = lazily skipped round)
+    pub wire: Option<Vec<u8>>,
+    /// the paper's `#bits` for this upload (0 when skipped)
+    pub payload_bits: u64,
+    /// local mean training loss on this round's batch
+    pub train_loss: f32,
+    /// simulated uplink transmission time
+    pub net_time: Duration,
+    /// wall-clock compute time split by phase (grad / encode / serialize)
+    pub phases: PhaseTimes,
+}
+
+/// One simulated client.
+pub struct FlClient {
+    /// stable id (also the wire client_id)
+    pub id: u32,
+    data: Dataset,
+    model: Arc<dyn ModelOps + Sync>,
+    scheme: Box<dyn ClientScheme>,
+    link: LinkModel,
+    rng: Rng,
+    batch: usize,
+    round: u64,
+}
+
+impl FlClient {
+    /// Assemble a client.
+    pub fn new(
+        id: u32,
+        data: Dataset,
+        model: Arc<dyn ModelOps + Sync>,
+        scheme: Box<dyn ClientScheme>,
+        link: LinkModel,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        FlClient {
+            id,
+            data,
+            model,
+            scheme,
+            link,
+            rng: Rng::new(seed),
+            batch,
+            round: 0,
+        }
+    }
+
+    /// Samples in this client's shard.
+    pub fn data_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Scheme state bytes held by this client.
+    pub fn scheme_mem_bytes(&self) -> usize {
+        self.scheme.mem_bytes()
+    }
+
+    /// The client's uplink model.
+    pub fn link(&self) -> LinkModel {
+        self.link
+    }
+
+    /// Run one FL round: sample a batch, compute the local mean gradient,
+    /// encode it with the scheme, serialize for the wire.
+    pub fn round(&mut self, weights: &[crate::tensor::Tensor]) -> ClientRoundOutput {
+        let mut phases = PhaseTimes::new();
+        let t = Timer::start();
+        let (x, y) = self.data.sample_batch(self.batch, &mut self.rng);
+        phases.add("sample", t.elapsed());
+
+        let t = Timer::start();
+        let (loss, grads) = self.model.loss_grad(weights, &x, &y);
+        phases.add("grad", t.elapsed());
+
+        let t = Timer::start();
+        let update: Option<ClientUpdate> = self.scheme.produce(weights, &grads);
+        phases.add("encode", t.elapsed());
+
+        let t = Timer::start();
+        let (wire, payload_bits) = match &update {
+            Some(u) => {
+                let bytes = Encoder::new(u, self.id, self.round);
+                let bits = u.payload_bits();
+                (Some(bytes), bits)
+            }
+            None => (None, 0),
+        };
+        phases.add("serialize", t.elapsed());
+
+        let net_time = if payload_bits > 0 {
+            self.link.transmit_time(payload_bits)
+        } else {
+            Duration::ZERO
+        };
+        self.round += 1;
+        ClientRoundOutput { wire, payload_bits, train_loss: loss, net_time, phases }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::fl::scheme::{make_client_scheme, SchemeKind};
+    use crate::model::{native::NativeModel, ModelKind, ModelSpec};
+
+    fn mk_client(kind: SchemeKind) -> (FlClient, Vec<crate::tensor::Tensor>) {
+        let spec = ModelSpec::new(ModelKind::Mlp);
+        let model: Arc<dyn ModelOps + Sync> = Arc::new(NativeModel::new(ModelKind::Mlp));
+        let scheme = make_client_scheme(kind, &spec.shapes(), 8, 0.001, 10);
+        let data = synth::mnist_like(64, 1);
+        let c = FlClient::new(0, data, model, scheme, LinkModel::broadband(), 16, 2);
+        let w = spec.init_params(3);
+        (c, w)
+    }
+
+    #[test]
+    fn round_produces_wire_and_bits_sgd() {
+        let (mut c, w) = mk_client(SchemeKind::Sgd);
+        let out = c.round(&w);
+        assert!(out.wire.is_some());
+        // MLP has 159,010 params -> 32 bits each
+        assert_eq!(out.payload_bits, 32 * 159_010);
+        assert!(out.train_loss.is_finite());
+        assert!(out.net_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn qrr_bits_much_smaller_than_sgd() {
+        let (mut c, w) = mk_client(SchemeKind::Qrr { p: 0.1 });
+        let out = c.round(&w);
+        assert!(out.payload_bits < 32 * 159_010 / 10);
+        assert!(out.wire.is_some());
+    }
+
+    #[test]
+    fn wire_decodes_with_client_id_and_round() {
+        let (mut c, w) = mk_client(SchemeKind::Sgd);
+        let out1 = c.round(&w);
+        let out2 = c.round(&w);
+        let d1 = crate::net::Decoder::decode(out1.wire.as_ref().unwrap()).unwrap();
+        let d2 = crate::net::Decoder::decode(out2.wire.as_ref().unwrap()).unwrap();
+        assert_eq!(d1.client_id, 0);
+        assert_eq!(d1.round, 0);
+        assert_eq!(d2.round, 1);
+    }
+
+    #[test]
+    fn phases_recorded() {
+        let (mut c, w) = mk_client(SchemeKind::Qrr { p: 0.2 });
+        let out = c.round(&w);
+        assert!(out.phases.get("grad") > Duration::ZERO);
+        assert!(out.phases.rows().len() >= 3);
+    }
+}

@@ -1,0 +1,223 @@
+//! Metric collection matching the paper's tables and figures: per-round
+//! loss / bits / communications / gradient ℓ2 norm and periodic test
+//! loss + accuracy, with CSV and markdown emitters.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Per-iteration record.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    /// iteration index (0-based)
+    pub iter: u64,
+    /// mean local training loss across clients this round
+    pub train_loss: f32,
+    /// bits uploaded by all clients this round
+    pub bits: u64,
+    /// number of client→server communications this round
+    pub comms: u32,
+    /// ℓ2 norm of the aggregated gradient
+    pub grad_norm: f64,
+    /// simulated network time of the slowest client (round is synchronous)
+    pub net_time: Duration,
+}
+
+/// Periodic test-set evaluation.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    /// iteration at which the evaluation ran
+    pub iter: u64,
+    /// cumulative bits uploaded up to this iteration
+    pub cum_bits: u64,
+    /// test loss
+    pub loss: f32,
+    /// test accuracy in [0,1]
+    pub accuracy: f64,
+}
+
+/// Full run history for one scheme.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    /// scheme label, e.g. `QRR(p=0.1)`
+    pub label: String,
+    /// per-round records
+    pub rounds: Vec<RoundMetrics>,
+    /// periodic test evaluations
+    pub evals: Vec<EvalPoint>,
+}
+
+impl History {
+    /// New history for a labelled run.
+    pub fn new(label: impl Into<String>) -> Self {
+        History { label: label.into(), ..Default::default() }
+    }
+
+    /// Total bits uploaded (paper's `# Bits` column).
+    pub fn total_bits(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bits).sum()
+    }
+
+    /// Total communications (paper's `# Communications` column).
+    pub fn total_comms(&self) -> u64 {
+        self.rounds.iter().map(|r| r.comms as u64).sum()
+    }
+
+    /// Number of iterations recorded.
+    pub fn iterations(&self) -> u64 {
+        self.rounds.len() as u64
+    }
+
+    /// Final-round gradient norm (paper's `Gradient ℓ2 norm` column).
+    pub fn final_grad_norm(&self) -> f64 {
+        self.rounds.last().map(|r| r.grad_norm).unwrap_or(0.0)
+    }
+
+    /// Last evaluation point (loss/accuracy columns).
+    pub fn final_eval(&self) -> Option<&EvalPoint> {
+        self.evals.last()
+    }
+
+    /// Total simulated network time (sum of per-round slowest uplink).
+    pub fn total_net_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.net_time).sum()
+    }
+
+    /// One row of the paper's result tables.
+    pub fn table_row(&self) -> TableRow {
+        TableRow {
+            algorithm: self.label.clone(),
+            iterations: self.iterations(),
+            bits: self.total_bits(),
+            comms: self.total_comms(),
+            loss: self.final_eval().map(|e| e.loss).unwrap_or(f32::NAN),
+            accuracy: self.final_eval().map(|e| e.accuracy).unwrap_or(f64::NAN),
+            grad_norm: self.final_grad_norm(),
+        }
+    }
+
+    /// CSV of the per-round series (for the "vs iterations" figures).
+    pub fn rounds_csv(&self) -> String {
+        let mut s = String::from("iter,train_loss,bits,cum_bits,comms,grad_norm,net_time_s\n");
+        let mut cum = 0u64;
+        for r in &self.rounds {
+            cum += r.bits;
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{}",
+                r.iter,
+                r.train_loss,
+                r.bits,
+                cum,
+                r.comms,
+                r.grad_norm,
+                r.net_time.as_secs_f64()
+            );
+        }
+        s
+    }
+
+    /// CSV of evaluation points (for the "vs bits" figures).
+    pub fn evals_csv(&self) -> String {
+        let mut s = String::from("iter,cum_bits,test_loss,test_accuracy\n");
+        for e in &self.evals {
+            let _ = writeln!(s, "{},{},{},{}", e.iter, e.cum_bits, e.loss, e.accuracy);
+        }
+        s
+    }
+}
+
+/// One row of a paper-style results table.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    /// scheme label
+    pub algorithm: String,
+    /// iterations run
+    pub iterations: u64,
+    /// total uploaded bits
+    pub bits: u64,
+    /// total communications
+    pub comms: u64,
+    /// final test loss
+    pub loss: f32,
+    /// final test accuracy in [0,1]
+    pub accuracy: f64,
+    /// final aggregated-gradient ℓ2 norm
+    pub grad_norm: f64,
+}
+
+/// Render rows as the paper's markdown table.
+pub fn markdown_table(rows: &[TableRow]) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "| Algorithm | # Iterations | # Bits | # Communications | Loss | Accuracy | Gradient l2 norm |\n",
+    );
+    s.push_str("|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.3} | {} | {:.3} |",
+            r.algorithm,
+            r.iterations,
+            crate::util::fmt::bits_sci(r.bits),
+            r.comms,
+            r.loss,
+            crate::util::fmt::pct(r.accuracy),
+            r.grad_norm
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist() -> History {
+        let mut h = History::new("QRR(p=0.1)");
+        for i in 0..3 {
+            h.rounds.push(RoundMetrics {
+                iter: i,
+                train_loss: 1.0 / (i + 1) as f32,
+                bits: 100,
+                comms: 10,
+                grad_norm: 2.0,
+                net_time: Duration::from_millis(5),
+            });
+        }
+        h.evals.push(EvalPoint { iter: 2, cum_bits: 300, loss: 0.5, accuracy: 0.9 });
+        h
+    }
+
+    #[test]
+    fn totals() {
+        let h = hist();
+        assert_eq!(h.total_bits(), 300);
+        assert_eq!(h.total_comms(), 30);
+        assert_eq!(h.iterations(), 3);
+        assert_eq!(h.final_grad_norm(), 2.0);
+        assert_eq!(h.total_net_time(), Duration::from_millis(15));
+    }
+
+    #[test]
+    fn table_row_and_markdown() {
+        let h = hist();
+        let row = h.table_row();
+        assert_eq!(row.algorithm, "QRR(p=0.1)");
+        assert_eq!(row.bits, 300);
+        let md = markdown_table(&[row]);
+        assert!(md.contains("| QRR(p=0.1) |"));
+        assert!(md.contains("90.00%"));
+        assert!(md.contains("3.000e2"));
+    }
+
+    #[test]
+    fn csv_has_cumulative_bits() {
+        let h = hist();
+        let csv = h.rounds_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 rows
+        assert!(lines[3].contains(",300,")); // cumulative
+        let ecsv = h.evals_csv();
+        assert!(ecsv.lines().count() == 2);
+    }
+}

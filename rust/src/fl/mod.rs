@@ -1,0 +1,17 @@
+//! Federated-learning core: update schemes, clients, the aggregation
+//! server and metrics.
+//!
+//! One **iteration** (paper terminology) = the server broadcasts weights
+//! → every client computes its local mean gradient over one batch →
+//! clients upload (scheme-encoded) updates → the server reconstructs,
+//! sums (eq. (2)) and applies the gradient-descent step.
+
+pub mod client;
+pub mod metrics;
+pub mod scheme;
+pub mod server;
+
+pub use client::{ClientRoundOutput, FlClient};
+pub use metrics::{EvalPoint, History, RoundMetrics};
+pub use scheme::{make_client_scheme, make_server_scheme, ClientScheme, SchemeKind, ServerScheme};
+pub use server::FlServer;

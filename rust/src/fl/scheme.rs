@@ -1,0 +1,290 @@
+//! Update schemes: SGD (FedAvg baseline), SLAQ and QRR behind a common
+//! client/server trait pair, so the round loop is scheme-agnostic.
+
+use crate::net::ClientUpdate;
+use crate::qrr::{ClientCodec, EfClientCodec, QrrConfig, ServerCodec};
+use crate::slaq::{SlaqClient, SlaqConfig, SlaqServerState};
+use crate::tensor::Tensor;
+
+/// Which scheme an experiment runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchemeKind {
+    /// full-precision federated averaging (paper's SGD baseline)
+    Sgd,
+    /// lazily aggregated quantized gradients (paper's SLAQ comparator)
+    Slaq,
+    /// the paper's contribution, with compression fraction `p`
+    Qrr {
+        /// fraction of the original rank retained
+        p: f64,
+    },
+    /// QRR + error feedback (extension; same wire format and server)
+    QrrEf {
+        /// fraction of the original rank retained
+        p: f64,
+    },
+}
+
+impl SchemeKind {
+    /// Short display name.
+    pub fn name(&self) -> String {
+        match self {
+            SchemeKind::Sgd => "SGD".into(),
+            SchemeKind::Slaq => "SLAQ".into(),
+            SchemeKind::Qrr { p } => format!("QRR(p={p})"),
+            SchemeKind::QrrEf { p } => format!("EF-QRR(p={p})"),
+        }
+    }
+}
+
+/// Client side of a scheme: gradients in, wire update out.
+pub trait ClientScheme: Send {
+    /// Produce this round's update; `None` = lazily skipped (nothing is
+    /// transmitted). `weights` are the freshly broadcast parameters.
+    fn produce(&mut self, weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate>;
+
+    /// Scheme state held client-side, in bytes (overhead experiment).
+    fn mem_bytes(&self) -> usize;
+}
+
+/// Server side of a scheme, one instance per client: updates in,
+/// reconstructed gradient contribution out.
+pub trait ServerScheme: Send {
+    /// Absorb the client's update (or its absence) and return the
+    /// gradient contribution to sum into the descent step.
+    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor>;
+
+    /// Scheme state held server-side for this client, in bytes.
+    fn mem_bytes(&self) -> usize;
+}
+
+/// Build the client half for `kind` over a model with `shapes`.
+pub fn make_client_scheme(
+    kind: SchemeKind,
+    shapes: &[Vec<usize>],
+    beta: u8,
+    alpha: f32,
+    clients: usize,
+) -> Box<dyn ClientScheme> {
+    match kind {
+        SchemeKind::Sgd => Box::new(SgdClient),
+        SchemeKind::Slaq => Box::new(SlaqClientScheme {
+            inner: SlaqClient::new(shapes, SlaqConfig { beta, ..SlaqConfig::paper(alpha, clients) }),
+        }),
+        SchemeKind::Qrr { p } => Box::new(QrrClientScheme {
+            codec: ClientCodec::new(shapes, QrrConfig { p, beta, ..QrrConfig::default() }),
+        }),
+        SchemeKind::QrrEf { p } => Box::new(EfClientScheme {
+            codec: EfClientCodec::new(shapes, QrrConfig { p, beta, ..QrrConfig::default() }),
+        }),
+    }
+}
+
+/// Build the matching server half (must mirror the client's config).
+pub fn make_server_scheme(
+    kind: SchemeKind,
+    shapes: &[Vec<usize>],
+    beta: u8,
+) -> Box<dyn ServerScheme> {
+    match kind {
+        SchemeKind::Sgd => Box::new(SgdServer { shapes: shapes.to_vec() }),
+        SchemeKind::Slaq => Box::new(SlaqServerScheme { inner: SlaqServerState::new(shapes) }),
+        // EF-QRR is server-transparent: same decoder as plain QRR.
+        SchemeKind::Qrr { p } | SchemeKind::QrrEf { p } => Box::new(QrrServerScheme {
+            codec: ServerCodec::new(shapes, QrrConfig { p, beta, ..QrrConfig::default() }),
+            shapes: shapes.to_vec(),
+        }),
+    }
+}
+
+// ------------------------------------------------------------------ SGD
+
+struct SgdClient;
+
+impl ClientScheme for SgdClient {
+    fn produce(&mut self, _weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
+        Some(ClientUpdate::Sgd { grads: grads.to_vec() })
+    }
+
+    fn mem_bytes(&self) -> usize {
+        0
+    }
+}
+
+struct SgdServer {
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ServerScheme for SgdServer {
+    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
+        match update {
+            Some(ClientUpdate::Sgd { grads }) => grads.clone(),
+            Some(_) => panic!("SGD server got non-SGD update"),
+            // SGD never skips; treat absence as zero contribution
+            None => self.shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        0
+    }
+}
+
+// ----------------------------------------------------------------- SLAQ
+
+struct SlaqClientScheme {
+    inner: SlaqClient,
+}
+
+impl ClientScheme for SlaqClientScheme {
+    fn produce(&mut self, weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
+        self.inner.observe_weights(weights);
+        self.inner.step(grads).map(|msg| ClientUpdate::Slaq { msg })
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.inner.mem_bytes()
+    }
+}
+
+struct SlaqServerScheme {
+    inner: SlaqServerState,
+}
+
+impl ServerScheme for SlaqServerScheme {
+    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
+        if let Some(u) = update {
+            match u {
+                ClientUpdate::Slaq { msg } => self.inner.apply(msg),
+                _ => panic!("SLAQ server got non-SLAQ update"),
+            }
+        }
+        // skipped or not: contribute the latest (possibly stale) gradient
+        self.inner.latest().into_iter().cloned().collect()
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.inner.mem_bytes()
+    }
+}
+
+// ------------------------------------------------------------------ QRR
+
+struct QrrClientScheme {
+    codec: ClientCodec,
+}
+
+impl ClientScheme for QrrClientScheme {
+    fn produce(&mut self, _weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
+        Some(ClientUpdate::Qrr { msgs: self.codec.encode(grads) })
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.codec.mem_bytes()
+    }
+}
+
+struct QrrServerScheme {
+    codec: ServerCodec,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ServerScheme for QrrServerScheme {
+    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
+        match update {
+            Some(ClientUpdate::Qrr { msgs }) => self.codec.decode(msgs),
+            Some(_) => panic!("QRR server got non-QRR update"),
+            // partial participation: no upload, no state change, zero
+            // contribution this round
+            None => self.shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.codec.mem_bytes()
+    }
+}
+
+struct EfClientScheme {
+    codec: EfClientCodec,
+}
+
+impl ClientScheme for EfClientScheme {
+    fn produce(&mut self, _weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
+        Some(ClientUpdate::Qrr { msgs: self.codec.encode(grads) })
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.codec.mem_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![10, 20], vec![10]]
+    }
+
+    fn grads(rng: &mut Rng) -> Vec<Tensor> {
+        shapes().iter().map(|s| Tensor::randn(s, rng)).collect()
+    }
+
+    #[test]
+    fn sgd_is_lossless() {
+        let mut rng = Rng::new(110);
+        let mut c = make_client_scheme(SchemeKind::Sgd, &shapes(), 8, 0.001, 10);
+        let mut s = make_server_scheme(SchemeKind::Sgd, &shapes(), 8);
+        let g = grads(&mut rng);
+        let up = c.produce(&[], &g).unwrap();
+        let back = s.absorb(Some(&up));
+        for (a, b) in g.iter().zip(back.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn qrr_roundtrips_with_bounded_error() {
+        let mut rng = Rng::new(111);
+        let mut c = make_client_scheme(SchemeKind::Qrr { p: 1.0 }, &shapes(), 12, 0.001, 10);
+        let mut s = make_server_scheme(SchemeKind::Qrr { p: 1.0 }, &shapes(), 12);
+        let g = grads(&mut rng);
+        let up = c.produce(&[], &g).unwrap();
+        let back = s.absorb(Some(&up));
+        // p=1, beta=12: near-lossless
+        for (a, b) in g.iter().zip(back.iter()) {
+            assert!(a.rel_err(b) < 0.05, "err {}", a.rel_err(b));
+        }
+    }
+
+    #[test]
+    fn slaq_skip_returns_stale() {
+        let mut rng = Rng::new(112);
+        let mut c = make_client_scheme(SchemeKind::Slaq, &shapes(), 8, 0.001, 10);
+        let mut s = make_server_scheme(SchemeKind::Slaq, &shapes(), 8);
+        let w = grads(&mut rng);
+        let g = grads(&mut rng);
+        let up = c.produce(&w, &g).expect("first round sends");
+        let first = s.absorb(Some(&up));
+        // absorbing None (skip) must return the same stale gradient
+        let stale = s.absorb(None);
+        for (a, b) in first.iter().zip(stale.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn mem_bytes_ordering_matches_paper() {
+        // SLAQ holds full-gradient state; QRR holds factor state (smaller);
+        // SGD holds nothing.
+        let shapes = vec![vec![200, 784], vec![200], vec![10, 200], vec![10]];
+        let sgd = make_client_scheme(SchemeKind::Sgd, &shapes, 8, 0.001, 10);
+        let slaq = make_client_scheme(SchemeKind::Slaq, &shapes, 8, 0.001, 10);
+        let qrr = make_client_scheme(SchemeKind::Qrr { p: 0.2 }, &shapes, 8, 0.001, 10);
+        assert_eq!(sgd.mem_bytes(), 0);
+        assert!(slaq.mem_bytes() > qrr.mem_bytes());
+        assert!(qrr.mem_bytes() > 0);
+    }
+}

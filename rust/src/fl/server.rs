@@ -1,0 +1,156 @@
+//! The FL server: holds the central model, per-client scheme mirrors and
+//! applies the distributed gradient-descent step (paper eq. (2)).
+
+use crate::net::{ClientUpdate, Decoder};
+use crate::tensor::Tensor;
+
+use super::scheme::ServerScheme;
+
+/// Aggregation server.
+pub struct FlServer {
+    params: Vec<Tensor>,
+    per_client: Vec<Box<dyn ServerScheme>>,
+    alpha: f32,
+}
+
+impl FlServer {
+    /// New server with initial parameters and one scheme mirror per client.
+    pub fn new(params: Vec<Tensor>, per_client: Vec<Box<dyn ServerScheme>>, alpha: f32) -> Self {
+        FlServer { params, per_client, alpha }
+    }
+
+    /// Current central parameters (broadcast to clients each round).
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    /// Change the learning rate (experiment 3 decays it mid-run).
+    pub fn set_alpha(&mut self, alpha: f32) {
+        self.alpha = alpha;
+    }
+
+    /// Current learning rate.
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    /// Server-side scheme memory across all clients, in bytes.
+    pub fn scheme_mem_bytes(&self) -> usize {
+        self.per_client.iter().map(|s| s.mem_bytes()).sum()
+    }
+
+    /// Decode raw wire messages (order: one slot per client, `None` for
+    /// skipped uploads), reconstruct per-client gradients, sum them and
+    /// take the descent step. Returns the ℓ2 norm of the aggregated
+    /// gradient (a column in the paper's tables).
+    pub fn aggregate_wire(&mut self, wires: &[Option<Vec<u8>>]) -> anyhow::Result<f64> {
+        assert_eq!(wires.len(), self.per_client.len(), "one slot per client");
+        let updates: Vec<Option<ClientUpdate>> = wires
+            .iter()
+            .map(|w| {
+                w.as_ref()
+                    .map(|bytes| Decoder::decode(bytes).map(|d| d.update))
+                    .transpose()
+            })
+            .collect::<Result<_, _>>()?;
+        Ok(self.aggregate(&updates))
+    }
+
+    /// Same as [`Self::aggregate_wire`] but with already-decoded updates.
+    pub fn aggregate(&mut self, updates: &[Option<ClientUpdate>]) -> f64 {
+        assert_eq!(updates.len(), self.per_client.len());
+        let mut sum: Option<Vec<Tensor>> = None;
+        for (scheme, up) in self.per_client.iter_mut().zip(updates.iter()) {
+            let grads = scheme.absorb(up.as_ref());
+            match &mut sum {
+                None => sum = Some(grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(grads.iter()) {
+                        a.axpy(1.0, g);
+                    }
+                }
+            }
+        }
+        let agg = sum.expect("at least one client");
+        let norm2: f64 = agg.iter().map(crate::tensor::sq_norm).sum();
+        // θ^{k+1} = θ^k − α Σ_c ∇f_c (eq. (2))
+        for (p, g) in self.params.iter_mut().zip(agg.iter()) {
+            p.axpy(-self.alpha, g);
+        }
+        norm2.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::scheme::{make_client_scheme, make_server_scheme, SchemeKind};
+    use crate::net::Encoder;
+    use crate::util::Rng;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![6, 4], vec![6]]
+    }
+
+    #[test]
+    fn sgd_aggregate_is_sum_times_alpha() {
+        let shapes = shapes();
+        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let per_client = vec![
+            make_server_scheme(SchemeKind::Sgd, &shapes, 8),
+            make_server_scheme(SchemeKind::Sgd, &shapes, 8),
+        ];
+        let mut server = FlServer::new(params, per_client, 0.5);
+        let mut rng = Rng::new(120);
+        let g1: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let g2: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let norm = server.aggregate(&[
+            Some(ClientUpdate::Sgd { grads: g1.clone() }),
+            Some(ClientUpdate::Sgd { grads: g2.clone() }),
+        ]);
+        assert!(norm > 0.0);
+        // params = -alpha*(g1+g2)
+        for (i, p) in server.params().iter().enumerate() {
+            let expect = crate::tensor::zip(&g1[i], &g2[i], |a, b| -0.5 * (a + b));
+            assert!(p.rel_err(&expect) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn aggregate_wire_roundtrip() {
+        let shapes = shapes();
+        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let mut client = make_client_scheme(SchemeKind::Qrr { p: 0.5 }, &shapes, 8, 0.1, 1);
+        let per_client = vec![make_server_scheme(SchemeKind::Qrr { p: 0.5 }, &shapes, 8)];
+        let mut server = FlServer::new(params, per_client, 0.1);
+        let mut rng = Rng::new(121);
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let up = client.produce(&[], &grads).unwrap();
+        let wire = Encoder::new(&up, 0, 0);
+        let norm = server.aggregate_wire(&[Some(wire)]).unwrap();
+        assert!(norm.is_finite() && norm > 0.0);
+        // params moved
+        assert!(server.params()[0].fro_norm() > 0.0);
+    }
+
+    #[test]
+    fn garbage_wire_is_error_not_panic() {
+        let shapes = shapes();
+        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let per_client = vec![make_server_scheme(SchemeKind::Sgd, &shapes, 8)];
+        let mut server = FlServer::new(params, per_client, 0.1);
+        let res = server.aggregate_wire(&[Some(vec![1, 2, 3])]);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn lr_schedule_applied() {
+        let shapes = shapes();
+        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let per_client = vec![make_server_scheme(SchemeKind::Sgd, &shapes, 8)];
+        let mut server = FlServer::new(params, per_client, 0.01);
+        assert_eq!(server.alpha(), 0.01);
+        server.set_alpha(0.001);
+        assert_eq!(server.alpha(), 0.001);
+    }
+}

@@ -1,0 +1,66 @@
+//! # QRR — Quantized Rank Reduction for communication-efficient federated learning
+//!
+//! Reproduction of *"Quantized Rank Reduction: A Communications-Efficient
+//! Federated Learning Scheme for Network-Critical Applications"*
+//! (Kritsiolis & Kotropoulos, 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`tensor`] / [`linalg`] — dense-tensor and factorization substrate
+//!   (unfoldings, mode-n products, blocked matmul, QR, truncated SVD).
+//! * [`quant`] — the LAQ β-bit grid quantizer with real bit-packing.
+//! * [`compress`] — the ℂ/ℂ⁻¹ operators: truncated SVD for matrix
+//!   gradients, Tucker (HOSVD) for 4-D convolution gradients.
+//! * [`qrr`] — the paper's QRR operator (eq. 19): compress → quantize on
+//!   the client, dequantize → reconstruct on the server.
+//! * [`slaq`] — the SLAQ baseline (lazily aggregated quantized gradients).
+//! * [`fl`] — federated-learning core: clients, server, update schemes,
+//!   round loop, metrics.
+//! * [`net`] — simulated network: wire format, bit accounting, link
+//!   models, in-process and TCP transports.
+//! * [`model`] — parameter schemas shared with the python build path and
+//!   a pure-Rust reference implementation of the paper's models.
+//! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
+//! * [`coordinator`] — round orchestration, parallel client execution,
+//!   adaptive per-client rank selection.
+//! * [`data`] — MNIST/CIFAR-10 loaders plus deterministic synthetic
+//!   generators used when the real datasets are not on disk.
+//!
+//! Python (JAX + Pallas) runs only at **build time** (`make artifacts`);
+//! the request path is pure Rust + PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use qrr::config::ExperimentConfig;
+//! use qrr::coordinator::Coordinator;
+//!
+//! let cfg = ExperimentConfig::table1_default();
+//! let mut coord = Coordinator::from_config(&cfg).unwrap();
+//! let report = coord.run().unwrap();
+//! println!("{}", report.markdown_table());
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod experiments;
+pub mod fl;
+pub mod linalg;
+pub mod model;
+pub mod net;
+pub mod quant;
+pub mod qrr;
+pub mod runtime;
+pub mod slaq;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use tensor::Tensor;

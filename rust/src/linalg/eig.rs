@@ -1,0 +1,149 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations — used to
+//! factorize the small Gram matrices of the randomized SVD path
+//! (EXPERIMENTS.md §Perf: replaces one-sided Jacobi on l×n with an l×l
+//! eigenproblem, an ~8× win on the QRR encode hot path).
+
+use crate::tensor::Tensor;
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues,
+/// eigenvectors) with eigenvalues descending and eigenvectors in the
+/// corresponding columns.
+pub fn sym_eig_jacobi(a: &Tensor) -> (Vec<f32>, Tensor) {
+    assert_eq!(a.ndim(), 2, "eig expects a matrix");
+    let n = a.shape()[0];
+    assert_eq!(a.shape()[1], n, "eig expects a square matrix");
+
+    // Work in f64 for stability of the small problem.
+    let mut m: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // rows/cols p and q of M
+                for i in 0..n {
+                    let mip = m[i * n + p];
+                    let miq = m[i * n + q];
+                    m[i * n + p] = c * mip - s * miq;
+                    m[i * n + q] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let mpj = m[p * n + j];
+                    let mqj = m[q * n + j];
+                    m[p * n + j] = c * mpj - s * mqj;
+                    m[q * n + j] = s * mpj + c * mqj;
+                }
+                // accumulate eigenvectors
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    // extract + sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    order.sort_by(|&i, &j| evals[j].total_cmp(&evals[i])); // NaN-safe
+    let mut out_vals = Vec::with_capacity(n);
+    let mut out_vecs = Tensor::zeros(&[n, n]);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        out_vals.push(evals[old_j] as f32);
+        for i in 0..n {
+            out_vecs.set2(i, new_j, v[i * n + old_j] as f32);
+        }
+    }
+    (out_vals, out_vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_nt, matmul_tn};
+    use crate::util::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Tensor {
+        let a = Tensor::randn(&[n, n], rng);
+        let at = a.transpose();
+        crate::tensor::zip(&a, &at, |x, y| 0.5 * (x + y))
+    }
+
+    #[test]
+    fn reconstructs_symmetric_matrix() {
+        let mut rng = Rng::new(200);
+        for n in [1usize, 2, 5, 16, 40] {
+            let a = random_symmetric(n, &mut rng);
+            let (vals, vecs) = sym_eig_jacobi(&a);
+            // A = V diag(vals) Vt
+            let mut vd = vecs.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    let x = vd.get2(i, j) * vals[j];
+                    vd.set2(i, j, x);
+                }
+            }
+            let rec = matmul_nt(&vd, &vecs.transpose().transpose());
+            // matmul_nt(vd, vecs) computes vd * vecs^T directly:
+            let rec = if true { matmul_nt(&vd, &vecs) } else { rec };
+            assert!(a.rel_err(&rec) < 1e-4, "n={n} err {}", a.rel_err(&rec));
+            // orthonormal eigenvectors
+            let vtv = matmul_tn(&vecs, &vecs);
+            assert!(vtv.rel_err(&Tensor::eye(n)) < 1e-4, "n={n}");
+            // descending
+            for w in vals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_eigenvalues() {
+        let mut rng = Rng::new(201);
+        let b = Tensor::randn(&[12, 30], &mut rng);
+        let g = matmul_nt(&b, &b); // B Bt, PSD
+        let (vals, _) = sym_eig_jacobi(&g);
+        for &l in &vals {
+            assert!(l > -1e-3, "negative eigenvalue {l}");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_is_trivial() {
+        let mut d = Tensor::zeros(&[3, 3]);
+        d.set2(0, 0, 1.0);
+        d.set2(1, 1, 5.0);
+        d.set2(2, 2, 3.0);
+        let (vals, vecs) = sym_eig_jacobi(&d);
+        assert_eq!(vals, vec![5.0, 3.0, 1.0]);
+        // eigenvectors are signed unit vectors
+        let i = matmul(&vecs, &vecs.transpose());
+        assert!(i.rel_err(&Tensor::eye(3)) < 1e-6);
+    }
+}

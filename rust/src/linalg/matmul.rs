@@ -1,0 +1,240 @@
+//! Blocked, cache-friendly matrix multiplication.
+//!
+//! A micro-kernel-free but register-blocked GEMM: loop order i-k-j with
+//! 64×64×64 cache blocking and an 8-wide inner accumulation the compiler
+//! auto-vectorizes. Large products are split row-wise across threads.
+
+use crate::tensor::Tensor;
+
+const BLOCK: usize = 64;
+/// Products larger than this many MACs go parallel.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// C = A · B for row-major matrices (m×k)·(k×n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
+    let (m, ka) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(ka, kb, "matmul inner dims {ka} != {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm(a.data(), b.data(), c.data_mut(), m, ka, n);
+    c
+}
+
+/// C = Aᵀ · B where A is (k×m) — avoids materializing the transpose.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "matmul_tn inner dims {k} != {kb}");
+    // Aᵀ(m×k) row i = A column i (stride m). Transposing A up front and
+    // running the blocked kernel is faster than strided access.
+    let at = a.transpose();
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm(at.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// C = A · Bᵀ where B is (n×k).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, kb) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "matmul_nt inner dims {k} != {kb}");
+    let bt = b.transpose();
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm(a.data(), bt.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// y = A · x for a matrix (m×n) and vector (n).
+pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(x.ndim(), 1);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(x.len(), n, "matvec dim mismatch");
+    let mut y = vec![0f32; m];
+    let ad = a.data();
+    let xd = x.data();
+    for i in 0..m {
+        let row = &ad[i * n..(i + 1) * n];
+        let mut acc = 0f32;
+        for j in 0..n {
+            acc += row[j] * xd[j];
+        }
+        y[i] = acc;
+    }
+    Tensor::vector(y)
+}
+
+/// Core blocked kernel: c(m×n) += a(m×k) · b(k×n); c must be zeroed.
+fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if m * k * n >= PAR_THRESHOLD {
+        gemm_parallel(a, b, c, m, k, n);
+    } else {
+        gemm_serial(a, b, c, m, k, n, 0, m);
+    }
+}
+
+fn gemm_parallel(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    let threads = crate::exec::default_threads().min(m).max(1);
+    let rows_per = m.div_ceil(threads);
+    // Split C into disjoint row bands, one per thread.
+    let bands: Vec<(usize, &mut [f32])> = {
+        let mut bands = Vec::new();
+        let mut rest = c;
+        let mut row = 0usize;
+        while row < m {
+            let take = rows_per.min(m - row);
+            let (head, tail) = rest.split_at_mut(take * n);
+            bands.push((row, head));
+            rest = tail;
+            row += take;
+        }
+        bands
+    };
+    std::thread::scope(|s| {
+        for (row0, band) in bands {
+            let rows = band.len() / n;
+            s.spawn(move || {
+                gemm_serial(a, b, band, m, k, n, row0, row0 + rows);
+            });
+        }
+    });
+}
+
+/// Serial blocked kernel over rows [r0, r1). `c` holds only those rows.
+fn gemm_serial(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    _m: usize,
+    k: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for bi in (r0..r1).step_by(BLOCK) {
+        let bi_end = (bi + BLOCK).min(r1);
+        for bk in (0..k).step_by(BLOCK) {
+            let bk_end = (bk + BLOCK).min(k);
+            for bj in (0..n).step_by(BLOCK) {
+                let bj_end = (bj + BLOCK).min(n);
+                for i in bi..bi_end {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+                    for kk in bk..bk_end {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        // contiguous j loop: auto-vectorizes
+                        for j in bj..bj_end {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    acc += a.get2(i, kk) as f64 * b.get2(kk, j) as f64;
+                }
+                c.set2(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (2, 3, 4), (5, 7, 3), (16, 16, 16)] {
+            let a = Tensor::randn(&[m, k], &mut rng);
+            let b = Tensor::randn(&[k, n], &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.rel_err(&naive(&a, &b)) < 1e-5, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_unaligned_sizes() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[65, 130], &mut rng);
+        let b = Tensor::randn(&[130, 67], &mut rng);
+        assert!(matmul(&a, &b).rel_err(&naive(&a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_path_correct() {
+        let mut rng = Rng::new(3);
+        // 128*128*128 > PAR_THRESHOLD? 2^21 > 2^20: yes
+        let a = Tensor::randn(&[128, 128], &mut rng);
+        let b = Tensor::randn(&[128, 128], &mut rng);
+        assert!(matmul(&a, &b).rel_err(&naive(&a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn tn_and_nt_variants() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[20, 12], &mut rng);
+        let b = Tensor::randn(&[20, 9], &mut rng);
+        let c1 = matmul_tn(&a, &b); // (12x9)
+        let c2 = matmul(&a.transpose(), &b);
+        assert!(c1.rel_err(&c2) < 1e-5);
+
+        let d = Tensor::randn(&[12, 20], &mut rng);
+        let e = Tensor::randn(&[9, 20], &mut rng);
+        let c3 = matmul_nt(&d, &e); // (12x9)
+        let c4 = matmul(&d, &e.transpose());
+        assert!(c3.rel_err(&c4) < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[33, 33], &mut rng);
+        let i = Tensor::eye(33);
+        assert!(matmul(&a, &i).rel_err(&a) < 1e-6);
+        assert!(matmul(&i, &a).rel_err(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let a = Tensor::randn(&[13, 7], &mut rng);
+        let x = Tensor::randn(&[7], &mut rng);
+        let y = matvec(&a, &x);
+        let xm = Tensor::matrix(7, 1, x.data().to_vec());
+        let ym = matmul(&a, &xm);
+        for i in 0..13 {
+            assert!((y.data()[i] - ym.data()[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        let _ = matmul(&a, &b);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate: blocked matmul, Householder QR and
+//! truncated SVD (exact one-sided Jacobi + randomized subspace
+//! iteration).
+//!
+//! This is the engine behind the paper's compression operator ℂ:
+//! truncated SVD for matrix gradients (eq. (5)-(8)) and the per-mode
+//! SVDs of the Tucker/HOSVD factorization (eq. (9)).
+
+mod eig;
+mod matmul;
+mod qr;
+mod svd;
+
+pub use eig::sym_eig_jacobi;
+pub use matmul::{matmul, matmul_nt, matmul_tn, matvec};
+pub use qr::{orthonormalize, qr_thin, QrThin};
+pub use svd::{svd_jacobi, svd_truncated, Svd, SvdMethod};

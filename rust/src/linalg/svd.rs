@@ -1,0 +1,433 @@
+//! Truncated singular value decomposition.
+//!
+//! Two engines:
+//! * [`svd_jacobi`] — exact thin SVD via one-sided Jacobi rotations.
+//!   Robust and simple; O(mn²) per sweep. Used for small matrices and as
+//!   the finishing step of the randomized path.
+//! * [`svd_truncated`] with [`SvdMethod::Randomized`] — Halko-style
+//!   randomized range finder with subspace (power) iteration: sketch
+//!   Y = A·Ω, orthonormalize Q, project B = Qᵀ·A, exact SVD of the small
+//!   B, then U = Q·U_B. This is the GEMM-dominant formulation that maps
+//!   onto the Pallas `rangefinder` kernel on TPU (DESIGN.md §3).
+//!
+//! The paper truncates to ν = ⌈p·min(m,n)⌉ singular values (eq. (22)).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+use super::matmul::{matmul, matmul_tn};
+use super::qr::orthonormalize;
+
+/// Thin SVD result: `a ≈ u · diag(s) · vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// m×k, orthonormal columns (left singular vectors).
+    pub u: Tensor,
+    /// k singular values, descending.
+    pub s: Vec<f32>,
+    /// n×k, orthonormal columns (right singular vectors).
+    pub v: Tensor,
+}
+
+impl Svd {
+    /// Reconstruct the (possibly truncated) matrix U·diag(s)·Vᵀ.
+    pub fn reconstruct(&self) -> Tensor {
+        let k = self.s.len();
+        let (m, n) = (self.u.shape()[0], self.v.shape()[0]);
+        // scale columns of U by s, then multiply by Vᵀ
+        let mut us = self.u.clone();
+        for i in 0..m {
+            for j in 0..k {
+                let v = us.get2(i, j) * self.s[j];
+                us.set2(i, j, v);
+            }
+        }
+        super::matmul_nt(&us, &self.v).reshape(&[m, n])
+    }
+
+    /// Truncate to the leading `k` components.
+    pub fn truncate(mut self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        let (m, n) = (self.u.shape()[0], self.v.shape()[0]);
+        let old_k = self.s.len();
+        let mut u = Tensor::zeros(&[m, k]);
+        let mut v = Tensor::zeros(&[n, k]);
+        for i in 0..m {
+            for j in 0..k {
+                u.set2(i, j, self.u.data()[i * old_k + j]);
+            }
+        }
+        for i in 0..n {
+            for j in 0..k {
+                v.set2(i, j, self.v.data()[i * old_k + j]);
+            }
+        }
+        self.s.truncate(k);
+        Svd { u, s: self.s, v }
+    }
+}
+
+/// Algorithm selector for [`svd_truncated`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SvdMethod {
+    /// Exact one-sided Jacobi, then truncate. Cost O(mn·min(m,n)).
+    Jacobi,
+    /// Randomized range finder + power iteration. Cost O(mnk).
+    Randomized {
+        /// extra sketch columns beyond the target rank (default 8)
+        oversample: usize,
+        /// number of power iterations (default 2)
+        power_iters: usize,
+        /// PRNG seed for the Gaussian test matrix
+        seed: u64,
+    },
+    /// Randomized for large matrices, Jacobi for small ones.
+    Auto,
+}
+
+impl Default for SvdMethod {
+    fn default() -> Self {
+        SvdMethod::Auto
+    }
+}
+
+/// Default randomized parameters.
+pub const DEFAULT_OVERSAMPLE: usize = 8;
+/// Default power iterations for the randomized path.
+pub const DEFAULT_POWER_ITERS: usize = 2;
+/// Below this element count, Auto uses exact Jacobi.
+const AUTO_JACOBI_LIMIT: usize = 64 * 64;
+
+/// Truncated SVD keeping the `k` leading components.
+pub fn svd_truncated(a: &Tensor, k: usize, method: SvdMethod) -> Svd {
+    assert_eq!(a.ndim(), 2, "svd expects a matrix");
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let k = k.min(m.min(n)).max(1);
+    match method {
+        SvdMethod::Jacobi => svd_jacobi(a).truncate(k),
+        SvdMethod::Randomized { oversample, power_iters, seed } => {
+            svd_randomized(a, k, oversample, power_iters, seed)
+        }
+        SvdMethod::Auto => {
+            // Exact Jacobi only for small problems; the randomized path
+            // (GEMM-dominant, the TPU mapping) handles everything else,
+            // including near-full-rank targets — power iteration keeps it
+            // accurate there.
+            if m * n <= AUTO_JACOBI_LIMIT {
+                svd_jacobi(a).truncate(k)
+            } else {
+                svd_randomized(a, k, DEFAULT_OVERSAMPLE, DEFAULT_POWER_ITERS, 0x5EED)
+            }
+        }
+    }
+}
+
+/// Exact thin SVD via one-sided Jacobi (Hestenes). Returns all
+/// min(m,n) components in descending order.
+pub fn svd_jacobi(a: &Tensor) -> Svd {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    if m < n {
+        // SVD(Aᵀ) = (V, S, U)
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    // Work on columns of W = A (m×n); V accumulates rotations (n×n).
+    let mut w = a.data().to_vec();
+    let mut v = Tensor::eye(n).into_vec();
+
+    let max_sweeps = 30;
+    let tol = 1e-9f64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0f64;
+        let mut rotations = 0usize;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for columns p, q
+                let (mut app, mut aqq, mut apq) = (0f64, 0f64, 0f64);
+                for i in 0..m {
+                    let wp = w[i * n + p] as f64;
+                    let wq = w[i * n + q] as f64;
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq * apq;
+                rotations += 1;
+                // Jacobi rotation angle
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                // rotate columns p,q of W
+                for i in 0..m {
+                    let wp = w[i * n + p];
+                    let wq = w[i * n + q];
+                    w[i * n + p] = cf * wp - sf * wq;
+                    w[i * n + q] = sf * wp + cf * wq;
+                }
+                // rotate columns p,q of V
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = cf * vp - sf * vq;
+                    v[i * n + q] = sf * vp + cf * vq;
+                }
+            }
+        }
+        if rotations == 0 || off.sqrt() < tol {
+            break;
+        }
+    }
+
+    // Column norms of W are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0f32; n];
+    for (j, sig) in sigmas.iter_mut().enumerate() {
+        let mut nrm = 0f64;
+        for i in 0..m {
+            nrm += (w[i * n + j] as f64).powi(2);
+        }
+        *sig = nrm.sqrt() as f32;
+    }
+    order.sort_by(|&i, &j| sigmas[j].total_cmp(&sigmas[i])); // NaN-safe
+
+    let mut u = Tensor::zeros(&[m, n]);
+    let mut vv = Tensor::zeros(&[n, n]);
+    let mut s = vec![0f32; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sig = sigmas[old_j];
+        s[new_j] = sig;
+        let inv = if sig > 1e-20 { 1.0 / sig } else { 0.0 };
+        for i in 0..m {
+            u.set2(i, new_j, w[i * n + old_j] * inv);
+        }
+        for i in 0..n {
+            vv.set2(i, new_j, v[i * n + old_j]);
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Randomized truncated SVD (Halko-Martinsson-Tropp alg. 4.4 + 5.1).
+fn svd_randomized(a: &Tensor, k: usize, oversample: usize, power_iters: usize, seed: u64) -> Svd {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let l = (k + oversample).min(m.min(n));
+    let mut rng = Rng::new(seed ^ (m as u64) << 32 ^ n as u64);
+
+    // Sketch: Y = A Ω,  Ω ∈ R^{n×l}
+    let omega = Tensor::randn(&[n, l], &mut rng);
+    let mut y = matmul(a, &omega); // m×l
+    // Power iteration with re-orthonormalization: Y <- A (Aᵀ Q).
+    // CholeskyQR2 keeps every step GEMM-dominant (§Perf).
+    let mut q = orthonormalize(&y);
+    for _ in 0..power_iters {
+        let z = matmul_tn(a, &q); // n×l
+        let qz = orthonormalize(&z);
+        y = matmul(a, &qz); // m×l
+        q = orthonormalize(&y);
+    }
+    // Project: B = Qᵀ A  (l×n)
+    let b = matmul_tn(&q, a);
+    // SVD of the small B via its l×l Gram matrix: eig(B·Bᵀ) = (σ², U_B),
+    // then V = Bᵀ·U_B·diag(1/σ). O(l²n + l³) instead of one-sided Jacobi
+    // on l×n — the dominant cost of the QRR encode path before this
+    // change (EXPERIMENTS.md §Perf).
+    let sb = svd_small_lhs(&b, k);
+    // U = Q · U_B
+    let u = matmul(&q, &sb.u);
+    Svd { u, s: sb.s, v: sb.v }
+}
+
+/// Thin SVD of a short-and-wide matrix (l ≤ n) through the l×l Gram
+/// eigenproblem. Accurate for the dominant components (all we keep);
+/// tiny σ lose relative precision, which truncation discards anyway.
+fn svd_small_lhs(b: &Tensor, k: usize) -> Svd {
+    let (l, n) = (b.shape()[0], b.shape()[1]);
+    debug_assert!(l <= n, "svd_small_lhs expects l <= n");
+    let k = k.min(l);
+    let gram = super::matmul::matmul_nt(b, b); // l×l
+    let (vals, vecs) = super::eig::sym_eig_jacobi(&gram);
+    // keep k leading
+    let mut u = Tensor::zeros(&[l, k]);
+    let mut s = Vec::with_capacity(k);
+    for j in 0..k {
+        s.push(vals[j].max(0.0).sqrt());
+        for i in 0..l {
+            u.set2(i, j, vecs.get2(i, j));
+        }
+    }
+    // V = Bᵀ U diag(1/s)   (zero columns where sigma ~ 0)
+    let bt_u = matmul_tn(b, &u); // n×k
+    let mut v = bt_u;
+    for j in 0..k {
+        let inv = if s[j] > 1e-12 { 1.0 / s[j] } else { 0.0 };
+        for i in 0..n {
+            let x = v.get2(i, j) * inv;
+            v.set2(i, j, x);
+        }
+    }
+    Svd { u, s, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_tn, qr_thin};
+    use crate::util::Rng;
+
+    /// Build an m×n matrix with prescribed singular values.
+    fn with_spectrum(m: usize, n: usize, sigmas: &[f32], rng: &mut Rng) -> Tensor {
+        let k = sigmas.len().min(m.min(n));
+        let qa = qr_thin(&Tensor::randn(&[m, k], rng)).q;
+        let qb = qr_thin(&Tensor::randn(&[n, k], rng)).q;
+        let mut us = qa.clone();
+        for i in 0..m {
+            for j in 0..k {
+                let v = us.get2(i, j) * sigmas[j];
+                us.set2(i, j, v);
+            }
+        }
+        super::super::matmul_nt(&us, &qb)
+    }
+
+    fn check_svd(a: &Tensor, svd: &Svd, tol: f32) {
+        let (m, n) = (a.shape()[0], a.shape()[1]);
+        let k = svd.s.len();
+        assert_eq!(svd.u.shape(), &[m, k]);
+        assert_eq!(svd.v.shape(), &[n, k]);
+        // descending
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "not descending: {:?}", svd.s);
+        }
+        // orthonormal columns
+        let utu = matmul_tn(&svd.u, &svd.u);
+        assert!(utu.rel_err(&Tensor::eye(k)) < tol, "UtU err");
+        let vtv = matmul_tn(&svd.v, &svd.v);
+        assert!(vtv.rel_err(&Tensor::eye(k)) < tol, "VtV err");
+    }
+
+    #[test]
+    fn jacobi_exact_reconstruction() {
+        let mut rng = Rng::new(20);
+        for &(m, n) in &[(6, 6), (10, 4), (4, 10), (31, 17)] {
+            let a = Tensor::randn(&[m, n], &mut rng);
+            let svd = svd_jacobi(&a);
+            check_svd(&a, &svd, 1e-4);
+            let rec = svd.reconstruct();
+            assert!(a.rel_err(&rec) < 1e-4, "{m}x{n} err {}", a.rel_err(&rec));
+        }
+    }
+
+    #[test]
+    fn jacobi_known_singular_values() {
+        let mut rng = Rng::new(21);
+        let sig = vec![10.0, 5.0, 1.0, 0.1];
+        let a = with_spectrum(12, 8, &sig, &mut rng);
+        let svd = svd_jacobi(&a);
+        for (i, &expect) in sig.iter().enumerate() {
+            assert!(
+                (svd.s[i] - expect).abs() / expect < 1e-3,
+                "sigma_{i}: got {}, want {}",
+                svd.s[i],
+                expect
+            );
+        }
+        // the rest are ~0
+        for &s in &svd.s[4..] {
+            assert!(s < 1e-3);
+        }
+    }
+
+    #[test]
+    fn truncation_error_matches_tail_eq7() {
+        // paper eq. (7): ||A - A_v||_F^2 = sum_{j>v} sigma_j^2
+        let mut rng = Rng::new(22);
+        let sig = vec![8.0, 4.0, 2.0, 1.0, 0.5];
+        let a = with_spectrum(20, 10, &sig, &mut rng);
+        let svd = svd_jacobi(&a).truncate(2);
+        let rec = svd.reconstruct();
+        let err2 = a.sub(&rec).fro_norm().powi(2);
+        let tail: f32 = sig[2..].iter().map(|s| s * s).sum();
+        assert!(
+            (err2 - tail).abs() / tail < 1e-2,
+            "err^2 {err2} vs tail {tail}"
+        );
+    }
+
+    #[test]
+    fn randomized_close_to_exact_on_lowrank() {
+        let mut rng = Rng::new(23);
+        let sig = vec![20.0, 10.0, 5.0, 0.01, 0.005];
+        let a = with_spectrum(100, 60, &sig, &mut rng);
+        let r = svd_truncated(
+            &a,
+            3,
+            SvdMethod::Randomized { oversample: 8, power_iters: 2, seed: 7 },
+        );
+        check_svd(&a, &r, 1e-3);
+        for i in 0..3 {
+            assert!(
+                (r.s[i] - sig[i]).abs() / sig[i] < 1e-2,
+                "sigma_{i}: {} vs {}",
+                r.s[i],
+                sig[i]
+            );
+        }
+        let rec = r.reconstruct();
+        // remaining mass is tiny, reconstruction should be near-perfect
+        assert!(a.rel_err(&rec) < 1e-2);
+    }
+
+    #[test]
+    fn auto_dispatches_and_truncates() {
+        let mut rng = Rng::new(24);
+        let a = Tensor::randn(&[16, 12], &mut rng);
+        let svd = svd_truncated(&a, 5, SvdMethod::Auto);
+        assert_eq!(svd.s.len(), 5);
+        check_svd(&a, &svd, 1e-4);
+        let big = Tensor::randn(&[200, 100], &mut rng);
+        let svd = svd_truncated(&big, 10, SvdMethod::Auto);
+        assert_eq!(svd.s.len(), 10);
+        check_svd(&big, &svd, 1e-3);
+    }
+
+    #[test]
+    fn rank1_matrix() {
+        let mut rng = Rng::new(25);
+        let u = Tensor::randn(&[30, 1], &mut rng);
+        let v = Tensor::randn(&[20, 1], &mut rng);
+        let a = super::super::matmul_nt(&u, &v);
+        let svd = svd_truncated(&a, 1, SvdMethod::Jacobi);
+        assert!(a.rel_err(&svd.reconstruct()) < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix_is_fine() {
+        let a = Tensor::zeros(&[8, 5]);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.reconstruct().fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn best_rank_k_beats_any_other_rank_k() {
+        // Eckart–Young sanity: truncated SVD error <= error of a random
+        // rank-k factorization.
+        let mut rng = Rng::new(26);
+        let a = Tensor::randn(&[24, 18], &mut rng);
+        let k = 4;
+        let svd = svd_truncated(&a, k, SvdMethod::Jacobi);
+        let best = a.sub(&svd.reconstruct()).fro_norm();
+        for trial in 0..5 {
+            let x = Tensor::randn(&[24, k], &mut rng);
+            let y = Tensor::randn(&[k, 18], &mut rng);
+            let approx = matmul(&x, &y);
+            let err = a.sub(&approx).fro_norm();
+            assert!(best <= err + 1e-3, "trial {trial}: {best} > {err}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! `qrr` — the command-line entry point.
+//!
+//! ```text
+//! qrr exp <table1|table2|table3|fig1|overhead|all> [--iters N] […]
+//! qrr train --config cfg.json [--out DIR]
+//! qrr serve --addr 127.0.0.1:0 --model mlp --clients 3 --iters 5
+//! qrr info
+//! ```
+//!
+//! See `qrr help` for every option.
+
+use anyhow::Result;
+
+use qrr::cli::Args;
+
+fn main() {
+    qrr::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "exp" => qrr::experiments::run_cli(args),
+        "train" => cmd_train(args),
+        "serve" => qrr::experiments::serve::run_cli(args),
+        "info" => cmd_info(),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("train requires --config <file.json>"))?;
+    let mut cfg = qrr::config::ExperimentConfig::from_file(path)?;
+    qrr::experiments::apply_overrides(&mut cfg, args)?;
+    let out_dir = args.get("out").unwrap_or("results");
+    let mut coord = qrr::coordinator::Coordinator::from_config(&cfg)?;
+    let report = coord.run()?;
+    qrr::experiments::write_run_outputs(out_dir, &cfg.name, &report)?;
+    println!("{}", report.markdown_table());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("qrr {} — Quantized Rank Reduction reproduction", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", qrr::exec::default_threads());
+    println!("artifacts dir: {}", qrr::runtime::artifacts_dir().display());
+    match qrr::runtime::Manifest::load(&qrr::runtime::artifacts_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.entries.len());
+            for e in &m.entries {
+                println!("  {:<24} model={:<4} fn={:<6} batch={}", e.name, e.model, e.func, e.batch);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        r#"qrr — Quantized Rank Reduction: communications-efficient FL (paper reproduction)
+
+USAGE:
+    qrr exp <id> [options]       regenerate a paper table/figure
+                                 id: table1 | table2 | table3 | fig1 | overhead | all
+    qrr train --config <json>    run a single configured experiment
+    qrr serve [options]          run the FL server+clients over real TCP
+    qrr info                     toolchain / artifact status
+
+COMMON OPTIONS (exp/train):
+    --iters N         override iteration count (paper: 1000/2000)
+    --clients N       override client count (paper: 10)
+    --batch N         override batch size (paper: 512)
+    --schemes LIST    comma list: sgd,slaq,qrr:0.3,qrr:0.2,qrr:0.1,qrr:adaptive
+    --backend B       native | pjrt (default native; pjrt needs `make artifacts`)
+    --train-n N       training samples (default 60000 / 50000)
+    --test-n N        test samples (default 10000)
+    --eval-every N    evaluation period (default 25)
+    --seed N          RNG seed (default 42)
+    --out DIR         output directory for CSV/markdown (default results/)
+
+ENVIRONMENT:
+    QRR_THREADS       worker threads (default: cores, max 16)
+    QRR_LOG           error|warn|info|debug|trace
+    MNIST_DIR         real MNIST IDX files (else synthetic stream)
+    CIFAR_DIR         real CIFAR-10 binaries (else synthetic stream)
+    QRR_ARTIFACTS     artifacts directory (default ./artifacts)
+"#
+    );
+}

@@ -1,0 +1,239 @@
+//! Model definitions shared between the Rust request path and the python
+//! build path.
+//!
+//! The three architectures are exactly the paper's (§III-B):
+//!
+//! * **MLP** — 784 → 200 (ReLU) → 10, cross-entropy (experiment 1).
+//! * **CNN** — conv3×3(1→16) ReLU, conv3×3(16→32) ReLU, maxpool/2,
+//!   FC 6272 → 10 (experiment 2).
+//! * **VGG-like** — three conv blocks (3→32→64→128, each conv3×3 + ReLU +
+//!   maxpool/2), FC 2048 → 10 on CIFAR-10 (experiment 3; the paper's
+//!   dropout layers are omitted — see DESIGN.md §4).
+//!
+//! [`ModelSpec`] describes parameter names/shapes; the same layout is
+//! produced by `python/compile/model.py` and recorded in
+//! `artifacts/manifest.json`, so the PJRT and native backends are
+//! interchangeable. [`native`] holds the pure-Rust reference
+//! implementation (forward, backward, eval) used as the default backend
+//! and as the test oracle for the HLO path.
+
+pub mod native;
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Which of the paper's architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// 784-200-10 MLP (paper experiment 1).
+    Mlp,
+    /// conv16-conv32-pool-FC CNN on 28×28×1 (paper experiment 2).
+    Cnn,
+    /// VGG-like 32-64-128 CNN on 32×32×3 (paper experiment 3).
+    Vgg,
+}
+
+impl ModelKind {
+    /// Parse from CLI/config name.
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mlp" => Some(ModelKind::Mlp),
+            "cnn" => Some(ModelKind::Cnn),
+            "vgg" | "vgg-like" | "vgglike" => Some(ModelKind::Vgg),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Cnn => "cnn",
+            ModelKind::Vgg => "vgg",
+        }
+    }
+}
+
+/// One named parameter tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    /// e.g. `fc1.weight`
+    pub name: String,
+    /// row-major shape; 2-D = FC weight (SVD-compressed), 4-D = conv
+    /// kernel (Tucker-compressed), 1-D = bias (quantize-only)
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    fn new(name: &str, shape: &[usize]) -> Self {
+        ParamSpec { name: name.to_string(), shape: shape.to_vec() }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True when the parameter has no elements (never, in practice).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Full description of a model's parameter layout and input geometry.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Architecture.
+    pub kind: ModelKind,
+    /// Input shape per sample, channels-first (e.g. `[1, 28, 28]`).
+    pub input_shape: Vec<usize>,
+    /// Number of classes (always 10 here).
+    pub num_classes: usize,
+    /// Parameters in a fixed traversal order shared with python.
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    /// Build the spec for one of the paper's architectures.
+    pub fn new(kind: ModelKind) -> Self {
+        match kind {
+            ModelKind::Mlp => ModelSpec {
+                kind,
+                input_shape: vec![784],
+                num_classes: 10,
+                params: vec![
+                    ParamSpec::new("fc1.weight", &[200, 784]),
+                    ParamSpec::new("fc1.bias", &[200]),
+                    ParamSpec::new("fc2.weight", &[10, 200]),
+                    ParamSpec::new("fc2.bias", &[10]),
+                ],
+            },
+            ModelKind::Cnn => ModelSpec {
+                kind,
+                input_shape: vec![1, 28, 28],
+                num_classes: 10,
+                params: vec![
+                    ParamSpec::new("conv1.weight", &[16, 1, 3, 3]),
+                    ParamSpec::new("conv1.bias", &[16]),
+                    ParamSpec::new("conv2.weight", &[32, 16, 3, 3]),
+                    ParamSpec::new("conv2.bias", &[32]),
+                    ParamSpec::new("fc.weight", &[10, 32 * 14 * 14]),
+                    ParamSpec::new("fc.bias", &[10]),
+                ],
+            },
+            ModelKind::Vgg => ModelSpec {
+                kind,
+                input_shape: vec![3, 32, 32],
+                num_classes: 10,
+                params: vec![
+                    ParamSpec::new("conv1.weight", &[32, 3, 3, 3]),
+                    ParamSpec::new("conv1.bias", &[32]),
+                    ParamSpec::new("conv2.weight", &[64, 32, 3, 3]),
+                    ParamSpec::new("conv2.bias", &[64]),
+                    ParamSpec::new("conv3.weight", &[128, 64, 3, 3]),
+                    ParamSpec::new("conv3.bias", &[128]),
+                    ParamSpec::new("fc.weight", &[10, 128 * 4 * 4]),
+                    ParamSpec::new("fc.bias", &[10]),
+                ],
+            },
+        }
+    }
+
+    /// Parameter shapes in order (what the codecs are built from).
+    pub fn shapes(&self) -> Vec<Vec<usize>> {
+        self.params.iter().map(|p| p.shape.clone()).collect()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Flat input dimension per sample.
+    pub fn input_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// He/Kaiming-style initialization, deterministic in `seed`.
+    /// Matches `python/compile/model.py::init_params` (same scheme, not
+    /// bit-identical — cross-backend tests compare behaviour, not bits).
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.params
+            .iter()
+            .map(|p| {
+                if p.shape.len() == 1 {
+                    Tensor::zeros(&p.shape)
+                } else {
+                    // fan_in: product of all dims but the first
+                    let fan_in: usize = p.shape[1..].iter().product();
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    let mut t = Tensor::randn(&p.shape, &mut rng);
+                    t.scale(std);
+                    t
+                }
+            })
+            .collect()
+    }
+}
+
+/// Uniform interface over the native Rust backend and the PJRT/HLO
+/// backend — what FL clients and the server evaluator call.
+pub trait ModelOps: Send {
+    /// The model's spec.
+    fn spec(&self) -> &ModelSpec;
+
+    /// Mean loss over the batch and gradients w.r.t. every parameter,
+    /// in spec order. `x` is `[B, input_dim]` (flat), `y` are labels.
+    fn loss_grad(&self, params: &[Tensor], x: &Tensor, y: &[u32]) -> (f32, Vec<Tensor>);
+
+    /// Mean loss and number of correct predictions on a batch.
+    fn eval(&self, params: &[Tensor], x: &Tensor, y: &[u32]) -> (f32, usize);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_paper_architectures() {
+        let mlp = ModelSpec::new(ModelKind::Mlp);
+        // 784*200 + 200 + 200*10 + 10 = 159,010 params
+        assert_eq!(mlp.num_params(), 784 * 200 + 200 + 200 * 10 + 10);
+        assert_eq!(mlp.input_dim(), 784);
+
+        let cnn = ModelSpec::new(ModelKind::Cnn);
+        assert_eq!(
+            cnn.num_params(),
+            16 * 9 + 16 + 32 * 16 * 9 + 32 + 10 * 6272 + 10
+        );
+
+        let vgg = ModelSpec::new(ModelKind::Vgg);
+        assert_eq!(vgg.input_dim(), 3 * 32 * 32);
+        assert_eq!(vgg.params.len(), 8);
+    }
+
+    #[test]
+    fn init_deterministic_and_scaled() {
+        let spec = ModelSpec::new(ModelKind::Mlp);
+        let a = spec.init_params(7);
+        let b = spec.init_params(7);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x, y);
+        }
+        // biases zero
+        assert_eq!(a[1].fro_norm(), 0.0);
+        // weight std approx sqrt(2/784)
+        let w = &a[0];
+        let std = (crate::tensor::sq_norm(w) / w.len() as f64).sqrt();
+        let expect = (2.0 / 784.0f64).sqrt();
+        assert!((std - expect).abs() / expect < 0.05, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(ModelKind::parse("MLP"), Some(ModelKind::Mlp));
+        assert_eq!(ModelKind::parse("vgg-like"), Some(ModelKind::Vgg));
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+}

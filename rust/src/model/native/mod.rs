@@ -1,0 +1,305 @@
+//! Pure-Rust reference backend implementing [`ModelOps`](super::ModelOps)
+//! for the paper's three architectures.
+//!
+//! Serves two roles:
+//! 1. the default request-path backend (no artifacts needed), and
+//! 2. the numeric oracle the PJRT/HLO path is cross-checked against
+//!    (`rust/tests/pjrt_parity.rs`).
+
+pub mod layers;
+
+use crate::tensor::Tensor;
+
+use super::{ModelKind, ModelOps, ModelSpec};
+use layers::*;
+
+/// Pure-Rust model. Construct via [`NativeModel::new`].
+pub struct NativeModel {
+    spec: ModelSpec,
+}
+
+impl NativeModel {
+    /// Build the native backend for an architecture.
+    pub fn new(kind: ModelKind) -> Self {
+        NativeModel { spec: ModelSpec::new(kind) }
+    }
+
+    fn forward_logits_mlp(&self, params: &[Tensor], x: &Tensor) -> (Tensor, MlpCtx) {
+        let (w1, b1, w2, b2) = (&params[0], &params[1], &params[2], &params[3]);
+        let z1 = dense_forward(x, w1, b1);
+        let a1 = relu_forward(&z1);
+        let logits = dense_forward(&a1, w2, b2);
+        (logits, MlpCtx { z1, a1 })
+    }
+
+    fn forward_logits_cnn(&self, params: &[Tensor], x4: &Tensor) -> (Tensor, CnnCtx) {
+        let (w1, b1, w2, b2, wf, bf) =
+            (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+        let (z1, c1) = conv2d_forward(x4, w1, b1);
+        let a1 = relu_forward(&z1);
+        let (z2, c2) = conv2d_forward(&a1, w2, b2);
+        let a2 = relu_forward(&z2);
+        let (pooled, arg) = maxpool2_forward(&a2);
+        let bsz = x4.shape()[0];
+        let flat_dim = pooled.len() / bsz;
+        let flat = pooled.clone().reshape(&[bsz, flat_dim]);
+        let logits = dense_forward(&flat, wf, bf);
+        let _ = a1; // consumed by conv2 forward; not needed in backward
+        (logits, CnnCtx { z1, z2, a2, pooled_shape: pooled.shape().to_vec(), arg, flat, c1, c2 })
+    }
+
+    fn forward_logits_vgg(&self, params: &[Tensor], x4: &Tensor) -> (Tensor, VggCtx) {
+        let bsz = x4.shape()[0];
+        let mut cur = x4.clone();
+        let mut blocks = Vec::with_capacity(3);
+        for blk in 0..3 {
+            let w = &params[blk * 2];
+            let b = &params[blk * 2 + 1];
+            let (z, cctx) = conv2d_forward(&cur, w, b);
+            let a = relu_forward(&z);
+            let (pooled, arg) = maxpool2_forward(&a);
+            blocks.push(VggBlockCtx {
+                z,
+                a_shape: a.shape().to_vec(),
+                arg,
+                cctx,
+            });
+            cur = pooled;
+        }
+        let flat_dim = cur.len() / bsz;
+        let flat = cur.clone().reshape(&[bsz, flat_dim]);
+        let logits = dense_forward(&flat, &params[6], &params[7]);
+        (logits, VggCtx { blocks, flat, pooled_shape: cur.shape().to_vec() })
+    }
+
+    fn input4(&self, x: &Tensor) -> Tensor {
+        let bsz = x.shape()[0];
+        let mut shape = vec![bsz];
+        shape.extend_from_slice(&self.spec.input_shape);
+        x.clone().reshape(&shape)
+    }
+}
+
+struct MlpCtx {
+    z1: Tensor,
+    a1: Tensor,
+}
+
+struct CnnCtx {
+    z1: Tensor,
+    z2: Tensor,
+    a2: Tensor,
+    pooled_shape: Vec<usize>,
+    arg: Vec<u32>,
+    flat: Tensor,
+    c1: ConvCtx,
+    c2: ConvCtx,
+}
+
+struct VggBlockCtx {
+    z: Tensor,
+    a_shape: Vec<usize>,
+    arg: Vec<u32>,
+    cctx: ConvCtx,
+}
+
+struct VggCtx {
+    blocks: Vec<VggBlockCtx>,
+    flat: Tensor,
+    pooled_shape: Vec<usize>,
+}
+
+impl ModelOps for NativeModel {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn loss_grad(&self, params: &[Tensor], x: &Tensor, y: &[u32]) -> (f32, Vec<Tensor>) {
+        assert_eq!(params.len(), self.spec.params.len(), "param count");
+        match self.spec.kind {
+            ModelKind::Mlp => {
+                let (logits, ctx) = self.forward_logits_mlp(params, x);
+                let (loss, dlog) = softmax_xent(&logits, y);
+                let (da1, dw2, db2) = dense_backward(&ctx.a1, &params[2], &dlog);
+                let dz1 = relu_backward(&ctx.z1, &da1);
+                let (_dx, dw1, db1) = dense_backward(x, &params[0], &dz1);
+                (loss, vec![dw1, db1, dw2, db2])
+            }
+            ModelKind::Cnn => {
+                let x4 = self.input4(x);
+                let (logits, ctx) = self.forward_logits_cnn(params, &x4);
+                let (loss, dlog) = softmax_xent(&logits, y);
+                let (dflat, dwf, dbf) = dense_backward(&ctx.flat, &params[4], &dlog);
+                let dpooled = dflat.reshape(&ctx.pooled_shape);
+                let da2 = maxpool2_backward(&dpooled, &ctx.arg, ctx.a2.shape());
+                let dz2 = relu_backward(&ctx.z2, &da2);
+                let (da1, dw2, db2) = conv2d_backward(&ctx.c2, &params[2], &dz2);
+                let dz1 = relu_backward(&ctx.z1, &da1);
+                let (_dx, dw1, db1) = conv2d_backward(&ctx.c1, &params[0], &dz1);
+                (loss, vec![dw1, db1, dw2, db2, dwf, dbf])
+            }
+            ModelKind::Vgg => {
+                let x4 = self.input4(x);
+                let (logits, ctx) = self.forward_logits_vgg(params, &x4);
+                let (loss, dlog) = softmax_xent(&logits, y);
+                let (dflat, dwf, dbf) = dense_backward(&ctx.flat, &params[6], &dlog);
+                let mut dcur = dflat.reshape(&ctx.pooled_shape);
+                let mut grads_rev: Vec<Tensor> = vec![dbf, dwf];
+                for blk in (0..3).rev() {
+                    let b = &ctx.blocks[blk];
+                    let da = maxpool2_backward(&dcur, &b.arg, &b.a_shape);
+                    let dz = relu_backward(&b.z, &da);
+                    let (dx, dw, db) = conv2d_backward(&b.cctx, &params[blk * 2], &dz);
+                    grads_rev.push(db);
+                    grads_rev.push(dw);
+                    dcur = dx;
+                }
+                grads_rev.reverse();
+                (loss, grads_rev)
+            }
+        }
+    }
+
+    fn eval(&self, params: &[Tensor], x: &Tensor, y: &[u32]) -> (f32, usize) {
+        let logits = match self.spec.kind {
+            ModelKind::Mlp => self.forward_logits_mlp(params, x).0,
+            ModelKind::Cnn => {
+                let x4 = self.input4(x);
+                self.forward_logits_cnn(params, &x4).0
+            }
+            ModelKind::Vgg => {
+                let x4 = self.input4(x);
+                self.forward_logits_vgg(params, &x4).0
+            }
+        };
+        let (loss, _) = softmax_xent(&logits, y);
+        (loss, count_correct(&logits, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelKind, ModelSpec};
+    use crate::util::Rng;
+
+    fn batch(spec: &ModelSpec, bsz: usize, rng: &mut Rng) -> (Tensor, Vec<u32>) {
+        let x = Tensor::randn(&[bsz, spec.input_dim()], rng);
+        let y: Vec<u32> = (0..bsz).map(|_| rng.below(spec.num_classes) as u32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn grads_match_spec_shapes_all_models() {
+        for kind in [ModelKind::Mlp, ModelKind::Cnn, ModelKind::Vgg] {
+            let model = NativeModel::new(kind);
+            let spec = model.spec().clone();
+            let params = spec.init_params(1);
+            let mut rng = Rng::new(2);
+            let (x, y) = batch(&spec, 3, &mut rng);
+            let (loss, grads) = model.loss_grad(&params, &x, &y);
+            assert!(loss.is_finite() && loss > 0.0, "{kind:?} loss {loss}");
+            assert_eq!(grads.len(), spec.params.len());
+            for (g, p) in grads.iter().zip(spec.params.iter()) {
+                assert_eq!(g.shape(), &p.shape[..], "{kind:?} {}", p.name);
+                assert!(g.fro_norm().is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_mlp() {
+        let model = NativeModel::new(ModelKind::Mlp);
+        let spec = model.spec().clone();
+        let mut params = spec.init_params(3);
+        let mut rng = Rng::new(4);
+        let (x, y) = batch(&spec, 32, &mut rng);
+        let (l0, _) = model.eval(&params, &x, &y);
+        for _ in 0..30 {
+            let (_, grads) = model.loss_grad(&params, &x, &y);
+            for (p, g) in params.iter_mut().zip(grads.iter()) {
+                p.axpy(-0.1, g);
+            }
+        }
+        let (l1, correct) = model.eval(&params, &x, &y);
+        assert!(l1 < l0 * 0.5, "loss did not drop: {l0} -> {l1}");
+        assert!(correct >= 24, "training failed: {correct}/32 correct");
+    }
+
+    #[test]
+    fn sgd_reduces_loss_cnn() {
+        let model = NativeModel::new(ModelKind::Cnn);
+        let spec = model.spec().clone();
+        let mut params = spec.init_params(5);
+        let mut rng = Rng::new(6);
+        let (x, y) = batch(&spec, 8, &mut rng);
+        let (l0, _) = model.eval(&params, &x, &y);
+        for _ in 0..15 {
+            let (_, grads) = model.loss_grad(&params, &x, &y);
+            for (p, g) in params.iter_mut().zip(grads.iter()) {
+                p.axpy(-0.05, g);
+            }
+        }
+        let (l1, _) = model.eval(&params, &x, &y);
+        assert!(l1 < l0, "loss did not drop: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn sgd_reduces_loss_vgg() {
+        let model = NativeModel::new(ModelKind::Vgg);
+        let spec = model.spec().clone();
+        let mut params = spec.init_params(7);
+        let mut rng = Rng::new(8);
+        let (x, y) = batch(&spec, 4, &mut rng);
+        let (l0, _) = model.eval(&params, &x, &y);
+        for _ in 0..10 {
+            let (_, grads) = model.loss_grad(&params, &x, &y);
+            for (p, g) in params.iter_mut().zip(grads.iter()) {
+                p.axpy(-0.05, g);
+            }
+        }
+        let (l1, _) = model.eval(&params, &x, &y);
+        assert!(l1 < l0, "loss did not drop: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn eval_counts_bounded_by_batch() {
+        let model = NativeModel::new(ModelKind::Mlp);
+        let spec = model.spec().clone();
+        let params = spec.init_params(9);
+        let mut rng = Rng::new(10);
+        let (x, y) = batch(&spec, 16, &mut rng);
+        let (_, correct) = model.eval(&params, &x, &y);
+        assert!(correct <= 16);
+    }
+
+    #[test]
+    fn loss_decreases_along_negative_gradient_direction() {
+        // directional-derivative sanity for the full CNN backprop
+        let model = NativeModel::new(ModelKind::Cnn);
+        let spec = model.spec().clone();
+        let params = spec.init_params(11);
+        let mut rng = Rng::new(12);
+        let (x, y) = batch(&spec, 4, &mut rng);
+        let (l0, grads) = model.loss_grad(&params, &x, &y);
+        let eps = 1e-5f32;
+        let gnorm2: f64 = grads.iter().map(crate::tensor::sq_norm).sum();
+        let stepped: Vec<Tensor> = params
+            .iter()
+            .zip(grads.iter())
+            .map(|(p, g)| {
+                let mut p = p.clone();
+                p.axpy(-eps, g);
+                p
+            })
+            .collect();
+        let (l1, _) = model.eval(&stepped, &x, &y);
+        let predicted_drop = eps * gnorm2 as f32;
+        assert!(
+            (l0 - l1) > 0.3 * predicted_drop,
+            "drop {} vs predicted {}",
+            l0 - l1,
+            predicted_drop
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-client link models for the network-critical deployments the paper
+//! targets (remote sensors on very slow connections).
+//!
+//! A [`LinkModel`] converts payload bits into simulated transmission
+//! time; the coordinator uses it both for the reported network time and
+//! to derive each client's adaptive `p` (experiment 3: "p can be chosen
+//! based on the client's connection speed").
+
+use std::time::Duration;
+
+/// A (bandwidth, latency) link abstraction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// uplink bandwidth, bits per second
+    pub bandwidth_bps: f64,
+    /// fixed per-message latency
+    pub latency: Duration,
+}
+
+impl LinkModel {
+    /// A comfortable broadband link (100 Mbit/s, 10 ms).
+    pub fn broadband() -> Self {
+        LinkModel { bandwidth_bps: 100e6, latency: Duration::from_millis(10) }
+    }
+
+    /// A constrained IoT/LTE-M-class link (250 kbit/s, 120 ms) — the
+    /// paper's "network-critical" regime.
+    pub fn iot() -> Self {
+        LinkModel { bandwidth_bps: 250e3, latency: Duration::from_millis(120) }
+    }
+
+    /// Evenly interpolate `n` links between `slow` and `fast` bandwidths
+    /// (used to hand experiment 3 its spread of client speeds).
+    pub fn spread(n: usize, slow_bps: f64, fast_bps: f64) -> Vec<LinkModel> {
+        assert!(n > 0);
+        (0..n)
+            .map(|i| {
+                let t = if n == 1 { 0.0 } else { i as f64 / (n - 1) as f64 };
+                LinkModel {
+                    bandwidth_bps: slow_bps + t * (fast_bps - slow_bps),
+                    latency: Duration::from_millis(120 - (t * 100.0) as u64),
+                }
+            })
+            .collect()
+    }
+
+    /// Simulated wall-clock time to push `bits` through this link.
+    pub fn transmit_time(&self, bits: u64) -> Duration {
+        let secs = bits as f64 / self.bandwidth_bps;
+        self.latency + Duration::from_secs_f64(secs)
+    }
+
+    /// Map link speed to the paper's compression fraction `p ∈ [p_min,
+    /// p_max]`: slowest link gets `p_min` (most compression), fastest
+    /// gets `p_max`. Linear in log-bandwidth between `slow` and `fast`.
+    pub fn adaptive_p(&self, slow_bps: f64, fast_bps: f64, p_min: f64, p_max: f64) -> f64 {
+        let lo = slow_bps.ln();
+        let hi = fast_bps.ln();
+        let t = ((self.bandwidth_bps.ln() - lo) / (hi - lo)).clamp(0.0, 1.0);
+        p_min + t * (p_max - p_min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmit_time_scales_with_bits() {
+        let l = LinkModel { bandwidth_bps: 1e6, latency: Duration::ZERO };
+        assert_eq!(l.transmit_time(1_000_000), Duration::from_secs(1));
+        assert_eq!(l.transmit_time(500_000), Duration::from_millis(500));
+    }
+
+    #[test]
+    fn latency_added() {
+        let l = LinkModel { bandwidth_bps: 1e6, latency: Duration::from_millis(50) };
+        assert_eq!(l.transmit_time(0), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn spread_monotone() {
+        let links = LinkModel::spread(5, 1e5, 1e7);
+        for w in links.windows(2) {
+            assert!(w[1].bandwidth_bps > w[0].bandwidth_bps);
+        }
+        assert_eq!(links.len(), 5);
+    }
+
+    #[test]
+    fn adaptive_p_maps_slow_to_pmin() {
+        let links = LinkModel::spread(3, 1e5, 1e7);
+        let p0 = links[0].adaptive_p(1e5, 1e7, 0.1, 0.3);
+        let p2 = links[2].adaptive_p(1e5, 1e7, 0.1, 0.3);
+        assert!((p0 - 0.1).abs() < 1e-9);
+        assert!((p2 - 0.3).abs() < 1e-9);
+        let pm = links[1].adaptive_p(1e5, 1e7, 0.1, 0.3);
+        assert!(pm > 0.1 && pm < 0.3);
+    }
+
+    #[test]
+    fn iot_much_slower_than_broadband() {
+        let bits = 1_000_000u64;
+        assert!(LinkModel::iot().transmit_time(bits) > 10 * LinkModel::broadband().transmit_time(bits));
+    }
+}

@@ -1,0 +1,22 @@
+//! Simulated network substrate.
+//!
+//! * [`wire`] — the exact byte-level serialization of every client→server
+//!   update. The experiments' `#bits` column is the serialized payload
+//!   size, so the paper's accounting (32 + βn bits per quantized tensor,
+//!   factors only) is enforced by construction.
+//! * [`link`] — per-client link models (bandwidth + latency) used to
+//!   simulate transmission time and to drive the adaptive-p policy of
+//!   experiment 3 ("p can be chosen based on the client's connection
+//!   speed").
+//! * [`transport`] — pluggable byte transports: in-process channels for
+//!   the simulation loop and a real TCP transport (`qrr serve` /
+//!   integration tests) proving the wire format round-trips across
+//!   processes.
+
+pub mod link;
+pub mod transport;
+pub mod wire;
+
+pub use link::LinkModel;
+pub use transport::{InProcTransport, TcpServerTransport, Transport};
+pub use wire::{ClientUpdate, Decoder, Encoder, WireError};

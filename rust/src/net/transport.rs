@@ -1,0 +1,183 @@
+//! Byte transports: in-process channels (simulation) and TCP
+//! (cross-process serving / integration tests).
+//!
+//! Framing over TCP: `u32 LE length || payload`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A bidirectional message transport between clients and the server.
+pub trait Transport: Send {
+    /// Client side: send one framed message to the server.
+    fn send(&self, payload: &[u8]) -> Result<()>;
+    /// Server side: receive the next framed message (blocking).
+    fn recv(&self) -> Result<Vec<u8>>;
+}
+
+// ------------------------------------------------------------- in-proc
+
+/// mpsc-channel transport for the single-process simulation.
+pub struct InProcTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Mutex<Receiver<Vec<u8>>>,
+}
+
+impl InProcTransport {
+    /// Create a connected pair view (same object is used by both sides).
+    pub fn new() -> Self {
+        let (tx, rx) = channel();
+        InProcTransport { tx, rx: Mutex::new(rx) }
+    }
+
+    /// A cloneable sender handle for client threads.
+    pub fn sender(&self) -> Sender<Vec<u8>> {
+        self.tx.clone()
+    }
+}
+
+impl Default for InProcTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for InProcTransport {
+    fn send(&self, payload: &[u8]) -> Result<()> {
+        self.tx.send(payload.to_vec()).context("channel closed")
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.rx
+            .lock()
+            .unwrap()
+            .recv()
+            .context("channel closed")
+    }
+}
+
+// ------------------------------------------------------------------ tcp
+
+/// Write one length-prefixed frame.
+pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Server-side TCP transport: accepts connections lazily and yields
+/// frames from any connected client.
+pub struct TcpServerTransport {
+    listener: TcpListener,
+    conns: Mutex<HashMap<std::net::SocketAddr, TcpStream>>,
+}
+
+impl TcpServerTransport {
+    /// Bind on an address (e.g. "127.0.0.1:0" to pick a free port).
+    pub fn bind(addr: impl ToSocketAddrs) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding")?;
+        Ok(TcpServerTransport { listener, conns: Mutex::new(HashMap::new()) })
+    }
+
+    /// The bound address (for clients to connect to).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept one connection and read frames from it until EOF, passing
+    /// each to `f`. Simple one-connection-at-a-time server loop used by
+    /// `qrr serve` (clients connect, push an update, disconnect).
+    pub fn serve_once(&self, mut f: impl FnMut(Vec<u8>)) -> Result<()> {
+        let (mut stream, peer) = self.listener.accept()?;
+        loop {
+            match read_frame(&mut stream) {
+                Ok(frame) => f(frame),
+                Err(_) => break, // EOF / closed
+            }
+        }
+        self.conns.lock().unwrap().remove(&peer);
+        Ok(())
+    }
+}
+
+/// Client-side TCP sender.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    /// Connect to the server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(TcpClient { stream: TcpStream::connect(addr).context("connecting")? })
+    }
+
+    /// Send one framed message.
+    pub fn send(&mut self, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip() {
+        let t = InProcTransport::new();
+        t.send(b"hello").unwrap();
+        t.send(b"world").unwrap();
+        assert_eq!(t.recv().unwrap(), b"hello");
+        assert_eq!(t.recv().unwrap(), b"world");
+    }
+
+    #[test]
+    fn inproc_cross_thread() {
+        let t = std::sync::Arc::new(InProcTransport::new());
+        let t2 = std::sync::Arc::clone(&t);
+        let h = std::thread::spawn(move || {
+            for i in 0..10u8 {
+                t2.send(&[i]).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        for _ in 0..10 {
+            got.push(t.recv().unwrap()[0]);
+        }
+        h.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let server = TcpServerTransport::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut frames = Vec::new();
+            server.serve_once(|f| frames.push(f)).unwrap();
+            frames
+        });
+        let mut client = TcpClient::connect(addr).unwrap();
+        client.send(b"abc").unwrap();
+        client.send(&vec![7u8; 100_000]).unwrap(); // big frame
+        drop(client);
+        let frames = h.join().unwrap();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], b"abc");
+        assert_eq!(frames[1].len(), 100_000);
+    }
+}

@@ -1,0 +1,294 @@
+//! Client/server codecs implementing QRR_c (paper eq. (19)) and the
+//! server-side inverse.
+
+use crate::compress::{
+    compress_svd, compress_tucker, decompress_svd, decompress_tucker, svd_rank, tucker_ranks,
+    SvdCompressed, TuckerCompressed,
+};
+use crate::quant::{QuantState, Quantized};
+use crate::tensor::Tensor;
+
+use super::QrrConfig;
+
+/// Wire message for one parameter tensor.
+#[derive(Debug, Clone)]
+pub enum ParamMsg {
+    /// Quantized truncated-SVD factors of a matrix gradient.
+    Svd {
+        /// Q(U_c^k) codes
+        u: Quantized,
+        /// Q(Σ_c^k) codes (diagonal only)
+        s: Quantized,
+        /// Q(V_c^k) codes
+        v: Quantized,
+    },
+    /// Quantized Tucker factors of a 4-D (or N-D) gradient.
+    Tucker {
+        /// Q(𝔊_c^k) codes
+        core: Quantized,
+        /// Q((Fᵢ)_c^k) codes
+        factors: Vec<Quantized>,
+    },
+    /// Quantize-only payload (biases / 1-D parameters).
+    Dense {
+        /// Q(∂J/∂b) codes
+        q: Quantized,
+    },
+}
+
+impl ParamMsg {
+    /// Exact payload size in bits (32 + βn per quantized factor, eq. (16)).
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            ParamMsg::Svd { u, s, v } => u.wire_bits() + s.wire_bits() + v.wire_bits(),
+            ParamMsg::Tucker { core, factors } => {
+                core.wire_bits() + factors.iter().map(|f| f.wire_bits()).sum::<u64>()
+            }
+            ParamMsg::Dense { q } => q.wire_bits(),
+        }
+    }
+}
+
+/// Per-parameter quantizer state, mirrored on client and server.
+#[derive(Debug, Clone)]
+pub enum ParamState {
+    /// Matrix parameter compressed by truncated SVD at rank ν.
+    Svd {
+        /// state for U (m×ν)
+        u: QuantState,
+        /// state for the ν singular values
+        s: QuantState,
+        /// state for V (n×ν)
+        v: QuantState,
+        /// retained rank ν
+        nu: usize,
+        /// original (m, n)
+        shape: (usize, usize),
+    },
+    /// N-D parameter compressed by Tucker at per-mode ranks.
+    Tucker {
+        /// state for the core tensor
+        core: QuantState,
+        /// states for F₁…F_N
+        factors: Vec<QuantState>,
+        /// per-mode ranks
+        ranks: Vec<usize>,
+        /// original dims
+        shape: Vec<usize>,
+    },
+    /// Quantize-only parameter.
+    Dense {
+        /// state for the raw values
+        q: QuantState,
+    },
+}
+
+impl ParamState {
+    fn new(shape: &[usize], cfg: &QrrConfig) -> Self {
+        match shape.len() {
+            2 => {
+                let (m, n) = (shape[0], shape[1]);
+                let nu = svd_rank(m, n, cfg.p);
+                ParamState::Svd {
+                    u: QuantState::zeros(&[m, nu]),
+                    s: QuantState::zeros(&[nu]),
+                    v: QuantState::zeros(&[n, nu]),
+                    nu,
+                    shape: (m, n),
+                }
+            }
+            d if d >= 3 => {
+                let ranks = tucker_ranks(shape, cfg.p);
+                let factors = shape
+                    .iter()
+                    .zip(ranks.iter())
+                    .map(|(&dim, &r)| QuantState::zeros(&[dim, r]))
+                    .collect();
+                ParamState::Tucker {
+                    core: QuantState::zeros(&ranks),
+                    factors,
+                    ranks,
+                    shape: shape.to_vec(),
+                }
+            }
+            _ => ParamState::Dense { q: QuantState::zeros(shape) },
+        }
+    }
+
+    /// Human-readable compression kind.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ParamState::Svd { .. } => "svd",
+            ParamState::Tucker { .. } => "tucker",
+            ParamState::Dense { .. } => "dense",
+        }
+    }
+
+    /// Bytes of state memory held (the client-side overhead the paper
+    /// measures in §III-B).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            ParamState::Svd { u, s, v, .. } => u.mem_bytes() + s.mem_bytes() + v.mem_bytes(),
+            ParamState::Tucker { core, factors, .. } => {
+                core.mem_bytes() + factors.iter().map(|f| f.mem_bytes()).sum::<usize>()
+            }
+            ParamState::Dense { q } => q.mem_bytes(),
+        }
+    }
+
+    /// True if two states agree elementwise within `tol` (test helper).
+    pub fn states_close(&self, other: &ParamState, tol: f32) -> bool {
+        match (self, other) {
+            (ParamState::Svd { u: a, s: b, v: c, .. }, ParamState::Svd { u: x, s: y, v: z, .. }) => {
+                close(a, x, tol) && close(b, y, tol) && close(c, z, tol)
+            }
+            (
+                ParamState::Tucker { core: a, factors: fa, .. },
+                ParamState::Tucker { core: b, factors: fb, .. },
+            ) => {
+                close(a, b, tol)
+                    && fa.len() == fb.len()
+                    && fa.iter().zip(fb.iter()).all(|(x, y)| close(x, y, tol))
+            }
+            (ParamState::Dense { q: a }, ParamState::Dense { q: b }) => close(a, b, tol),
+            _ => false,
+        }
+    }
+}
+
+fn close(a: &QuantState, b: &QuantState, tol: f32) -> bool {
+    a.value().sub(b.value()).max_norm() <= tol * (1.0 + a.value().max_norm())
+}
+
+/// Client-side QRR codec: ℚ ∘ ℂ with per-factor differential state.
+#[derive(Debug, Clone)]
+pub struct ClientCodec {
+    cfg: QrrConfig,
+    states: Vec<ParamState>,
+}
+
+impl ClientCodec {
+    /// Build the codec for a model with the given parameter shapes.
+    pub fn new(shapes: &[Vec<usize>], cfg: QrrConfig) -> Self {
+        let states = shapes.iter().map(|s| ParamState::new(s, &cfg)).collect();
+        ClientCodec { cfg, states }
+    }
+
+    /// Access per-parameter states (tests / overhead accounting).
+    pub fn states(&self) -> &[ParamState] {
+        &self.states
+    }
+
+    /// Total client-side state memory in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.mem_bytes()).sum()
+    }
+
+    /// The configuration in use.
+    pub fn config(&self) -> &QrrConfig {
+        &self.cfg
+    }
+
+    /// Compress + quantize one gradient set. `grads[i]` must match the
+    /// i-th shape the codec was built with.
+    pub fn encode(&mut self, grads: &[Tensor]) -> Vec<ParamMsg> {
+        assert_eq!(grads.len(), self.states.len(), "gradient count mismatch");
+        let beta = self.cfg.beta;
+        let method = self.cfg.method;
+        self.states
+            .iter_mut()
+            .zip(grads.iter())
+            .map(|(st, g)| match st {
+                ParamState::Svd { u, s, v, nu, shape } => {
+                    debug_assert_eq!(g.shape(), &[shape.0, shape.1]);
+                    let c: SvdCompressed = compress_svd(g, *nu, method);
+                    let mu = u.quantize_update(&c.u, beta);
+                    let ms = s.quantize_update(&Tensor::vector(c.s.clone()), beta);
+                    let mv = v.quantize_update(&c.v, beta);
+                    ParamMsg::Svd { u: mu, s: ms, v: mv }
+                }
+                ParamState::Tucker { core, factors, ranks, shape } => {
+                    debug_assert_eq!(g.shape(), &shape[..]);
+                    let c: TuckerCompressed = compress_tucker(g, ranks, method);
+                    let mc = core.quantize_update(&c.core, beta);
+                    let mf = factors
+                        .iter_mut()
+                        .zip(c.factors.iter())
+                        .map(|(fs, f)| fs.quantize_update(f, beta))
+                        .collect();
+                    ParamMsg::Tucker { core: mc, factors: mf }
+                }
+                ParamState::Dense { q } => {
+                    let m = q.quantize_update(g, beta);
+                    ParamMsg::Dense { q: m }
+                }
+            })
+            .collect()
+    }
+}
+
+/// Server-side QRR codec: applies innovations (eq. (17)) and reconstructs
+/// gradients via ℂ⁻¹ (eq. (24)–(26)).
+#[derive(Debug, Clone)]
+pub struct ServerCodec {
+    states: Vec<ParamState>,
+}
+
+impl ServerCodec {
+    /// Build the mirror codec; must use the same shapes and config as the
+    /// client's.
+    pub fn new(shapes: &[Vec<usize>], cfg: QrrConfig) -> Self {
+        let states = shapes.iter().map(|s| ParamState::new(s, &cfg)).collect();
+        ServerCodec { states }
+    }
+
+    /// Access per-parameter states.
+    pub fn states(&self) -> &[ParamState] {
+        &self.states
+    }
+
+    /// Server-side state memory in bytes (held per client).
+    pub fn mem_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.mem_bytes()).sum()
+    }
+
+    /// Decode one message set into reconstructed gradients.
+    pub fn decode(&mut self, msgs: &[ParamMsg]) -> Vec<Tensor> {
+        assert_eq!(msgs.len(), self.states.len(), "message count mismatch");
+        self.states
+            .iter_mut()
+            .zip(msgs.iter())
+            .map(|(st, msg)| match (st, msg) {
+                (ParamState::Svd { u, s, v, nu, shape }, ParamMsg::Svd { u: mu, s: ms, v: mv }) => {
+                    let qu = u.apply_update(mu).clone();
+                    let qs = s.apply_update(ms).data().to_vec();
+                    let qv = v.apply_update(mv).clone();
+                    let c = SvdCompressed {
+                        u: qu,
+                        s: qs,
+                        v: qv,
+                        shape: *shape,
+                    };
+                    debug_assert_eq!(c.rank(), *nu);
+                    decompress_svd(&c)
+                }
+                (
+                    ParamState::Tucker { core, factors, ranks: _, shape },
+                    ParamMsg::Tucker { core: mc, factors: mf },
+                ) => {
+                    assert_eq!(factors.len(), mf.len(), "factor count mismatch");
+                    let qcore = core.apply_update(mc).clone();
+                    let qf: Vec<Tensor> = factors
+                        .iter_mut()
+                        .zip(mf.iter())
+                        .map(|(fs, m)| fs.apply_update(m).clone())
+                        .collect();
+                    let c = TuckerCompressed { core: qcore, factors: qf, shape: shape.clone() };
+                    decompress_tucker(&c)
+                }
+                (ParamState::Dense { q }, ParamMsg::Dense { q: mq }) => q.apply_update(mq).clone(),
+                (st, _) => panic!("message kind does not match state kind {}", st.kind_name()),
+            })
+            .collect()
+    }
+}

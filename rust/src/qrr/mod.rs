@@ -1,0 +1,178 @@
+//! The Quantized Rank Reduction operator (paper §III-A, eq. (19)).
+//!
+//! Per parameter-tensor the client applies ℚ(ℂ(·)) and the server applies
+//! ℂ⁻¹:
+//!
+//! * 2-D gradients (FC weights)      → truncated SVD, factors quantized
+//!   (eq. (20)/(24)): messages carry Q(U), Q(Σ), Q(V).
+//! * 4-D gradients (conv kernels)    → Tucker/HOSVD, factors quantized
+//!   (eq. (21)/(25)): messages carry Q(𝔊), Q(F₁)…Q(F₄).
+//! * 1-D gradients (biases)          → quantized only (eq. (26)).
+//!
+//! Both sides keep per-factor [`QuantState`]s (the client to center the
+//! next grid, the server to apply innovations, eq. (17)), so the pair
+//! [`ClientCodec`]/[`ServerCodec`] must stay in lock-step — an invariant
+//! the property tests sweep.
+
+mod codec;
+pub mod error_feedback;
+
+pub use codec::{ClientCodec, ParamMsg, ParamState, ServerCodec};
+pub use error_feedback::EfClientCodec;
+
+use crate::linalg::SvdMethod;
+
+/// Static configuration of the QRR operator for one client.
+#[derive(Debug, Clone, Copy)]
+pub struct QrrConfig {
+    /// Fraction of the original rank retained (paper's `p`, eq. (22)/(23)).
+    pub p: f64,
+    /// Quantization bits per element (paper's β).
+    pub beta: u8,
+    /// SVD engine used for ℂ.
+    pub method: SvdMethod,
+}
+
+impl QrrConfig {
+    /// Paper defaults: β = 8, Auto SVD engine.
+    pub fn with_p(p: f64) -> Self {
+        QrrConfig { p, beta: 8, method: SvdMethod::Auto }
+    }
+}
+
+impl Default for QrrConfig {
+    fn default() -> Self {
+        Self::with_p(0.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![
+            vec![200, 784],      // MLP hidden weight
+            vec![200],           // hidden bias
+            vec![10, 200],       // output weight
+            vec![10],            // output bias
+            vec![16, 1, 3, 3],   // conv1 kernel
+            vec![16],            // conv1 bias
+            vec![32, 16, 3, 3],  // conv2 kernel
+        ]
+    }
+
+    fn random_grads(rng: &mut Rng) -> Vec<Tensor> {
+        shapes().iter().map(|s| Tensor::randn(s, rng)).collect()
+    }
+
+    #[test]
+    fn client_server_roundtrip_reconstructs_approximately() {
+        let mut rng = Rng::new(70);
+        let shapes = shapes();
+        let cfg = QrrConfig::with_p(0.5);
+        let mut client = ClientCodec::new(&shapes, cfg);
+        let mut server = ServerCodec::new(&shapes, cfg);
+        let grads = random_grads(&mut rng);
+        let msgs = client.encode(&grads);
+        let rec = server.decode(&msgs);
+        for (g, r) in grads.iter().zip(rec.iter()) {
+            assert_eq!(g.shape(), r.shape());
+            // random (full-rank) gradients at p=0.5: expect rough shape
+            // agreement, not exactness
+            assert!(g.rel_err(r) < 1.0, "err {}", g.rel_err(r));
+        }
+        // biases are quantize-only: near-exact at beta=8
+        assert!(grads[1].rel_err(&rec[1]) < 0.02);
+        assert!(grads[3].rel_err(&rec[3]) < 0.02);
+    }
+
+    #[test]
+    fn lowrank_gradients_reconstruct_well() {
+        let mut rng = Rng::new(71);
+        // rank-3 matrix gradient, p=0.3 -> nu = 15 on a 50x80
+        let u = Tensor::randn(&[50, 3], &mut rng);
+        let v = Tensor::randn(&[3, 80], &mut rng);
+        let g = crate::linalg::matmul(&u, &v);
+        let shapes = vec![vec![50, 80]];
+        let cfg = QrrConfig::with_p(0.3);
+        let mut client = ClientCodec::new(&shapes, cfg);
+        let mut server = ServerCodec::new(&shapes, cfg);
+        let rec = server.decode(&client.encode(&[g.clone()]));
+        assert!(g.rel_err(&rec[0]) < 0.05, "err {}", g.rel_err(&rec[0]));
+    }
+
+    #[test]
+    fn states_stay_synchronized_over_rounds() {
+        let mut rng = Rng::new(72);
+        let shapes = shapes();
+        let cfg = QrrConfig::with_p(0.2);
+        let mut client = ClientCodec::new(&shapes, cfg);
+        let mut server = ServerCodec::new(&shapes, cfg);
+        for _round in 0..10 {
+            let grads = random_grads(&mut rng);
+            let msgs = client.encode(&grads);
+            let _ = server.decode(&msgs);
+            for (cs, ss) in client.states().iter().zip(server.states().iter()) {
+                assert!(cs.states_close(ss, 1e-5), "client/server state diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bits_far_below_dense() {
+        let mut rng = Rng::new(73);
+        let shapes = shapes();
+        let cfg = QrrConfig::with_p(0.1);
+        let mut client = ClientCodec::new(&shapes, cfg);
+        let grads = random_grads(&mut rng);
+        let msgs = client.encode(&grads);
+        let qrr_bits: u64 = msgs.iter().map(|m| m.wire_bits()).sum();
+        let dense_bits: u64 = shapes
+            .iter()
+            .map(|s| 32 * s.iter().product::<usize>() as u64)
+            .sum();
+        // paper reports ~3% of SGD bits at p=0.1
+        assert!(
+            (qrr_bits as f64) < 0.10 * dense_bits as f64,
+            "qrr {qrr_bits} vs dense {dense_bits}"
+        );
+    }
+
+    #[test]
+    fn per_param_kinds_assigned_by_ndim() {
+        let shapes = vec![vec![4, 4], vec![4], vec![2, 2, 3, 3]];
+        let cfg = QrrConfig::with_p(0.5);
+        let client = ClientCodec::new(&shapes, cfg);
+        let kinds: Vec<&str> = client.states().iter().map(|s| s.kind_name()).collect();
+        assert_eq!(kinds, vec!["svd", "dense", "tucker"]);
+    }
+
+    #[test]
+    fn repeated_same_gradient_refines() {
+        // Feeding the same gradient repeatedly must reduce reconstruction
+        // error: the differential grids shrink (same argument as LAQ).
+        let mut rng = Rng::new(74);
+        let u = Tensor::randn(&[30, 2], &mut rng);
+        let v = Tensor::randn(&[2, 40], &mut rng);
+        let g = crate::linalg::matmul(&u, &v);
+        let shapes = vec![vec![30, 40]];
+        let cfg = QrrConfig { p: 0.2, beta: 4, method: SvdMethod::Jacobi };
+        let mut client = ClientCodec::new(&shapes, cfg);
+        let mut server = ServerCodec::new(&shapes, cfg);
+        let mut first = None;
+        let mut last = 0f32;
+        for _ in 0..8 {
+            let rec = server.decode(&client.encode(&[g.clone()]));
+            last = g.rel_err(&rec[0]);
+            first.get_or_insert(last);
+        }
+        assert!(
+            last <= first.unwrap() + 1e-6,
+            "no refinement: first {:?} last {last}",
+            first
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! β-bit integer packing.
+//!
+//! The paper's accounting charges β bits per element (eq. (16)); this
+//! module makes that real: codes in `{0, …, 2^β−1}` are packed LSB-first
+//! into a byte stream, so the serialized payload is exactly
+//! ⌈βn/8⌉ bytes.
+
+/// Number of bytes needed to pack `n` codes of `beta` bits each.
+pub fn packed_len_bytes(n: usize, beta: u8) -> usize {
+    (n * beta as usize).div_ceil(8)
+}
+
+/// Pack `codes` (each < 2^beta) into a byte vector, LSB-first.
+pub fn pack_codes(codes: &[u32], beta: u8) -> Vec<u8> {
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    let mask = if beta == 32 { u32::MAX } else { (1u32 << beta) - 1 };
+    let mut out = vec![0u8; packed_len_bytes(codes.len(), beta)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(c <= mask, "code {c} exceeds {beta} bits");
+        let c = (c & mask) as u64;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let merged = c << off;
+        out[byte] |= (merged & 0xFF) as u8;
+        if off + beta as usize > 8 {
+            out[byte + 1] |= ((merged >> 8) & 0xFF) as u8;
+        }
+        if off + beta as usize > 16 {
+            out[byte + 2] |= ((merged >> 16) & 0xFF) as u8;
+        }
+        bitpos += beta as usize;
+    }
+    out
+}
+
+/// Unpack `n` codes of `beta` bits each from `bytes`.
+pub fn unpack_codes(bytes: &[u8], n: usize, beta: u8) -> Vec<u32> {
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    assert!(
+        bytes.len() >= packed_len_bytes(n, beta),
+        "byte stream too short: {} < {}",
+        bytes.len(),
+        packed_len_bytes(n, beta)
+    );
+    let mask = (1u64 << beta) - 1;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut window = bytes[byte] as u64;
+        if byte + 1 < bytes.len() {
+            window |= (bytes[byte + 1] as u64) << 8;
+        }
+        if byte + 2 < bytes.len() {
+            window |= (bytes[byte + 2] as u64) << 16;
+        }
+        out.push(((window >> off) & mask) as u32);
+        bitpos += beta as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_betas() {
+        let mut rng = Rng::new(30);
+        for beta in 1..=16u8 {
+            let max = (1u64 << beta) as usize;
+            let codes: Vec<u32> = (0..1000).map(|_| rng.below(max) as u32).collect();
+            let packed = pack_codes(&codes, beta);
+            assert_eq!(packed.len(), packed_len_bytes(codes.len(), beta));
+            let back = unpack_codes(&packed, codes.len(), beta);
+            assert_eq!(codes, back, "beta={beta}");
+        }
+    }
+
+    #[test]
+    fn exact_sizes() {
+        assert_eq!(packed_len_bytes(8, 8), 8);
+        assert_eq!(packed_len_bytes(8, 1), 1);
+        assert_eq!(packed_len_bytes(9, 1), 2);
+        assert_eq!(packed_len_bytes(3, 5), 2); // 15 bits -> 2 bytes
+        assert_eq!(packed_len_bytes(0, 8), 0);
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let packed = pack_codes(&[], 8);
+        assert!(packed.is_empty());
+        assert!(unpack_codes(&packed, 0, 8).is_empty());
+    }
+
+    #[test]
+    fn boundary_values() {
+        for beta in [1u8, 4, 8, 12, 16] {
+            let hi = (1u32 << beta) - 1;
+            let codes = vec![0, hi, 0, hi, hi];
+            let back = unpack_codes(&pack_codes(&codes, beta), codes.len(), beta);
+            assert_eq!(codes, back);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn beta_zero_rejected() {
+        let _ = pack_codes(&[0], 0);
+    }
+}

@@ -1,0 +1,280 @@
+//! The LAQ grid quantizer (paper eq. (13)–(18)).
+//!
+//! Quantization of a value vector `g` against the previous quantized
+//! state `prev`:
+//!
+//! 1. radius `R = ‖g − prev‖∞` (eq. radius of the grid),
+//! 2. codes `q_i = ⌊ (g_i − prev_i + R) / (2τR) + 1/2 ⌋` with
+//!    `τ = 1/(2^β − 1)` (eq. (15)), integers in `{0, …, 2^β−1}`,
+//! 3. new quantized value `Q_i = prev_i + 2τR·q_i − R` (eq. (16)/(17)).
+//!
+//! The guarantee `‖g − Q‖∞ ≤ τR` (eq. (18)) is property-tested below.
+
+use crate::tensor::Tensor;
+
+use super::bitpack::{pack_codes, packed_len_bytes, unpack_codes};
+
+/// A quantized tensor as it travels over the wire: one f32 radius plus
+/// β-bit packed codes (32 + βn bits, eq. (16)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    /// Grid radius R (f32 on the wire).
+    pub radius: f32,
+    /// Bits per code.
+    pub beta: u8,
+    /// Number of elements.
+    pub len: usize,
+    /// Packed β-bit codes, LSB-first.
+    pub packed: Vec<u8>,
+}
+
+impl Quantized {
+    /// Exact payload size in bits: 32 for the radius + β per element.
+    pub fn wire_bits(&self) -> u64 {
+        32 + self.beta as u64 * self.len as u64
+    }
+
+    /// Unpack the integer codes.
+    pub fn codes(&self) -> Vec<u32> {
+        unpack_codes(&self.packed, self.len, self.beta)
+    }
+}
+
+/// Exact wire size of quantizing `n` elements at `beta` bits (eq. (16)).
+pub fn wire_bits(n: usize, beta: u8) -> u64 {
+    32 + beta as u64 * n as u64
+}
+
+/// Per-tensor quantizer state: the previous quantized values `Q_c(θ^{k−1})`
+/// kept identically by the client (to center the next grid) and by the
+/// server (to apply the innovation, eq. (17)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantState {
+    value: Tensor,
+}
+
+impl QuantState {
+    /// Initial state: zeros of the given shape (both sides agree on it).
+    pub fn zeros(shape: &[usize]) -> Self {
+        QuantState { value: Tensor::zeros(shape) }
+    }
+
+    /// State from an already-computed quantized tensor (used by callers
+    /// that stage a candidate quantization before committing, e.g. the
+    /// SLAQ skip rule).
+    pub fn from_value(value: Tensor) -> Self {
+        QuantState { value }
+    }
+
+    /// Current dequantized value.
+    pub fn value(&self) -> &Tensor {
+        &self.value
+    }
+
+    /// Bytes of memory held by this state.
+    pub fn mem_bytes(&self) -> usize {
+        self.value.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Client side: quantize `g` against this state and advance the state
+    /// to the new quantized value. Returns the wire message.
+    pub fn quantize_update(&mut self, g: &Tensor, beta: u8) -> Quantized {
+        let (q, new_val) = quantize(g, &self.value, beta);
+        self.value = new_val;
+        q
+    }
+
+    /// Server side: apply a received message to reproduce the client's new
+    /// quantized value (eq. (17)). Returns a reference to it.
+    pub fn apply_update(&mut self, msg: &Quantized) -> &Tensor {
+        let new_val = dequantize(msg, &self.value);
+        self.value = new_val;
+        &self.value
+    }
+}
+
+/// Quantize `g` against `prev`; returns (wire message, new quantized tensor).
+///
+/// Panics if shapes differ or β ∉ 1..=16.
+pub fn quantize(g: &Tensor, prev: &Tensor, beta: u8) -> (Quantized, Tensor) {
+    assert_eq!(g.shape(), prev.shape(), "quantize shape mismatch");
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    let n = g.len();
+    let levels = (1u32 << beta) - 1; // 2^beta - 1
+    let tau = 1.0f64 / levels as f64;
+
+    // R = ||g - prev||_inf
+    let mut radius = 0f32;
+    for (x, p) in g.data().iter().zip(prev.data().iter()) {
+        radius = radius.max((x - p).abs());
+    }
+
+    let mut codes = Vec::with_capacity(n);
+    let mut new_val = Tensor::zeros(g.shape());
+    if radius == 0.0 || !radius.is_finite() {
+        // Degenerate grid: g == prev exactly (or non-finite input clamped).
+        // All codes map to the center; new value = prev.
+        let radius = if radius.is_finite() { radius } else { 0.0 };
+        let center = levels / 2;
+        codes.resize(n, center);
+        new_val = prev.clone();
+        let packed = pack_codes(&codes, beta);
+        return (
+            Quantized { radius, beta, len: n, packed },
+            new_val,
+        );
+    }
+
+    let step = 2.0 * tau * radius as f64; // grid spacing
+    {
+        let out = new_val.data_mut();
+        for (i, (x, p)) in g.data().iter().zip(prev.data().iter()).enumerate() {
+            // eq. (15)
+            let t = ((*x - *p) as f64 + radius as f64) / step + 0.5;
+            let q = (t.floor() as i64).clamp(0, levels as i64) as u32;
+            codes.push(q);
+            // eq. (16)/(17): Q = prev + 2*tau*R*q - R
+            out[i] = *p + (step * q as f64 - radius as f64) as f32;
+        }
+    }
+    let packed = pack_codes(&codes, beta);
+    debug_assert_eq!(packed.len(), packed_len_bytes(n, beta));
+    (
+        Quantized { radius, beta, len: n, packed },
+        new_val,
+    )
+}
+
+/// Server-side reconstruction (eq. (17)): previous quantized value plus
+/// the decoded innovation.
+pub fn dequantize(msg: &Quantized, prev: &Tensor) -> Tensor {
+    assert_eq!(msg.len, prev.len(), "dequantize length mismatch");
+    let levels = (1u32 << msg.beta) - 1;
+    let tau = 1.0f64 / levels as f64;
+    let step = 2.0 * tau * msg.radius as f64;
+    let codes = msg.codes();
+    let mut out = Tensor::zeros(prev.shape());
+    {
+        let o = out.data_mut();
+        for (i, (&q, p)) in codes.iter().zip(prev.data().iter()).enumerate() {
+            o[i] = *p + (step * q as f64 - msg.radius as f64) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn error_bound_eq18() {
+        // ||g - Q(g)||_inf <= tau * R for random tensors and betas
+        let mut rng = Rng::new(40);
+        for beta in [1u8, 2, 4, 8, 12] {
+            for trial in 0..20 {
+                let g = Tensor::randn(&[37], &mut rng);
+                let prev = Tensor::randn(&[37], &mut rng);
+                let (msg, q) = quantize(&g, &prev, beta);
+                let tau = 1.0 / ((1u32 << beta) - 1) as f32;
+                let bound = tau * msg.radius * (1.0 + 1e-4) + 1e-7;
+                let err = g.sub(&q).max_norm();
+                assert!(
+                    err <= bound,
+                    "beta={beta} trial={trial}: err {err} > bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn client_server_state_stay_in_sync() {
+        let mut rng = Rng::new(41);
+        let shape = [13, 7];
+        let mut client = QuantState::zeros(&shape);
+        let mut server = QuantState::zeros(&shape);
+        for _round in 0..50 {
+            let g = Tensor::randn(&shape, &mut rng);
+            let msg = client.quantize_update(&g, 8);
+            server.apply_update(&msg);
+            assert!(
+                client.value().rel_err(server.value()) < 1e-6,
+                "state diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_value() {
+        let mut rng = Rng::new(42);
+        let g = Tensor::randn(&[100], &mut rng);
+        let prev = Tensor::zeros(&[100]);
+        let (msg, q_client) = quantize(&g, &prev, 8);
+        let q_server = dequantize(&msg, &prev);
+        assert!(q_client.rel_err(&q_server) < 1e-7);
+    }
+
+    #[test]
+    fn zero_innovation_zero_radius() {
+        let g = Tensor::vector(vec![1.0, -2.0, 3.0]);
+        let (msg, q) = quantize(&g, &g, 8);
+        assert_eq!(msg.radius, 0.0);
+        assert!(g.rel_err(&q) < 1e-7);
+        // dequantize against same prev reproduces prev
+        let back = dequantize(&msg, &g);
+        assert!(g.rel_err(&back) < 1e-7);
+    }
+
+    #[test]
+    fn wire_bits_formula() {
+        let g = Tensor::zeros(&[1000]);
+        let prev = Tensor::zeros(&[1000]);
+        let (msg, _) = quantize(&g, &prev, 8);
+        assert_eq!(msg.wire_bits(), 32 + 8 * 1000);
+        assert_eq!(wire_bits(1000, 8), 8032);
+        // vs 32 bits/elem uncompressed: 4x saving at beta=8
+        assert!(msg.wire_bits() * 4 < 32 * 1000 + 200);
+    }
+
+    #[test]
+    fn codes_within_beta_bits() {
+        let mut rng = Rng::new(43);
+        for beta in [1u8, 3, 8] {
+            let g = Tensor::randn(&[64], &mut rng);
+            let prev = Tensor::randn(&[64], &mut rng);
+            let (msg, _) = quantize(&g, &prev, beta);
+            let hi = (1u32 << beta) - 1;
+            assert!(msg.codes().iter().all(|&c| c <= hi));
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_beta() {
+        let mut rng = Rng::new(44);
+        let g = Tensor::randn(&[512], &mut rng);
+        let prev = Tensor::zeros(&[512]);
+        let mut last = f32::MAX;
+        for beta in [2u8, 4, 8, 12] {
+            let (_, q) = quantize(&g, &prev, beta);
+            let err = g.sub(&q).fro_norm();
+            assert!(err < last, "beta={beta}: {err} !< {last}");
+            last = err;
+        }
+        // at 12 bits the reconstruction is essentially exact
+        assert!(last / g.fro_norm() < 1e-3);
+    }
+
+    #[test]
+    fn repeated_quantization_converges_to_signal() {
+        // Quantizing the SAME gradient repeatedly must converge: the grid
+        // re-centers on the previous estimate and R shrinks geometrically.
+        let mut rng = Rng::new(45);
+        let g = Tensor::randn(&[64], &mut rng);
+        let mut st = QuantState::zeros(&[64]);
+        for _ in 0..20 {
+            st.quantize_update(&g, 4);
+        }
+        assert!(g.rel_err(st.value()) < 1e-4);
+    }
+}

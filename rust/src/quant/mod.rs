@@ -1,0 +1,13 @@
+//! Gradient quantization (paper §II-B).
+//!
+//! Implements the LAQ grid quantizer of Sun et al. [22] used by both the
+//! SLAQ baseline and the QRR scheme: each tensor is projected onto a
+//! 2^β-point evenly-spaced grid centered at the *previous* quantized
+//! value, and only the β-bit integer codes plus one f32 radius travel
+//! over the wire (32 + βn bits per tensor, eq. (16)).
+
+mod bitpack;
+mod laq;
+
+pub use bitpack::{pack_codes, packed_len_bytes, unpack_codes};
+pub use laq::{dequantize, quantize, wire_bits, QuantState, Quantized};

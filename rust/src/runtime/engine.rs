@@ -1,0 +1,186 @@
+//! The PJRT executor thread and its `Send + Sync` handle.
+//!
+//! All `xla` crate objects (`PjRtClient` is `Rc`-based) live on one
+//! dedicated thread; callers submit `(artifact, inputs)` jobs over a
+//! channel and block on a reply channel. Executables are compiled
+//! lazily on first use and cached for the life of the engine.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// A host tensor crossing the engine boundary: (shape, row-major f32).
+pub type HostTensor = (Vec<usize>, Vec<f32>);
+
+struct Job {
+    /// artifact name in the manifest
+    artifact: String,
+    inputs: Vec<HostTensor>,
+    reply: Sender<Result<Vec<HostTensor>>>,
+}
+
+/// Handle to the PJRT executor thread. Clone freely; drop all clones to
+/// shut the thread down.
+pub struct PjrtEngine {
+    tx: Sender<Job>,
+    // JoinHandle kept by the first handle only; worker exits when all
+    // senders drop.
+    _worker: Option<std::sync::Arc<WorkerGuard>>,
+}
+
+struct WorkerGuard {
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Clone for PjrtEngine {
+    fn clone(&self) -> Self {
+        PjrtEngine { tx: self.tx.clone(), _worker: self._worker.clone() }
+    }
+}
+
+impl PjrtEngine {
+    /// Start the executor thread over a manifest directory.
+    pub fn start(manifest: Manifest) -> Result<Self> {
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("qrr-pjrt".into())
+            .spawn(move || {
+                // Everything xla-related stays on this thread.
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("PJRT CPU client: {e}")));
+                        return;
+                    }
+                };
+                log::info!(
+                    "PJRT ready: platform={} devices={}",
+                    client.platform_name(),
+                    client.device_count()
+                );
+                let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                while let Ok(job) = rx.recv() {
+                    let result = run_job(&client, &mut cache, &manifest, &job);
+                    let _ = job.reply.send(result);
+                }
+            })
+            .context("spawning pjrt thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt thread died during startup")??;
+        Ok(PjrtEngine {
+            tx,
+            _worker: Some(std::sync::Arc::new(WorkerGuard { handle: Some(handle) })),
+        })
+    }
+
+    /// Start from the default artifacts directory.
+    pub fn start_default() -> Result<Self> {
+        let dir = super::artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        Self::start(manifest)
+    }
+
+    /// Execute one artifact synchronously.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt thread dropped reply"))?
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    job: &Job,
+) -> Result<Vec<HostTensor>> {
+    if !cache.contains_key(&job.artifact) {
+        let entry = manifest
+            .by_name(&job.artifact)
+            .ok_or_else(|| anyhow!("artifact {:?} not in manifest", job.artifact))?;
+        let path = manifest.path_of(entry);
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", job.artifact))?;
+        log::info!("compiled {} in {:.1} ms", job.artifact, t.millis());
+        cache.insert(job.artifact.clone(), exe);
+    }
+    let exe = cache.get(&job.artifact).unwrap();
+
+    // Host -> device literals.
+    let mut literals = Vec::with_capacity(job.inputs.len());
+    for (shape, data) in &job.inputs {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshaping input to {shape:?}: {e}"))?;
+        literals.push(lit);
+    }
+
+    // Execute; artifacts are lowered with return_tuple=True so the single
+    // output is a tuple of all results.
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing {}: {e}", job.artifact))?;
+    let out_lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching output: {e}"))?;
+    let parts = out_lit
+        .to_tuple()
+        .map_err(|e| anyhow!("untupling output: {e}"))?;
+    let mut outs = Vec::with_capacity(parts.len());
+    for p in parts {
+        let shape = p
+            .array_shape()
+            .map_err(|e| anyhow!("output shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = p
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("output to_vec: {e}"))?;
+        outs.push((dims, data));
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/pjrt.rs
+    // (integration), since unit tests must pass before `make artifacts`.
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let dir = std::env::temp_dir().join("qrr_engine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts":[]}"#).unwrap();
+        let manifest = super::Manifest::load(&dir).unwrap();
+        let engine = super::PjrtEngine::start(manifest).unwrap();
+        let err = engine.execute("nope", vec![]).unwrap_err();
+        assert!(format!("{err}").contains("not in manifest"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,130 @@
+//! The artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py` and read here — the contract between the
+//! python build path and the Rust request path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::json::Json;
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// unique name, e.g. `mlp_grad_b512`
+    pub name: String,
+    /// HLO text file, relative to the manifest
+    pub file: String,
+    /// owning model ("mlp" | "cnn" | "vgg"), empty for kernels
+    pub model: String,
+    /// function ("grad" | "eval" | kernel name)
+    pub func: String,
+    /// static batch size (0 for non-batched kernels)
+    pub batch: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// all artifacts
+    pub entries: Vec<ArtifactEntry>,
+    /// directory the manifest lives in (file paths resolve against it)
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let arr = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts' array")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for a in arr {
+            entries.push(ArtifactEntry {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("artifact missing name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("artifact missing file")?
+                    .to_string(),
+                model: a
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                func: a
+                    .get("fn")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                batch: a.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Find one artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All artifacts for (model, fn), sorted by batch ascending.
+    pub fn for_model_fn(&self, model: &str, func: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.model == model && e.func == func)
+            .collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_query() {
+        let dir = std::env::temp_dir().join("qrr_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[
+                {"name":"mlp_grad_b32","file":"a.hlo.txt","model":"mlp","fn":"grad","batch":32},
+                {"name":"mlp_grad_b512","file":"b.hlo.txt","model":"mlp","fn":"grad","batch":512},
+                {"name":"quantize_4096","file":"q.hlo.txt","fn":"quantize"}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert!(m.by_name("mlp_grad_b32").is_some());
+        let grads = m.for_model_fn("mlp", "grad");
+        assert_eq!(grads.len(), 2);
+        assert_eq!(grads[0].batch, 32);
+        assert_eq!(grads[1].batch, 512);
+        assert!(m.path_of(grads[0]).ends_with("a.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/definitely/missing")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

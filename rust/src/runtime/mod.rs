@@ -1,0 +1,31 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them from the Rust request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (single-threaded), so the
+//! runtime wraps it in a dedicated **executor thread**; [`PjrtEngine`] is
+//! a cheap `Send + Sync` handle that ships jobs to that thread over a
+//! channel. The FL clients all share one engine — PJRT's CPU backend is
+//! internally multi-threaded, so serializing submissions does not
+//! serialize the math.
+//!
+//! [`PjrtModel`] implements [`ModelOps`](crate::model::ModelOps) on top
+//! of the engine: `loss_grad` runs the `<model>_grad_b<B>` artifact,
+//! `eval` the `<model>_eval_b<B>` artifact. Batches that don't match an
+//! artifact's static shape are chunked and zero-padded with a sample
+//! weight vector, so results are exact for any batch size.
+
+mod engine;
+mod manifest;
+mod model;
+
+pub use engine::PjrtEngine;
+pub use manifest::{ArtifactEntry, Manifest};
+pub use model::PjrtModel;
+
+/// Directory holding artifacts + manifest; `QRR_ARTIFACTS` overrides.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("QRR_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

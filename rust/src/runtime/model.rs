@@ -1,0 +1,190 @@
+//! [`PjrtModel`]: the [`ModelOps`] implementation backed by AOT-compiled
+//! JAX/Pallas artifacts.
+//!
+//! Artifact calling convention (see `python/compile/aot.py`):
+//!
+//! * `<model>_grad_b<B>`: inputs `(param_0, …, param_{P-1}, x[B,D],
+//!   y_onehot[B,K], w[B])` → outputs `(loss[], grad_0, …, grad_{P-1})`
+//!   where `loss` is the w-weighted mean cross-entropy and the grads are
+//!   gradients of that weighted mean.
+//! * `<model>_eval_b<B>`: same inputs → `(loss_sum[], correct[])`
+//!   (w-weighted sums, so padding rows contribute nothing).
+//!
+//! Any request batch is served by chunking into the artifact's static
+//! batch and zero-padding the tail with w=0; the weighted convention
+//! makes the result exact, not approximate.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::{ModelKind, ModelOps, ModelSpec};
+use crate::tensor::Tensor;
+
+use super::engine::{HostTensor, PjrtEngine};
+use super::manifest::Manifest;
+
+/// PJRT-backed model (see module docs for the artifact contract).
+pub struct PjrtModel {
+    spec: ModelSpec,
+    engine: PjrtEngine,
+    grad_batches: Vec<usize>,
+    eval_batches: Vec<usize>,
+}
+
+impl PjrtModel {
+    /// Load from the default artifacts directory (`QRR_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default(kind: ModelKind) -> Result<Self> {
+        let dir = super::artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        let engine = PjrtEngine::start(manifest.clone())?;
+        Self::new(kind, manifest, engine)
+    }
+
+    /// Build from an explicit manifest + engine (shared across models).
+    pub fn new(kind: ModelKind, manifest: Manifest, engine: PjrtEngine) -> Result<Self> {
+        let spec = ModelSpec::new(kind);
+        let grad_batches: Vec<usize> = manifest
+            .for_model_fn(kind.name(), "grad")
+            .iter()
+            .map(|e| e.batch)
+            .collect();
+        let eval_batches: Vec<usize> = manifest
+            .for_model_fn(kind.name(), "eval")
+            .iter()
+            .map(|e| e.batch)
+            .collect();
+        if grad_batches.is_empty() || eval_batches.is_empty() {
+            return Err(anyhow!(
+                "no grad/eval artifacts for model {:?} — run `make artifacts`",
+                kind.name()
+            ));
+        }
+        Ok(PjrtModel { spec, engine, grad_batches, eval_batches })
+    }
+
+    /// Pick the smallest artifact batch ≥ n, or the largest available.
+    fn pick_batch(batches: &[usize], n: usize) -> usize {
+        batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| *batches.last().unwrap())
+    }
+
+    /// Build the padded (x, y_onehot, w) chunk inputs.
+    fn chunk_inputs(
+        &self,
+        x: &Tensor,
+        y: &[u32],
+        lo: usize,
+        hi: usize,
+        padded: usize,
+    ) -> Vec<HostTensor> {
+        let d = self.spec.input_dim();
+        let k = self.spec.num_classes;
+        let mut xc = vec![0f32; padded * d];
+        let mut yc = vec![0f32; padded * k];
+        let mut wc = vec![0f32; padded];
+        for (row, i) in (lo..hi).enumerate() {
+            xc[row * d..(row + 1) * d].copy_from_slice(&x.data()[i * d..(i + 1) * d]);
+            yc[row * k + y[i] as usize] = 1.0;
+            wc[row] = 1.0;
+        }
+        vec![
+            (vec![padded, d], xc),
+            (vec![padded, k], yc),
+            (vec![padded], wc),
+        ]
+    }
+
+    fn run(
+        &self,
+        func: &str,
+        batch_choices: &[usize],
+        params: &[Tensor],
+        x: &Tensor,
+        y: &[u32],
+    ) -> Result<Vec<(f64, Vec<HostTensor>)>> {
+        let n = y.len();
+        let b = Self::pick_batch(batch_choices, n);
+        let name_for = |bb: usize| format!("{}_{}_b{}", self.spec.kind.name(), func, bb);
+        let mut out = Vec::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + b).min(n);
+            let mut inputs: Vec<HostTensor> = params
+                .iter()
+                .map(|p| (p.shape().to_vec(), p.data().to_vec()))
+                .collect();
+            inputs.extend(self.chunk_inputs(x, y, lo, hi, b));
+            let res = self
+                .engine
+                .execute(&name_for(b), inputs)
+                .with_context(|| format!("artifact {}", name_for(b)))?;
+            out.push(((hi - lo) as f64, res));
+            lo = hi;
+        }
+        Ok(out)
+    }
+}
+
+impl ModelOps for PjrtModel {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn loss_grad(&self, params: &[Tensor], x: &Tensor, y: &[u32]) -> (f32, Vec<Tensor>) {
+        let chunks = self
+            .run("grad", &self.grad_batches, params, x, y)
+            .expect("pjrt loss_grad");
+        let total: f64 = chunks.iter().map(|(n, _)| n).sum();
+        let mut loss = 0f64;
+        let mut grads: Vec<Tensor> = self
+            .spec
+            .params
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape))
+            .collect();
+        for (n, outs) in chunks {
+            let w = (n / total) as f32;
+            // outs[0] = loss scalar, outs[1..] = grads
+            loss += outs[0].1[0] as f64 * (n / total);
+            for (g, (shape, data)) in grads.iter_mut().zip(outs[1..].iter()) {
+                debug_assert_eq!(g.shape(), &shape[..]);
+                let chunk_grad = Tensor::from_vec(shape, data.clone());
+                g.axpy(w, &chunk_grad);
+            }
+        }
+        (loss as f32, grads)
+    }
+
+    fn eval(&self, params: &[Tensor], x: &Tensor, y: &[u32]) -> (f32, usize) {
+        let chunks = self
+            .run("eval", &self.eval_batches, params, x, y)
+            .expect("pjrt eval");
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut total = 0f64;
+        for (n, outs) in chunks {
+            loss_sum += outs[0].1[0] as f64;
+            correct += outs[1].1[0] as f64;
+            total += n;
+        }
+        ((loss_sum / total.max(1.0)) as f32, correct.round() as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        assert_eq!(PjrtModel::pick_batch(&[32, 512], 16), 32);
+        assert_eq!(PjrtModel::pick_batch(&[32, 512], 32), 32);
+        assert_eq!(PjrtModel::pick_batch(&[32, 512], 100), 512);
+        // nothing fits: chunk with the largest
+        assert_eq!(PjrtModel::pick_batch(&[32, 512], 2000), 512);
+    }
+}

@@ -1,0 +1,321 @@
+//! The dense row-major f32 tensor type.
+
+use std::fmt;
+
+/// Dense, contiguous, row-major f32 tensor of arbitrary rank.
+///
+/// Gradients in the FL pipeline are matrices (fully connected layers),
+/// 4-D tensors (convolution kernels) or vectors (biases); `Tensor`
+/// covers all of them with explicit shape metadata.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor from existing data; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// 2-D convenience constructor.
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        Self::from_vec(&[rows, cols], data)
+    }
+
+    /// 1-D convenience constructor.
+    pub fn vector(data: Vec<f32>) -> Self {
+        let n = data.len();
+        Self::from_vec(&[n], data)
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Tensor filled with iid standard normals.
+    pub fn randn(shape: &[usize], rng: &mut crate::util::Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data);
+        t
+    }
+
+    /// Shape slice.
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of dimensions.
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw data slice (row-major).
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data slice.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw data vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}: element count mismatch",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Element accessor by multi-index (debug-checked).
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        let mut off = 0;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i]);
+            off += ix * strides[i];
+        }
+        self.data[off]
+    }
+
+    /// Mutable element accessor by multi-index.
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        let mut off = 0;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i]);
+            off += ix * strides[i];
+        }
+        &mut self.data[off]
+    }
+
+    /// 2-D accessor (rows-major).
+    #[inline]
+    pub fn get2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Mutable 2-D accessor.
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    /// Matrix transpose (2-D only).
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2, "transpose expects a matrix");
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for bi in (0..m).step_by(B) {
+            for bj in (0..n).step_by(B) {
+                for i in bi..(bi + B).min(m) {
+                    for j in bj..(bj + B).min(n) {
+                        out.data[j * m + i] = self.data[i * n + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max (ℓ∞) norm.
+    pub fn max_norm(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise a += alpha * b.
+    pub fn axpy(&mut self, alpha: f32, b: &Tensor) {
+        assert_eq!(self.shape, b.shape, "axpy shape mismatch");
+        for (x, y) in self.data.iter_mut().zip(b.data.iter()) {
+            *x += alpha * y;
+        }
+    }
+
+    /// Elementwise scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for x in self.data.iter_mut() {
+            *x *= alpha;
+        }
+    }
+
+    /// a - b as a new tensor.
+    pub fn sub(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.shape, b.shape, "sub shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| x - y)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// a + b as a new tensor.
+    pub fn add(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.shape, b.shape, "add shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| x + y)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Relative Frobenius error ‖a−b‖F / max(‖a‖F, ε).
+    pub fn rel_err(&self, b: &Tensor) -> f32 {
+        let denom = self.fro_norm().max(1e-12);
+        self.sub(b).fro_norm() / denom
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.len() <= 16 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{} elements]", self.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.get2(0, 2), 3.0);
+        assert_eq!(t.get2(1, 0), 4.0);
+        assert_eq!(t.at(&[1, 2]), 6.0);
+        assert_eq!(t.strides(), vec![3, 1]);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|x| x as f32).collect());
+        let t = t.reshape(&[3, 4]).reshape(&[2, 2, 3]);
+        assert_eq!(t.shape(), &[2, 2, 3]);
+        assert_eq!(t.at(&[1, 1, 2]), 11.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_bad_count_panics() {
+        let t = Tensor::zeros(&[2, 3]);
+        let _ = t.reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[17, 31], &mut rng);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let a = Tensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let at = a.transpose();
+        assert_eq!(at.shape(), &[3, 2]);
+        assert_eq!(at.get2(2, 1), 6.0);
+        assert_eq!(at.get2(0, 1), 4.0);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Tensor::vector(vec![3.0, -4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(a.max_norm(), 4.0);
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let mut a = Tensor::vector(vec![1., 2.]);
+        let b = Tensor::vector(vec![10., 20.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 12.]);
+        let d = a.sub(&b);
+        assert_eq!(d.data(), &[-4., -8.]);
+    }
+
+    #[test]
+    fn eye_identity() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.get2(0, 0), 1.0);
+        assert_eq!(i.get2(0, 1), 0.0);
+        assert_eq!(i.fro_norm(), 3.0f32.sqrt());
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense f32 tensor substrate.
+//!
+//! Everything the compression engine needs from a tensor library:
+//! contiguous row-major storage, reshape, mode-n unfolding/folding
+//! (matricization) and mode-n products — the operations behind the
+//! Tucker decomposition (paper eq. (9)–(10)).
+
+mod dense;
+mod ops;
+mod unfold;
+
+pub use dense::Tensor;
+pub use ops::*;
+pub use unfold::{fold, mode_n_product, unfold};

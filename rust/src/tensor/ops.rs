@@ -1,0 +1,102 @@
+//! Elementwise and reduction helpers shared across the crate.
+
+use super::Tensor;
+
+/// Sum of all elements.
+pub fn sum(t: &Tensor) -> f32 {
+    t.data().iter().sum()
+}
+
+/// Mean of all elements.
+pub fn mean(t: &Tensor) -> f32 {
+    if t.is_empty() {
+        0.0
+    } else {
+        sum(t) / t.len() as f32
+    }
+}
+
+/// Dot product of two same-shaped tensors viewed as flat vectors.
+pub fn dot(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    a.data()
+        .iter()
+        .zip(b.data().iter())
+        .map(|(x, y)| (*x as f64) * (*y as f64))
+        .sum::<f64>() as f32
+}
+
+/// Squared ℓ2 norm as f64 (stable accumulation).
+pub fn sq_norm(t: &Tensor) -> f64 {
+    t.data().iter().map(|x| (*x as f64) * (*x as f64)).sum()
+}
+
+/// Elementwise map into a new tensor.
+pub fn map(t: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::from_vec(t.shape(), t.data().iter().map(|&x| f(x)).collect())
+}
+
+/// Elementwise binary zip into a new tensor.
+pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "zip shape mismatch");
+    Tensor::from_vec(
+        a.shape(),
+        a.data()
+            .iter()
+            .zip(b.data().iter())
+            .map(|(&x, &y)| f(x, y))
+            .collect(),
+    )
+}
+
+/// argmax over the last axis of a 2-D tensor; returns one index per row.
+pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
+    assert_eq!(t.ndim(), 2);
+    let (m, n) = (t.shape()[0], t.shape()[1]);
+    let mut out = Vec::with_capacity(m);
+    for r in 0..m {
+        let row = &t.data()[r * n..(r + 1) * n];
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::vector(vec![1., 2., 3., 4.]);
+        assert_eq!(sum(&t), 10.0);
+        assert_eq!(mean(&t), 2.5);
+        assert_eq!(dot(&t, &t), 30.0);
+        assert_eq!(sq_norm(&t), 30.0);
+    }
+
+    #[test]
+    fn map_zip() {
+        let a = Tensor::vector(vec![1., -2.]);
+        let b = Tensor::vector(vec![3., 5.]);
+        assert_eq!(map(&a, f32::abs).data(), &[1., 2.]);
+        assert_eq!(zip(&a, &b, |x, y| x * y).data(), &[3., -10.]);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::matrix(2, 3, vec![0.1, 0.9, 0.0, 0.3, 0.2, 0.5]);
+        assert_eq!(argmax_rows(&t), vec![1, 2]);
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        let t = Tensor::zeros(&[0]);
+        assert_eq!(mean(&t), 0.0);
+    }
+}

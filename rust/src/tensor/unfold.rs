@@ -1,0 +1,176 @@
+//! Mode-n unfolding (matricization), folding and mode-n products —
+//! the tensor algebra behind the Tucker decomposition (paper eq. (9)-(10)).
+//!
+//! Convention: the mode-n unfolding X_(n) of X ∈ R^{I_1 × … × I_N} is the
+//! I_n × (∏_{k≠n} I_k) matrix whose columns enumerate the remaining
+//! indices in **row-major (lexicographic) order of the other modes**.
+//! Folding is the exact inverse for the same convention, so
+//! `fold(unfold(x, n), n, shape) == x` for every n.
+
+use super::Tensor;
+
+/// Mode-n unfolding: returns an `I_n × (len / I_n)` matrix.
+pub fn unfold(x: &Tensor, mode: usize) -> Tensor {
+    let shape = x.shape();
+    let ndim = shape.len();
+    assert!(mode < ndim, "mode {mode} out of range for ndim {ndim}");
+    let i_n = shape[mode];
+    let cols = x.len() / i_n;
+    let strides = x.strides();
+    let mut out = vec![0f32; x.len()];
+
+    // Enumerate the "other" modes in row-major order.
+    let other: Vec<usize> = (0..ndim).filter(|&d| d != mode).collect();
+    let other_dims: Vec<usize> = other.iter().map(|&d| shape[d]).collect();
+
+    let data = x.data();
+    let mut idx = vec![0usize; other.len()];
+    for col in 0..cols {
+        // offset contributed by the other modes
+        let mut base = 0usize;
+        for (k, &d) in other.iter().enumerate() {
+            base += idx[k] * strides[d];
+        }
+        for r in 0..i_n {
+            out[r * cols + col] = data[base + r * strides[mode]];
+        }
+        // increment multi-index (row-major: last varies fastest)
+        for k in (0..idx.len()).rev() {
+            idx[k] += 1;
+            if idx[k] < other_dims[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    Tensor::matrix(i_n, cols, out)
+}
+
+/// Inverse of [`unfold`]: reconstruct a tensor of `shape` from its mode-n
+/// unfolding.
+pub fn fold(m: &Tensor, mode: usize, shape: &[usize]) -> Tensor {
+    assert_eq!(m.ndim(), 2, "fold expects a matrix");
+    let ndim = shape.len();
+    assert!(mode < ndim);
+    let i_n = shape[mode];
+    assert_eq!(m.shape()[0], i_n, "fold: row count must equal shape[mode]");
+    let cols: usize = shape.iter().product::<usize>() / i_n;
+    assert_eq!(m.shape()[1], cols, "fold: column count mismatch");
+
+    let mut out = Tensor::zeros(shape);
+    let strides = out.strides();
+    let other: Vec<usize> = (0..ndim).filter(|&d| d != mode).collect();
+    let other_dims: Vec<usize> = other.iter().map(|&d| shape[d]).collect();
+
+    let mdata = m.data().to_vec();
+    let odata = out.data_mut();
+    let mut idx = vec![0usize; other.len()];
+    for col in 0..cols {
+        let mut base = 0usize;
+        for (k, &d) in other.iter().enumerate() {
+            base += idx[k] * strides[d];
+        }
+        for r in 0..i_n {
+            odata[base + r * strides[mode]] = mdata[r * cols + col];
+        }
+        for k in (0..idx.len()).rev() {
+            idx[k] += 1;
+            if idx[k] < other_dims[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    out
+}
+
+/// Mode-n product Y = X ×_n F, where F is J × I_n (paper eq. (10)).
+///
+/// Implemented as fold(F · unfold(X, n), n, new_shape).
+pub fn mode_n_product(x: &Tensor, mode: usize, f: &Tensor) -> Tensor {
+    assert_eq!(f.ndim(), 2, "factor must be a matrix");
+    let (j, i_n) = (f.shape()[0], f.shape()[1]);
+    assert_eq!(
+        x.shape()[mode],
+        i_n,
+        "mode-{mode} product: factor cols {} != tensor dim {}",
+        i_n,
+        x.shape()[mode]
+    );
+    let unf = unfold(x, mode);
+    let prod = crate::linalg::matmul(f, &unf);
+    let mut new_shape = x.shape().to_vec();
+    new_shape[mode] = j;
+    fold(&prod, mode, &new_shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn unfold_fold_roundtrip_all_modes() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[3, 4, 2, 5], &mut rng);
+        for mode in 0..4 {
+            let u = unfold(&x, mode);
+            assert_eq!(u.shape(), &[x.shape()[mode], x.len() / x.shape()[mode]]);
+            let back = fold(&u, mode, x.shape());
+            assert_eq!(x, back, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn unfold_matrix_mode0_is_identity() {
+        let x = Tensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let u = unfold(&x, 0);
+        assert_eq!(u, x);
+    }
+
+    #[test]
+    fn unfold_matrix_mode1_is_transpose() {
+        let x = Tensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let u = unfold(&x, 1);
+        assert_eq!(u, x.transpose());
+    }
+
+    #[test]
+    fn mode_product_known_values() {
+        // X = [[1,2],[3,4]] (2x2), F = [[1,1]] (1x2):
+        // X x_0 F sums rows -> shape (1,2): [4, 6]
+        let x = Tensor::matrix(2, 2, vec![1., 2., 3., 4.]);
+        let f = Tensor::matrix(1, 2, vec![1., 1.]);
+        let y = mode_n_product(&x, 0, &f);
+        assert_eq!(y.shape(), &[1, 2]);
+        assert_eq!(y.data(), &[4., 6.]);
+        // X x_1 F sums cols -> shape (2,1): [3, 7]
+        let y = mode_n_product(&x, 1, &f);
+        assert_eq!(y.shape(), &[2, 1]);
+        assert_eq!(y.data(), &[3., 7.]);
+    }
+
+    #[test]
+    fn mode_product_identity_is_noop() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[4, 3, 2], &mut rng);
+        for mode in 0..3 {
+            let i = Tensor::eye(x.shape()[mode]);
+            let y = mode_n_product(&x, mode, &i);
+            assert!(x.rel_err(&y) < 1e-6, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn mode_product_composes_like_matrix_mult() {
+        // (X x_n A) x_n B == X x_n (BA)
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[5, 4], &mut rng);
+        let a = Tensor::randn(&[3, 5], &mut rng);
+        let b = Tensor::randn(&[2, 3], &mut rng);
+        let lhs = mode_n_product(&mode_n_product(&x, 0, &a), 0, &b);
+        let ba = crate::linalg::matmul(&b, &a);
+        let rhs = mode_n_product(&x, 0, &ba);
+        assert!(lhs.rel_err(&rhs) < 1e-4);
+    }
+}

@@ -1,0 +1,6 @@
+//! Test utilities: a small seeded property-testing harness
+//! (the offline substitute for `proptest` — DESIGN.md §4).
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,127 @@
+//! Seeded property sweeps.
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and asserts `prop` on each; failures report the case index and
+//! the per-case seed so a single case is exactly reproducible:
+//!
+//! ```no_run
+//! use qrr::testing::{forall, Gen};
+//! forall(0xFEED, 64, |g| g.vec_f32(10, -1.0, 1.0), |xs| {
+//!     assert!(xs.iter().all(|x| x.abs() <= 1.0));
+//! });
+//! ```
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Random-input generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    /// Wrap a PRNG.
+    pub fn new(rng: Rng) -> Self {
+        Gen { rng }
+    }
+
+    /// Access the raw PRNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    /// Vector of uniform f32s.
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Standard-normal tensor of a random shape with `ndim` dims, each in
+    /// [1, max_dim].
+    pub fn tensor(&mut self, ndim: usize, max_dim: usize) -> Tensor {
+        let shape: Vec<usize> = (0..ndim).map(|_| self.usize_in(1, max_dim)).collect();
+        Tensor::randn(&shape, &mut self.rng)
+    }
+
+    /// Standard-normal matrix with dims in [1, max_dim].
+    pub fn matrix(&mut self, max_dim: usize) -> Tensor {
+        self.tensor(2, max_dim)
+    }
+
+    /// Pick one of the slice's elements.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`, deterministic in `seed`.
+pub fn forall<T>(seed: u64, cases: usize, mut gen: impl FnMut(&mut Gen) -> T, mut prop: impl FnMut(T)) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen::new(Rng::new(case_seed));
+        let input = gen(&mut g);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case}/{cases} (case_seed={case_seed:#x}, seed={seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 25, |g| g.usize_in(0, 10), |_| {});
+        forall(1, 25, |g| g.usize_in(3, 5), |v| {
+            assert!((3..=5).contains(&v));
+        });
+        // count side effect through gen
+        forall(2, 10, |g| { count += 1; g.f32_in(0.0, 1.0) }, |v| {
+            assert!((0.0..1.0).contains(&v));
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut a = Vec::new();
+        forall(7, 5, |g| g.usize_in(0, 1000), |v| a.push(v));
+        // same seed, same draws — gen closures mutate captured state, so
+        // collect through the prop instead
+        let mut b = Vec::new();
+        forall(7, 5, |g| g.usize_in(0, 1000), |v| b.push(v));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        forall(3, 10, |g| g.usize_in(0, 100), |v| {
+            assert!(v < 5, "deliberate failure");
+        });
+    }
+
+    #[test]
+    fn tensor_gen_shapes() {
+        forall(4, 20, |g| g.tensor(4, 5), |t| {
+            assert_eq!(t.ndim(), 4);
+            assert!(t.shape().iter().all(|&d| (1..=5).contains(&d)));
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Human-readable formatting for bit counts, byte counts and scientific
+//! notation matching the paper's tables (e.g. `5.088e10 bits`).
+
+/// Format a bit count like the paper's tables: `5.088 x 10^10`.
+pub fn bits_sci(bits: u64) -> String {
+    if bits == 0 {
+        return "0".to_string();
+    }
+    let b = bits as f64;
+    let exp = b.log10().floor() as i32;
+    let mant = b / 10f64.powi(exp);
+    format!("{mant:.3}e{exp}")
+}
+
+/// Format bytes with binary suffixes.
+pub fn bytes_human(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a count with thousands separators.
+pub fn count_sep(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Percentage string with 2 decimals.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(bits_sci(50_880_000_000), "5.088e10");
+        assert_eq!(bits_sci(0), "0");
+        assert_eq!(bits_sci(1), "1.000e0");
+        assert_eq!(bits_sci(999), "9.990e2");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes_human(512), "512 B");
+        assert_eq!(bytes_human(2048), "2.00 KiB");
+        assert_eq!(bytes_human(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn separators() {
+        assert_eq!(count_sep(1_234_567), "1,234,567");
+        assert_eq!(count_sep(12), "12");
+        assert_eq!(count_sep(0), "0");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.8992), "89.92%");
+    }
+}

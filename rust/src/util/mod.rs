@@ -1,0 +1,14 @@
+//! Small shared utilities: deterministic PRNGs, timers, logging and
+//! human-readable formatting.
+//!
+//! The build environment has no network access, so widely used crates
+//! (`rand`, `env_logger`, …) are replaced by the minimal, well-tested
+//! implementations in this module (see DESIGN.md §4).
+
+pub mod fmt;
+pub mod logging;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::{PhaseTimes, Timer};

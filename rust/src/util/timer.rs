@@ -1,0 +1,161 @@
+//! Wall-clock timing helpers used by metrics and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn millis(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Reset the start point, returning the previous elapsed duration.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates per-phase durations (e.g. grad / compress / quantize /
+/// transmit) across many rounds; used for the overhead experiment.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, Duration, u64)>,
+}
+
+impl PhaseTimes {
+    /// New, empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name`.
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.entries.push((name.to_string(), d, 1));
+        }
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    /// Duration of one phase (zero if absent).
+    pub fn get(&self, name: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|e| e.0 == name)
+            .map(|e| e.1)
+            .unwrap_or_default()
+    }
+
+    /// Merge another accumulator into this one.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (n, d, c) in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == n) {
+                e.1 += *d;
+                e.2 += *c;
+            } else {
+                self.entries.push((n.clone(), *d, *c));
+            }
+        }
+    }
+
+    /// (name, total, count) rows in insertion order.
+    pub fn rows(&self) -> &[(String, Duration, u64)] {
+        &self.entries
+    }
+
+    /// Render a small aligned table.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        let total = self.total().as_secs_f64().max(1e-12);
+        for (n, d, c) in &self.entries {
+            let secs = d.as_secs_f64();
+            s.push_str(&format!(
+                "{:<14} {:>10.3} ms  {:>6.2}%  x{}\n",
+                n,
+                secs * 1e3,
+                100.0 * secs / total,
+                c
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.millis() >= 1.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("a", Duration::from_millis(5));
+        p.add("a", Duration::from_millis(5));
+        p.add("b", Duration::from_millis(10));
+        assert_eq!(p.get("a"), Duration::from_millis(10));
+        assert_eq!(p.total(), Duration::from_millis(20));
+        assert_eq!(p.rows().len(), 2);
+    }
+
+    #[test]
+    fn phases_merge() {
+        let mut p = PhaseTimes::new();
+        p.add("a", Duration::from_millis(1));
+        let mut q = PhaseTimes::new();
+        q.add("a", Duration::from_millis(2));
+        q.add("c", Duration::from_millis(3));
+        p.merge(&q);
+        assert_eq!(p.get("a"), Duration::from_millis(3));
+        assert_eq!(p.get("c"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = PhaseTimes::new();
+        let v = p.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.rows().len(), 1);
+    }
+}

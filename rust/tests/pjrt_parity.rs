@@ -1,0 +1,198 @@
+//! Integration: the PJRT/HLO path must agree numerically with the
+//! pure-Rust reference backend, and the standalone kernel artifacts must
+//! agree with the Rust quant/linalg engines.
+//!
+//! These tests need `make artifacts` (at least
+//! `python -m compile.aot --models mlp --batches 32 --quick`); when no
+//! manifest is present they are skipped so plain `cargo test` stays
+//! green before the python build step.
+
+use qrr::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
+use qrr::runtime::{artifacts_dir, Manifest, PjrtEngine, PjrtModel};
+use qrr::tensor::Tensor;
+use qrr::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(&artifacts_dir()).ok()
+}
+
+fn batch(spec: &ModelSpec, n: usize, seed: u64) -> (Tensor, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = Tensor::randn(&[n, spec.input_dim()], &mut rng);
+    // inputs in [0,1] like pixels
+    for v in x.data_mut() {
+        *v = (*v * 0.25 + 0.5).clamp(0.0, 1.0);
+    }
+    let y = (0..n).map(|i| (i % 10) as u32).collect();
+    (x, y)
+}
+
+#[test]
+fn mlp_grad_parity_native_vs_pjrt() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    if m.for_model_fn("mlp", "grad").is_empty() {
+        eprintln!("skipping: no mlp grad artifact");
+        return;
+    }
+    let engine = PjrtEngine::start(m.clone()).unwrap();
+    let pjrt = PjrtModel::new(ModelKind::Mlp, m, engine).unwrap();
+    let native = NativeModel::new(ModelKind::Mlp);
+    let spec = ModelSpec::new(ModelKind::Mlp);
+    let params = spec.init_params(5);
+    let (x, y) = batch(&spec, 8, 6);
+
+    let (l_n, g_n) = native.loss_grad(&params, &x, &y);
+    let (l_p, g_p) = pjrt.loss_grad(&params, &x, &y);
+    assert!(
+        (l_n - l_p).abs() / l_n.abs().max(1e-6) < 1e-3,
+        "loss mismatch: native {l_n} pjrt {l_p}"
+    );
+    for (i, (a, b)) in g_n.iter().zip(g_p.iter()).enumerate() {
+        assert_eq!(a.shape(), b.shape(), "param {i} shape");
+        assert!(
+            a.rel_err(b) < 1e-2,
+            "param {i} ({}) grad mismatch: rel err {}",
+            spec.params[i].name,
+            a.rel_err(b)
+        );
+    }
+}
+
+#[test]
+fn mlp_eval_parity_and_padding() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    if m.for_model_fn("mlp", "eval").is_empty() {
+        eprintln!("skipping: no mlp eval artifact");
+        return;
+    }
+    let engine = PjrtEngine::start(m.clone()).unwrap();
+    let pjrt = PjrtModel::new(ModelKind::Mlp, m, engine).unwrap();
+    let native = NativeModel::new(ModelKind::Mlp);
+    let spec = ModelSpec::new(ModelKind::Mlp);
+    let params = spec.init_params(7);
+    // batch 13 (not a multiple of the artifact's 32): exercises padding
+    let (x, y) = batch(&spec, 13, 8);
+    let (l_n, c_n) = native.eval(&params, &x, &y);
+    let (l_p, c_p) = pjrt.eval(&params, &x, &y);
+    assert!(
+        (l_n - l_p).abs() / l_n.abs().max(1e-6) < 1e-3,
+        "eval loss mismatch: {l_n} vs {l_p}"
+    );
+    assert_eq!(c_n, c_p, "correct-count mismatch");
+}
+
+#[test]
+fn mlp_grad_chunking_matches_single_batch() {
+    // batch 70 with a b32 artifact: 3 chunks; weighted combination must
+    // equal the mean gradient over all 70 rows.
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    if m.for_model_fn("mlp", "grad").is_empty() {
+        eprintln!("skipping: no mlp grad artifact");
+        return;
+    }
+    let engine = PjrtEngine::start(m.clone()).unwrap();
+    let pjrt = PjrtModel::new(ModelKind::Mlp, m, engine).unwrap();
+    let native = NativeModel::new(ModelKind::Mlp);
+    let spec = ModelSpec::new(ModelKind::Mlp);
+    let params = spec.init_params(9);
+    let (x, y) = batch(&spec, 70, 10);
+    let (l_n, g_n) = native.loss_grad(&params, &x, &y);
+    let (l_p, g_p) = pjrt.loss_grad(&params, &x, &y);
+    assert!((l_n - l_p).abs() / l_n.abs().max(1e-6) < 1e-3);
+    for (a, b) in g_n.iter().zip(g_p.iter()) {
+        assert!(a.rel_err(b) < 1e-2, "rel err {}", a.rel_err(b));
+    }
+}
+
+#[test]
+fn quantize_artifact_matches_rust_quantizer() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    if m.by_name("quantize_16384").is_none() {
+        eprintln!("skipping: no quantize artifact");
+        return;
+    }
+    let engine = PjrtEngine::start(m).unwrap();
+    let mut rng = Rng::new(11);
+    let n = 16384usize;
+    let g = Tensor::randn(&[n], &mut rng);
+    let prev = Tensor::randn(&[n], &mut rng);
+    let outs = engine
+        .execute(
+            "quantize_16384",
+            vec![
+                (vec![n], g.data().to_vec()),
+                (vec![n], prev.data().to_vec()),
+            ],
+        )
+        .unwrap();
+    // outputs: radius, codes, new_val
+    let radius = outs[0].1[0];
+    let codes = &outs[1].1;
+    let val = &outs[2].1;
+
+    let (q, new_val) = qrr::quant::quantize(&g, &prev, 8);
+    assert!(
+        (radius - q.radius).abs() / q.radius.max(1e-9) < 1e-5,
+        "radius {radius} vs {}",
+        q.radius
+    );
+    let rust_codes = q.codes();
+    let mut code_mismatch = 0usize;
+    for (a, b) in codes.iter().zip(rust_codes.iter()) {
+        if (*a - *b as f32).abs() > 0.5 {
+            code_mismatch += 1;
+        }
+    }
+    // floor() at exact grid boundaries may differ by 1 ulp between
+    // implementations; allow a whisker of disagreement
+    assert!(
+        code_mismatch < n / 1000,
+        "too many code mismatches: {code_mismatch}"
+    );
+    let pjrt_val = Tensor::from_vec(&[n], val.clone());
+    assert!(
+        new_val.rel_err(&pjrt_val) < 1e-3,
+        "dequantized values differ: {}",
+        new_val.rel_err(&pjrt_val)
+    );
+}
+
+#[test]
+fn rangefinder_artifact_is_a_gemm() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    if m.by_name("rangefinder_256x192_l24").is_none() {
+        eprintln!("skipping: no rangefinder artifact");
+        return;
+    }
+    let engine = PjrtEngine::start(m).unwrap();
+    let mut rng = Rng::new(12);
+    let a = Tensor::randn(&[256, 192], &mut rng);
+    let omega = Tensor::randn(&[192, 24], &mut rng);
+    let outs = engine
+        .execute(
+            "rangefinder_256x192_l24",
+            vec![
+                (vec![256, 192], a.data().to_vec()),
+                (vec![192, 24], omega.data().to_vec()),
+            ],
+        )
+        .unwrap();
+    let y = Tensor::from_vec(&[256, 24], outs[0].1.clone());
+    let expect = qrr::linalg::matmul(&a, &omega);
+    assert!(expect.rel_err(&y) < 1e-4, "rel err {}", expect.rel_err(&y));
+}

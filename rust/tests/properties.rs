@@ -1,0 +1,277 @@
+//! Property-based sweeps over the coordinator-side invariants (the
+//! proptest substitute — `qrr::testing::prop`): quantizer bounds,
+//! codec synchronization, wire round-trips, rank rules, tensor algebra.
+
+use qrr::compress::{
+    compress_svd, compress_tucker, decompress_svd, decompress_tucker, svd_is_smaller, svd_rank,
+    tucker_is_smaller, tucker_ranks,
+};
+use qrr::linalg::SvdMethod;
+use qrr::net::{ClientUpdate, Decoder, Encoder};
+use qrr::qrr::{ClientCodec, QrrConfig, ServerCodec};
+use qrr::quant::{dequantize, quantize, QuantState};
+use qrr::tensor::{fold, mode_n_product, unfold, Tensor};
+use qrr::testing::forall;
+
+#[test]
+fn prop_quantize_error_bound_eq18() {
+    forall(
+        0xA1,
+        80,
+        |g| {
+            let beta = *g.choose(&[1u8, 2, 4, 8, 12]);
+            let n = g.usize_in(1, 400);
+            let x = Tensor::randn(&[n], g.rng());
+            let prev = Tensor::randn(&[n], g.rng());
+            (x, prev, beta)
+        },
+        |(x, prev, beta)| {
+            let (msg, q) = quantize(&x, &prev, beta);
+            let tau = 1.0 / ((1u32 << beta) - 1) as f32;
+            let bound = tau * msg.radius * (1.0 + 1e-4) + 1e-7;
+            assert!(x.sub(&q).max_norm() <= bound);
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_dequantize_server_client_agree() {
+    forall(
+        0xA2,
+        60,
+        |g| {
+            let n = g.usize_in(1, 300);
+            let beta = *g.choose(&[4u8, 8]);
+            let rounds = g.usize_in(1, 6);
+            let tensors: Vec<Tensor> =
+                (0..rounds).map(|_| Tensor::randn(&[n], g.rng())).collect();
+            (tensors, beta)
+        },
+        |(tensors, beta)| {
+            let shape = tensors[0].shape().to_vec();
+            let mut client = QuantState::zeros(&shape);
+            let mut prev_server = Tensor::zeros(&shape);
+            for t in &tensors {
+                let msg = client.quantize_update(t, beta);
+                let server_val = dequantize(&msg, &prev_server);
+                assert!(client.value().sub(&server_val).max_norm() < 1e-5);
+                prev_server = server_val;
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_svd_compress_decompress_shape_and_bound() {
+    forall(
+        0xA3,
+        40,
+        |g| {
+            let m = g.usize_in(2, 40);
+            let n = g.usize_in(2, 40);
+            let p = g.f32_in(0.05, 1.0) as f64;
+            (Tensor::randn(&[m, n], g.rng()), p)
+        },
+        |(x, p)| {
+            let (m, n) = (x.shape()[0], x.shape()[1]);
+            let nu = svd_rank(m, n, p);
+            assert!(nu >= 1 && nu <= m.min(n));
+            let c = compress_svd(&x, nu, SvdMethod::Jacobi);
+            let rec = decompress_svd(&c);
+            assert_eq!(rec.shape(), x.shape());
+            // projection never exceeds the original energy (up to fp noise)
+            assert!(rec.fro_norm() <= x.fro_norm() * 1.01);
+            // full rank reconstructs
+            if nu == m.min(n) {
+                assert!(x.rel_err(&rec) < 1e-3);
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_tucker_roundtrip_all_modes() {
+    forall(
+        0xA4,
+        25,
+        |g| {
+            let dims: Vec<usize> = (0..4).map(|_| g.usize_in(2, 8)).collect();
+            let p = g.f32_in(0.2, 1.0) as f64;
+            (Tensor::randn(&dims, g.rng()), p)
+        },
+        |(x, p)| {
+            let ranks = tucker_ranks(x.shape(), p);
+            let c = compress_tucker(&x, &ranks, SvdMethod::Jacobi);
+            let rec = decompress_tucker(&c);
+            assert_eq!(rec.shape(), x.shape());
+            assert!(rec.fro_norm() <= x.fro_norm() * 1.01);
+        },
+    );
+}
+
+#[test]
+fn prop_unfold_fold_inverse() {
+    forall(
+        0xA5,
+        50,
+        |g| {
+            let ndim = g.usize_in(2, 5);
+            let t = g.tensor(ndim, 6);
+            let mode = g.usize_in(0, ndim - 1);
+            (t, mode)
+        },
+        |(t, mode)| {
+            let u = unfold(&t, mode);
+            let back = fold(&u, mode, t.shape());
+            assert_eq!(t, back);
+        },
+    );
+}
+
+#[test]
+fn prop_mode_product_shape_rule() {
+    forall(
+        0xA6,
+        40,
+        |g| {
+            let t = g.tensor(3, 6);
+            let mode = g.usize_in(0, 2);
+            let j = g.usize_in(1, 7);
+            let f = Tensor::randn(&[j, t.shape()[mode]], g.rng());
+            (t, mode, f)
+        },
+        |(t, mode, f)| {
+            let y = mode_n_product(&t, mode, &f);
+            let mut expect = t.shape().to_vec();
+            expect[mode] = f.shape()[0];
+            assert_eq!(y.shape(), &expect[..]);
+        },
+    );
+}
+
+#[test]
+fn prop_wire_roundtrip_any_qrr_message() {
+    forall(
+        0xA7,
+        30,
+        |g| {
+            let n_params = g.usize_in(1, 4);
+            let mut shapes = Vec::new();
+            for _ in 0..n_params {
+                let kind = g.usize_in(0, 2);
+                shapes.push(match kind {
+                    0 => vec![g.usize_in(2, 20), g.usize_in(2, 20)],
+                    1 => vec![g.usize_in(1, 50)],
+                    _ => vec![
+                        g.usize_in(2, 6),
+                        g.usize_in(2, 6),
+                        g.usize_in(2, 4),
+                        g.usize_in(2, 4),
+                    ],
+                });
+            }
+            let p = g.f32_in(0.1, 0.9) as f64;
+            let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, g.rng())).collect();
+            (shapes, grads, p)
+        },
+        |(shapes, grads, p)| {
+            let mut codec = ClientCodec::new(&shapes, QrrConfig::with_p(p));
+            let msgs = codec.encode(&grads);
+            let up = ClientUpdate::Qrr { msgs };
+            let bytes = Encoder::new(&up, 7, 3);
+            let dec = Decoder::decode(&bytes).unwrap();
+            assert_eq!(dec.client_id, 7);
+            assert_eq!(dec.round, 3);
+            assert_eq!(dec.update.payload_bits(), up.payload_bits());
+        },
+    );
+}
+
+#[test]
+fn prop_client_server_codec_lockstep() {
+    forall(
+        0xA8,
+        20,
+        |g| {
+            let shapes = vec![
+                vec![g.usize_in(3, 15), g.usize_in(3, 15)],
+                vec![g.usize_in(1, 20)],
+            ];
+            let p = g.f32_in(0.2, 1.0) as f64;
+            let rounds = g.usize_in(1, 5);
+            let grads: Vec<Vec<Tensor>> = (0..rounds)
+                .map(|_| shapes.iter().map(|s| Tensor::randn(s, g.rng())).collect())
+                .collect();
+            (shapes, grads, p)
+        },
+        |(shapes, grads, p)| {
+            let cfg = QrrConfig::with_p(p);
+            let mut client = ClientCodec::new(&shapes, cfg);
+            let mut server = ServerCodec::new(&shapes, cfg);
+            for round_grads in &grads {
+                let msgs = client.encode(round_grads);
+                let _ = server.decode(&msgs);
+                for (cs, ss) in client.states().iter().zip(server.states().iter()) {
+                    assert!(cs.states_close(ss, 1e-5));
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_size_inequalities_hold_for_small_p() {
+    // paper: "we typically want p < 0.5" for (8)/(11) to hold
+    forall(
+        0xA9,
+        60,
+        |g| {
+            let m = g.usize_in(16, 256);
+            let n = g.usize_in(16, 1024);
+            let dims: Vec<usize> = vec![
+                g.usize_in(8, 64),
+                g.usize_in(8, 64),
+                g.usize_in(3, 5),
+                g.usize_in(3, 5),
+            ];
+            let p = g.f32_in(0.05, 0.35) as f64;
+            (m, n, dims, p)
+        },
+        |(m, n, dims, p)| {
+            let nu = svd_rank(m, n, p);
+            assert!(svd_is_smaller(m, n, nu), "SVD ineq fails: {m}x{n} nu={nu}");
+            let ranks = tucker_ranks(&dims, p);
+            assert!(
+                tucker_is_smaller(&dims, &ranks),
+                "Tucker ineq fails: {dims:?} {ranks:?}"
+            );
+        },
+    );
+}
+
+#[test]
+fn prop_payload_bits_formula() {
+    // QRR payload == sum over factors of (32 + beta * elems)
+    forall(
+        0xAA,
+        30,
+        |g| {
+            let m = g.usize_in(4, 30);
+            let n = g.usize_in(4, 30);
+            let p = g.f32_in(0.1, 0.9) as f64;
+            (Tensor::randn(&[m, n], g.rng()), p)
+        },
+        |(x, p)| {
+            let (m, n) = (x.shape()[0], x.shape()[1]);
+            let shapes = vec![vec![m, n]];
+            let cfg = QrrConfig::with_p(p);
+            let mut codec = ClientCodec::new(&shapes, cfg);
+            let msgs = codec.encode(&[x]);
+            let nu = svd_rank(m, n, p);
+            let expect = (32 + 8 * (m * nu) as u64)
+                + (32 + 8 * nu as u64)
+                + (32 + 8 * (n * nu) as u64);
+            assert_eq!(msgs[0].wire_bits(), expect);
+        },
+    );
+}
