@@ -7,9 +7,7 @@
 //! cargo run --release --example adaptive_links
 //! ```
 
-use qrr::config::{ExperimentConfig, PPolicy, SchemeConfig};
-use qrr::coordinator::Coordinator;
-use qrr::net::LinkModel;
+use qrr::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     qrr::util::logging::init();
@@ -45,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let mut cfg = base.clone();
         cfg.scheme = scheme;
-        let report = Coordinator::from_config(&cfg)?.run()?;
+        let report = FlSessionBuilder::new(&cfg).build()?.run()?;
         results.push((scheme.label(), report));
     }
 

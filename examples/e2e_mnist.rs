@@ -9,9 +9,8 @@
 //! cargo run --release --example e2e_mnist -- 1000    # paper scale
 //! ```
 
-use qrr::config::{ExperimentConfig, PPolicy, SchemeConfig};
-use qrr::coordinator::Coordinator;
 use qrr::fl::metrics::markdown_table;
+use qrr::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     qrr::util::logging::init();
@@ -37,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         cfg.scheme = scheme;
         println!("\n=== {} ({iters} iterations, 10 clients) ===", scheme.label());
         let t = qrr::util::Timer::start();
-        let report = Coordinator::from_config(&cfg)?.run()?;
+        let report = FlSessionBuilder::new(&cfg).build()?.run()?;
         println!("wall time {:.1}s", t.secs());
 
         // loss curve to stdout (the "few hundred steps, log the loss")

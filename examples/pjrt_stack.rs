@@ -9,8 +9,7 @@
 //! cargo run --release --example pjrt_stack
 //! ```
 
-use qrr::config::{Backend, ExperimentConfig, PPolicy, SchemeConfig};
-use qrr::coordinator::Coordinator;
+use qrr::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     qrr::util::logging::init();
@@ -31,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     cfg.lr_schedule = vec![(0, 0.02)];
 
     let t = qrr::util::Timer::start();
-    let report = Coordinator::from_config(&cfg)?.run()?;
+    let report = FlSessionBuilder::new(&cfg).build()?.run()?;
     println!(
         "\n12 federated rounds through the PJRT backend in {:.1}s\n{}",
         t.secs(),
@@ -40,7 +39,7 @@ fn main() -> anyhow::Result<()> {
 
     // sanity: the same config on the native backend reaches a similar loss
     cfg.backend = Backend::Native;
-    let native = Coordinator::from_config(&cfg)?.run()?;
+    let native = FlSessionBuilder::new(&cfg).build()?.run()?;
     let lp = report.history.evals.last().unwrap().loss;
     let ln = native.history.evals.last().unwrap().loss;
     println!("final test loss: pjrt {lp:.4} vs native {ln:.4}");

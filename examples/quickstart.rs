@@ -1,15 +1,15 @@
-//! Quickstart: the smallest end-to-end QRR run.
+//! Quickstart: the smallest end-to-end QRR run on the session API.
 //!
-//! Builds a 5-client federated MNIST-like MLP experiment, runs 30
-//! iterations with the paper's QRR scheme (p = 0.2, β = 8) and prints
-//! the paper-style result row plus the bits saved vs full-precision SGD.
+//! Builds a 5-client federated MNIST-like MLP experiment through
+//! [`FlSessionBuilder`], runs 30 iterations with the paper's QRR scheme
+//! (p = 0.2, β = 8) and prints the paper-style result row plus the bits
+//! saved vs full-precision SGD.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use qrr::config::{ExperimentConfig, PPolicy, SchemeConfig};
-use qrr::coordinator::Coordinator;
+use qrr::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     qrr::util::logging::init();
@@ -27,11 +27,11 @@ fn main() -> anyhow::Result<()> {
     // The paper's scheme: truncated-SVD / Tucker compression + LAQ
     // quantization at p = 0.2.
     cfg.scheme = SchemeConfig::Qrr(PPolicy::Fixed(0.2));
-    let qrr_report = Coordinator::from_config(&cfg)?.run()?;
+    let qrr_report = FlSessionBuilder::new(&cfg).build()?.run()?;
 
     // The FedAvg baseline on the identical stream.
     cfg.scheme = SchemeConfig::Sgd;
-    let sgd_report = Coordinator::from_config(&cfg)?.run()?;
+    let sgd_report = FlSessionBuilder::new(&cfg).build()?.run()?;
 
     println!("\n== QRR ==\n{}", qrr_report.markdown_table());
     println!("== SGD ==\n{}", sgd_report.markdown_table());
@@ -43,6 +43,18 @@ fn main() -> anyhow::Result<()> {
         qrr::util::fmt::bits_sci(q),
         qrr::util::fmt::bits_sci(s),
         100.0 * q as f64 / s as f64
+    );
+
+    // The same experiment under a harsher scenario: only 60% of clients
+    // are sampled each round and slow links lose uploads — one builder
+    // call, no new round loop.
+    cfg.scheme = SchemeConfig::Qrr(PPolicy::Fixed(0.2));
+    cfg.participation = ParticipationConfig::Dropout { fraction: 0.6, drop_prob: 0.3 };
+    let lossy = FlSessionBuilder::new(&cfg).build()?.run()?;
+    println!(
+        "with 60% sampling + link dropout: {} communications (vs {})",
+        lossy.history.total_comms(),
+        qrr_report.history.total_comms()
     );
     Ok(())
 }

@@ -2,8 +2,8 @@
 //! per-table bench binaries. Scale with `QRR_BENCH_ITERS` (default 40).
 
 use qrr::config::{ExperimentConfig, SchemeConfig};
-use qrr::coordinator::Coordinator;
 use qrr::fl::metrics::{markdown_table, TableRow};
+use qrr::fl::session::FlSessionBuilder;
 use qrr::util::Timer;
 
 /// Reduced-scale run of one table's scheme lineup; prints timings + the
@@ -21,8 +21,9 @@ pub fn run_table_bench(name: &str, base: ExperimentConfig, schemes: &[SchemeConf
         cfg.iters = iters;
         cfg.eval_every = (iters / 4).max(1);
         let t = Timer::start();
-        let report = Coordinator::from_config(&cfg)
-            .expect("coordinator")
+        let report = FlSessionBuilder::new(&cfg)
+            .build()
+            .expect("session")
             .run()
             .expect("run");
         println!(

@@ -77,6 +77,141 @@ impl SchemeConfig {
     }
 }
 
+/// Which clients take part in a round, and whose updates survive it
+/// (the scenario axis Konečný et al. and Qin et al. emphasize for
+/// communication-efficient FL over unreliable links).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParticipationConfig {
+    /// every client, every round (the paper's synchronous setting)
+    Full,
+    /// uniformly sample `ceil(fraction · C)` clients per round
+    Uniform {
+        /// fraction of clients per round, in (0, 1]
+        fraction: f64,
+    },
+    /// sample as [`ParticipationConfig::Uniform`], then lose each selected
+    /// client's upload with probability `drop_prob` scaled by its link
+    /// slowness (slowest link ⇒ full `drop_prob`, fastest ⇒ never)
+    Dropout {
+        /// fraction of clients sampled per round, in (0, 1]
+        fraction: f64,
+        /// upload-loss probability for the slowest link, in [0, 1]
+        drop_prob: f64,
+    },
+    /// every client computes, but uploads whose simulated transmission
+    /// time exceeds the deadline are discarded (straggler cutoff)
+    Deadline {
+        /// round deadline in (simulated) seconds
+        secs: f64,
+    },
+}
+
+impl ParticipationConfig {
+    /// Display label ("full", "uniform(0.5)", …).
+    pub fn label(&self) -> String {
+        match self {
+            ParticipationConfig::Full => "full".into(),
+            ParticipationConfig::Uniform { fraction } => format!("uniform({fraction})"),
+            ParticipationConfig::Dropout { fraction, drop_prob } => {
+                format!("dropout({fraction},{drop_prob})")
+            }
+            ParticipationConfig::Deadline { secs } => format!("deadline({secs}s)"),
+        }
+    }
+
+    /// Parse the CLI grammar: `full` | `<fraction>` |
+    /// `dropout:<fraction>:<drop_prob>` | `deadline:<secs>`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        if s == "full" {
+            return Ok(ParticipationConfig::Full);
+        }
+        if let Some(rest) = s.strip_prefix("dropout:") {
+            let (f, d) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("dropout needs dropout:<fraction>:<drop_prob>"))?;
+            let fraction: f64 = f.parse().map_err(|_| anyhow::anyhow!("bad fraction {f:?}"))?;
+            let drop_prob: f64 = d.parse().map_err(|_| anyhow::anyhow!("bad drop_prob {d:?}"))?;
+            let cfg = ParticipationConfig::Dropout { fraction, drop_prob };
+            cfg.validate()?;
+            return Ok(cfg);
+        }
+        if let Some(rest) = s.strip_prefix("deadline:") {
+            let secs: f64 = rest.parse().map_err(|_| anyhow::anyhow!("bad deadline {rest:?}"))?;
+            let cfg = ParticipationConfig::Deadline { secs };
+            cfg.validate()?;
+            return Ok(cfg);
+        }
+        let fraction: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad participation {s:?} (full | <fraction> | dropout:<f>:<p> | deadline:<secs>)"))?;
+        // same contract as the JSON numeric form: reject out-of-range
+        // fractions instead of silently clamping a typo to full sync
+        anyhow::ensure!(
+            fraction > 0.0 && fraction <= 1.0,
+            "participation fraction must be in (0,1], got {fraction}"
+        );
+        Ok(Self::from_fraction(fraction))
+    }
+
+    /// The numeric back-compat form: 1.0 ⇒ full sync, else uniform.
+    pub fn from_fraction(fraction: f64) -> Self {
+        if fraction >= 1.0 {
+            ParticipationConfig::Full
+        } else {
+            ParticipationConfig::Uniform { fraction }
+        }
+    }
+
+    /// Range checks; called by JSON/CLI entry points.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            ParticipationConfig::Full => Ok(()),
+            ParticipationConfig::Uniform { fraction } => {
+                anyhow::ensure!(fraction > 0.0 && fraction <= 1.0, "fraction in (0,1]");
+                Ok(())
+            }
+            ParticipationConfig::Dropout { fraction, drop_prob } => {
+                anyhow::ensure!(fraction > 0.0 && fraction <= 1.0, "fraction in (0,1]");
+                anyhow::ensure!((0.0..=1.0).contains(&drop_prob), "drop_prob in [0,1]");
+                Ok(())
+            }
+            ParticipationConfig::Deadline { secs } => {
+                anyhow::ensure!(secs > 0.0 && secs.is_finite(), "deadline secs must be positive");
+                Ok(())
+            }
+        }
+    }
+}
+
+/// How the server combines the per-client gradient contributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregationConfig {
+    /// plain sum, paper eq. (2)
+    Sum,
+    /// shard-size-weighted mean over the round's participants (FedAvg)
+    WeightedMean,
+}
+
+impl AggregationConfig {
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggregationConfig::Sum => "sum",
+            AggregationConfig::WeightedMean => "weighted_mean",
+        }
+    }
+
+    /// Parse the CLI/JSON name.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim() {
+            "sum" => Ok(AggregationConfig::Sum),
+            "weighted_mean" | "mean" => Ok(AggregationConfig::WeightedMean),
+            o => anyhow::bail!("unknown aggregation {o:?} (sum | weighted_mean)"),
+        }
+    }
+}
+
 /// Which compute backend evaluates gradients.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -123,9 +258,11 @@ pub struct ExperimentConfig {
     pub link_fast_bps: f64,
     /// data distribution across clients
     pub sharding: Sharding,
-    /// fraction of clients participating each round (1.0 = all, the
-    /// paper's synchronous setting)
-    pub participation: f64,
+    /// who participates each round (full sync, sampling, dropout,
+    /// straggler deadline — see `fl::session::ParticipationPolicy`)
+    pub participation: ParticipationConfig,
+    /// how the server combines client contributions
+    pub aggregation: AggregationConfig,
 }
 
 impl ExperimentConfig {
@@ -149,7 +286,8 @@ impl ExperimentConfig {
             link_slow_bps: 250e3,
             link_fast_bps: 10e6,
             sharding: Sharding::Iid,
-            participation: 1.0,
+            participation: ParticipationConfig::Full,
+            aggregation: AggregationConfig::Sum,
         }
     }
 
@@ -269,7 +407,23 @@ impl ExperimentConfig {
                     ]),
                 },
             ),
-            ("participation", Json::Num(self.participation)),
+            (
+                "participation",
+                match self.participation {
+                    ParticipationConfig::Full => Json::Num(1.0),
+                    ParticipationConfig::Uniform { fraction } => Json::Num(fraction),
+                    ParticipationConfig::Dropout { fraction, drop_prob } => Json::obj(vec![
+                        ("kind", Json::Str("dropout".into())),
+                        ("fraction", Json::Num(fraction)),
+                        ("drop_prob", Json::Num(drop_prob)),
+                    ]),
+                    ParticipationConfig::Deadline { secs } => Json::obj(vec![
+                        ("kind", Json::Str("deadline".into())),
+                        ("secs", Json::Num(secs)),
+                    ]),
+                },
+            ),
+            ("aggregation", Json::Str(self.aggregation.label().into())),
         ])
     }
 
@@ -375,9 +529,35 @@ impl ExperimentConfig {
                 }
             };
         }
-        if let Some(v) = j.get("participation").and_then(Json::as_f64) {
-            anyhow::ensure!((0.0..=1.0).contains(&v) && v > 0.0, "participation in (0,1]");
-            c.participation = v;
+        if let Some(p) = j.get("participation") {
+            c.participation = if let Some(v) = p.as_f64() {
+                anyhow::ensure!((0.0..=1.0).contains(&v) && v > 0.0, "participation in (0,1]");
+                ParticipationConfig::from_fraction(v)
+            } else if let Some(name) = p.as_str() {
+                ParticipationConfig::parse(name)?
+            } else {
+                // fields are required: a typo'd key must fail loudly,
+                // not silently run a different scenario
+                let req = |key: &str| -> anyhow::Result<f64> {
+                    p.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                        anyhow::anyhow!("participation object missing numeric {key:?}")
+                    })
+                };
+                match p.get("kind").and_then(Json::as_str) {
+                    Some("full") => ParticipationConfig::Full,
+                    Some("uniform") => ParticipationConfig::Uniform { fraction: req("fraction")? },
+                    Some("dropout") => ParticipationConfig::Dropout {
+                        fraction: req("fraction")?,
+                        drop_prob: req("drop_prob")?,
+                    },
+                    Some("deadline") => ParticipationConfig::Deadline { secs: req("secs")? },
+                    _ => anyhow::bail!("bad participation object"),
+                }
+            };
+            c.participation.validate()?;
+        }
+        if let Some(v) = j.get("aggregation").and_then(Json::as_str) {
+            c.aggregation = AggregationConfig::parse(v)?;
         }
         anyhow::ensure!(c.clients > 0, "need at least one client");
         anyhow::ensure!(c.batch > 0, "batch must be positive");
@@ -451,6 +631,86 @@ mod tests {
             SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }).label(),
             "QRR"
         );
+    }
+
+    #[test]
+    fn participation_json_roundtrip() {
+        for (part, agg) in [
+            (ParticipationConfig::Full, AggregationConfig::Sum),
+            (ParticipationConfig::Uniform { fraction: 0.5 }, AggregationConfig::WeightedMean),
+            (
+                ParticipationConfig::Dropout { fraction: 0.8, drop_prob: 0.3 },
+                AggregationConfig::Sum,
+            ),
+            (ParticipationConfig::Deadline { secs: 2.5 }, AggregationConfig::Sum),
+        ] {
+            let mut c = ExperimentConfig::table1_default();
+            c.participation = part;
+            c.aggregation = agg;
+            let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(back.participation, part);
+            assert_eq!(back.aggregation, agg);
+        }
+    }
+
+    #[test]
+    fn participation_from_json_objects_and_numbers() {
+        let j = Json::parse(r#"{"participation": 0.4}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.participation, ParticipationConfig::Uniform { fraction: 0.4 });
+
+        let j = Json::parse(
+            r#"{"participation": {"kind":"dropout","fraction":0.6,"drop_prob":0.5},
+                "aggregation": "weighted_mean"}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.participation,
+            ParticipationConfig::Dropout { fraction: 0.6, drop_prob: 0.5 }
+        );
+        assert_eq!(c.aggregation, AggregationConfig::WeightedMean);
+
+        let j = Json::parse(r#"{"participation": 1.5}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        // typo'd / missing fields must fail loudly, not default
+        let j = Json::parse(r#"{"participation": {"kind":"dropout","fraction":0.6,"drop_pob":0.5}}"#)
+            .unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"participation": {"kind":"dropout","fraction":0.5,"drop_prob":7}}"#)
+            .unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"aggregation": "median"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn participation_cli_grammar() {
+        assert_eq!(ParticipationConfig::parse("full").unwrap(), ParticipationConfig::Full);
+        assert_eq!(
+            ParticipationConfig::parse("0.5").unwrap(),
+            ParticipationConfig::Uniform { fraction: 0.5 }
+        );
+        assert_eq!(
+            ParticipationConfig::parse("1.0").unwrap(),
+            ParticipationConfig::Full
+        );
+        assert_eq!(
+            ParticipationConfig::parse("dropout:0.8:0.25").unwrap(),
+            ParticipationConfig::Dropout { fraction: 0.8, drop_prob: 0.25 }
+        );
+        assert_eq!(
+            ParticipationConfig::parse("deadline:3.5").unwrap(),
+            ParticipationConfig::Deadline { secs: 3.5 }
+        );
+        assert!(ParticipationConfig::parse("dropout:0.8").is_err());
+        assert!(ParticipationConfig::parse("deadline:-1").is_err());
+        assert!(ParticipationConfig::parse("sometimes").is_err());
+        assert!(ParticipationConfig::parse("5").is_err(), "fraction > 1 must not mean full");
+        assert!(ParticipationConfig::parse("0").is_err());
+        assert!(AggregationConfig::parse("sum").is_ok());
+        assert!(AggregationConfig::parse("weighted_mean").is_ok());
+        assert!(AggregationConfig::parse("median").is_err());
     }
 
     #[test]

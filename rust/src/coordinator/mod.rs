@@ -1,73 +1,34 @@
-//! The Layer-3 coordinator: assembles data shards, clients, schemes and
-//! the server from an [`ExperimentConfig`] and drives the synchronous FL
-//! round loop with parallel client execution.
+//! The Layer-3 coordinator — now a thin shim over the composable
+//! [`fl::session`](crate::fl::session) API (DESIGN.md §1).
 //!
-//! Responsibilities (DESIGN.md §1):
-//! * IID sharding of the training stream across clients (paper setup),
-//! * per-client link models and — for experiment 3 — the adaptive
-//!   assignment of the compression fraction `p` from link speed,
-//! * the round loop: broadcast → parallel client steps → wire decode →
-//!   aggregate → descent step → metrics,
-//! * periodic test-set evaluation (loss/accuracy columns and the
-//!   vs-bits figure series),
-//! * learning-rate schedule (experiment 3 decays α at iteration 1000).
+//! Historically this module owned the whole synchronous round loop:
+//! sharding, per-client links, scheme construction, parallel client
+//! execution, wire decode, aggregation and metrics were all hard-wired
+//! here. That loop now lives in [`FlSession`], assembled by
+//! [`FlSessionBuilder`](crate::fl::session::FlSessionBuilder) with
+//! pluggable participation / aggregation / transport / metrics seams.
+//! [`Coordinator`] remains as the stable convenience entry point:
+//! config in, report out, every seam at its config default.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{Backend, ExperimentConfig};
-use crate::data::{self, Dataset};
-use crate::fl::{
-    make_client_scheme, make_server_scheme, EvalPoint, FlClient, FlServer, History, RoundMetrics,
-};
-use crate::model::{native::NativeModel, ModelOps, ModelSpec};
-use crate::net::LinkModel;
-use crate::util::{PhaseTimes, Rng};
+use crate::config::ExperimentConfig;
+use crate::fl::session::{FlSession, FlSessionBuilder};
+use crate::model::{ModelOps, ModelSpec};
 
-/// Outcome of a coordinator run.
-pub struct RunReport {
-    /// metric history (table row + figure series)
-    pub history: History,
-    /// total client-side scheme memory, bytes
-    pub client_mem_bytes: usize,
-    /// total server-side scheme memory, bytes
-    pub server_mem_bytes: usize,
-    /// accumulated per-phase client compute time
-    pub phases: PhaseTimes,
-}
+pub use crate::fl::session::RunReport;
 
-impl RunReport {
-    /// The paper-style single-row markdown table for this run.
-    pub fn markdown_table(&self) -> String {
-        crate::fl::metrics::markdown_table(&[self.history.table_row()])
-    }
-}
-
-/// The round-loop orchestrator.
+/// Config-in / report-out shim over [`FlSession`].
 pub struct Coordinator {
-    cfg: ExperimentConfig,
-    clients: Vec<FlClient>,
-    server: FlServer,
-    model: Arc<dyn ModelOps + Sync>,
-    test: Dataset,
-    history: History,
-    phases: PhaseTimes,
-    /// round-level RNG (client sampling under partial participation)
-    round_rng: Rng,
+    session: FlSession,
 }
 
 impl Coordinator {
-    /// Build everything from a config. Loads (or synthesizes) data,
-    /// shards it IID, constructs the model backend, per-client links,
-    /// schemes and the server.
+    /// Build a session from a config with every seam at its default.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
-        let spec = ModelSpec::new(cfg.model);
-        let model: Arc<dyn ModelOps + Sync> = match cfg.backend {
-            Backend::Native => Arc::new(NativeModel::new(cfg.model)),
-            Backend::Pjrt => Arc::new(crate::runtime::PjrtModel::load_default(cfg.model)?),
-        };
-        Self::with_model(cfg, spec, model)
+        Ok(Coordinator { session: FlSessionBuilder::new(cfg).build()? })
     }
 
     /// Like [`Coordinator::from_config`] but with an injected model
@@ -77,214 +38,27 @@ impl Coordinator {
         spec: ModelSpec,
         model: Arc<dyn ModelOps + Sync>,
     ) -> Result<Self> {
-        let (train, test) = data::load(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed);
-        log::info!(
-            "dataset {}: {} train / {} test ({}-dim)",
-            train.source,
-            train.len(),
-            test.len(),
-            train.dim()
-        );
-        let shards = match cfg.sharding {
-            crate::config::Sharding::Iid => train.shard_iid(cfg.clients, cfg.seed ^ 0x5A5A),
-            crate::config::Sharding::LabelSkew(k) => {
-                train.shard_label_skew(cfg.clients, k, cfg.seed ^ 0x5A5A)
-            }
-            crate::config::Sharding::Dirichlet(a) => {
-                train.shard_dirichlet(cfg.clients, a, cfg.seed ^ 0x5A5A)
-            }
-        };
-        let links = LinkModel::spread(cfg.clients, cfg.link_slow_bps, cfg.link_fast_bps);
-        let shapes = spec.shapes();
-        let mut seed_rng = Rng::new(cfg.seed ^ 0xC11E);
-
-        let mut clients = Vec::with_capacity(cfg.clients);
-        let mut server_schemes = Vec::with_capacity(cfg.clients);
-        for (i, (shard, link)) in shards.into_iter().zip(links.iter()).enumerate() {
-            let kind = cfg
-                .scheme
-                .kind_for_client(link, cfg.link_slow_bps, cfg.link_fast_bps);
-            log::debug!("client {i}: link {:.0} bps, scheme {}", link.bandwidth_bps, kind.name());
-            clients.push(FlClient::new(
-                i as u32,
-                shard,
-                Arc::clone(&model),
-                make_client_scheme(kind, &shapes, cfg.beta, cfg.alpha0(), cfg.clients),
-                *link,
-                cfg.batch,
-                seed_rng.next_u64(),
-            ));
-            server_schemes.push(make_server_scheme(kind, &shapes, cfg.beta));
-        }
-
-        let params = spec.init_params(cfg.seed ^ 0x1217);
-        let server = FlServer::new(params, server_schemes, cfg.alpha0());
-        Ok(Coordinator {
-            cfg: cfg.clone(),
-            clients,
-            server,
-            model,
-            test,
-            history: History::new(cfg.scheme.label()),
-            phases: PhaseTimes::new(),
-            round_rng: Rng::new(cfg.seed ^ 0xFAC7),
-        })
+        Ok(Coordinator { session: FlSessionBuilder::new(cfg).model(spec, model).build()? })
     }
 
     /// Current central parameters.
     pub fn params(&self) -> &[crate::tensor::Tensor] {
-        self.server.params()
+        self.session.params()
+    }
+
+    /// The underlying session (for seam-level access).
+    pub fn session(&self) -> &FlSession {
+        &self.session
     }
 
     /// Run the configured number of iterations, returning the report.
     pub fn run(&mut self) -> Result<RunReport> {
-        let iters = self.cfg.iters;
-        for it in 0..iters {
-            self.step(it)?;
-        }
-        // final evaluation if the last round wasn't an eval round
-        if self
-            .history
-            .evals
-            .last()
-            .map(|e| e.iter + 1 != iters)
-            .unwrap_or(true)
-        {
-            self.evaluate(iters.saturating_sub(1));
-        }
-        Ok(RunReport {
-            history: self.history.clone(),
-            client_mem_bytes: self.clients.iter().map(|c| c.scheme_mem_bytes()).sum(),
-            server_mem_bytes: self.server.scheme_mem_bytes(),
-            phases: self.phases.clone(),
-        })
+        self.session.run()
     }
 
     /// Execute a single FL iteration.
     pub fn step(&mut self, it: u64) -> Result<()> {
-        // learning-rate schedule
-        let alpha = self.cfg.alpha_at(it);
-        if self.server.alpha() != alpha {
-            log::info!("iteration {it}: learning rate -> {alpha}");
-            self.server.set_alpha(alpha);
-        }
-
-        // broadcast: clients read the current central parameters
-        let weights: Vec<crate::tensor::Tensor> = self.server.params().to_vec();
-
-        // partial participation: sample the active subset for this round
-        let n = self.clients.len();
-        let active: Vec<bool> = if self.cfg.participation >= 1.0 {
-            vec![true; n]
-        } else {
-            let k = ((self.cfg.participation * n as f64).ceil() as usize).clamp(1, n);
-            let chosen = self.round_rng.sample_indices(n, k);
-            let mut mask = vec![false; n];
-            for c in chosen {
-                mask[c] = true;
-            }
-            mask
-        };
-
-        // parallel client execution (participants only)
-        let outputs: Vec<Option<crate::fl::ClientRoundOutput>> = {
-            let mut slots: Vec<Option<crate::fl::ClientRoundOutput>> =
-                (0..n).map(|_| None).collect();
-            let weights = &weights;
-            let slot_cells: Vec<Mutex<&mut Option<crate::fl::ClientRoundOutput>>> =
-                slots.iter_mut().map(Mutex::new).collect();
-            let client_cells: Vec<Mutex<&mut FlClient>> =
-                self.clients.iter_mut().map(Mutex::new).collect();
-            let active = &active;
-            crate::exec::parallel_for(crate::exec::default_threads(), n, |i| {
-                if !active[i] {
-                    return;
-                }
-                let mut client = client_cells[i].lock().unwrap();
-                let out = client.round(weights);
-                **slot_cells[i].lock().unwrap() = Some(out);
-            });
-            drop(client_cells);
-            slots
-        };
-
-        // metrics + wire collection
-        let mut bits = 0u64;
-        let mut comms = 0u32;
-        let mut loss_sum = 0f64;
-        let mut participants = 0usize;
-        let mut net_time = std::time::Duration::ZERO;
-        let mut wires: Vec<Option<Vec<u8>>> = Vec::with_capacity(n);
-        for out in outputs {
-            let Some(out) = out else {
-                wires.push(None);
-                continue;
-            };
-            participants += 1;
-            bits += out.payload_bits;
-            if out.wire.is_some() {
-                comms += 1;
-            }
-            loss_sum += out.train_loss as f64;
-            net_time = net_time.max(out.net_time); // synchronous round: slowest client
-            self.phases.merge(&out.phases);
-            wires.push(out.wire);
-        }
-
-        // server: decode + aggregate + descent step
-        let grad_norm = self.server.aggregate_wire(&wires)?;
-
-        self.history.rounds.push(RoundMetrics {
-            iter: it,
-            train_loss: (loss_sum / participants.max(1) as f64) as f32,
-            bits,
-            comms,
-            grad_norm,
-            net_time,
-        });
-
-        if (it + 1) % self.cfg.eval_every == 0 {
-            self.evaluate(it);
-        }
-        Ok(())
-    }
-
-    /// Evaluate the central model on the test set and record the point.
-    fn evaluate(&mut self, it: u64) {
-        let params = self.server.params().to_vec();
-        let chunk = 512usize;
-        let chunks: Vec<(crate::tensor::Tensor, Vec<u32>)> = self.test.chunks(chunk).collect();
-        let results: Vec<Mutex<(f64, usize, usize)>> =
-            chunks.iter().map(|_| Mutex::new((0.0, 0, 0))).collect();
-        let model = &self.model;
-        crate::exec::parallel_for(crate::exec::default_threads(), chunks.len(), |i| {
-            let (x, y) = &chunks[i];
-            let (loss, correct) = model.eval(&params, x, y);
-            *results[i].lock().unwrap() = (loss as f64 * y.len() as f64, correct, y.len());
-        });
-        let (mut loss_sum, mut correct, mut total) = (0f64, 0usize, 0usize);
-        for r in results {
-            let (l, c, t) = r.into_inner().unwrap();
-            loss_sum += l;
-            correct += c;
-            total += t;
-        }
-        let cum_bits: u64 = self.history.rounds.iter().map(|r| r.bits).sum();
-        let point = EvalPoint {
-            iter: it,
-            cum_bits,
-            loss: (loss_sum / total.max(1) as f64) as f32,
-            accuracy: correct as f64 / total.max(1) as f64,
-        };
-        log::info!(
-            "[{}] iter {:>5}  test loss {:.4}  acc {:.2}%  bits {}",
-            self.history.label,
-            it + 1,
-            point.loss,
-            100.0 * point.accuracy,
-            crate::util::fmt::bits_sci(cum_bits)
-        );
-        self.history.evals.push(point);
+        self.session.step(it)
     }
 }
 
@@ -307,16 +81,13 @@ mod tests {
     }
 
     #[test]
-    fn sgd_run_reduces_loss_and_counts_bits() {
+    fn shim_runs_and_reports_like_the_session() {
         let cfg = tiny_cfg(SchemeConfig::Sgd);
-        let mut coord = Coordinator::from_config(&cfg).unwrap();
-        let report = coord.run().unwrap();
+        let report = Coordinator::from_config(&cfg).unwrap().run().unwrap();
         let h = &report.history;
         assert_eq!(h.iterations(), 6);
-        // 3 clients × 159,010 params × 32 bits × 6 rounds
         assert_eq!(h.total_bits(), 3 * 159_010 * 32 * 6);
         assert_eq!(h.total_comms(), 18);
-        assert!(h.evals.len() >= 2);
         let first = h.evals.first().unwrap().loss;
         let last = h.evals.last().unwrap().loss;
         assert!(last < first, "no learning: {first} -> {last}");
@@ -356,7 +127,12 @@ mod tests {
     fn adaptive_p_assigns_different_ranks() {
         let cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }));
         let coord = Coordinator::from_config(&cfg).unwrap();
-        let mems: Vec<usize> = coord.clients.iter().map(|c| c.scheme_mem_bytes()).collect();
+        let mems: Vec<usize> = coord
+            .session()
+            .clients()
+            .iter()
+            .map(|c| c.scheme_mem_bytes())
+            .collect();
         // different p -> different factor state sizes
         assert!(mems.windows(2).any(|w| w[0] != w[1]), "mems {mems:?}");
     }
@@ -379,8 +155,8 @@ mod tests {
         cfg.lr_schedule = vec![(0, 0.05), (3, 0.01)];
         let mut coord = Coordinator::from_config(&cfg).unwrap();
         coord.step(0).unwrap();
-        assert_eq!(coord.server.alpha(), 0.05);
+        assert_eq!(coord.session().server().alpha(), 0.05);
         coord.step(3).unwrap();
-        assert_eq!(coord.server.alpha(), 0.01);
+        assert_eq!(coord.session().server().alpha(), 0.01);
     }
 }

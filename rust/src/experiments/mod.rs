@@ -19,9 +19,11 @@ pub mod serve;
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
-use crate::config::{Backend, ExperimentConfig, PPolicy, SchemeConfig};
-use crate::coordinator::{Coordinator, RunReport};
+use crate::config::{
+    AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig,
+};
 use crate::fl::metrics::{markdown_table, TableRow};
+use crate::fl::session::{FlSessionBuilder, RunReport};
 
 /// Dispatch `qrr exp <id>`.
 pub fn run_cli(args: &Args) -> Result<()> {
@@ -77,6 +79,12 @@ pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
             "pjrt" => Backend::Pjrt,
             other => bail!("unknown backend {other:?}"),
         };
+    }
+    if let Some(v) = args.get("participation") {
+        cfg.participation = ParticipationConfig::parse(v)?;
+    }
+    if let Some(v) = args.get("aggregation") {
+        cfg.aggregation = AggregationConfig::parse(v)?;
     }
     Ok(())
 }
@@ -154,14 +162,15 @@ pub fn run_table(table: u8, args: &Args, out_dir: &str) -> Result<()> {
         apply_overrides(&mut cfg, args)?;
         cfg.name = format!("table{table}");
         log::info!(
-            "=== table{table}: {} ({:?}, {} iters, {} clients) ===",
+            "=== table{table}: {} ({:?}, {} iters, {} clients, participation {}) ===",
             scheme.label(),
             cfg.model,
             cfg.iters,
-            cfg.clients
+            cfg.clients,
+            cfg.participation.label()
         );
-        let mut coord = Coordinator::from_config(&cfg)?;
-        let report = coord.run()?;
+        let mut session = FlSessionBuilder::new(&cfg).build()?;
+        let report = session.run()?;
         write_run_outputs(out_dir, &format!("table{table}_{}", slug(&scheme.label())), &report)?;
         rows.push(report.history.table_row());
         histories.push(report.history);
@@ -274,6 +283,28 @@ mod tests {
         assert_eq!(cfg.iters, 7);
         assert_eq!(cfg.clients, 3);
         assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn participation_and_aggregation_overrides_apply() {
+        let mut cfg = ExperimentConfig::table1_default();
+        let args = crate::cli::Args::parse(
+            "exp table1 --participation dropout:0.6:0.5 --aggregation weighted_mean"
+                .split_whitespace()
+                .map(String::from),
+        );
+        apply_overrides(&mut cfg, &args).unwrap();
+        assert_eq!(
+            cfg.participation,
+            ParticipationConfig::Dropout { fraction: 0.6, drop_prob: 0.5 }
+        );
+        assert_eq!(cfg.aggregation, AggregationConfig::WeightedMean);
+
+        let bad = crate::cli::Args::parse(
+            "exp table1 --participation sometimes".split_whitespace().map(String::from),
+        );
+        let mut cfg = ExperimentConfig::table1_default();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
     }
 
     #[test]

@@ -1,24 +1,24 @@
-//! `qrr serve`: the FL round over a real TCP socket — server and client
-//! processes exchange the exact wire format, proving the request path
-//! composes outside the in-process simulation.
+//! `qrr serve`: the FL round loop over a real TCP socket — updates leave
+//! as framed wire bytes, cross a socket, and are decoded server-side,
+//! proving the request path composes outside the in-process simulation.
 //!
-//! Topology: the server thread binds a listener; each simulated client
-//! runs in its own thread, connects per round, pushes its framed update
-//! and disconnects (sensor-style duty cycle). The server decodes,
-//! aggregates and logs round metrics.
+//! Since the session refactor this is a thin wrapper over
+//! [`FlSessionBuilder`] with the [`TcpTransport`] binding plugged in:
+//! every upload opens a connection, pushes its framed update and
+//! disconnects (sensor-style duty cycle); the server side accepts and
+//! drains frames with `recv_timeout`, so a vanished client cannot hang
+//! a round.
 
-use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cli::Args;
-use crate::config::{ExperimentConfig, SchemeConfig};
-use crate::data::synth;
-use crate::fl::{make_client_scheme, make_server_scheme, FlClient, FlServer};
-use crate::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
-use crate::net::transport::{TcpClient, TcpServerTransport};
-use crate::net::LinkModel;
-use crate::util::Rng;
+use crate::config::{ExperimentConfig, PPolicy, SchemeConfig};
+use crate::fl::session::FlSessionBuilder;
+use crate::model::ModelKind;
+use crate::net::transport::TcpTransport;
+use crate::util::fmt::bits_sci;
 
 /// Run `qrr serve` from CLI args.
 pub fn run_cli(args: &Args) -> Result<()> {
@@ -49,101 +49,32 @@ pub fn serve(
     let cfg = {
         let mut c = ExperimentConfig::table1_default();
         c.model = model_kind;
-        c.scheme = SchemeConfig::Qrr(crate::config::PPolicy::Fixed(p));
+        c.scheme = SchemeConfig::Qrr(PPolicy::Fixed(p));
         c.clients = n_clients;
         c.batch = batch;
+        c.iters = iters;
+        c.eval_every = iters.max(1);
+        // small synthetic stream: serve demonstrates transport, not scale
+        c.train_n = (batch * 8 * n_clients).max(n_clients);
+        c.test_n = 64;
         c
     };
-    let spec = ModelSpec::new(model_kind);
-    let shapes = spec.shapes();
-    let model: Arc<dyn ModelOps + Sync> = Arc::new(NativeModel::new(model_kind));
 
-    let listener = TcpServerTransport::bind(addr)?;
-    let srv_addr = listener.local_addr()?;
+    let transport = TcpTransport::bind(addr)?;
+    let srv_addr = transport.local_addr();
     log::info!("server listening on {srv_addr}");
 
-    // server state
-    let per_client = (0..n_clients)
-        .map(|_| make_server_scheme(crate::fl::SchemeKind::Qrr { p }, &shapes, cfg.beta))
-        .collect();
-    let mut server = FlServer::new(spec.init_params(cfg.seed), per_client, cfg.alpha0());
+    let mut session = FlSessionBuilder::new(&cfg)
+        .transport(Box::new(transport))
+        .recv_timeout(Duration::from_secs(5))
+        .build()?;
+    let report = session.run()?;
 
-    // clients (threads); weights shared via a mutex "broadcast board"
-    let board: Arc<Mutex<Vec<crate::tensor::Tensor>>> =
-        Arc::new(Mutex::new(server.params().to_vec()));
-    let mut handles = Vec::new();
-    let mut seed_rng = Rng::new(cfg.seed);
-    for i in 0..n_clients {
-        let board = Arc::clone(&board);
-        let model = Arc::clone(&model);
-        let shapes = shapes.clone();
-        let data = synth::stream_for_input(batch * 8, seed_rng.next_u64(), spec.input_dim());
-        let seed = seed_rng.next_u64();
-        let beta = cfg.beta;
-        let alpha = cfg.alpha0();
-        handles.push(std::thread::spawn(move || -> Result<u64> {
-            let scheme = make_client_scheme(
-                crate::fl::SchemeKind::Qrr { p },
-                &shapes,
-                beta,
-                alpha,
-                n_clients,
-            );
-            let mut client = FlClient::new(
-                i as u32,
-                data,
-                model,
-                scheme,
-                LinkModel::broadband(),
-                batch,
-                seed,
-            );
-            let mut bits = 0u64;
-            for _ in 0..iters {
-                let weights = board.lock().unwrap().clone();
-                let out = client.round(&weights);
-                bits += out.payload_bits;
-                if let Some(wire) = out.wire {
-                    let mut conn = TcpClient::connect(srv_addr)?;
-                    conn.send(&wire)?;
-                }
-            }
-            Ok(bits)
-        }));
-    }
-
-    // server loop: one round = n_clients frames
-    let mut total_bits_wire = 0u64;
-    for round in 0..iters {
-        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(n_clients);
-        while frames.len() < n_clients {
-            let before = frames.len();
-            listener.serve_once(|f| frames.push(f))?;
-            if frames.len() == before {
-                anyhow::bail!("client disconnected without sending");
-            }
-        }
-        // order by client id from the wire header
-        let mut slots: Vec<Option<Vec<u8>>> = vec![None; n_clients];
-        for f in frames {
-            let d = crate::net::Decoder::decode(&f)?;
-            total_bits_wire += 8 * f.len() as u64;
-            slots[d.client_id as usize] = Some(f);
-        }
-        let grad_norm = server.aggregate_wire(&slots)?;
-        *board.lock().unwrap() = server.params().to_vec();
-        log::info!("round {round}: grad_norm {grad_norm:.4}");
-    }
-
-    let mut client_bits = 0u64;
-    for h in handles {
-        client_bits += h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
-    }
     Ok(format!(
         "served {iters} rounds x {n_clients} clients over TCP ({srv_addr}); \
-         payload bits {} (wire bytes x8: {})",
-        crate::util::fmt::bits_sci(client_bits),
-        crate::util::fmt::bits_sci(total_bits_wire),
+         payload bits {} across {} communications",
+        bits_sci(report.history.total_bits()),
+        report.history.total_comms(),
     ))
 }
 
@@ -155,5 +86,6 @@ mod tests {
     fn tcp_round_loop_completes() {
         let report = serve(ModelKind::Mlp, 2, 2, 8, "127.0.0.1:0", 0.2).unwrap();
         assert!(report.contains("served 2 rounds"), "{report}");
+        assert!(report.contains("across 4 communications"), "{report}");
     }
 }

@@ -10,8 +10,14 @@ pub mod client;
 pub mod metrics;
 pub mod scheme;
 pub mod server;
+pub mod session;
 
 pub use client::{ClientRoundOutput, FlClient};
 pub use metrics::{EvalPoint, History, RoundMetrics};
 pub use scheme::{make_client_scheme, make_server_scheme, ClientScheme, SchemeKind, ServerScheme};
 pub use server::FlServer;
+pub use session::{
+    Aggregation, CsvSink, DeadlineCutoff, FlSession, FlSessionBuilder, FullSync, LinkDropout,
+    LogSink, MetricsSink, ParticipationPolicy, RunReport, SumAggregation, UniformSampling,
+    WeightedMeanAggregation,
+};

@@ -39,10 +39,34 @@ impl FlServer {
         self.per_client.iter().map(|s| s.mem_bytes()).sum()
     }
 
+    /// Feed each client's update (or its absence) through that client's
+    /// scheme mirror, returning one reconstructed gradient contribution
+    /// per client. How the contributions are combined is the session's
+    /// [`Aggregation`](crate::fl::session::Aggregation) seam.
+    pub fn absorb_updates(&mut self, updates: &[Option<ClientUpdate>]) -> Vec<Vec<Tensor>> {
+        assert_eq!(updates.len(), self.per_client.len(), "one slot per client");
+        self.per_client
+            .iter_mut()
+            .zip(updates.iter())
+            .map(|(scheme, up)| scheme.absorb(up.as_ref()))
+            .collect()
+    }
+
+    /// Apply the descent step θ^{k+1} = θ^k − α·agg (paper eq. (2) once
+    /// `agg` is the eq.-(2) sum). Returns the ℓ2 norm of `agg` (a column
+    /// in the paper's tables).
+    pub fn apply_aggregate(&mut self, agg: &[Tensor]) -> f64 {
+        let norm2: f64 = agg.iter().map(crate::tensor::sq_norm).sum();
+        for (p, g) in self.params.iter_mut().zip(agg.iter()) {
+            p.axpy(-self.alpha, g);
+        }
+        norm2.sqrt()
+    }
+
     /// Decode raw wire messages (order: one slot per client, `None` for
     /// skipped uploads), reconstruct per-client gradients, sum them and
     /// take the descent step. Returns the ℓ2 norm of the aggregated
-    /// gradient (a column in the paper's tables).
+    /// gradient.
     pub fn aggregate_wire(&mut self, wires: &[Option<Vec<u8>>]) -> anyhow::Result<f64> {
         assert_eq!(wires.len(), self.per_client.len(), "one slot per client");
         let updates: Vec<Option<ClientUpdate>> = wires
@@ -56,28 +80,12 @@ impl FlServer {
         Ok(self.aggregate(&updates))
     }
 
-    /// Same as [`Self::aggregate_wire`] but with already-decoded updates.
+    /// Same as [`Self::aggregate_wire`] but with already-decoded updates:
+    /// absorb every client's update, sum (eq. (2)) and step.
     pub fn aggregate(&mut self, updates: &[Option<ClientUpdate>]) -> f64 {
-        assert_eq!(updates.len(), self.per_client.len());
-        let mut sum: Option<Vec<Tensor>> = None;
-        for (scheme, up) in self.per_client.iter_mut().zip(updates.iter()) {
-            let grads = scheme.absorb(up.as_ref());
-            match &mut sum {
-                None => sum = Some(grads),
-                Some(acc) => {
-                    for (a, g) in acc.iter_mut().zip(grads.iter()) {
-                        a.axpy(1.0, g);
-                    }
-                }
-            }
-        }
-        let agg = sum.expect("at least one client");
-        let norm2: f64 = agg.iter().map(crate::tensor::sq_norm).sum();
-        // θ^{k+1} = θ^k − α Σ_c ∇f_c (eq. (2))
-        for (p, g) in self.params.iter_mut().zip(agg.iter()) {
-            p.axpy(-self.alpha, g);
-        }
-        norm2.sqrt()
+        let contribs = self.absorb_updates(updates);
+        let agg = super::session::sum_contribs(contribs);
+        self.apply_aggregate(&agg)
     }
 }
 

@@ -1,0 +1,1129 @@
+//! The composable FL session (DESIGN.md §1): one round loop, five
+//! pluggable seams.
+//!
+//! [`FlSessionBuilder`] → [`FlSession`] composes
+//!
+//! * a [`ParticipationPolicy`] — who computes each round and whose
+//!   upload survives it (full sync, uniform sampling, link-driven
+//!   dropout, straggler deadline),
+//! * an [`Aggregation`] — how the server combines client contributions
+//!   (paper eq. (2) sum, or shard-size-weighted FedAvg mean),
+//! * a [`Transport`] binding — how update bytes reach the server
+//!   (in-process channel or real TCP, both from
+//!   [`crate::net::transport`]); the round loop receives with
+//!   [`Transport::recv_timeout`], so a dropped client can never hang a
+//!   round,
+//! * any number of [`MetricsSink`]s — observers of round/eval metrics
+//!   (replacing the old hard-wired `History` plumbing),
+//! * the existing `ClientScheme`/`ServerScheme` pair chosen per client
+//!   from the experiment's [`SchemeConfig`](crate::config::SchemeConfig).
+//!
+//! The old [`Coordinator`](crate::coordinator::Coordinator) is a thin
+//! shim over this module; experiments, examples and `qrr serve` all go
+//! through the builder.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{AggregationConfig, Backend, ExperimentConfig, ParticipationConfig};
+use crate::data::{self, Dataset};
+use crate::model::{native::NativeModel, ModelOps, ModelSpec};
+use crate::net::transport::{InProcTransport, Transport, TransportError};
+use crate::net::{ClientUpdate, Decoder, LinkModel};
+use crate::tensor::Tensor;
+use crate::util::{PhaseTimes, Rng};
+
+use super::{
+    make_client_scheme, make_server_scheme, ClientRoundOutput, EvalPoint, FlClient, FlServer,
+    History, RoundMetrics,
+};
+
+// ------------------------------------------------------- participation
+
+/// Per-round participation decisions: who computes ([`select`]) and
+/// whose computed upload is admitted to the server ([`admit`] — the
+/// dropout / straggler axis driven by each client's [`LinkModel`]).
+///
+/// [`select`]: ParticipationPolicy::select
+/// [`admit`]: ParticipationPolicy::admit
+pub trait ParticipationPolicy: Send {
+    /// Mask of clients that run this round (`true` = participates).
+    fn select(&mut self, round: u64, links: &[LinkModel], rng: &mut Rng) -> Vec<bool>;
+
+    /// Whether a computed update survives the uplink. `net_time` is the
+    /// client's simulated transmission time for this upload.
+    fn admit(
+        &mut self,
+        client: usize,
+        links: &[LinkModel],
+        net_time: Duration,
+        rng: &mut Rng,
+    ) -> bool {
+        let _ = (client, links, net_time, rng);
+        true
+    }
+
+    /// Display label for logs.
+    fn label(&self) -> String;
+}
+
+/// Every client, every round — the paper's synchronous setting.
+pub struct FullSync;
+
+impl ParticipationPolicy for FullSync {
+    fn select(&mut self, _round: u64, links: &[LinkModel], _rng: &mut Rng) -> Vec<bool> {
+        vec![true; links.len()]
+    }
+
+    fn label(&self) -> String {
+        "full".into()
+    }
+}
+
+/// Uniformly sample `ceil(fraction · C)` clients per round (partial
+/// participation à la Konečný et al.).
+pub struct UniformSampling {
+    /// fraction of clients per round, in (0, 1]
+    pub fraction: f64,
+}
+
+impl UniformSampling {
+    fn sample_mask(fraction: f64, n: usize, rng: &mut Rng) -> Vec<bool> {
+        let k = ((fraction * n as f64).ceil() as usize).clamp(1, n);
+        let mut mask = vec![false; n];
+        for i in rng.sample_indices(n, k) {
+            mask[i] = true;
+        }
+        mask
+    }
+}
+
+impl ParticipationPolicy for UniformSampling {
+    fn select(&mut self, _round: u64, links: &[LinkModel], rng: &mut Rng) -> Vec<bool> {
+        Self::sample_mask(self.fraction, links.len(), rng)
+    }
+
+    fn label(&self) -> String {
+        format!("uniform({})", self.fraction)
+    }
+}
+
+/// Partial participation plus link-driven upload loss: sampled clients
+/// compute, but each upload is lost with probability `drop_prob` scaled
+/// by the client's relative link slowness (slowest link in the cohort ⇒
+/// the full `drop_prob`, fastest ⇒ never dropped).
+pub struct LinkDropout {
+    /// fraction of clients sampled per round, in (0, 1]
+    pub fraction: f64,
+    /// upload-loss probability for the slowest link, in [0, 1]
+    pub drop_prob: f64,
+}
+
+/// Relative slowness of `links[i]` within the cohort, in [0, 1]
+/// (1 = slowest, 0 = fastest; 1 when all links are equal).
+///
+/// Same log-bandwidth normalization as [`LinkModel::adaptive_p`], kept
+/// separate because an equal-bandwidth cohort needs a defined value
+/// (`adaptive_p` divides by ln(hi/lo) = 0 there). Recomputing the
+/// cohort min/max per call is O(C) with C ≈ tens — not worth caching
+/// at the cost of policy structs no longer being plain literals.
+fn link_slowness(links: &[LinkModel], i: usize) -> f64 {
+    let lo = links.iter().map(|l| l.bandwidth_bps).fold(f64::INFINITY, f64::min);
+    let hi = links.iter().map(|l| l.bandwidth_bps).fold(0.0f64, f64::max);
+    if hi <= lo {
+        return 1.0;
+    }
+    let t = ((links[i].bandwidth_bps.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0);
+    1.0 - t
+}
+
+impl ParticipationPolicy for LinkDropout {
+    fn select(&mut self, _round: u64, links: &[LinkModel], rng: &mut Rng) -> Vec<bool> {
+        UniformSampling::sample_mask(self.fraction, links.len(), rng)
+    }
+
+    fn admit(
+        &mut self,
+        client: usize,
+        links: &[LinkModel],
+        _net_time: Duration,
+        rng: &mut Rng,
+    ) -> bool {
+        let p_drop = self.drop_prob * link_slowness(links, client);
+        rng.f64() >= p_drop
+    }
+
+    fn label(&self) -> String {
+        format!("dropout({},{})", self.fraction, self.drop_prob)
+    }
+}
+
+/// Straggler cutoff: every client computes, but uploads whose simulated
+/// transmission time exceeds the deadline are discarded.
+pub struct DeadlineCutoff {
+    /// round deadline on the simulated uplink
+    pub deadline: Duration,
+}
+
+impl ParticipationPolicy for DeadlineCutoff {
+    fn select(&mut self, _round: u64, links: &[LinkModel], _rng: &mut Rng) -> Vec<bool> {
+        vec![true; links.len()]
+    }
+
+    fn admit(
+        &mut self,
+        _client: usize,
+        _links: &[LinkModel],
+        net_time: Duration,
+        _rng: &mut Rng,
+    ) -> bool {
+        net_time <= self.deadline
+    }
+
+    fn label(&self) -> String {
+        format!("deadline({:?})", self.deadline)
+    }
+}
+
+/// Build the policy an [`ExperimentConfig`] asks for.
+pub fn participation_from_config(cfg: &ParticipationConfig) -> Box<dyn ParticipationPolicy> {
+    match *cfg {
+        ParticipationConfig::Full => Box::new(FullSync),
+        ParticipationConfig::Uniform { fraction } => Box::new(UniformSampling { fraction }),
+        ParticipationConfig::Dropout { fraction, drop_prob } => {
+            Box::new(LinkDropout { fraction, drop_prob })
+        }
+        ParticipationConfig::Deadline { secs } => {
+            Box::new(DeadlineCutoff { deadline: Duration::from_secs_f64(secs) })
+        }
+    }
+}
+
+// --------------------------------------------------------- aggregation
+
+/// How the server combines the per-client gradient contributions into
+/// the step direction. `contribs` holds one entry per client (schemes
+/// substitute zeros or stale state for clients without a delivered
+/// update); `delivered[i]` says whether client `i`'s upload arrived this
+/// round; `shard_sizes[i]` is its local dataset size.
+pub trait Aggregation: Send {
+    /// Combine contributions into the aggregate gradient.
+    fn combine(
+        &self,
+        contribs: Vec<Vec<Tensor>>,
+        delivered: &[bool],
+        shard_sizes: &[usize],
+    ) -> Vec<Tensor>;
+
+    /// Display label.
+    fn label(&self) -> &'static str;
+}
+
+/// Plain sum over clients — paper eq. (2).
+pub struct SumAggregation;
+
+/// Sum a non-empty set of per-client gradient lists elementwise (shared
+/// with the legacy `FlServer::aggregate` path).
+pub(crate) fn sum_contribs(contribs: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    let mut it = contribs.into_iter();
+    let mut acc = it.next().expect("at least one client");
+    for grads in it {
+        for (a, g) in acc.iter_mut().zip(grads.iter()) {
+            a.axpy(1.0, g);
+        }
+    }
+    acc
+}
+
+impl Aggregation for SumAggregation {
+    fn combine(
+        &self,
+        contribs: Vec<Vec<Tensor>>,
+        _delivered: &[bool],
+        _shard_sizes: &[usize],
+    ) -> Vec<Tensor> {
+        sum_contribs(contribs)
+    }
+
+    fn label(&self) -> &'static str {
+        "sum"
+    }
+}
+
+/// Shard-size-weighted mean over the round's **delivered** updates
+/// (FedAvg): Σ_{delivered} nᵢ gᵢ / Σ_{delivered} nⱼ, so the weights
+/// always sum to 1. Undelivered contributions — including SLAQ's stale
+/// gradients, which eq. (2) summation would reuse — are excluded;
+/// a round with no deliveries aggregates to zeros (no step).
+pub struct WeightedMeanAggregation;
+
+impl Aggregation for WeightedMeanAggregation {
+    fn combine(
+        &self,
+        contribs: Vec<Vec<Tensor>>,
+        delivered: &[bool],
+        shard_sizes: &[usize],
+    ) -> Vec<Tensor> {
+        let mut denom = 0.0f64;
+        for (i, &s) in shard_sizes.iter().enumerate() {
+            if delivered[i] {
+                denom += s as f64;
+            }
+        }
+        let zero_shapes: Vec<Vec<usize>> = contribs
+            .first()
+            .map(|grads| grads.iter().map(|t| t.shape().to_vec()).collect())
+            .unwrap_or_default();
+        let mut acc: Option<Vec<Tensor>> = None;
+        for (i, grads) in contribs.into_iter().enumerate() {
+            if !delivered[i] || denom <= 0.0 {
+                continue;
+            }
+            let w = (shard_sizes[i] as f64 / denom) as f32;
+            match &mut acc {
+                None => {
+                    let mut g0 = grads;
+                    for t in g0.iter_mut() {
+                        t.scale(w);
+                    }
+                    acc = Some(g0);
+                }
+                Some(a) => {
+                    for (t, g) in a.iter_mut().zip(grads.iter()) {
+                        t.axpy(w, g);
+                    }
+                }
+            }
+        }
+        acc.unwrap_or_else(|| zero_shapes.iter().map(|s| Tensor::zeros(s)).collect())
+    }
+
+    fn label(&self) -> &'static str {
+        "weighted_mean"
+    }
+}
+
+/// Build the aggregation an [`ExperimentConfig`] asks for.
+pub fn aggregation_from_config(cfg: AggregationConfig) -> Box<dyn Aggregation> {
+    match cfg {
+        AggregationConfig::Sum => Box::new(SumAggregation),
+        AggregationConfig::WeightedMean => Box::new(WeightedMeanAggregation),
+    }
+}
+
+// ------------------------------------------------------------- metrics
+
+/// Observer of session metrics. All hooks default to no-ops so sinks
+/// implement only what they care about.
+pub trait MetricsSink: Send {
+    /// Called after every round with that round's metrics.
+    fn on_round(&mut self, label: &str, m: &RoundMetrics) {
+        let _ = (label, m);
+    }
+
+    /// Called after every test-set evaluation.
+    fn on_eval(&mut self, label: &str, e: &EvalPoint) {
+        let _ = (label, e);
+    }
+
+    /// Called once when the run finishes, with the full history.
+    fn on_finish(&mut self, label: &str, history: &History) {
+        let _ = (label, history);
+    }
+}
+
+/// A [`History`] is itself a sink — hand one in to collect metrics into
+/// your own copy.
+impl MetricsSink for History {
+    fn on_round(&mut self, _label: &str, m: &RoundMetrics) {
+        self.rounds.push(m.clone());
+    }
+
+    fn on_eval(&mut self, _label: &str, e: &EvalPoint) {
+        self.evals.push(e.clone());
+    }
+}
+
+/// Logs each evaluation point (the default sink; silence with
+/// [`FlSessionBuilder::quiet`]).
+pub struct LogSink;
+
+impl MetricsSink for LogSink {
+    fn on_eval(&mut self, label: &str, e: &EvalPoint) {
+        log::info!(
+            "[{label}] iter {:>5}  test loss {:.4}  acc {:.2}%  bits {}",
+            e.iter + 1,
+            e.loss,
+            100.0 * e.accuracy,
+            crate::util::fmt::bits_sci(e.cum_bits)
+        );
+    }
+}
+
+/// Writes the round/eval CSV series when the run finishes (same files
+/// as `experiments::write_run_outputs`).
+pub struct CsvSink {
+    dir: String,
+    name: String,
+}
+
+impl CsvSink {
+    /// Emit `<dir>/<name>_rounds.csv` and `<dir>/<name>_evals.csv`.
+    pub fn new(dir: impl Into<String>, name: impl Into<String>) -> Self {
+        CsvSink { dir: dir.into(), name: name.into() }
+    }
+}
+
+impl MetricsSink for CsvSink {
+    fn on_finish(&mut self, _label: &str, history: &History) {
+        let write = || -> std::io::Result<()> {
+            std::fs::create_dir_all(&self.dir)?;
+            std::fs::write(
+                format!("{}/{}_rounds.csv", self.dir, self.name),
+                history.rounds_csv(),
+            )?;
+            std::fs::write(
+                format!("{}/{}_evals.csv", self.dir, self.name),
+                history.evals_csv(),
+            )
+        };
+        if let Err(e) = write() {
+            log::warn!("csv sink {}/{}: {e}", self.dir, self.name);
+        }
+    }
+}
+
+// -------------------------------------------------------------- report
+
+/// Outcome of a session run.
+pub struct RunReport {
+    /// metric history (table row + figure series)
+    pub history: History,
+    /// total client-side scheme memory, bytes
+    pub client_mem_bytes: usize,
+    /// total server-side scheme memory, bytes
+    pub server_mem_bytes: usize,
+    /// accumulated per-phase client compute time
+    pub phases: PhaseTimes,
+}
+
+impl RunReport {
+    /// The paper-style single-row markdown table for this run.
+    pub fn markdown_table(&self) -> String {
+        crate::fl::metrics::markdown_table(&[self.history.table_row()])
+    }
+}
+
+// ------------------------------------------------------------- builder
+
+/// Builder for [`FlSession`]: starts from an [`ExperimentConfig`] and
+/// lets every seam be overridden before [`build`](Self::build).
+pub struct FlSessionBuilder {
+    cfg: ExperimentConfig,
+    model: Option<(ModelSpec, Arc<dyn ModelOps + Sync>)>,
+    participation: Option<Box<dyn ParticipationPolicy>>,
+    aggregation: Option<Box<dyn Aggregation>>,
+    transport: Option<Box<dyn Transport>>,
+    recv_timeout: Duration,
+    sinks: Vec<Box<dyn MetricsSink>>,
+    quiet: bool,
+}
+
+impl FlSessionBuilder {
+    /// Start from an experiment config; every seam defaults from it.
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        FlSessionBuilder {
+            cfg: cfg.clone(),
+            model: None,
+            participation: None,
+            aggregation: None,
+            transport: None,
+            recv_timeout: Duration::from_millis(250),
+            sinks: Vec::new(),
+            quiet: false,
+        }
+    }
+
+    /// Inject a model backend (tests / custom runtimes) instead of
+    /// constructing one from `cfg.backend`.
+    pub fn model(mut self, spec: ModelSpec, model: Arc<dyn ModelOps + Sync>) -> Self {
+        self.model = Some((spec, model));
+        self
+    }
+
+    /// Override the participation policy.
+    pub fn participation(mut self, policy: Box<dyn ParticipationPolicy>) -> Self {
+        self.participation = Some(policy);
+        self
+    }
+
+    /// Override the aggregation rule.
+    pub fn aggregation(mut self, agg: Box<dyn Aggregation>) -> Self {
+        self.aggregation = Some(agg);
+        self
+    }
+
+    /// Override the transport binding (default: in-process channel).
+    pub fn transport(mut self, transport: Box<dyn Transport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// How long the round loop waits for a missing update before
+    /// declaring it lost (default 250 ms).
+    pub fn recv_timeout(mut self, timeout: Duration) -> Self {
+        self.recv_timeout = timeout;
+        self
+    }
+
+    /// Attach an additional metrics sink.
+    pub fn metrics_sink(mut self, sink: Box<dyn MetricsSink>) -> Self {
+        self.sinks.push(sink);
+        self
+    }
+
+    /// Drop the default [`LogSink`].
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Assemble the session: load + shard data, build links, per-client
+    /// schemes, the server, and wire up the pluggable seams.
+    pub fn build(self) -> Result<FlSession> {
+        let cfg = self.cfg;
+        let (spec, model) = match self.model {
+            Some(pair) => pair,
+            None => {
+                let spec = ModelSpec::new(cfg.model);
+                let model: Arc<dyn ModelOps + Sync> = match cfg.backend {
+                    Backend::Native => Arc::new(NativeModel::new(cfg.model)),
+                    Backend::Pjrt => Arc::new(crate::runtime::PjrtModel::load_default(cfg.model)?),
+                };
+                (spec, model)
+            }
+        };
+
+        let (train, test) = data::load(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed);
+        log::info!(
+            "dataset {}: {} train / {} test ({}-dim)",
+            train.source,
+            train.len(),
+            test.len(),
+            train.dim()
+        );
+        let shards = match cfg.sharding {
+            crate::config::Sharding::Iid => train.shard_iid(cfg.clients, cfg.seed ^ 0x5A5A),
+            crate::config::Sharding::LabelSkew(k) => {
+                train.shard_label_skew(cfg.clients, k, cfg.seed ^ 0x5A5A)
+            }
+            crate::config::Sharding::Dirichlet(a) => {
+                train.shard_dirichlet(cfg.clients, a, cfg.seed ^ 0x5A5A)
+            }
+        };
+        let links = LinkModel::spread(cfg.clients, cfg.link_slow_bps, cfg.link_fast_bps);
+        let shapes = spec.shapes();
+        let mut seed_rng = Rng::new(cfg.seed ^ 0xC11E);
+
+        let mut clients = Vec::with_capacity(cfg.clients);
+        let mut shard_sizes = Vec::with_capacity(cfg.clients);
+        let mut server_schemes = Vec::with_capacity(cfg.clients);
+        for (i, (shard, link)) in shards.into_iter().zip(links.iter()).enumerate() {
+            let kind = cfg
+                .scheme
+                .kind_for_client(link, cfg.link_slow_bps, cfg.link_fast_bps);
+            log::debug!("client {i}: link {:.0} bps, scheme {}", link.bandwidth_bps, kind.name());
+            shard_sizes.push(shard.len());
+            clients.push(FlClient::new(
+                i as u32,
+                shard,
+                Arc::clone(&model),
+                make_client_scheme(kind, &shapes, cfg.beta, cfg.alpha0(), cfg.clients),
+                *link,
+                cfg.batch,
+                seed_rng.next_u64(),
+            ));
+            server_schemes.push(make_server_scheme(kind, &shapes, cfg.beta));
+        }
+
+        let params = spec.init_params(cfg.seed ^ 0x1217);
+        let server = FlServer::new(params, server_schemes, cfg.alpha0());
+
+        let participation = self
+            .participation
+            .unwrap_or_else(|| participation_from_config(&cfg.participation));
+        let aggregation = self
+            .aggregation
+            .unwrap_or_else(|| aggregation_from_config(cfg.aggregation));
+        let transport = self
+            .transport
+            .unwrap_or_else(|| Box::new(InProcTransport::new()));
+        let mut sinks = self.sinks;
+        if !self.quiet {
+            sinks.insert(0, Box::new(LogSink));
+        }
+        log::debug!(
+            "session: participation={} aggregation={} timeout={:?}",
+            participation.label(),
+            aggregation.label(),
+            self.recv_timeout
+        );
+
+        let history = History::new(cfg.scheme.label());
+        let round_rng = Rng::new(cfg.seed ^ 0xFAC7);
+        let cfg_clients = cfg.clients;
+        Ok(FlSession {
+            cfg,
+            clients,
+            links,
+            shard_sizes,
+            server,
+            model,
+            test,
+            participation,
+            aggregation,
+            transport,
+            recv_timeout: self.recv_timeout,
+            sinks,
+            history,
+            phases: PhaseTimes::new(),
+            round_rng,
+            cum_bits: 0,
+            client_rounds: vec![0; cfg_clients],
+        })
+    }
+}
+
+// ------------------------------------------------------------- session
+
+/// The round-loop orchestrator behind every experiment, example and the
+/// TCP server. Construct through [`FlSessionBuilder`].
+pub struct FlSession {
+    cfg: ExperimentConfig,
+    clients: Vec<FlClient>,
+    links: Vec<LinkModel>,
+    shard_sizes: Vec<usize>,
+    server: FlServer,
+    model: Arc<dyn ModelOps + Sync>,
+    test: Dataset,
+    participation: Box<dyn ParticipationPolicy>,
+    aggregation: Box<dyn Aggregation>,
+    transport: Box<dyn Transport>,
+    recv_timeout: Duration,
+    sinks: Vec<Box<dyn MetricsSink>>,
+    history: History,
+    phases: PhaseTimes,
+    /// round-level RNG (participation sampling / dropout draws)
+    round_rng: Rng,
+    cum_bits: u64,
+    /// how many rounds each client has computed (mirrors the client's
+    /// wire `round` counter, used to reject stale/duplicate frames)
+    client_rounds: Vec<u64>,
+}
+
+impl FlSession {
+    /// Session with every seam at its config default.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        FlSessionBuilder::new(cfg).build()
+    }
+
+    /// Current central parameters.
+    pub fn params(&self) -> &[Tensor] {
+        self.server.params()
+    }
+
+    /// The simulated clients (read-only).
+    pub fn clients(&self) -> &[FlClient] {
+        &self.clients
+    }
+
+    /// The aggregation server (read-only).
+    pub fn server(&self) -> &FlServer {
+        &self.server
+    }
+
+    /// Metric history so far.
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    /// Run the configured number of iterations, returning the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let iters = self.cfg.iters;
+        for it in 0..iters {
+            self.step(it)?;
+        }
+        // final evaluation if the last round wasn't an eval round
+        if self
+            .history
+            .evals
+            .last()
+            .map(|e| e.iter + 1 != iters)
+            .unwrap_or(true)
+        {
+            self.evaluate(iters.saturating_sub(1));
+        }
+        for s in &mut self.sinks {
+            s.on_finish(&self.history.label, &self.history);
+        }
+        Ok(RunReport {
+            history: self.history.clone(),
+            client_mem_bytes: self.clients.iter().map(|c| c.scheme_mem_bytes()).sum(),
+            server_mem_bytes: self.server.scheme_mem_bytes(),
+            phases: self.phases.clone(),
+        })
+    }
+
+    /// Execute a single FL iteration: select → parallel client compute →
+    /// transport → decode → aggregate → descent step → metrics.
+    pub fn step(&mut self, it: u64) -> Result<()> {
+        // learning-rate schedule
+        let alpha = self.cfg.alpha_at(it);
+        if self.server.alpha() != alpha {
+            log::info!("iteration {it}: learning rate -> {alpha}");
+            self.server.set_alpha(alpha);
+        }
+
+        // broadcast: clients read the current central parameters
+        let weights: Vec<Tensor> = self.server.params().to_vec();
+
+        // participation: who computes this round
+        let n = self.clients.len();
+        let active = self.participation.select(it, &self.links, &mut self.round_rng);
+        debug_assert_eq!(active.len(), n);
+
+        // parallel client execution (selected clients only)
+        let outputs: Vec<Option<ClientRoundOutput>> = {
+            let mut slots: Vec<Option<ClientRoundOutput>> = (0..n).map(|_| None).collect();
+            let weights = &weights;
+            let slot_cells: Vec<Mutex<&mut Option<ClientRoundOutput>>> =
+                slots.iter_mut().map(Mutex::new).collect();
+            let client_cells: Vec<Mutex<&mut FlClient>> =
+                self.clients.iter_mut().map(Mutex::new).collect();
+            let active = &active;
+            crate::exec::parallel_for(crate::exec::default_threads(), n, |i| {
+                if !active[i] {
+                    return;
+                }
+                let mut client = client_cells[i].lock().unwrap();
+                let out = client.round(weights);
+                **slot_cells[i].lock().unwrap() = Some(out);
+            });
+            drop(client_cells);
+            slots
+        };
+
+        // the wire `round` each produced frame will carry: the client's
+        // local round counter before this round's increment (it drifts
+        // from `it` under partial participation)
+        let mut expected_round: Vec<Option<u64>> = vec![None; n];
+        for (i, out) in outputs.iter().enumerate() {
+            if out.is_some() {
+                expected_round[i] = Some(self.client_rounds[i]);
+                self.client_rounds[i] += 1;
+            }
+        }
+
+        // uplink: admitted updates enter the transport; a policy-dropped
+        // upload is simply never sent and is not waited for
+        let mut sent = 0usize;
+        for (i, out) in outputs.iter().enumerate() {
+            let Some(out) = out else { continue };
+            let Some(wire) = &out.wire else { continue };
+            if self
+                .participation
+                .admit(i, &self.links, out.net_time, &mut self.round_rng)
+            {
+                self.transport.send(wire)?;
+                sent += 1;
+            } else {
+                log::debug!("round {it}: client {i} upload lost (participation policy)");
+            }
+        }
+
+        // server side: collect what actually arrived. One deadline
+        // bounds the whole collection — discarded junk frames must not
+        // refresh the budget, or a misbehaving peer re-sending garbage
+        // could hold the round open forever
+        let mut updates: Vec<Option<ClientUpdate>> = (0..n).map(|_| None).collect();
+        let mut delivered = vec![false; n];
+        let mut received = 0usize;
+        let collect_deadline = Instant::now() + self.recv_timeout;
+        while received < sent {
+            let remaining = collect_deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                log::debug!(
+                    "round {it}: {} upload(s) missing after {:?}; proceeding without them",
+                    sent - received,
+                    self.recv_timeout
+                );
+                break;
+            }
+            match self.transport.recv_timeout(remaining) {
+                Ok(frame) => {
+                    // a frame only an external peer controls must never
+                    // abort the run: garbage, unknown senders, stale
+                    // rounds and duplicates are all discarded, exactly
+                    // like a lost frame
+                    let msg = match Decoder::decode(&frame) {
+                        Ok(msg) => msg,
+                        Err(e) => {
+                            log::warn!("round {it}: discarding undecodable frame ({e})");
+                            continue;
+                        }
+                    };
+                    let id = msg.client_id as usize;
+                    if id >= n {
+                        log::warn!(
+                            "round {it}: discarding frame with out-of-range client id {id}"
+                        );
+                        continue;
+                    }
+                    // a late frame from a past round (straggler drained
+                    // by a later accept) or a duplicate must not enter
+                    // this round's aggregate or scheme mirrors
+                    if expected_round[id] != Some(msg.round) || updates[id].is_some() {
+                        log::warn!(
+                            "round {it}: discarding unexpected frame from client {id} \
+                             (frame round {}, expected {:?})",
+                            msg.round,
+                            expected_round[id]
+                        );
+                        continue;
+                    }
+                    received += 1;
+                    delivered[id] = true;
+                    updates[id] = Some(msg.update);
+                }
+                Err(TransportError::TimedOut(_)) => {
+                    log::debug!(
+                        "round {it}: {} upload(s) missing after {:?}; proceeding without them",
+                        sent - received,
+                        self.recv_timeout
+                    );
+                    break;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // metrics: bits/comms count what the server actually received;
+        // the synchronous round time is the slowest delivered upload
+        let mut bits = 0u64;
+        let mut comms = 0u32;
+        let mut loss_sum = 0f64;
+        let mut participants = 0usize;
+        let mut net_time = Duration::ZERO;
+        for (i, out) in outputs.iter().enumerate() {
+            let Some(out) = out else { continue };
+            participants += 1;
+            loss_sum += out.train_loss as f64;
+            self.phases.merge(&out.phases);
+            if delivered[i] {
+                bits += out.payload_bits;
+                comms += 1;
+                net_time = net_time.max(out.net_time);
+            }
+        }
+
+        // server: per-client scheme absorption → pluggable aggregation →
+        // descent step
+        let contribs = self.server.absorb_updates(&updates);
+        let agg = self.aggregation.combine(contribs, &delivered, &self.shard_sizes);
+        let grad_norm = self.server.apply_aggregate(&agg);
+
+        self.cum_bits += bits;
+        let m = RoundMetrics {
+            iter: it,
+            train_loss: (loss_sum / participants.max(1) as f64) as f32,
+            bits,
+            comms,
+            grad_norm,
+            net_time,
+        };
+        for s in &mut self.sinks {
+            s.on_round(&self.history.label, &m);
+        }
+        self.history.rounds.push(m);
+
+        if (it + 1) % self.cfg.eval_every == 0 {
+            self.evaluate(it);
+        }
+        Ok(())
+    }
+
+    /// Evaluate the central model on the test set and record the point.
+    fn evaluate(&mut self, it: u64) {
+        let params = self.server.params().to_vec();
+        let chunk = 512usize;
+        let chunks: Vec<(Tensor, Vec<u32>)> = self.test.chunks(chunk).collect();
+        let results: Vec<Mutex<(f64, usize, usize)>> =
+            chunks.iter().map(|_| Mutex::new((0.0, 0, 0))).collect();
+        let model = &self.model;
+        crate::exec::parallel_for(crate::exec::default_threads(), chunks.len(), |i| {
+            let (x, y) = &chunks[i];
+            let (loss, correct) = model.eval(&params, x, y);
+            *results[i].lock().unwrap() = (loss as f64 * y.len() as f64, correct, y.len());
+        });
+        let (mut loss_sum, mut correct, mut total) = (0f64, 0usize, 0usize);
+        for r in results {
+            let (l, c, t) = r.into_inner().unwrap();
+            loss_sum += l;
+            correct += c;
+            total += t;
+        }
+        let point = EvalPoint {
+            iter: it,
+            cum_bits: self.cum_bits,
+            loss: (loss_sum / total.max(1) as f64) as f32,
+            accuracy: correct as f64 / total.max(1) as f64,
+        };
+        for s in &mut self.sinks {
+            s.on_eval(&self.history.label, &point);
+        }
+        self.history.evals.push(point);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PPolicy, SchemeConfig};
+
+    fn tiny_cfg(scheme: SchemeConfig) -> ExperimentConfig {
+        let mut c = ExperimentConfig::table1_default();
+        c.scheme = scheme;
+        c.clients = 3;
+        c.iters = 6;
+        c.batch = 16;
+        c.train_n = 300;
+        c.test_n = 100;
+        c.eval_every = 3;
+        c.lr_schedule = vec![(0, 0.05)];
+        c
+    }
+
+    #[test]
+    fn full_sync_selects_everyone() {
+        let links = LinkModel::spread(4, 1e5, 1e7);
+        let mut rng = Rng::new(1);
+        assert_eq!(FullSync.select(0, &links, &mut rng), vec![true; 4]);
+    }
+
+    #[test]
+    fn uniform_sampling_selects_k() {
+        let links = LinkModel::spread(10, 1e5, 1e7);
+        let mut rng = Rng::new(2);
+        let mut p = UniformSampling { fraction: 0.3 };
+        for round in 0..20 {
+            let mask = p.select(round, &links, &mut rng);
+            assert_eq!(mask.iter().filter(|&&b| b).count(), 3, "round {round}");
+        }
+    }
+
+    #[test]
+    fn link_dropout_extremes() {
+        let links = vec![LinkModel::iot(); 4]; // equal links -> slowness 1
+        let mut rng = Rng::new(3);
+        let mut never = LinkDropout { fraction: 1.0, drop_prob: 0.0 };
+        let mut always = LinkDropout { fraction: 1.0, drop_prob: 1.0 };
+        for i in 0..4 {
+            assert!(never.admit(i, &links, Duration::ZERO, &mut rng));
+            assert!(!always.admit(i, &links, Duration::ZERO, &mut rng));
+        }
+        // fastest link in a spread is never dropped
+        let spread = LinkModel::spread(3, 1e5, 1e7);
+        let mut p = LinkDropout { fraction: 1.0, drop_prob: 1.0 };
+        assert!(p.admit(2, &spread, Duration::ZERO, &mut rng));
+        assert!(!p.admit(0, &spread, Duration::ZERO, &mut rng));
+    }
+
+    #[test]
+    fn deadline_cutoff_filters_slow_uploads() {
+        let links = LinkModel::spread(3, 1e5, 1e7);
+        let mut rng = Rng::new(4);
+        let mut p = DeadlineCutoff { deadline: Duration::from_secs(2) };
+        assert_eq!(p.select(0, &links, &mut rng), vec![true; 3]);
+        assert!(p.admit(0, &links, Duration::from_millis(1500), &mut rng));
+        assert!(!p.admit(0, &links, Duration::from_secs(3), &mut rng));
+    }
+
+    #[test]
+    fn sum_aggregation_matches_manual_sum() {
+        let mut rng = Rng::new(5);
+        let shapes = [vec![4, 3], vec![4]];
+        let a: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let b: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let agg = SumAggregation.combine(vec![a.clone(), b.clone()], &[true, true], &[10, 10]);
+        for (i, t) in agg.iter().enumerate() {
+            let expect = crate::tensor::zip(&a[i], &b[i], |x, y| x + y);
+            assert!(t.rel_err(&expect) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weighted_mean_weights_by_shard_size() {
+        let mut rng = Rng::new(6);
+        let shapes = [vec![5]];
+        let a: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let b: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        // sizes 30/10: w = 0.75 / 0.25
+        let agg = WeightedMeanAggregation.combine(
+            vec![a.clone(), b.clone()],
+            &[true, true],
+            &[30, 10],
+        );
+        let expect = crate::tensor::zip(&a[0], &b[0], |x, y| 0.75 * x + 0.25 * y);
+        assert!(agg[0].rel_err(&expect) < 1e-5);
+
+        // non-delivered clients don't enter the denominator
+        let zeros = vec![Tensor::zeros(&[5])];
+        let agg = WeightedMeanAggregation.combine(
+            vec![a.clone(), zeros],
+            &[true, false],
+            &[30, 10],
+        );
+        assert!(agg[0].rel_err(&a[0]) < 1e-5);
+    }
+
+    #[test]
+    fn session_sgd_run_reduces_loss_and_counts_bits() {
+        let cfg = tiny_cfg(SchemeConfig::Sgd);
+        let report = FlSession::from_config(&cfg).unwrap().run().unwrap();
+        let h = &report.history;
+        assert_eq!(h.iterations(), 6);
+        // 3 clients × 159,010 params × 32 bits × 6 rounds
+        assert_eq!(h.total_bits(), 3 * 159_010 * 32 * 6);
+        assert_eq!(h.total_comms(), 18);
+        assert!(h.evals.len() >= 2);
+        let first = h.evals.first().unwrap().loss;
+        let last = h.evals.last().unwrap().loss;
+        assert!(last < first, "no learning: {first} -> {last}");
+    }
+
+    #[test]
+    fn session_deterministic_given_seed() {
+        let cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        let r1 = FlSession::from_config(&cfg).unwrap().run().unwrap();
+        let r2 = FlSession::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(r1.history.total_bits(), r2.history.total_bits());
+        let a = r1.history.evals.last().unwrap();
+        let b = r2.history.evals.last().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn dropout_all_lost_still_completes_without_hanging() {
+        // equal links + drop_prob 1 ⇒ every upload is lost before the
+        // transport; the round loop proceeds with zero comms and must
+        // not wait on frames that were never sent
+        let mut cfg = tiny_cfg(SchemeConfig::Sgd);
+        cfg.iters = 3;
+        cfg.eval_every = 3;
+        cfg.link_slow_bps = 1e6;
+        cfg.link_fast_bps = 1e6;
+        cfg.participation = ParticipationConfig::Dropout { fraction: 1.0, drop_prob: 1.0 };
+        let mut session = FlSessionBuilder::new(&cfg)
+            .recv_timeout(Duration::from_millis(10))
+            .quiet()
+            .build()
+            .unwrap();
+        let report = session.run().unwrap();
+        assert_eq!(report.history.total_comms(), 0);
+        assert_eq!(report.history.total_bits(), 0);
+        assert_eq!(report.history.iterations(), 3);
+        assert!(report.history.evals.last().unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn deadline_drops_slowest_client_deterministically() {
+        // SGD upload = 159,010 × 32 ≈ 5.09 Mbit. Links spread 250 kbit/s
+        // → 10 Mbit/s: the slowest client needs >20 s, the others <2 s.
+        let mut cfg = tiny_cfg(SchemeConfig::Sgd);
+        cfg.iters = 4;
+        cfg.eval_every = 4;
+        cfg.participation = ParticipationConfig::Deadline { secs: 5.0 };
+        let mut session = FlSessionBuilder::new(&cfg)
+            .recv_timeout(Duration::from_millis(10))
+            .quiet()
+            .build()
+            .unwrap();
+        let report = session.run().unwrap();
+        // 2 of 3 clients admitted every round
+        assert_eq!(report.history.total_comms(), 2 * 4);
+        assert_eq!(report.history.total_bits(), 2 * 4 * 159_010 * 32);
+    }
+
+    #[test]
+    fn weighted_mean_session_still_learns() {
+        let mut cfg = tiny_cfg(SchemeConfig::Sgd);
+        cfg.aggregation = AggregationConfig::WeightedMean;
+        // mean scales the step by ~1/C vs sum; compensate the LR
+        cfg.lr_schedule = vec![(0, 0.15)];
+        let report = FlSession::from_config(&cfg).unwrap().run().unwrap();
+        let first = report.history.evals.first().unwrap().loss;
+        let last = report.history.evals.last().unwrap().loss;
+        assert!(last < first, "no learning under weighted mean: {first} -> {last}");
+    }
+
+    #[test]
+    fn metrics_sinks_observe_rounds_and_evals() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        #[derive(Default)]
+        struct Counts {
+            rounds: AtomicUsize,
+            evals: AtomicUsize,
+            finishes: AtomicUsize,
+        }
+        struct CountSink(Arc<Counts>);
+        impl MetricsSink for CountSink {
+            fn on_round(&mut self, _l: &str, _m: &RoundMetrics) {
+                self.0.rounds.fetch_add(1, Ordering::Relaxed);
+            }
+            fn on_eval(&mut self, _l: &str, _e: &EvalPoint) {
+                self.0.evals.fetch_add(1, Ordering::Relaxed);
+            }
+            fn on_finish(&mut self, _l: &str, _h: &History) {
+                self.0.finishes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        let counts = Arc::new(Counts::default());
+        let collected = History::new("copy");
+        let cfg = tiny_cfg(SchemeConfig::Sgd);
+        let mut session = FlSessionBuilder::new(&cfg)
+            .quiet()
+            .metrics_sink(Box::new(CountSink(Arc::clone(&counts))))
+            .metrics_sink(Box::new(collected))
+            .build()
+            .unwrap();
+        let report = session.run().unwrap();
+        assert_eq!(counts.rounds.load(Ordering::Relaxed), 6);
+        assert_eq!(
+            counts.evals.load(Ordering::Relaxed),
+            report.history.evals.len()
+        );
+        assert_eq!(counts.finishes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tcp_transport_session_round_trips_real_sockets() {
+        use crate::net::transport::TcpTransport;
+        let mut cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        cfg.iters = 2;
+        cfg.eval_every = 2;
+        let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let mut session = FlSessionBuilder::new(&cfg)
+            .transport(Box::new(transport))
+            .recv_timeout(Duration::from_secs(5))
+            .quiet()
+            .build()
+            .unwrap();
+        let report = session.run().unwrap();
+        assert_eq!(report.history.total_comms(), 3 * 2);
+        assert!(report.history.total_bits() > 0);
+    }
+}

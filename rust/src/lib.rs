@@ -34,14 +34,17 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! use qrr::config::ExperimentConfig;
-//! use qrr::coordinator::Coordinator;
+//! use qrr::prelude::*;
 //!
 //! let cfg = ExperimentConfig::table1_default();
-//! let mut coord = Coordinator::from_config(&cfg).unwrap();
-//! let report = coord.run().unwrap();
+//! let mut session = FlSessionBuilder::new(&cfg).build().unwrap();
+//! let report = session.run().unwrap();
 //! println!("{}", report.markdown_table());
 //! ```
+//!
+//! Every seam of the round loop is pluggable through the builder —
+//! participation policy, aggregation rule, transport binding and metric
+//! sinks; see [`fl::session`].
 
 pub mod bench_util;
 pub mod cli;
@@ -64,3 +67,23 @@ pub mod testing;
 pub mod util;
 
 pub use tensor::Tensor;
+
+/// One-stop imports for driving experiments through the session API.
+pub mod prelude {
+    pub use crate::config::{
+        AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig,
+        Sharding,
+    };
+    pub use crate::coordinator::Coordinator;
+    pub use crate::data::DatasetKind;
+    pub use crate::fl::session::{
+        Aggregation, CsvSink, DeadlineCutoff, FlSession, FlSessionBuilder, FullSync, LinkDropout,
+        LogSink, MetricsSink, ParticipationPolicy, RunReport, SumAggregation, UniformSampling,
+        WeightedMeanAggregation,
+    };
+    pub use crate::fl::{History, SchemeKind};
+    pub use crate::model::{ModelKind, ModelOps, ModelSpec};
+    pub use crate::net::transport::{InProcTransport, TcpTransport, Transport, TransportError};
+    pub use crate::net::LinkModel;
+    pub use crate::tensor::Tensor;
+}

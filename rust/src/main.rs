@@ -50,8 +50,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = qrr::config::ExperimentConfig::from_file(path)?;
     qrr::experiments::apply_overrides(&mut cfg, args)?;
     let out_dir = args.get("out").unwrap_or("results");
-    let mut coord = qrr::coordinator::Coordinator::from_config(&cfg)?;
-    let report = coord.run()?;
+    let mut session = qrr::fl::session::FlSessionBuilder::new(&cfg).build()?;
+    let report = session.run()?;
     qrr::experiments::write_run_outputs(out_dir, &cfg.name, &report)?;
     println!("{}", report.markdown_table());
     Ok(())
@@ -95,6 +95,9 @@ COMMON OPTIONS (exp/train):
     --eval-every N    evaluation period (default 25)
     --seed N          RNG seed (default 42)
     --out DIR         output directory for CSV/markdown (default results/)
+    --participation P who participates each round:
+                      full | <fraction> | dropout:<fraction>:<drop_prob> | deadline:<secs>
+    --aggregation A   sum (paper eq. (2)) | weighted_mean (FedAvg)
 
 ENVIRONMENT:
     QRR_THREADS       worker threads (default: cores, max 16)

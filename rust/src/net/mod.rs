@@ -18,5 +18,7 @@ pub mod transport;
 pub mod wire;
 
 pub use link::LinkModel;
-pub use transport::{InProcTransport, TcpServerTransport, Transport};
+pub use transport::{
+    InProcTransport, TcpClient, TcpServerTransport, TcpTransport, Transport, TransportError,
+};
 pub use wire::{ClientUpdate, Decoder, Encoder, WireError};

@@ -2,21 +2,48 @@
 //! (cross-process serving / integration tests).
 //!
 //! Framing over TCP: `u32 LE length || payload`.
+//!
+//! Every [`Transport`] supports both blocking [`Transport::recv`] and
+//! deadline-bounded [`Transport::recv_timeout`]; the session round loop
+//! uses the latter so a dropped client (or a lost frame) can never hang
+//! a round — see `fl::session` (DESIGN.md §1).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+use thiserror::Error;
+
+/// Errors produced by deadline-bounded receives.
+#[derive(Debug, Error)]
+pub enum TransportError {
+    /// The peer is gone for good; no more frames will ever arrive.
+    #[error("transport closed")]
+    Closed,
+    /// No frame arrived within the deadline; later frames may still come.
+    #[error("receive timed out after {0:?}")]
+    TimedOut(Duration),
+    /// Underlying socket error.
+    #[error("transport i/o: {0}")]
+    Io(#[from] std::io::Error),
+}
 
 /// A bidirectional message transport between clients and the server.
 pub trait Transport: Send {
     /// Client side: send one framed message to the server.
     fn send(&self, payload: &[u8]) -> Result<()>;
+
     /// Server side: receive the next framed message (blocking).
     fn recv(&self) -> Result<Vec<u8>>;
+
+    /// Server side: receive the next framed message, waiting at most
+    /// `timeout`. Distinguishes a dead peer ([`TransportError::Closed`])
+    /// from a slow one ([`TransportError::TimedOut`]).
+    fn recv_timeout(&self, timeout: Duration) -> std::result::Result<Vec<u8>, TransportError>;
 }
 
 // ------------------------------------------------------------- in-proc
@@ -58,6 +85,17 @@ impl Transport for InProcTransport {
             .recv()
             .context("channel closed")
     }
+
+    fn recv_timeout(&self, timeout: Duration) -> std::result::Result<Vec<u8>, TransportError> {
+        self.rx
+            .lock()
+            .unwrap()
+            .recv_timeout(timeout)
+            .map_err(|e| match e {
+                RecvTimeoutError::Timeout => TransportError::TimedOut(timeout),
+                RecvTimeoutError::Disconnected => TransportError::Closed,
+            })
+    }
 }
 
 // ------------------------------------------------------------------ tcp
@@ -77,6 +115,139 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     let mut buf = vec![0u8; n];
     stream.read_exact(&mut buf)?;
     Ok(buf)
+}
+
+/// Loopback TCP binding implementing [`Transport`] on a single object:
+/// `send` opens a fresh connection to the bound listener and pushes one
+/// frame (the sensor-style duty cycle of `qrr serve`), `recv` /
+/// `recv_timeout` accept pending connections and drain their frames.
+///
+/// This is what `fl::session` plugs in for the TCP scenario: the exact
+/// wire bytes cross a real socket while the round loop stays unchanged.
+pub struct TcpTransport {
+    listener: TcpListener,
+    addr: std::net::SocketAddr,
+    /// frames read from accepted connections but not yet handed out
+    pending: Mutex<VecDeque<Vec<u8>>>,
+}
+
+impl TcpTransport {
+    /// Bind on an address (e.g. "127.0.0.1:0" to pick a free port).
+    pub fn bind(addr: impl ToSocketAddrs) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding")?;
+        let addr = listener.local_addr()?;
+        Ok(TcpTransport { listener, addr, pending: Mutex::new(VecDeque::new()) })
+    }
+
+    /// The bound address (for out-of-process clients to connect to).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Accept one connection before `deadline` and queue every frame it
+    /// carries. Returns `Ok(true)` if at least one frame was queued.
+    fn accept_into_queue(
+        &self,
+        deadline: Instant,
+        timeout: Duration,
+    ) -> std::result::Result<bool, TransportError> {
+        self.listener.set_nonblocking(true)?;
+        let accepted = loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => break stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        self.listener.set_nonblocking(false).ok();
+                        return Err(TransportError::TimedOut(timeout));
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => {
+                    self.listener.set_nonblocking(false).ok();
+                    return Err(TransportError::Io(e));
+                }
+            }
+        };
+        self.listener.set_nonblocking(false).ok();
+
+        let mut stream = accepted;
+        // accepted sockets must not inherit the listener's non-blocking
+        // mode, and a half-sent frame must not hang past the deadline
+        stream.set_nonblocking(false)?;
+
+        let mut got = 0usize;
+        let mut q = self.pending.lock().unwrap();
+        // the drain loop is deadline-bounded too: a peer trickling
+        // frames must not hold the queue (and its mutex) open past the
+        // caller's budget
+        loop {
+            if Instant::now() >= deadline && got > 0 {
+                break;
+            }
+            let budget = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(10));
+            if stream.set_read_timeout(Some(budget)).is_err() {
+                break;
+            }
+            match read_frame(&mut stream) {
+                Ok(frame) => {
+                    q.push_back(frame);
+                    got += 1;
+                }
+                Err(_) => break, // EOF / peer closed / read timeout
+            }
+        }
+        Ok(got > 0)
+    }
+}
+
+impl Transport for TcpTransport {
+    /// Queue one frame for delivery. The write happens on a detached
+    /// thread: the session round loop sends every frame *before* it
+    /// starts accepting, so a blocking write to this object's own
+    /// not-yet-accepting listener would deadlock once a frame outgrows
+    /// the loopback socket buffers. A failed write surfaces as a recv
+    /// timeout on the other side — the same as any lost frame.
+    fn send(&self, payload: &[u8]) -> Result<()> {
+        let addr = self.addr;
+        let payload = payload.to_vec();
+        std::thread::Builder::new()
+            .name("qrr-tcp-send".into())
+            .spawn(move || {
+                let push = || -> Result<()> {
+                    let mut stream = TcpStream::connect(addr).context("connecting")?;
+                    write_frame(&mut stream, &payload)
+                };
+                if let Err(e) = push() {
+                    log::warn!("tcp transport: frame lost ({e:#})");
+                }
+            })
+            .context("spawning tcp send thread")?;
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        loop {
+            match self.recv_timeout(Duration::from_secs(60)) {
+                Ok(frame) => return Ok(frame),
+                Err(TransportError::TimedOut(_)) => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> std::result::Result<Vec<u8>, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(frame) = self.pending.lock().unwrap().pop_front() {
+                return Ok(frame);
+            }
+            // empty connections (a peer that connected and vanished) are
+            // skipped; keep accepting until a frame shows up or time runs out
+            self.accept_into_queue(deadline, timeout)?;
+        }
+    }
 }
 
 /// Server-side TCP transport: accepts connections lazily and yields
@@ -163,6 +334,18 @@ mod tests {
     }
 
     #[test]
+    fn inproc_recv_timeout_times_out_not_hangs() {
+        let t = InProcTransport::new();
+        let t0 = Instant::now();
+        let err = t.recv_timeout(Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, TransportError::TimedOut(_)), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // a frame that is present comes back immediately
+        t.send(b"late").unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_millis(20)).unwrap(), b"late");
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let server = TcpServerTransport::bind("127.0.0.1:0").unwrap();
         let addr = server.local_addr().unwrap();
@@ -179,5 +362,39 @@ mod tests {
         assert_eq!(frames.len(), 2);
         assert_eq!(frames[0], b"abc");
         assert_eq!(frames[1].len(), 100_000);
+    }
+
+    #[test]
+    fn tcp_transport_send_recv_same_object() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        t.send(b"one").unwrap();
+        t.send(b"two").unwrap();
+        let a = t.recv_timeout(Duration::from_secs(5)).unwrap();
+        let b = t.recv_timeout(Duration::from_secs(5)).unwrap();
+        let mut got = vec![a, b];
+        got.sort();
+        assert_eq!(got, vec![b"one".to_vec(), b"two".to_vec()]);
+    }
+
+    #[test]
+    fn tcp_transport_recv_timeout_times_out() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        let err = t.recv_timeout(Duration::from_millis(30)).unwrap_err();
+        assert!(matches!(err, TransportError::TimedOut(_)), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn tcp_transport_cross_thread_sender() {
+        let t = std::sync::Arc::new(TcpTransport::bind("127.0.0.1:0").unwrap());
+        let addr = t.local_addr();
+        let h = std::thread::spawn(move || {
+            let mut c = TcpClient::connect(addr).unwrap();
+            c.send(b"from-afar").unwrap();
+        });
+        let frame = t.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(frame, b"from-afar");
+        h.join().unwrap();
     }
 }

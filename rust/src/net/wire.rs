@@ -428,4 +428,209 @@ mod tests {
             assert!(Decoder::decode(&bytes[..cut]).is_err(), "cut={cut}");
         }
     }
+
+    // ------------------------- property sweeps (testing::prop) --------
+
+    use crate::testing::{forall, Gen};
+
+    /// A random `Quantized` payload as the codecs would produce one.
+    fn gen_quantized(g: &mut Gen) -> Quantized {
+        let n = g.usize_in(1, 64);
+        let beta = *g.choose(&[1u8, 2, 4, 8, 12]);
+        let x = Tensor::randn(&[n], g.rng());
+        let (q, _) = quantize(&x, &Tensor::zeros(&[n]), beta);
+        q
+    }
+
+    /// A random update exercising a chosen wire entry kind:
+    /// 0 = dense f32, 1 = quantized, 2 = svd, 3 = tucker.
+    fn gen_update_of_kind(g: &mut Gen, kind: u8) -> ClientUpdate {
+        match kind {
+            0 => {
+                let n_params = g.usize_in(1, 3);
+                let grads = (0..n_params)
+                    .map(|_| {
+                        let ndim = g.usize_in(1, 4);
+                        g.tensor(ndim, 6)
+                    })
+                    .collect();
+                ClientUpdate::Sgd { grads }
+            }
+            1 => {
+                let n_params = g.usize_in(1, 3);
+                let params = (0..n_params).map(|_| gen_quantized(g)).collect();
+                ClientUpdate::Slaq { msg: SlaqMsg { params } }
+            }
+            2 => ClientUpdate::Qrr {
+                msgs: vec![ParamMsg::Svd {
+                    u: gen_quantized(g),
+                    s: gen_quantized(g),
+                    v: gen_quantized(g),
+                }],
+            },
+            _ => {
+                let nf = g.usize_in(1, 4);
+                ClientUpdate::Qrr {
+                    msgs: vec![ParamMsg::Tucker {
+                        core: gen_quantized(g),
+                        factors: (0..nf).map(|_| gen_quantized(g)).collect(),
+                    }],
+                }
+            }
+        }
+    }
+
+    fn assert_quantized_eq(a: &Quantized, b: &Quantized) {
+        assert_eq!(a.radius, b.radius);
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.len, b.len);
+        assert_eq!(a.packed, b.packed);
+    }
+
+    fn assert_update_roundtrips(up: &ClientUpdate, client_id: u32, round: u64) {
+        let bytes = Encoder::new(up, client_id, round);
+        let dec = Decoder::decode(&bytes).unwrap();
+        assert_eq!(dec.client_id, client_id);
+        assert_eq!(dec.round, round);
+        assert_eq!(dec.update.payload_bits(), up.payload_bits());
+        match (up, &dec.update) {
+            (ClientUpdate::Sgd { grads: a }, ClientUpdate::Sgd { grads: b }) => {
+                assert_eq!(a, b);
+            }
+            (ClientUpdate::Slaq { msg: a }, ClientUpdate::Slaq { msg: b }) => {
+                assert_eq!(a.params.len(), b.params.len());
+                for (x, y) in a.params.iter().zip(b.params.iter()) {
+                    assert_quantized_eq(x, y);
+                }
+            }
+            (ClientUpdate::Qrr { msgs: a }, ClientUpdate::Qrr { msgs: b }) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    match (x, y) {
+                        (ParamMsg::Dense { q: qa }, ParamMsg::Dense { q: qb }) => {
+                            assert_quantized_eq(qa, qb)
+                        }
+                        (
+                            ParamMsg::Svd { u: ua, s: sa, v: va },
+                            ParamMsg::Svd { u: ub, s: sb, v: vb },
+                        ) => {
+                            assert_quantized_eq(ua, ub);
+                            assert_quantized_eq(sa, sb);
+                            assert_quantized_eq(va, vb);
+                        }
+                        (
+                            ParamMsg::Tucker { core: ca, factors: fa },
+                            ParamMsg::Tucker { core: cb, factors: fb },
+                        ) => {
+                            assert_quantized_eq(ca, cb);
+                            assert_eq!(fa.len(), fb.len());
+                            for (qa, qb) in fa.iter().zip(fb.iter()) {
+                                assert_quantized_eq(qa, qb);
+                            }
+                        }
+                        _ => panic!("entry kind changed across the wire"),
+                    }
+                }
+            }
+            _ => panic!("scheme changed across the wire"),
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_every_entry_kind() {
+        forall(
+            0xB1,
+            60,
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                let client_id = g.usize_in(0, 1000) as u32;
+                let round = g.usize_in(0, 100_000) as u64;
+                (gen_update_of_kind(g, kind), client_id, round)
+            },
+            |(up, client_id, round)| assert_update_roundtrips(&up, client_id, round),
+        );
+    }
+
+    #[test]
+    fn prop_any_truncation_is_a_decode_error_never_a_panic() {
+        forall(
+            0xB2,
+            60,
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                let up = gen_update_of_kind(g, kind);
+                let bytes = Encoder::new(&up, 1, 2);
+                let cut = g.usize_in(0, bytes.len() - 1);
+                (bytes, cut)
+            },
+            |(bytes, cut)| {
+                assert!(
+                    Decoder::decode(&bytes[..cut]).is_err(),
+                    "cut {cut}/{} decoded",
+                    bytes.len()
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn prop_header_corruption_is_a_typed_error() {
+        forall(
+            0xB3,
+            40,
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                (gen_update_of_kind(g, kind), g.usize_in(0, 2))
+            },
+            |(up, which)| {
+                let mut bytes = Encoder::new(&up, 1, 2);
+                match which {
+                    0 => {
+                        // magic
+                        bytes[0] ^= 0xFF;
+                        assert!(matches!(
+                            Decoder::decode(&bytes),
+                            Err(WireError::BadHeader)
+                        ));
+                    }
+                    1 => {
+                        // version
+                        bytes[4] = bytes[4].wrapping_add(1);
+                        assert!(matches!(
+                            Decoder::decode(&bytes),
+                            Err(WireError::BadHeader)
+                        ));
+                    }
+                    _ => {
+                        // scheme tag
+                        bytes[5] = 0x7F;
+                        assert!(matches!(
+                            Decoder::decode(&bytes),
+                            Err(WireError::UnknownScheme(0x7F))
+                        ));
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_bad_entry_kind_is_a_typed_error() {
+        forall(
+            0xB4,
+            30,
+            |g| gen_update_of_kind(g, g.usize_in(0, 3) as u8),
+            |up| {
+                let mut bytes = Encoder::new(&up, 1, 2);
+                // first entry's kind byte sits right after the fixed
+                // header: magic u32 | ver u8 | scheme u8 | id u32 |
+                // round u64 | n u32 = 22 bytes
+                bytes[22] = 0x66;
+                match Decoder::decode(&bytes) {
+                    Err(WireError::UnknownKind(0x66)) => {}
+                    other => panic!("expected UnknownKind, got {other:?}"),
+                }
+            },
+        );
+    }
 }

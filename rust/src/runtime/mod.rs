@@ -18,6 +18,7 @@
 mod engine;
 mod manifest;
 mod model;
+pub mod stub_xla;
 
 pub use engine::PjrtEngine;
 pub use manifest::{ArtifactEntry, Manifest};

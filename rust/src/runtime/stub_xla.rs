@@ -1,0 +1,150 @@
+//! Offline stand-in for the `xla` crate (DESIGN.md §4).
+//!
+//! The real PJRT binding (`xla-rs`) is not in the offline crate cache,
+//! so [`engine`](super::engine) compiles against this API-compatible
+//! stub instead: client construction succeeds (so the manifest and
+//! executable-cache plumbing stays exercised by tests), while any
+//! attempt to actually compile or run an HLO artifact reports a clear
+//! error. Swapping the real crate back in is a one-line import change
+//! in `runtime::engine` plus a `Cargo.toml` dependency.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built against the offline xla stub (DESIGN.md §4); \
+     use the native backend or rebuild with the real `xla` crate";
+
+/// Display-only error mirroring `xla::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stub of `xla::PjRtClient` (CPU platform only).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Construction always succeeds so the executor thread starts.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Platform label shown in startup logs.
+    pub fn platform_name(&self) -> &'static str {
+        "offline-stub"
+    }
+
+    /// The stub exposes no devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compilation is where the stub reports its absence.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parsing is deferred to compile time, which always errors here.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Ok(HloModuleProto)
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable` (never actually constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Unreachable in practice: `compile` never hands one out.
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Unreachable in practice.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    /// Wrap host data (no-op in the stub).
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape (no-op in the stub).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Unreachable in practice.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    /// Unreachable in practice.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    /// Unreachable in practice.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stub of `xla::ArrayShape`.
+pub struct ArrayShape;
+
+impl ArrayShape {
+    /// No dimensions in the stub.
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_starts_but_compile_errors() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 0);
+        let proto = HloModuleProto::from_text_file("nope.hlo.txt").unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}

@@ -256,9 +256,10 @@ fn non_iid_sharding_still_learns() {
 
 #[test]
 fn partial_participation_reduces_comms_proportionally() {
+    use qrr::config::ParticipationConfig;
     let mut cfg = tiny(SchemeConfig::Qrr(PPolicy::Fixed(0.2)), ModelKind::Mlp, DatasetKind::Mnist);
     cfg.clients = 4;
-    cfg.participation = 0.5;
+    cfg.participation = ParticipationConfig::Uniform { fraction: 0.5 };
     cfg.iters = 10;
     let h = Coordinator::from_config(&cfg).unwrap().run().unwrap().history;
     // ceil(0.5*4)=2 participants per round

@@ -1,0 +1,156 @@
+//! Integration: scenarios that only exist because of the composable
+//! session API — partial participation with link-driven client dropout
+//! (selected from JSON and from the CLI), straggler deadlines, weighted
+//! aggregation and the TCP transport binding, all through
+//! `FlSessionBuilder`.
+
+use std::time::Duration;
+
+use qrr::prelude::*;
+
+fn tiny_base() -> ExperimentConfig {
+    let mut c = ExperimentConfig::table1_default();
+    c.scheme = SchemeConfig::Qrr(PPolicy::Fixed(0.2));
+    c.clients = 4;
+    c.iters = 8;
+    c.batch = 12;
+    c.train_n = 240;
+    c.test_n = 60;
+    c.eval_every = 4;
+    c.lr_schedule = vec![(0, 0.05)];
+    c
+}
+
+#[test]
+fn dropout_scenario_from_json_runs_end_to_end() {
+    // the new scenario is fully described by config JSON — no bespoke
+    // round loop anywhere
+    let json = r#"{
+        "name": "dropout_scenario",
+        "scheme": {"kind": "qrr", "p": 0.2},
+        "clients": 4,
+        "iters": 8,
+        "batch": 12,
+        "train_n": 240,
+        "test_n": 60,
+        "eval_every": 4,
+        "lr_schedule": [[0, 0.05]],
+        "participation": {"kind": "dropout", "fraction": 0.5, "drop_prob": 0.5},
+        "aggregation": "sum"
+    }"#;
+    let cfg = ExperimentConfig::from_json(&qrr::config::Json::parse(json).unwrap()).unwrap();
+    assert_eq!(
+        cfg.participation,
+        ParticipationConfig::Dropout { fraction: 0.5, drop_prob: 0.5 }
+    );
+
+    let mut session = FlSessionBuilder::new(&cfg)
+        .recv_timeout(Duration::from_millis(10))
+        .quiet()
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    let h = &report.history;
+    assert_eq!(h.iterations(), 8);
+    // ceil(0.5*4)=2 clients sampled per round; dropout can only lose
+    // uploads on top of that
+    assert!(h.total_comms() <= 2 * 8, "comms {}", h.total_comms());
+    assert!(h.evals.last().unwrap().loss.is_finite());
+}
+
+#[test]
+fn dropout_scenario_from_cli_overrides() {
+    // the same scenario selected through the CLI surface
+    let args = qrr::cli::Args::parse(
+        "train --participation dropout:0.5:1.0 --aggregation weighted_mean"
+            .split_whitespace()
+            .map(String::from),
+    );
+    let mut cfg = tiny_base();
+    // equal links ⇒ slowness 1 ⇒ drop_prob 1 loses every upload
+    cfg.link_slow_bps = 1e6;
+    cfg.link_fast_bps = 1e6;
+    cfg.iters = 3;
+    cfg.eval_every = 3;
+    qrr::experiments::apply_overrides(&mut cfg, &args).unwrap();
+    assert_eq!(
+        cfg.participation,
+        ParticipationConfig::Dropout { fraction: 0.5, drop_prob: 1.0 }
+    );
+    assert_eq!(cfg.aggregation, AggregationConfig::WeightedMean);
+
+    let mut session = FlSessionBuilder::new(&cfg)
+        .recv_timeout(Duration::from_millis(10))
+        .quiet()
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    // every upload lost, yet the rounds complete without hanging
+    assert_eq!(report.history.total_comms(), 0);
+    assert_eq!(report.history.iterations(), 3);
+    assert!(report.history.evals.last().unwrap().loss.is_finite());
+}
+
+#[test]
+fn straggler_deadline_scenario() {
+    let mut cfg = tiny_base();
+    cfg.scheme = SchemeConfig::Sgd;
+    // SGD upload ≈ 5.09 Mbit; the slowest of the spread links (250 kbit/s)
+    // needs >20 s, everyone else is comfortably under 5 s
+    cfg.participation = ParticipationConfig::Deadline { secs: 5.0 };
+    cfg.iters = 4;
+    cfg.eval_every = 4;
+    let mut session = FlSessionBuilder::new(&cfg)
+        .recv_timeout(Duration::from_millis(10))
+        .quiet()
+        .build()
+        .unwrap();
+    let h = session.run().unwrap().history;
+    assert_eq!(h.total_comms(), 3 * 4, "slowest client should miss every deadline");
+}
+
+#[test]
+fn uniform_sampling_with_weighted_mean_learns() {
+    let mut cfg = tiny_base();
+    cfg.scheme = SchemeConfig::Sgd;
+    cfg.participation = ParticipationConfig::Uniform { fraction: 0.75 };
+    cfg.aggregation = AggregationConfig::WeightedMean;
+    cfg.iters = 12;
+    cfg.eval_every = 4;
+    // mean scales the step ~1/participants vs sum; compensate the LR
+    cfg.lr_schedule = vec![(0, 0.15)];
+    let h = FlSessionBuilder::new(&cfg)
+        .quiet()
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .history;
+    // ceil(0.75*4)=3 participants per round, all delivered
+    assert_eq!(h.total_comms(), 3 * 12);
+    let first = h.evals.first().unwrap().loss;
+    let last = h.evals.last().unwrap().loss;
+    assert!(last < first, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn tcp_binding_composes_with_dropout() {
+    // real sockets + lossy participation in one builder chain: dropped
+    // uploads never reach the socket and the server times out cleanly
+    let mut cfg = tiny_base();
+    cfg.iters = 2;
+    cfg.eval_every = 2;
+    cfg.link_slow_bps = 1e6;
+    cfg.link_fast_bps = 1e6;
+    cfg.participation = ParticipationConfig::Dropout { fraction: 1.0, drop_prob: 1.0 };
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let mut session = FlSessionBuilder::new(&cfg)
+        .transport(Box::new(transport))
+        .recv_timeout(Duration::from_millis(50))
+        .quiet()
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.history.total_comms(), 0);
+    assert_eq!(report.history.iterations(), 2);
+}
