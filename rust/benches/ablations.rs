@@ -6,8 +6,11 @@
 //!    paper's β=8 sits at the knee).
 //! 3. Compression fraction p: factor size vs reconstruction error
 //!    (the inequality-(8) regime the paper targets).
+//!
+//! Timed cases run through the shared `bench_util::Suite` runner; set
+//! `QRR_BENCH_JSON=<dir>` to emit `BENCH_ablations.json`.
 
-use qrr::bench_util::Bench;
+use qrr::bench_util::{suites, Bench, Suite};
 use qrr::compress::{compress_svd, decompress_svd, svd_rank};
 use qrr::linalg::{matmul, qr_thin, svd_truncated, SvdMethod};
 use qrr::qrr::{ClientCodec, QrrConfig, ServerCodec};
@@ -32,7 +35,7 @@ fn gradient_like(m: usize, n: usize, head: usize, rng: &mut Rng) -> Tensor {
 }
 
 fn main() {
-    let bench = Bench::from_env();
+    let mut suite = Suite::new("ablations", Bench::from_env());
     let mut rng = Rng::new(99);
     let g = gradient_like(200, 784, 12, &mut rng);
     let k = 40;
@@ -45,7 +48,7 @@ fn main() {
         let m = SvdMethod::Randomized { oversample: o, power_iters: q, seed: 5 };
         let svd = svd_truncated(&g, k, m);
         let err = g.sub(&svd.reconstruct()).fro_norm();
-        let r = bench.run(&format!("svd_rand/q{q}_o{o}"), None, || {
+        let r = suite.case(&format!("svd_rand/q{q}_o{o}"), None, || {
             svd_truncated(&g, k, m)
         });
         println!(
@@ -89,5 +92,7 @@ fn main() {
     let a = Tensor::randn(&[512, 784], &mut rng);
     let b = Tensor::randn(&[784, 200], &mut rng);
     let flops = 2.0 * (512 * 784 * 200) as f64;
-    bench.run("gemm/default_block64", Some(flops), || matmul(&a, &b));
+    suite.case("gemm/default_block64", Some(flops), || matmul(&a, &b));
+
+    suites::maybe_write_json(&suite.finish());
 }

@@ -1,8 +1,6 @@
 //! Paper Table I / Figure 2: MLP on MNIST — SGD vs SLAQ vs QRR(p).
-//! Reduced-scale regeneration; `qrr exp table1 --iters 1000` for the
-//! paper's full scale.
-
-mod common;
+//! Reduced-scale regeneration through the shared suite runner;
+//! `qrr exp table1 --iters 1000` for the paper's full scale.
 
 fn main() {
     let mut base = qrr::config::ExperimentConfig::table1_default();
@@ -11,5 +9,9 @@ fn main() {
     base.train_n = 8_000;
     base.test_n = 1_500;
     base.lr_schedule = vec![(0, 0.01)];
-    common::run_table_bench("table1_mlp_mnist", base, &common::fixed_p_lineup());
+    qrr::bench_util::suites::run_table_bench(
+        "table1_mlp_mnist",
+        base,
+        &qrr::bench_util::suites::fixed_p_lineup(),
+    );
 }

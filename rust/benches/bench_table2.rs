@@ -1,8 +1,6 @@
 //! Paper Table II / Figure 3: CNN on MNIST (Tucker-compressed conv
-//! gradients). Reduced-scale regeneration; `qrr exp table2 --iters 1000`
-//! for full scale.
-
-mod common;
+//! gradients). Reduced-scale regeneration through the shared suite
+//! runner; `qrr exp table2 --iters 1000` for full scale.
 
 fn main() {
     let mut base = qrr::config::ExperimentConfig::table2_default();
@@ -11,5 +9,9 @@ fn main() {
     base.train_n = 2_000;
     base.test_n = 400;
     base.lr_schedule = vec![(0, 0.02)];
-    common::run_table_bench("table2_cnn_mnist", base, &common::fixed_p_lineup());
+    qrr::bench_util::suites::run_table_bench(
+        "table2_cnn_mnist",
+        base,
+        &qrr::bench_util::suites::fixed_p_lineup(),
+    );
 }

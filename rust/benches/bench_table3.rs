@@ -1,9 +1,7 @@
 //! Paper Table III / Figure 4: VGG-like CNN on CIFAR-10 with per-client
 //! adaptive p ∈ [0.1, 0.3] and the lr 0.01 → 0.001 schedule.
-//! Reduced-scale regeneration; `qrr exp table3 --iters 2000` for full
-//! scale.
-
-mod common;
+//! Reduced-scale regeneration through the shared suite runner;
+//! `qrr exp table3 --iters 2000` for full scale.
 
 use qrr::config::{PPolicy, SchemeConfig};
 
@@ -19,7 +17,7 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(40);
     base.lr_schedule = vec![(0, 0.01), (iters / 2, 0.001)];
-    common::run_table_bench(
+    qrr::bench_util::suites::run_table_bench(
         "table3_vgg_cifar10",
         base,
         &[

@@ -1,5 +1,7 @@
 //! Paper Figure 1: singular-value spectrum of an FC-layer gradient —
-//! regenerates the series and benches the SVD engines on that matrix.
+//! regenerates the series and benches the SVD engines on that matrix
+//! through the shared suite runner (the same `svd/*` cases `qrr bench
+//! kernels` runs, plus the exact-Jacobi reference).
 
 fn main() {
     let (sigmas, rank95) = qrr::experiments::fig1::spectrum(10, 256, 42);
@@ -10,23 +12,15 @@ fn main() {
     );
     println!("  rank capturing 95% energy: {rank95} / 200 (paper: 'only a few')");
 
-    // bench the two SVD engines on the same gradient-shaped matrix
-    use qrr::linalg::{svd_truncated, SvdMethod};
-    use qrr::tensor::Tensor;
-    use qrr::util::Rng;
-    let mut rng = Rng::new(1);
-    let a = Tensor::randn(&[200, 784], &mut rng);
-    let bench = qrr::bench_util::Bench::from_env();
-    for k in [20, 60] {
-        bench.run(&format!("fig1/svd_randomized_k{k}"), None, || {
-            svd_truncated(
-                &a,
-                k,
-                SvdMethod::Randomized { oversample: 8, power_iters: 2, seed: 1 },
-            )
+    qrr::bench_util::suites::run_standalone("fig1", |suite| {
+        qrr::bench_util::suites::svd_engine_cases(suite);
+        // the exact-engine reference on the same gradient-shaped matrix
+        use qrr::tensor::Tensor;
+        use qrr::util::Rng;
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[200, 784], &mut rng);
+        suite.case("svd/jacobi_exact_200x784", None, || {
+            qrr::linalg::svd_jacobi(&a)
         });
-    }
-    bench.run("fig1/svd_jacobi_exact_200x784", None, || {
-        qrr::linalg::svd_jacobi(&a)
     });
 }

@@ -1,109 +1,13 @@
 //! Micro-benchmarks of every hot-path primitive (the perf-pass raw
-//! material, EXPERIMENTS.md §Perf): GEMM, SVD engines, Tucker, LAQ
-//! quantizer + bit-packing, wire encode/decode, full QRR encode.
-
-use qrr::bench_util::Bench;
-use qrr::compress::{compress_svd, compress_tucker, tucker_ranks};
-use qrr::linalg::{matmul, svd_truncated, SvdMethod};
-use qrr::net::{ClientUpdate, Decoder, Encoder};
-use qrr::qrr::{ClientCodec, QrrConfig};
-use qrr::quant::{pack_codes, quantize};
-use qrr::tensor::Tensor;
-use qrr::util::Rng;
+//! material): GEMM/matvec, QR, SVD engines, Tucker, LAQ quantizer +
+//! bit-packing, wire encode/decode across all entry kinds, full QRR
+//! encode/decode (serial + pooled).
+//!
+//! Thin wrapper over `bench_util::suites::kernel_cases` — the same
+//! registry `qrr bench kernels` runs, so `cargo bench` and the CI perf
+//! gate share one code path. Set `QRR_BENCH_JSON=<dir>` to also emit
+//! `BENCH_kernels.json`.
 
 fn main() {
-    let bench = Bench::from_env();
-    let mut rng = Rng::new(7);
-
-    // GEMM at the model's shapes
-    for &(m, k, n, tag) in &[
-        (512usize, 784usize, 200usize, "fc1_fwd"),
-        (200, 512, 784, "fc1_bwd"),
-        (512, 200, 10, "fc2_fwd"),
-    ] {
-        let a = Tensor::randn(&[m, k], &mut rng);
-        let b = Tensor::randn(&[k, n], &mut rng);
-        let flops = 2.0 * (m * k * n) as f64;
-        bench.run(&format!("gemm/{tag}_{m}x{k}x{n}"), Some(flops), || matmul(&a, &b));
-    }
-
-    // SVD engines on the MLP's big gradient
-    let g = Tensor::randn(&[200, 784], &mut rng);
-    for (label, method) in [
-        (
-            "randomized_k20",
-            SvdMethod::Randomized { oversample: 8, power_iters: 2, seed: 1 },
-        ),
-        (
-            "randomized_k60",
-            SvdMethod::Randomized { oversample: 8, power_iters: 2, seed: 1 },
-        ),
-    ] {
-        let k = if label.ends_with("20") { 20 } else { 60 };
-        bench.run(&format!("svd/{label}_200x784"), None, || {
-            svd_truncated(&g, k, method)
-        });
-    }
-    bench.run("svd/compress_p0.3_200x784", None, || {
-        compress_svd(&g, 60, SvdMethod::Auto)
-    });
-
-    // Tucker on the paper's conv shapes
-    let conv = Tensor::randn(&[32, 16, 3, 3], &mut rng);
-    let ranks = tucker_ranks(&[32, 16, 3, 3], 0.3);
-    bench.run("tucker/compress_p0.3_32x16x3x3", None, || {
-        compress_tucker(&conv, &ranks, SvdMethod::Auto)
-    });
-    let conv_big = Tensor::randn(&[128, 64, 3, 3], &mut rng);
-    let ranks_big = tucker_ranks(&[128, 64, 3, 3], 0.3);
-    bench.run("tucker/compress_p0.3_128x64x3x3", None, || {
-        compress_tucker(&conv_big, &ranks_big, SvdMethod::Auto)
-    });
-
-    // LAQ quantizer + bit packing
-    let n = 159_010; // full MLP gradient element count
-    let flat = Tensor::randn(&[n], &mut rng);
-    let prev = Tensor::zeros(&[n]);
-    bench.run("quant/laq_beta8_159k", Some(n as f64), || {
-        quantize(&flat, &prev, 8)
-    });
-    let codes: Vec<u32> = (0..n).map(|i| (i % 256) as u32).collect();
-    bench.run("quant/pack_beta8_159k", Some(n as f64), || {
-        pack_codes(&codes, 8)
-    });
-
-    // full QRR client encode (MLP shapes, p=0.2)
-    let shapes = vec![vec![200, 784], vec![200], vec![10, 200], vec![10]];
-    let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
-    let mut codec = ClientCodec::new(&shapes, QrrConfig::with_p(0.2));
-    bench.run("qrr/encode_mlp_p0.2", None, || codec.encode(&grads));
-
-    // wire encode/decode of the QRR update
-    let mut codec2 = ClientCodec::new(&shapes, QrrConfig::with_p(0.2));
-    let update = ClientUpdate::Qrr { msgs: codec2.encode(&grads) };
-    let bytes_per = (update.payload_bits() / 8) as f64;
-    bench.run("wire/encode_qrr_mlp", Some(bytes_per), || {
-        Encoder::new(&update, 0, 0)
-    });
-    let bytes = Encoder::new(&update, 0, 0);
-    bench.run("wire/decode_qrr_mlp", Some(bytes_per), || {
-        Decoder::decode(&bytes).unwrap()
-    });
-
-    // native model grad step (the L3-side compute baseline)
-    use qrr::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
-    let model = NativeModel::new(ModelKind::Mlp);
-    let spec = ModelSpec::new(ModelKind::Mlp);
-    let params = spec.init_params(1);
-    let x = Tensor::randn(&[128, 784], &mut rng);
-    let y: Vec<u32> = (0..128).map(|i| (i % 10) as u32).collect();
-    bench.run("model/mlp_grad_b128", None, || model.loss_grad(&params, &x, &y));
-
-    // QR on the randomized-SVD intermediate shapes
-    let tall = Tensor::randn(&[784, 68], &mut rng);
-    bench.run("qr/thin_784x68", None, || qrr::linalg::qr_thin(&tall));
-    let mid = Tensor::randn(&[200, 68], &mut rng);
-    bench.run("qr/thin_200x68", None, || qrr::linalg::qr_thin(&mid));
+    qrr::bench_util::suites::run_standalone("kernels", qrr::bench_util::suites::kernel_cases);
 }
-
-// appended: QR micro-bench (perf-pass investigation)

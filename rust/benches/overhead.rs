@@ -1,6 +1,12 @@
 //! Paper §III-B: client-side memory and compute overhead of QRR / SLAQ
 //! relative to SGD (paper: QRR 1.2× mem, 3.82× time; SLAQ 13× mem,
-//! 1.08× time).
+//! 1.08× time). Per-scheme step timings are re-emitted through the
+//! shared suite report so `QRR_BENCH_JSON=<dir>` yields
+//! `BENCH_overhead.json` in the same schema as every other bench.
+
+use std::time::Duration;
+
+use qrr::bench_util::{suites, BenchResult, SuiteReport};
 
 fn main() {
     let kind = if std::env::var("QRR_BENCH_FAST").is_ok() {
@@ -21,4 +27,22 @@ fn main() {
             r.time_ratio
         );
     }
+
+    let mode = if std::env::var("QRR_BENCH_FAST").is_ok() { "fast" } else { "full" };
+    let report = SuiteReport {
+        suite: "overhead".into(),
+        mode: mode.into(),
+        threads: qrr::exec::default_threads(),
+        cases: rows
+            .iter()
+            .map(|r| BenchResult {
+                name: format!("overhead/{}_step", r.scheme),
+                samples: 1,
+                median: Duration::from_secs_f64(r.step_secs),
+                mad: Duration::ZERO,
+                units_per_iter: None,
+            })
+            .collect(),
+    };
+    suites::maybe_write_json(&report);
 }

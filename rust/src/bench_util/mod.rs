@@ -1,0 +1,296 @@
+//! Micro-benchmark harness (the offline substitute for `criterion` —
+//! DESIGN.md §4): warmup, fixed-duration sampling, median + MAD, a
+//! uniform report line, and — through [`suite`] — named suites with a
+//! machine-readable JSON trajectory (`BENCH_*.json`) plus a baseline
+//! diff that classifies every case as improved / regressed / unchanged
+//! (DESIGN.md §5).
+//!
+//! [`suites`] holds the crate's two canonical suites (`kernels`,
+//! `round`) and the `qrr bench` CLI entry; every `cargo bench` binary
+//! routes through the same runners.
+
+pub mod suite;
+pub mod suites;
+
+pub use suite::{CaseDiff, DeltaClass, Suite, SuiteReport};
+
+use std::time::{Duration, Instant};
+
+use crate::config::Json;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchResult {
+    /// case label
+    pub name: String,
+    /// number of timed iterations
+    pub samples: usize,
+    /// median per-iteration time
+    pub median: Duration,
+    /// median absolute deviation
+    pub mad: Duration,
+    /// optional throughput unit count per iteration (elements, bits, …)
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// One human-readable line: `name  median ± mad  (throughput)`.
+    pub fn line(&self) -> String {
+        let med = self.median.as_secs_f64();
+        let mad = self.mad.as_secs_f64();
+        let mut s = format!(
+            "{:<44} {:>12} ± {:>10}  ({} samples)",
+            self.name,
+            fmt_time(med),
+            fmt_time(mad),
+            self.samples
+        );
+        if let Some(u) = self.units_per_iter {
+            if med > 0.0 {
+                s.push_str(&format!("  {:>12}/s", fmt_count(u / med)));
+            }
+        }
+        s
+    }
+
+    /// Schema-stable JSON object: times as integer nanoseconds.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("median_ns", Json::Num(self.median.as_nanos() as f64)),
+            ("mad_ns", Json::Num(self.mad.as_nanos() as f64)),
+        ];
+        if let Some(u) = self.units_per_iter {
+            pairs.push(("units_per_iter", Json::Num(u)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse the object written by [`Self::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow::anyhow!("bench case missing field {k:?}"))
+        };
+        Ok(BenchResult {
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("bench case name must be a string"))?
+                .to_string(),
+            samples: field("samples")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bench case samples must be an integer"))?,
+            median: Duration::from_nanos(
+                field("median_ns")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("median_ns must be an integer"))?,
+            ),
+            mad: Duration::from_nanos(
+                field("mad_ns")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("mad_ns must be an integer"))?,
+            ),
+            units_per_iter: j.get("units_per_iter").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// Median and median-absolute-deviation of a sample set (the harness'
+/// robust statistics; MAD tolerates the occasional scheduler hiccup that
+/// would wreck a mean ± stddev).
+pub fn median_mad(samples: &[Duration]) -> (Duration, Duration) {
+    assert!(!samples.is_empty(), "median of an empty sample set");
+    let mut ts = samples.to_vec();
+    ts.sort_unstable();
+    let median = ts[ts.len() / 2];
+    let mut devs: Vec<Duration> = ts
+        .iter()
+        .map(|&t| if t > median { t - median } else { median - t })
+        .collect();
+    devs.sort_unstable();
+    let mad = devs[devs.len() / 2];
+    (median, mad)
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bench {
+    /// warmup duration before sampling
+    pub warmup: Duration,
+    /// sampling budget
+    pub budget: Duration,
+    /// hard cap on samples
+    pub max_samples: usize,
+    /// true when running with the reduced CI settings
+    pub fast: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_samples: 200,
+            fast: false,
+        }
+    }
+}
+
+impl Bench {
+    /// Reduced settings for CI smoke runs (`--fast` / `QRR_BENCH_FAST=1`).
+    pub fn fast() -> Self {
+        Bench {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(200),
+            max_samples: 20,
+            fast: true,
+        }
+    }
+
+    /// [`Bench::fast`] when `QRR_BENCH_FAST` is set, else the default.
+    pub fn from_env() -> Self {
+        if std::env::var("QRR_BENCH_FAST").is_ok() {
+            Bench::fast()
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Time `f` repeatedly; `units` (optional) is per-iteration work for
+    /// throughput reporting. Prints and returns the result.
+    pub fn run<T>(&self, name: &str, units: Option<f64>, mut f: impl FnMut() -> T) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // sample
+        let mut times = Vec::with_capacity(64);
+        let s0 = Instant::now();
+        while s0.elapsed() < self.budget && times.len() < self.max_samples {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        if times.is_empty() {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        let (median, mad) = median_mad(&times);
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: times.len(),
+            median,
+            mad,
+            units_per_iter: units,
+        };
+        println!("{}", result.line());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_samples: 50,
+            ..Bench::default()
+        };
+        let r = b.run("spin", Some(1000.0), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.median > Duration::ZERO);
+        assert!(r.samples > 0);
+        assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains("s"));
+        assert_eq!(fmt_count(2_500_000.0), "2.50M");
+    }
+
+    #[test]
+    fn median_mad_on_known_samples() {
+        let ms = Duration::from_millis;
+        // odd count: exact middle
+        let (med, mad) = median_mad(&[ms(1), ms(9), ms(5), ms(3), ms(7)]);
+        assert_eq!(med, ms(5));
+        // devs |1-5|,|3-5|,|5-5|,|7-5|,|9-5| -> sorted 0,2,2,4,4
+        assert_eq!(mad, ms(2));
+        // even count: this harness takes the upper middle
+        let (med, mad) = median_mad(&[ms(2), ms(4), ms(6), ms(8)]);
+        assert_eq!(med, ms(6));
+        // devs 4,2,0,2 -> sorted 0,2,2,4 -> upper middle 2
+        assert_eq!(mad, ms(2));
+        // constant samples: zero spread
+        let (med, mad) = median_mad(&[ms(3), ms(3), ms(3)]);
+        assert_eq!(med, ms(3));
+        assert_eq!(mad, Duration::ZERO);
+        // a single outlier must not move the median
+        let (med, _) = median_mad(&[ms(5), ms(5), ms(5), ms(5), ms(500)]);
+        assert_eq!(med, ms(5));
+    }
+
+    #[test]
+    fn bench_result_json_roundtrip() {
+        let r = BenchResult {
+            name: "gemm/fc1_fwd_512x784x200".into(),
+            samples: 42,
+            median: Duration::from_nanos(1_234_567),
+            mad: Duration::from_nanos(8_910),
+            units_per_iter: Some(160_563_200.0),
+        };
+        let back = BenchResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // and without throughput units
+        let r2 = BenchResult { units_per_iter: None, ..r };
+        let back2 = BenchResult::from_json(&r2.to_json()).unwrap();
+        assert_eq!(back2, r2);
+    }
+
+    #[test]
+    fn bench_result_json_rejects_malformed() {
+        let j = Json::parse(r#"{"name":"x","samples":3}"#).unwrap();
+        assert!(BenchResult::from_json(&j).is_err());
+        let j = Json::parse(r#"{"name":4,"samples":3,"median_ns":1,"mad_ns":0}"#).unwrap();
+        assert!(BenchResult::from_json(&j).is_err());
+    }
+}

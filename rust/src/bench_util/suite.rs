@@ -1,0 +1,391 @@
+//! Named benchmark suites with a JSON trajectory and baseline diffing.
+//!
+//! A [`Suite`] runs cases through the shared [`Bench`] sampler and
+//! collects their [`BenchResult`]s; [`Suite::finish`] yields a
+//! [`SuiteReport`] that serializes to the schema-stable `BENCH_*.json`
+//! shape (`qrr-bench/1`). [`SuiteReport::diff`] compares a run against a
+//! committed baseline and classifies every case — the CI perf gate fails
+//! on [`DeltaClass::Regressed`] entries (DESIGN.md §5).
+
+use std::time::Duration;
+
+use crate::config::Json;
+
+use super::{Bench, BenchResult};
+
+/// Schema tag written into every report.
+pub const SCHEMA: &str = "qrr-bench/1";
+
+/// A running suite: a name, a sampler, and the results so far.
+pub struct Suite {
+    name: String,
+    bench: Bench,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    /// New suite named `name` sampling with `bench`.
+    pub fn new(name: impl Into<String>, bench: Bench) -> Self {
+        Suite { name: name.into(), bench, results: Vec::new() }
+    }
+
+    /// The underlying sampler.
+    pub fn bench(&self) -> &Bench {
+        &self.bench
+    }
+
+    /// Whether the suite runs with the reduced CI settings.
+    pub fn is_fast(&self) -> bool {
+        self.bench.fast
+    }
+
+    /// Run one repeatedly-sampled case; prints the line, records and
+    /// returns the result.
+    pub fn case<T>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let r = self.bench.run(name, units, f);
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Run one single-shot case (for expensive end-to-end runs a sampler
+    /// would repeat for seconds); records a one-sample result with zero
+    /// MAD and returns the closure's value alongside it.
+    pub fn once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, BenchResult) {
+        let t = std::time::Instant::now();
+        let value = f();
+        let elapsed = t.elapsed();
+        let r = BenchResult {
+            name: name.to_string(),
+            samples: 1,
+            median: elapsed,
+            mad: Duration::ZERO,
+            units_per_iter: None,
+        };
+        println!("{}", r.line());
+        self.results.push(r.clone());
+        (value, r)
+    }
+
+    /// Seal the suite into its report.
+    pub fn finish(self) -> SuiteReport {
+        SuiteReport {
+            suite: self.name,
+            mode: if self.bench.fast { "fast".into() } else { "full".into() },
+            threads: crate::exec::default_threads(),
+            cases: self.results,
+        }
+    }
+}
+
+/// The machine-readable outcome of one suite run (`BENCH_<suite>.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteReport {
+    /// suite name (`kernels`, `round`, …)
+    pub suite: String,
+    /// `"fast"` (CI smoke) or `"full"`
+    pub mode: String,
+    /// worker threads in effect during the run
+    pub threads: usize,
+    /// per-case results in execution order
+    pub cases: Vec<BenchResult>,
+}
+
+impl SuiteReport {
+    /// Serialize to the `qrr-bench/1` JSON shape.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("suite", Json::Str(self.suite.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "cases",
+                Json::Arr(self.cases.iter().map(BenchResult::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a report; rejects unknown schema tags.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("bench report missing schema tag"))?;
+        if schema != SCHEMA {
+            anyhow::bail!("unsupported bench schema {schema:?} (want {SCHEMA:?})");
+        }
+        let str_field = |k: &str| -> anyhow::Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("bench report missing field {k:?}"))?
+                .to_string())
+        };
+        let cases = j
+            .get("cases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("bench report missing cases array"))?
+            .iter()
+            .map(BenchResult::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(SuiteReport {
+            suite: str_field("suite")?,
+            mode: str_field("mode")?,
+            threads: j.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            cases,
+        })
+    }
+
+    /// Write the report to `path` (one JSON document).
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+    }
+
+    /// Load a report from `path`.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_json(&Json::parse(text.trim()).map_err(|e| anyhow::anyhow!("{path}: {e}"))?)
+    }
+
+    /// Compare this run against `baseline`. `threshold` is the relative
+    /// slowdown/speedup (e.g. `0.25` = 25%) beyond which a case counts
+    /// as regressed/improved. Cases appear in this run's order; baseline
+    /// cases this run no longer has are appended as
+    /// [`DeltaClass::Removed`].
+    pub fn diff(&self, baseline: &SuiteReport, threshold: f64) -> Vec<CaseDiff> {
+        let mut out = Vec::with_capacity(self.cases.len());
+        for cur in &self.cases {
+            let base = baseline.cases.iter().find(|b| b.name == cur.name);
+            out.push(match base {
+                None => CaseDiff {
+                    name: cur.name.clone(),
+                    class: DeltaClass::New,
+                    base_ns: None,
+                    cur_ns: Some(cur.median.as_nanos() as u64),
+                },
+                Some(b) => CaseDiff {
+                    name: cur.name.clone(),
+                    class: classify(
+                        cur.median.as_nanos() as u64,
+                        b.median.as_nanos() as u64,
+                        threshold,
+                    ),
+                    base_ns: Some(b.median.as_nanos() as u64),
+                    cur_ns: Some(cur.median.as_nanos() as u64),
+                },
+            });
+        }
+        for b in &baseline.cases {
+            if !self.cases.iter().any(|c| c.name == b.name) {
+                out.push(CaseDiff {
+                    name: b.name.clone(),
+                    class: DeltaClass::Removed,
+                    base_ns: Some(b.median.as_nanos() as u64),
+                    cur_ns: None,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// How one case moved relative to the baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaClass {
+    /// faster than baseline by more than the threshold
+    Improved,
+    /// slower than baseline by more than the threshold — the perf gate
+    /// fails on these
+    Regressed,
+    /// within the threshold band
+    Unchanged,
+    /// case has no baseline entry (informational)
+    New,
+    /// baseline case missing from the current run (informational)
+    Removed,
+}
+
+impl DeltaClass {
+    /// Short lower-case label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeltaClass::Improved => "improved",
+            DeltaClass::Regressed => "REGRESSED",
+            DeltaClass::Unchanged => "unchanged",
+            DeltaClass::New => "new",
+            DeltaClass::Removed => "removed",
+        }
+    }
+}
+
+/// Classify `cur` vs `base` medians (nanoseconds) at `threshold`.
+pub fn classify(cur_ns: u64, base_ns: u64, threshold: f64) -> DeltaClass {
+    if base_ns == 0 {
+        return if cur_ns == 0 { DeltaClass::Unchanged } else { DeltaClass::New };
+    }
+    let ratio = cur_ns as f64 / base_ns as f64;
+    if ratio > 1.0 + threshold {
+        DeltaClass::Regressed
+    } else if ratio < 1.0 - threshold {
+        DeltaClass::Improved
+    } else {
+        DeltaClass::Unchanged
+    }
+}
+
+/// One case's movement vs the baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseDiff {
+    /// case label
+    pub name: String,
+    /// classification at the diff's threshold
+    pub class: DeltaClass,
+    /// baseline median, ns (None for [`DeltaClass::New`])
+    pub base_ns: Option<u64>,
+    /// current median, ns (None for [`DeltaClass::Removed`])
+    pub cur_ns: Option<u64>,
+}
+
+impl CaseDiff {
+    /// Relative change `cur/base - 1` when both sides exist.
+    pub fn rel_change(&self) -> Option<f64> {
+        match (self.base_ns, self.cur_ns) {
+            (Some(b), Some(c)) if b > 0 => Some(c as f64 / b as f64 - 1.0),
+            _ => None,
+        }
+    }
+
+    /// One aligned report line.
+    pub fn line(&self) -> String {
+        let ns = |v: Option<u64>| match v {
+            Some(n) => super::fmt_time(n as f64 / 1e9),
+            None => "-".into(),
+        };
+        let pct = match self.rel_change() {
+            Some(d) => format!("{:+6.1}%", 100.0 * d),
+            None => "      -".into(),
+        };
+        format!(
+            "{:<44} {:>12} -> {:>12}  {pct}  {}",
+            self.name,
+            ns(self.base_ns),
+            ns(self.cur_ns),
+            self.class.label()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(name: &str, ns: u64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            samples: 10,
+            median: Duration::from_nanos(ns),
+            mad: Duration::ZERO,
+            units_per_iter: None,
+        }
+    }
+
+    fn report(cases: Vec<BenchResult>) -> SuiteReport {
+        SuiteReport { suite: "t".into(), mode: "fast".into(), threads: 4, cases }
+    }
+
+    #[test]
+    fn suite_collects_cases_into_report() {
+        let mut s = Suite::new(
+            "demo",
+            Bench {
+                warmup: Duration::from_millis(1),
+                budget: Duration::from_millis(5),
+                max_samples: 5,
+                ..Bench::default()
+            },
+        );
+        s.case("a", None, || std::hint::black_box(1 + 1));
+        let (v, r) = s.once("b", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.samples, 1);
+        let rep = s.finish();
+        assert_eq!(rep.suite, "demo");
+        assert_eq!(rep.cases.len(), 2);
+        assert_eq!(rep.cases[0].name, "a");
+        assert_eq!(rep.cases[1].name, "b");
+    }
+
+    #[test]
+    fn report_json_roundtrip_and_schema_check() {
+        let rep = report(vec![case("x", 1000), case("y", 2000)]);
+        let back = SuiteReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back, rep);
+        // wrong schema tag is rejected
+        let mut j = rep.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Str("qrr-bench/999".into()));
+        }
+        assert!(SuiteReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn report_save_load_roundtrip() {
+        let rep = report(vec![case("k", 12_345)]);
+        let path = std::env::temp_dir().join("qrr_bench_suite_test.json");
+        let path = path.to_str().unwrap().to_string();
+        rep.save(&path).unwrap();
+        let back = SuiteReport::load(&path).unwrap();
+        assert_eq!(back, rep);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn diff_classifies_improved_regressed_unchanged() {
+        let base = report(vec![
+            case("same", 1000),
+            case("slower", 1000),
+            case("faster", 1000),
+            case("gone", 1000),
+        ]);
+        let cur = report(vec![
+            case("same", 1100),   // +10% at 25% threshold -> unchanged
+            case("slower", 1300), // +30% -> regressed
+            case("faster", 600),  // -40% -> improved
+            case("fresh", 500),   // no baseline -> new
+        ]);
+        let diffs = cur.diff(&base, 0.25);
+        let class_of = |n: &str| diffs.iter().find(|d| d.name == n).unwrap().class;
+        assert_eq!(class_of("same"), DeltaClass::Unchanged);
+        assert_eq!(class_of("slower"), DeltaClass::Regressed);
+        assert_eq!(class_of("faster"), DeltaClass::Improved);
+        assert_eq!(class_of("fresh"), DeltaClass::New);
+        assert_eq!(class_of("gone"), DeltaClass::Removed);
+        assert_eq!(diffs.len(), 5);
+    }
+
+    #[test]
+    fn classify_boundaries_and_degenerate_baselines() {
+        assert_eq!(classify(1250, 1000, 0.25), DeltaClass::Unchanged); // exactly +25%
+        assert_eq!(classify(1251, 1000, 0.25), DeltaClass::Regressed);
+        assert_eq!(classify(750, 1000, 0.25), DeltaClass::Unchanged); // exactly -25%
+        assert_eq!(classify(749, 1000, 0.25), DeltaClass::Improved);
+        assert_eq!(classify(0, 0, 0.25), DeltaClass::Unchanged);
+        assert_eq!(classify(10, 0, 0.25), DeltaClass::New);
+    }
+
+    #[test]
+    fn diff_line_renders_percentages() {
+        let base = report(vec![case("a", 1_000_000)]);
+        let cur = report(vec![case("a", 2_000_000)]);
+        let d = &cur.diff(&base, 0.25)[0];
+        let line = d.line();
+        assert!(line.contains("REGRESSED"), "{line}");
+        assert!(line.contains("+100.0%"), "{line}");
+    }
+}

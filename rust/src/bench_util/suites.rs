@@ -1,0 +1,455 @@
+//! The crate's canonical benchmark suites and the `qrr bench` CLI.
+//!
+//! Two suites cover the request path end to end (DESIGN.md §5):
+//!
+//! * `kernels` — every hot-path primitive: GEMM/matvec variants, thin
+//!   QR, randomized SVD, Tucker, the LAQ quantizer + bit packing, wire
+//!   encode/decode across all four entry kinds, and the full QRR
+//!   client-encode / server-decode (serial and pool-fanned).
+//! * `round` — full [`FlSession`](crate::fl::session::FlSession) rounds
+//!   per scheme × participation over `InProcTransport`, i.e. the exact
+//!   loop the experiments spend their time in.
+//!
+//! `qrr bench` writes `BENCH_kernels.json` / `BENCH_round.json` at the
+//! repo root and, with `--check`, diffs the run against the committed
+//! baselines and fails on any case regressing past the threshold — the
+//! CI perf gate. The `cargo bench` binaries under `rust/benches/` are
+//! thin wrappers over the same case registries, so both entry points
+//! share one code path.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::compress::{compress_svd, compress_tucker, tucker_ranks};
+use crate::config::{ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig};
+use crate::fl::metrics::{markdown_table, TableRow};
+use crate::fl::session::FlSessionBuilder;
+use crate::linalg::{matmul, matvec, qr_thin, svd_truncated, SvdMethod};
+use crate::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
+use crate::net::{ClientUpdate, Decoder, Encoder};
+use crate::qrr::{ClientCodec, QrrConfig, ServerCodec};
+use crate::quant::{pack_codes, quantize, unpack_codes};
+use crate::slaq::SlaqMsg;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+use super::suite::{DeltaClass, Suite, SuiteReport};
+use super::Bench;
+
+/// Default perf-gate threshold: a case regressing by more than this
+/// fraction vs the committed baseline fails `qrr bench --check`.
+pub const DEFAULT_THRESHOLD: f64 = 0.25;
+
+// ------------------------------------------------------------- kernels
+
+/// Register the SVD-engine cases shared by the `kernels` suite and the
+/// `fig1_spectrum` bench (same gradient-shaped 200×784 matrix).
+pub fn svd_engine_cases(suite: &mut Suite) {
+    let mut rng = Rng::new(7);
+    let g = Tensor::randn(&[200, 784], &mut rng);
+    for k in [20usize, 60] {
+        suite.case(&format!("svd/randomized_k{k}_200x784"), None, || {
+            svd_truncated(
+                &g,
+                k,
+                SvdMethod::Randomized { oversample: 8, power_iters: 2, seed: 1 },
+            )
+        });
+    }
+    suite.case("svd/compress_p0.3_200x784", None, || {
+        compress_svd(&g, 60, SvdMethod::Auto)
+    });
+}
+
+/// Register every `kernels` case: the micro-benchmarks of each hot-path
+/// primitive at the model's real shapes.
+pub fn kernel_cases(suite: &mut Suite) {
+    let mut rng = Rng::new(7);
+
+    // GEMM at the MLP's shapes, plus the transpose-variant kernels
+    for &(m, k, n, tag) in &[
+        (512usize, 784usize, 200usize, "fc1_fwd"),
+        (200, 512, 784, "fc1_bwd"),
+        (512, 200, 10, "fc2_fwd"),
+    ] {
+        let a = Tensor::randn(&[m, k], &mut rng);
+        let b = Tensor::randn(&[k, n], &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        suite.case(&format!("gemm/{tag}_{m}x{k}x{n}"), Some(flops), || matmul(&a, &b));
+    }
+    {
+        let a = Tensor::randn(&[200, 784], &mut rng);
+        let x = Tensor::randn(&[784], &mut rng);
+        suite.case("gemm/matvec_200x784", Some(2.0 * (200 * 784) as f64), || {
+            matvec(&a, &x)
+        });
+    }
+
+    // QR on the randomized-SVD intermediate shapes
+    let tall = Tensor::randn(&[784, 68], &mut rng);
+    suite.case("qr/thin_784x68", None, || qr_thin(&tall));
+    let mid = Tensor::randn(&[200, 68], &mut rng);
+    suite.case("qr/thin_200x68", None, || qr_thin(&mid));
+
+    // SVD engines on the MLP's big gradient
+    svd_engine_cases(suite);
+
+    // Tucker on the paper's conv shapes
+    let conv = Tensor::randn(&[32, 16, 3, 3], &mut rng);
+    let ranks = tucker_ranks(&[32, 16, 3, 3], 0.3);
+    suite.case("tucker/compress_p0.3_32x16x3x3", None, || {
+        compress_tucker(&conv, &ranks, SvdMethod::Auto)
+    });
+    let conv_big = Tensor::randn(&[128, 64, 3, 3], &mut rng);
+    let ranks_big = tucker_ranks(&[128, 64, 3, 3], 0.3);
+    suite.case("tucker/compress_p0.3_128x64x3x3", None, || {
+        compress_tucker(&conv_big, &ranks_big, SvdMethod::Auto)
+    });
+
+    // LAQ quantizer + bit packing on the full MLP gradient length
+    let n = 159_010;
+    let flat = Tensor::randn(&[n], &mut rng);
+    let prev = Tensor::zeros(&[n]);
+    suite.case("quant/laq_beta8_159k", Some(n as f64), || quantize(&flat, &prev, 8));
+    let codes: Vec<u32> = (0..n).map(|i| (i % 256) as u32).collect();
+    suite.case("quant/pack_beta8_159k", Some(n as f64), || pack_codes(&codes, 8));
+    let packed = pack_codes(&codes, 8);
+    suite.case("quant/unpack_beta8_159k", Some(n as f64), || {
+        unpack_codes(&packed, n, 8)
+    });
+
+    // wire encode/decode across all four entry kinds
+    let shapes = vec![vec![200usize, 784], vec![200], vec![10, 200], vec![10]];
+    let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+    wire_cases(suite, "sgd_mlp", &ClientUpdate::Sgd { grads: grads.clone() });
+    let slaq_params = grads
+        .iter()
+        .map(|g| quantize(g, &Tensor::zeros(g.shape()), 8).0)
+        .collect();
+    wire_cases(
+        suite,
+        "slaq_mlp",
+        &ClientUpdate::Slaq { msg: SlaqMsg { params: slaq_params } },
+    );
+    let mut svd_codec = ClientCodec::new(&[vec![200, 784]], QrrConfig::with_p(0.2));
+    wire_cases(
+        suite,
+        "qrr_svd",
+        &ClientUpdate::Qrr { msgs: svd_codec.encode(std::slice::from_ref(&grads[0])) },
+    );
+    let conv_shapes = vec![vec![32usize, 16, 3, 3]];
+    let conv_grad = vec![Tensor::randn(&[32, 16, 3, 3], &mut rng)];
+    let mut tucker_codec = ClientCodec::new(&conv_shapes, QrrConfig::with_p(0.3));
+    wire_cases(
+        suite,
+        "qrr_tucker",
+        &ClientUpdate::Qrr { msgs: tucker_codec.encode(&conv_grad) },
+    );
+
+    // full QRR client encode / server decode (MLP shapes, p=0.2),
+    // serial and fanned over the pool
+    let mut codec = ClientCodec::new(&shapes, QrrConfig::with_p(0.2));
+    suite.case("qrr/encode_mlp_p0.2", None, || codec.encode(&grads));
+    let pool = crate::exec::ThreadPool::default_size();
+    let mut codec_pooled = ClientCodec::new(&shapes, QrrConfig::with_p(0.2));
+    suite.case("qrr/encode_mlp_p0.2_pooled", None, || {
+        codec_pooled.encode_on(&grads, &pool)
+    });
+    let mut enc = ClientCodec::new(&shapes, QrrConfig::with_p(0.2));
+    let msgs = enc.encode(&grads);
+    let mut dec = ServerCodec::new(&shapes, QrrConfig::with_p(0.2));
+    suite.case("qrr/decode_mlp_p0.2", None, || dec.decode(&msgs));
+    let mut dec_pooled = ServerCodec::new(&shapes, QrrConfig::with_p(0.2));
+    suite.case("qrr/decode_mlp_p0.2_pooled", None, || {
+        dec_pooled.decode_on(&msgs, &pool)
+    });
+
+    // native model grad step (the L3-side compute baseline)
+    let model = NativeModel::new(ModelKind::Mlp);
+    let spec = ModelSpec::new(ModelKind::Mlp);
+    let params = spec.init_params(1);
+    let x = Tensor::randn(&[128, 784], &mut rng);
+    let y: Vec<u32> = (0..128).map(|i| (i % 10) as u32).collect();
+    suite.case("model/mlp_grad_b128", None, || model.loss_grad(&params, &x, &y));
+}
+
+/// Encode + decode cases for one wire entry kind. The encode case runs
+/// through [`Encoder::encode_into`] with a persistent buffer — the
+/// zero-allocation reuse path (the round loop itself takes the
+/// one-exact-allocation [`Encoder::new`] path, since each upload owns
+/// its bytes).
+fn wire_cases(suite: &mut Suite, tag: &str, update: &ClientUpdate) {
+    let bytes_per = (update.payload_bits() / 8) as f64;
+    let mut buf = Vec::new();
+    suite.case(&format!("wire/encode_{tag}"), Some(bytes_per), || {
+        Encoder::encode_into(update, 0, 0, &mut buf);
+    });
+    let bytes = Encoder::new(update, 0, 0);
+    suite.case(&format!("wire/decode_{tag}"), Some(bytes_per), || {
+        Decoder::decode(&bytes).unwrap()
+    });
+}
+
+// --------------------------------------------------------------- round
+
+/// Register the `round` suite: one case per scheme × participation, each
+/// measuring a full `FlSession::step` (broadcast → parallel client
+/// compute → transport → decode → aggregate → descent) on the in-proc
+/// transport at a reduced-but-real scale.
+pub fn round_cases(suite: &mut Suite) {
+    let schemes = [
+        ("sgd", SchemeConfig::Sgd),
+        ("slaq", SchemeConfig::Slaq),
+        ("qrr_p0.2", SchemeConfig::Qrr(PPolicy::Fixed(0.2))),
+    ];
+    let parts = [
+        ("full", ParticipationConfig::Full),
+        ("uniform0.5", ParticipationConfig::Uniform { fraction: 0.5 }),
+    ];
+    for (s_label, scheme) in schemes {
+        for (p_label, participation) in parts {
+            let mut cfg = ExperimentConfig::table1_default();
+            cfg.scheme = scheme;
+            cfg.participation = participation;
+            cfg.clients = 4;
+            cfg.batch = 16;
+            cfg.train_n = 512;
+            cfg.test_n = 64;
+            cfg.eval_every = u64::MAX; // never evaluate inside the bench
+            cfg.lr_schedule = vec![(0, 0.01)];
+            let mut session = FlSessionBuilder::new(&cfg)
+                .quiet()
+                .build()
+                .expect("bench session");
+            let mut it = 0u64;
+            suite.case(&format!("round/{s_label}/{p_label}"), Some(1.0), move || {
+                session.step(it).expect("bench step");
+                it += 1;
+            });
+        }
+    }
+}
+
+// ------------------------------------------------- shared table runner
+
+/// The paper's lineup for tables I & II.
+pub fn fixed_p_lineup() -> Vec<SchemeConfig> {
+    vec![
+        SchemeConfig::Sgd,
+        SchemeConfig::Slaq,
+        SchemeConfig::Qrr(PPolicy::Fixed(0.3)),
+        SchemeConfig::Qrr(PPolicy::Fixed(0.2)),
+        SchemeConfig::Qrr(PPolicy::Fixed(0.1)),
+    ]
+}
+
+/// Reduced-scale run of one table's scheme lineup through the suite
+/// runner; prints timings + the paper-shaped markdown table and the
+/// QRR/SGD bit ratios. Scale with `QRR_BENCH_ITERS` (default 40).
+pub fn run_table_bench(name: &str, base: ExperimentConfig, schemes: &[SchemeConfig]) {
+    let iters: u64 = std::env::var("QRR_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    let mut suite = Suite::new(name, Bench::from_env());
+    let mut rows: Vec<TableRow> = Vec::new();
+    println!("== {name} (reduced: {iters} iterations; QRR_BENCH_ITERS to change) ==");
+    for &scheme in schemes {
+        let mut cfg = base.clone();
+        cfg.scheme = scheme;
+        cfg.iters = iters;
+        cfg.eval_every = (iters / 4).max(1);
+        let (report, timing) = suite.once(&format!("{name}/{}", scheme.label()), || {
+            FlSessionBuilder::new(&cfg)
+                .build()
+                .expect("session")
+                .run()
+                .expect("run")
+        });
+        println!(
+            "    {:>10.2} ms/iter",
+            timing.median.as_secs_f64() * 1e3 / iters as f64
+        );
+        rows.push(report.history.table_row());
+    }
+    println!("\n{}", markdown_table(&rows));
+    if let Some(sgd) = rows.iter().find(|r| r.algorithm == "SGD") {
+        for r in rows.iter().filter(|r| r.algorithm.starts_with("QRR")) {
+            println!(
+                "{}: {:.2}% of SGD bits, accuracy {:+.2}%",
+                r.algorithm,
+                100.0 * r.bits as f64 / sgd.bits as f64,
+                100.0 * (r.accuracy - sgd.accuracy)
+            );
+        }
+    }
+    println!();
+    maybe_write_json(&suite.finish());
+}
+
+/// Run one standalone registry as a `cargo bench` binary would: build
+/// the sampler from the env, execute the cases, optionally emit JSON.
+pub fn run_standalone(name: &str, cases: impl FnOnce(&mut Suite)) -> SuiteReport {
+    let mut suite = Suite::new(name, Bench::from_env());
+    cases(&mut suite);
+    let report = suite.finish();
+    maybe_write_json(&report);
+    report
+}
+
+/// Write `BENCH_<suite>.json` into `$QRR_BENCH_JSON` (a directory) when
+/// that env var is set — the opt-in JSON trail for the `cargo bench`
+/// binaries; `qrr bench` writes unconditionally.
+pub fn maybe_write_json(report: &SuiteReport) {
+    if let Ok(dir) = std::env::var("QRR_BENCH_JSON") {
+        let path = format!("{}/BENCH_{}.json", dir, report.suite);
+        let write = || -> anyhow::Result<()> {
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| anyhow::anyhow!("creating QRR_BENCH_JSON dir {dir}: {e}"))?;
+            report.save(&path)
+        };
+        match write() {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("warning: {e}"),
+        }
+    }
+}
+
+// ----------------------------------------------------------------- cli
+
+/// Dispatch `qrr bench [kernels|round|all] [--fast] [--out DIR]
+/// [--check] [--threshold PCT]`.
+///
+/// Writes `BENCH_<suite>.json` into `--out` (default `.`). With
+/// `--check`, the committed baseline stays untouched: the current run
+/// is written next to it as `BENCH_<suite>.current.json`, per-case
+/// deltas are reported, and the command exits non-zero if any case
+/// regressed by more than the threshold (default 25%) — so a failing
+/// gate never destroys the numbers it failed against. A missing
+/// baseline bootstraps (the current run is recorded as the baseline
+/// and the gate passes); an unreadable baseline is a hard error, not a
+/// silent bootstrap.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let fast = args.has_flag("fast") || std::env::var("QRR_BENCH_FAST").is_ok();
+    let out_dir = args.get("out").unwrap_or(".");
+    let check = args.has_flag("check");
+    let threshold = args
+        .get_parsed::<f64>("threshold")?
+        .map(|pct| pct / 100.0)
+        .unwrap_or(DEFAULT_THRESHOLD);
+    let names: Vec<&str> = match which {
+        "kernels" => vec!["kernels"],
+        "round" => vec!["round"],
+        "all" => vec!["kernels", "round"],
+        other => anyhow::bail!("unknown bench suite {other:?} (kernels|round|all)"),
+    };
+
+    std::fs::create_dir_all(out_dir)
+        .map_err(|e| anyhow::anyhow!("creating --out {out_dir}: {e}"))?;
+    let mut regressed: Vec<String> = Vec::new();
+    for name in names {
+        let bench = if fast { Bench::fast() } else { Bench::default() };
+        println!(
+            "== qrr bench: {name} ({} mode, {} threads) ==",
+            if fast { "fast" } else { "full" },
+            crate::exec::default_threads()
+        );
+        let mut suite = Suite::new(name, bench);
+        match name {
+            "kernels" => kernel_cases(&mut suite),
+            "round" => round_cases(&mut suite),
+            _ => unreachable!(),
+        }
+        let report = suite.finish();
+        let path = format!("{out_dir}/BENCH_{name}.json");
+        if !check {
+            report.save(&path)?;
+            println!("wrote {path}");
+        } else if !std::path::Path::new(&path).exists() {
+            report.save(&path)?;
+            println!("no baseline at {path}; this run recorded as the new baseline");
+        } else {
+            // a present-but-unreadable baseline must fail the gate
+            // loudly instead of being silently replaced
+            let base = SuiteReport::load(&path)?;
+            let current = format!("{out_dir}/BENCH_{name}.current.json");
+            report.save(&current)?;
+            println!("wrote {current} (baseline {path} untouched)");
+            if base.mode != report.mode {
+                println!(
+                    "note: baseline mode {:?} != current mode {:?}",
+                    base.mode, report.mode
+                );
+            }
+            println!(
+                "-- {name} vs committed baseline (threshold {:.0}%) --",
+                100.0 * threshold
+            );
+            for d in report.diff(&base, threshold) {
+                println!("{}", d.line());
+                if d.class == DeltaClass::Regressed {
+                    regressed.push(d.name);
+                }
+            }
+        }
+        println!();
+    }
+    if !regressed.is_empty() {
+        anyhow::bail!(
+            "perf gate: {} case(s) regressed more than {:.0}% vs the committed baseline: {}",
+            regressed.len(),
+            100.0 * threshold,
+            regressed.join(", ")
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_suite_runs_one_fast_grid_cell() {
+        // smoke: one scheme × participation cell steps without error
+        // under the fast sampler (the full grid is exercised by CI)
+        let mut suite = Suite::new(
+            "round_smoke",
+            Bench {
+                warmup: std::time::Duration::from_millis(1),
+                budget: std::time::Duration::from_millis(10),
+                max_samples: 2,
+                ..Bench::fast()
+            },
+        );
+        let mut cfg = ExperimentConfig::table1_default();
+        cfg.scheme = SchemeConfig::Sgd;
+        cfg.clients = 2;
+        cfg.batch = 8;
+        cfg.train_n = 64;
+        cfg.test_n = 16;
+        cfg.eval_every = u64::MAX;
+        cfg.lr_schedule = vec![(0, 0.01)];
+        let mut session = FlSessionBuilder::new(&cfg).quiet().build().unwrap();
+        let mut it = 0u64;
+        let r = suite.case("round_smoke/sgd/full", Some(1.0), move || {
+            session.step(it).unwrap();
+            it += 1;
+        });
+        assert!(r.median > std::time::Duration::ZERO);
+        let report = suite.finish();
+        assert_eq!(report.suite, "round_smoke");
+        assert_eq!(report.cases.len(), 1);
+    }
+
+    #[test]
+    fn cli_rejects_unknown_suite() {
+        let args = Args::parse(["bench".to_string(), "nope".to_string()]);
+        assert!(run_cli(&args).is_err());
+    }
+}

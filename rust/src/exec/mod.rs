@@ -9,16 +9,26 @@ mod pool;
 
 pub use pool::{parallel_for, ThreadPool};
 
-/// Number of worker threads to use by default: `QRR_THREADS` env var or
-/// available parallelism, capped at 16.
+use std::sync::OnceLock;
+
+/// Number of worker threads to use by default: the `QRR_THREADS` env
+/// override or available parallelism, capped at 16.
+///
+/// The environment is read **once per process** and cached — every
+/// construction site (the session pool, the GEMM row split, ad-hoc
+/// `parallel_for` calls) sees the same value, and the hot path never
+/// pays for an env lookup (DESIGN.md §4).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("QRR_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("QRR_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    })
 }

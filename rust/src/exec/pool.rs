@@ -1,17 +1,28 @@
 //! A fixed-size thread pool with scoped parallel-for.
 //!
 //! Design: long-lived workers block on an injector channel of boxed
-//! closures. `scope`-style safety is achieved the simple way — jobs are
-//! `'static`, and `parallel_for` wraps borrowed data in `Arc` + index
-//! partitioning, joining before return so borrows stay sound via
-//! `std::thread::scope` instead when lifetimes are needed.
+//! closures. [`ThreadPool::for_each`] runs *borrowing* closures on those
+//! persistent workers: the borrow is lifetime-erased for the duration of
+//! the call and the caller blocks until every task has finished, so the
+//! round loop pays the thread-spawn cost once per session instead of
+//! once per round.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// First panic payload captured by a parallel section.
+type PanicSlot = Mutex<Option<Box<dyn Any + Send>>>;
+
+/// Name prefix of pool workers; used to detect (and serialize) nested
+/// `for_each` calls so a task running on the pool can never deadlock by
+/// waiting for the pool.
+const WORKER_NAME_PREFIX: &str = "qrr-worker-";
 
 /// Fixed-size pool of worker threads executing boxed jobs.
 pub struct ThreadPool {
@@ -33,7 +44,7 @@ impl ThreadPool {
             let pending = Arc::clone(&pending);
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("qrr-worker-{i}"))
+                    .name(format!("{WORKER_NAME_PREFIX}{i}"))
                     .spawn(move || loop {
                         let job = {
                             let guard = rx.lock().unwrap();
@@ -41,7 +52,10 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
+                                // a panicking job must not skip the
+                                // pending decrement below, or wait_idle
+                                // (and Drop) would block forever
+                                let _ = catch_unwind(AssertUnwindSafe(job));
                                 let (lock, cv) = &*pending;
                                 let mut p = lock.lock().unwrap();
                                 *p -= 1;
@@ -90,9 +104,18 @@ impl ThreadPool {
         }
     }
 
-    /// Run `f(i)` for `i in 0..n` across the pool and wait. `f` may borrow
-    /// from the caller: uses `std::thread::scope` internally when the pool
-    /// is bypassed (n small), otherwise chunks indices over workers.
+    /// Run `f(i)` for `i in 0..n` across the **persistent** workers and
+    /// wait. `f` may borrow from the caller: tasks reference it only
+    /// while this call blocks, and the calling thread drains indices
+    /// alongside the workers. A panic in any `f(i)` is re-raised here —
+    /// with its original payload — after all tasks have drained (no
+    /// deadlock, no lost worker).
+    ///
+    /// Called from inside a pool task, this degrades to a serial loop —
+    /// a task must never block waiting on its own pool. The final wait
+    /// uses the pool-wide idle latch, so interleaving `for_each` with
+    /// long-running [`Self::submit`] jobs from other call sites extends
+    /// the wait to those jobs too; keep a pool to one usage pattern.
     pub fn for_each<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Send + Sync,
@@ -101,18 +124,67 @@ impl ThreadPool {
             return;
         }
         let threads = self.size().min(n);
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                });
+        let on_worker = std::thread::current()
+            .name()
+            .is_some_and(|name| name.starts_with(WORKER_NAME_PREFIX));
+        if threads <= 1 || n == 1 || on_worker {
+            for i in 0..n {
+                f(i);
             }
-        });
+            return;
+        }
+        let next = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let payload: Arc<PanicSlot> = Arc::new(Mutex::new(None));
+        let f_ref: &(dyn Fn(usize) + Send + Sync) = &f;
+        // SAFETY: the erased reference is only used by tasks submitted
+        // below, and `wait_idle` blocks until every one of them has
+        // completed before this frame (and therefore `f`) is released.
+        let f_static: &'static (dyn Fn(usize) + Send + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Send + Sync),
+                &'static (dyn Fn(usize) + Send + Sync),
+            >(f_ref)
+        };
+        // threads - 1 helper tasks; the calling thread works too.
+        for _ in 1..threads {
+            let next = Arc::clone(&next);
+            let panicked = Arc::clone(&panicked);
+            let payload = Arc::clone(&payload);
+            self.submit(move || drain_indices(f_static, &next, n, &panicked, &payload));
+        }
+        drain_indices(f_ref, &next, n, &panicked, &payload);
+        self.wait_idle();
+        if let Some(p) = payload.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Claim indices from the shared counter until exhausted (or a sibling
+/// panicked). Panics are caught so the worker survives and the latch in
+/// the pool still reaches zero; the first payload is stashed for the
+/// caller to re-raise.
+fn drain_indices(
+    f: &(dyn Fn(usize) + Send + Sync),
+    next: &AtomicUsize,
+    n: usize,
+    panicked: &AtomicBool,
+    payload: &PanicSlot,
+) {
+    loop {
+        if panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            panicked.store(true, Ordering::SeqCst);
+            payload.lock().unwrap().get_or_insert(p);
+            break;
+        }
     }
 }
 
@@ -127,7 +199,8 @@ impl Drop for ThreadPool {
 }
 
 /// Standalone scoped parallel-for over `0..n` with up to `threads`
-/// OS threads (spawned ad hoc; fine for coarse-grained work).
+/// OS threads (spawned ad hoc; fine for coarse-grained work without a
+/// long-lived pool in scope, e.g. the GEMM row split).
 pub fn parallel_for<F>(threads: usize, n: usize, f: F)
 where
     F: Fn(usize) + Send + Sync,
@@ -182,6 +255,74 @@ mod tests {
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
         }
+    }
+
+    #[test]
+    fn for_each_reuses_workers_across_calls() {
+        // the hot-path pattern: many small parallel sections on one pool
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        for _round in 0..50 {
+            pool.for_each(16, |i| {
+                total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 50 * (16 * 17 / 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn for_each_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.for_each(64, |i| {
+            if i == 3 {
+                panic!("task 3 failed");
+            }
+        });
+    }
+
+    #[test]
+    fn for_each_preserves_panic_payload() {
+        let pool = ThreadPool::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each(32, |i| {
+                if i == 5 {
+                    panic!("boom at {i}");
+                }
+            });
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("boom at 5"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn submitted_job_panic_does_not_wedge_the_pool() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("job panic"));
+        pool.wait_idle(); // must not hang
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1, "worker died after panic");
+    }
+
+    #[test]
+    fn nested_for_each_serializes_instead_of_deadlocking() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let inner = Arc::clone(&pool);
+        let count = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&count);
+        pool.submit(move || {
+            inner.for_each(10, |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::SeqCst), 10);
     }
 
     #[test]

@@ -1,14 +1,22 @@
 //! The FL server: holds the central model, per-client scheme mirrors and
 //! applies the distributed gradient-descent step (paper eq. (2)).
 
+use std::sync::{Arc, Mutex};
+
+use crate::exec::ThreadPool;
 use crate::net::{ClientUpdate, Decoder};
 use crate::tensor::Tensor;
 
 use super::scheme::ServerScheme;
 
 /// Aggregation server.
+///
+/// Parameters live behind an [`Arc`] so the per-round broadcast is a
+/// reference-count bump instead of a full model copy; the descent step
+/// mutates in place once the round's readers have dropped their handles
+/// (DESIGN.md §5).
 pub struct FlServer {
-    params: Vec<Tensor>,
+    params: Arc<Vec<Tensor>>,
     per_client: Vec<Box<dyn ServerScheme>>,
     alpha: f32,
 }
@@ -16,12 +24,19 @@ pub struct FlServer {
 impl FlServer {
     /// New server with initial parameters and one scheme mirror per client.
     pub fn new(params: Vec<Tensor>, per_client: Vec<Box<dyn ServerScheme>>, alpha: f32) -> Self {
-        FlServer { params, per_client, alpha }
+        FlServer { params: Arc::new(params), per_client, alpha }
     }
 
     /// Current central parameters (broadcast to clients each round).
     pub fn params(&self) -> &[Tensor] {
-        &self.params
+        self.params.as_slice()
+    }
+
+    /// Shared handle to the central parameters — the zero-copy broadcast.
+    /// Drop it before the next [`Self::apply_aggregate`], or that step
+    /// pays a copy-on-write clone of the whole model.
+    pub fn params_shared(&self) -> Arc<Vec<Tensor>> {
+        Arc::clone(&self.params)
     }
 
     /// Change the learning rate (experiment 3 decays it mid-run).
@@ -52,12 +67,38 @@ impl FlServer {
             .collect()
     }
 
+    /// [`Self::absorb_updates`] fanned out over `pool`: each client's
+    /// decode + reconstruction (the SVD/Tucker ℂ⁻¹ matmuls) runs as its
+    /// own task. Scheme mirrors are independent per client, so this is
+    /// exactly the serial result in a deterministic slot order.
+    pub fn absorb_updates_on(
+        &mut self,
+        updates: &[Option<ClientUpdate>],
+        pool: &ThreadPool,
+    ) -> Vec<Vec<Tensor>> {
+        assert_eq!(updates.len(), self.per_client.len(), "one slot per client");
+        let n = self.per_client.len();
+        let mut out: Vec<Vec<Tensor>> = (0..n).map(|_| Vec::new()).collect();
+        {
+            let slots: Vec<Mutex<&mut Vec<Tensor>>> = out.iter_mut().map(Mutex::new).collect();
+            let schemes: Vec<Mutex<&mut Box<dyn ServerScheme>>> =
+                self.per_client.iter_mut().map(Mutex::new).collect();
+            pool.for_each(n, |i| {
+                let mut scheme = schemes[i].lock().unwrap();
+                **slots[i].lock().unwrap() = scheme.absorb(updates[i].as_ref());
+            });
+        }
+        out
+    }
+
     /// Apply the descent step θ^{k+1} = θ^k − α·agg (paper eq. (2) once
     /// `agg` is the eq.-(2) sum). Returns the ℓ2 norm of `agg` (a column
     /// in the paper's tables).
     pub fn apply_aggregate(&mut self, agg: &[Tensor]) -> f64 {
         let norm2: f64 = agg.iter().map(crate::tensor::sq_norm).sum();
-        for (p, g) in self.params.iter_mut().zip(agg.iter()) {
+        // uniquely owned between rounds -> in-place, no copy
+        let params = Arc::make_mut(&mut self.params);
+        for (p, g) in params.iter_mut().zip(agg.iter()) {
             p.axpy(-self.alpha, g);
         }
         norm2.sqrt()
@@ -149,6 +190,63 @@ mod tests {
         let mut server = FlServer::new(params, per_client, 0.1);
         let res = server.aggregate_wire(&[Some(vec![1, 2, 3])]);
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn parallel_absorb_matches_serial() {
+        let shapes = shapes();
+        let mk = || {
+            FlServer::new(
+                shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+                vec![
+                    make_server_scheme(SchemeKind::Sgd, &shapes, 8),
+                    make_server_scheme(SchemeKind::Sgd, &shapes, 8),
+                    make_server_scheme(SchemeKind::Sgd, &shapes, 8),
+                ],
+                0.1,
+            )
+        };
+        let mut rng = Rng::new(122);
+        let grads = |rng: &mut Rng| -> Vec<Tensor> {
+            shapes.iter().map(|s| Tensor::randn(s, rng)).collect()
+        };
+        let updates = vec![
+            Some(ClientUpdate::Sgd { grads: grads(&mut rng) }),
+            None,
+            Some(ClientUpdate::Sgd { grads: grads(&mut rng) }),
+        ];
+        let serial = mk().absorb_updates(&updates);
+        let pool = crate::exec::ThreadPool::new(4);
+        let parallel = mk().absorb_updates_on(&updates, &pool);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!(x.rel_err(y) < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_handle_is_zero_copy_until_step() {
+        let shapes = shapes();
+        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let per_client = vec![make_server_scheme(SchemeKind::Sgd, &shapes, 8)];
+        let mut server = FlServer::new(params, per_client, 0.5);
+        let handle = server.params_shared();
+        assert!(std::ptr::eq(handle.as_slice().as_ptr(), server.params().as_ptr()));
+        // stepping while a reader holds the broadcast clones instead of
+        // mutating under it
+        let mut rng = Rng::new(123);
+        let g: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        server.apply_aggregate(&g);
+        assert_eq!(handle[0].fro_norm(), 0.0, "reader saw the step");
+        assert!(server.params()[0].fro_norm() > 0.0, "server did not step");
+        drop(handle);
+        // with no readers the next step mutates in place (same slice)
+        let before = server.params().as_ptr();
+        server.apply_aggregate(&g);
+        assert!(std::ptr::eq(before, server.params().as_ptr()));
     }
 
     #[test]

@@ -29,6 +29,7 @@ use anyhow::Result;
 
 use crate::config::{AggregationConfig, Backend, ExperimentConfig, ParticipationConfig};
 use crate::data::{self, Dataset};
+use crate::exec::ThreadPool;
 use crate::model::{native::NativeModel, ModelOps, ModelSpec};
 use crate::net::transport::{InProcTransport, Transport, TransportError};
 use crate::net::{ClientUpdate, Decoder, LinkModel};
@@ -429,6 +430,7 @@ pub struct FlSessionBuilder {
     recv_timeout: Duration,
     sinks: Vec<Box<dyn MetricsSink>>,
     quiet: bool,
+    threads: Option<usize>,
 }
 
 impl FlSessionBuilder {
@@ -443,6 +445,7 @@ impl FlSessionBuilder {
             recv_timeout: Duration::from_millis(250),
             sinks: Vec::new(),
             quiet: false,
+            threads: None,
         }
     }
 
@@ -487,6 +490,14 @@ impl FlSessionBuilder {
     /// Drop the default [`LogSink`].
     pub fn quiet(mut self) -> Self {
         self.quiet = true;
+        self
+    }
+
+    /// Size of the session's worker pool (client fan-out, server decode,
+    /// evaluation). Default: [`crate::exec::default_threads`], i.e. the
+    /// `QRR_THREADS` env override or available parallelism.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
         self
     }
 
@@ -574,6 +585,7 @@ impl FlSessionBuilder {
         let history = History::new(cfg.scheme.label());
         let round_rng = Rng::new(cfg.seed ^ 0xFAC7);
         let cfg_clients = cfg.clients;
+        let pool = ThreadPool::new(self.threads.unwrap_or_else(crate::exec::default_threads));
         Ok(FlSession {
             cfg,
             clients,
@@ -592,6 +604,7 @@ impl FlSessionBuilder {
             round_rng,
             cum_bits: 0,
             client_rounds: vec![0; cfg_clients],
+            pool,
         })
     }
 }
@@ -621,6 +634,9 @@ pub struct FlSession {
     /// how many rounds each client has computed (mirrors the client's
     /// wire `round` counter, used to reject stale/duplicate frames)
     client_rounds: Vec<u64>,
+    /// long-lived workers shared by the client fan-out, the server-side
+    /// decode and evaluation — spawned once per session, not per round
+    pool: ThreadPool,
 }
 
 impl FlSession {
@@ -686,15 +702,17 @@ impl FlSession {
             self.server.set_alpha(alpha);
         }
 
-        // broadcast: clients read the current central parameters
-        let weights: Vec<Tensor> = self.server.params().to_vec();
+        // broadcast: clients share a handle to the central parameters —
+        // a refcount bump, not a model copy
+        let weights = self.server.params_shared();
 
         // participation: who computes this round
         let n = self.clients.len();
         let active = self.participation.select(it, &self.links, &mut self.round_rng);
         debug_assert_eq!(active.len(), n);
 
-        // parallel client execution (selected clients only)
+        // parallel client execution (selected clients only) on the
+        // session's persistent worker pool
         let outputs: Vec<Option<ClientRoundOutput>> = {
             let mut slots: Vec<Option<ClientRoundOutput>> = (0..n).map(|_| None).collect();
             let weights = &weights;
@@ -703,17 +721,20 @@ impl FlSession {
             let client_cells: Vec<Mutex<&mut FlClient>> =
                 self.clients.iter_mut().map(Mutex::new).collect();
             let active = &active;
-            crate::exec::parallel_for(crate::exec::default_threads(), n, |i| {
+            self.pool.for_each(n, |i| {
                 if !active[i] {
                     return;
                 }
                 let mut client = client_cells[i].lock().unwrap();
-                let out = client.round(weights);
+                let out = client.round(weights.as_slice());
                 **slot_cells[i].lock().unwrap() = Some(out);
             });
             drop(client_cells);
             slots
         };
+        // release the broadcast handle so the descent step below mutates
+        // the parameters in place instead of copy-on-write cloning them
+        drop(weights);
 
         // the wire `round` each produced frame will carry: the client's
         // local round counter before this round's increment (it drifts
@@ -828,9 +849,9 @@ impl FlSession {
             }
         }
 
-        // server: per-client scheme absorption → pluggable aggregation →
-        // descent step
-        let contribs = self.server.absorb_updates(&updates);
+        // server: per-client scheme absorption (decode + ℂ⁻¹ reconstruct,
+        // fanned out over the pool) → pluggable aggregation → descent step
+        let contribs = self.server.absorb_updates_on(&updates, &self.pool);
         let agg = self.aggregation.combine(contribs, &delivered, &self.shard_sizes);
         let grad_norm = self.server.apply_aggregate(&agg);
 
@@ -856,15 +877,16 @@ impl FlSession {
 
     /// Evaluate the central model on the test set and record the point.
     fn evaluate(&mut self, it: u64) {
-        let params = self.server.params().to_vec();
+        let params = self.server.params_shared();
         let chunk = 512usize;
         let chunks: Vec<(Tensor, Vec<u32>)> = self.test.chunks(chunk).collect();
         let results: Vec<Mutex<(f64, usize, usize)>> =
             chunks.iter().map(|_| Mutex::new((0.0, 0, 0))).collect();
         let model = &self.model;
-        crate::exec::parallel_for(crate::exec::default_threads(), chunks.len(), |i| {
+        let params = &params;
+        self.pool.for_each(chunks.len(), |i| {
             let (x, y) = &chunks[i];
-            let (loss, correct) = model.eval(&params, x, y);
+            let (loss, correct) = model.eval(params.as_slice(), x, y);
             *results[i].lock().unwrap() = (loss as f64 * y.len() as f64, correct, y.len());
         });
         let (mut loss_sum, mut correct, mut total) = (0f64, 0usize, 0usize);
@@ -1011,6 +1033,32 @@ mod tests {
         assert_eq!(r1.history.total_bits(), r2.history.total_bits());
         let a = r1.history.evals.last().unwrap();
         let b = r2.history.evals.last().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn session_results_independent_of_thread_count() {
+        // the pooled fan-out writes into per-client slots and aggregates
+        // in slot order, so timings must never change the math
+        let cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        let r1 = FlSessionBuilder::new(&cfg)
+            .threads(1)
+            .quiet()
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let r4 = FlSessionBuilder::new(&cfg)
+            .threads(4)
+            .quiet()
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r1.history.total_bits(), r4.history.total_bits());
+        let a = r1.history.evals.last().unwrap();
+        let b = r4.history.evals.last().unwrap();
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.accuracy, b.accuracy);
     }

@@ -34,34 +34,47 @@ impl Svd {
     pub fn reconstruct(&self) -> Tensor {
         let k = self.s.len();
         let (m, n) = (self.u.shape()[0], self.v.shape()[0]);
-        // scale columns of U by s, then multiply by Vᵀ
+        if k == 0 {
+            // rank-0 factorization: the zero matrix
+            return Tensor::zeros(&[m, n]);
+        }
+        // scale columns of U by s row-wise on the raw slice, then
+        // multiply by Vᵀ
         let mut us = self.u.clone();
-        for i in 0..m {
-            for j in 0..k {
-                let v = us.get2(i, j) * self.s[j];
-                us.set2(i, j, v);
+        {
+            let d = us.data_mut();
+            for row in d.chunks_exact_mut(k) {
+                for (x, &sig) in row.iter_mut().zip(self.s.iter()) {
+                    *x *= sig;
+                }
             }
         }
         super::matmul_nt(&us, &self.v).reshape(&[m, n])
     }
 
-    /// Truncate to the leading `k` components.
+    /// Truncate to the leading `k` components. Row-sliced copies: the
+    /// leading `k` columns of a row-major factor are a contiguous prefix
+    /// of each row.
     pub fn truncate(mut self, k: usize) -> Svd {
         let k = k.min(self.s.len());
-        let (m, n) = (self.u.shape()[0], self.v.shape()[0]);
         let old_k = self.s.len();
-        let mut u = Tensor::zeros(&[m, k]);
-        let mut v = Tensor::zeros(&[n, k]);
-        for i in 0..m {
-            for j in 0..k {
-                u.set2(i, j, self.u.data()[i * old_k + j]);
-            }
+        if k == old_k {
+            return self;
         }
-        for i in 0..n {
-            for j in 0..k {
-                v.set2(i, j, self.v.data()[i * old_k + j]);
+        let take_cols = |t: &Tensor, rows: usize| -> Tensor {
+            let mut out = Tensor::zeros(&[rows, k]);
+            {
+                let src = t.data();
+                let dst = out.data_mut();
+                for i in 0..rows {
+                    dst[i * k..(i + 1) * k].copy_from_slice(&src[i * old_k..i * old_k + k]);
+                }
             }
-        }
+            out
+        };
+        let (m, n) = (self.u.shape()[0], self.v.shape()[0]);
+        let u = take_cols(&self.u, m);
+        let v = take_cols(&self.v, n);
         self.s.truncate(k);
         Svd { u, s: self.s, v }
     }
@@ -411,6 +424,17 @@ mod tests {
         let svd = svd_jacobi(&a);
         assert!(svd.s.iter().all(|&s| s == 0.0));
         assert!(svd.reconstruct().fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn rank_zero_truncation_reconstructs_zeros() {
+        let mut rng = Rng::new(27);
+        let a = Tensor::randn(&[6, 4], &mut rng);
+        let svd = svd_jacobi(&a).truncate(0);
+        assert!(svd.s.is_empty());
+        let rec = svd.reconstruct();
+        assert_eq!(rec.shape(), &[6, 4]);
+        assert_eq!(rec.fro_norm(), 0.0);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! qrr exp <table1|table2|table3|fig1|overhead|all> [--iters N] […]
 //! qrr train --config cfg.json [--out DIR]
 //! qrr serve --addr 127.0.0.1:0 --model mlp --clients 3 --iters 5
+//! qrr bench [kernels|round|all] [--fast] [--check] [--out DIR]
 //! qrr info
 //! ```
 //!
@@ -31,6 +32,7 @@ fn run(args: &Args) -> Result<()> {
         "exp" => qrr::experiments::run_cli(args),
         "train" => cmd_train(args),
         "serve" => qrr::experiments::serve::run_cli(args),
+        "bench" => qrr::bench_util::suites::run_cli(args),
         "info" => cmd_info(),
         "" | "help" | "--help" => {
             print_help();
@@ -82,7 +84,18 @@ USAGE:
                                  id: table1 | table2 | table3 | fig1 | overhead | all
     qrr train --config <json>    run a single configured experiment
     qrr serve [options]          run the FL server+clients over real TCP
+    qrr bench [suite] [options]  run the perf suites, write BENCH_*.json
+                                 suite: kernels | round | all (default)
     qrr info                     toolchain / artifact status
+
+BENCH OPTIONS:
+    --fast            reduced sampling (the CI smoke settings)
+    --check           diff against the committed BENCH_*.json baseline
+                      and fail on any case regressing past the threshold
+    --threshold PCT   regression threshold in percent (default 25)
+    --out DIR         where BENCH_*.json live — both the baseline read
+                      by --check and the written output (default ".",
+                      the repo root with its committed baselines)
 
 COMMON OPTIONS (exp/train):
     --iters N         override iteration count (paper: 1000/2000)
@@ -100,7 +113,11 @@ COMMON OPTIONS (exp/train):
     --aggregation A   sum (paper eq. (2)) | weighted_mean (FedAvg)
 
 ENVIRONMENT:
-    QRR_THREADS       worker threads (default: cores, max 16)
+    QRR_THREADS       worker threads (default: cores, max 16; read once
+                      per process — sizes the session pool and kernels)
+    QRR_BENCH_FAST    reduced bench sampling (same as --fast)
+    QRR_BENCH_ITERS   iterations for the table benches (default 40)
+    QRR_BENCH_JSON    directory: cargo-bench binaries emit BENCH_*.json
     QRR_LOG           error|warn|info|debug|trace
     MNIST_DIR         real MNIST IDX files (else synthetic stream)
     CIFAR_DIR         real CIFAR-10 binaries (else synthetic stream)

@@ -84,6 +84,37 @@ impl ClientUpdate {
             ClientUpdate::Qrr { msgs } => msgs.iter().map(|m| m.wire_bits()).sum(),
         }
     }
+
+    /// Exact serialized size in bytes, mirroring [`Encoder::new`] byte
+    /// for byte. The encoder allocates this up front so a round's
+    /// serialize phase is a single allocation, never a growth series.
+    pub fn wire_len(&self) -> usize {
+        // magic u32 | version u8 | scheme u8 | client_id u32 | round u64
+        // | n_entries u32
+        const HEADER: usize = 4 + 1 + 1 + 4 + 8 + 4;
+        fn q_len(q: &Quantized) -> usize {
+            // radius f32 | beta u8 | len u64 | packed bytes
+            4 + 1 + 8 + q.packed.len()
+        }
+        let body: usize = match self {
+            ClientUpdate::Sgd { grads } => grads
+                .iter()
+                .map(|g| 1 + 1 + 4 * g.ndim() + 4 * g.len())
+                .sum(),
+            ClientUpdate::Slaq { msg } => msg.params.iter().map(|q| 1 + q_len(q)).sum(),
+            ClientUpdate::Qrr { msgs } => msgs
+                .iter()
+                .map(|m| match m {
+                    ParamMsg::Dense { q } => 1 + q_len(q),
+                    ParamMsg::Svd { u, s, v } => 1 + q_len(u) + q_len(s) + q_len(v),
+                    ParamMsg::Tucker { core, factors } => {
+                        1 + q_len(core) + 1 + factors.iter().map(q_len).sum::<usize>()
+                    }
+                })
+                .sum(),
+        };
+        HEADER + body
+    }
 }
 
 // ---------------------------------------------------------------- encoder
@@ -94,9 +125,32 @@ pub struct Encoder {
 }
 
 impl Encoder {
-    /// Start a message for `client_id` at `round`.
+    /// Serialize a message for `client_id` at `round` into a fresh,
+    /// exactly-sized buffer.
     pub fn new(update: &ClientUpdate, client_id: u32, round: u64) -> Vec<u8> {
-        let mut e = Encoder { buf: Vec::with_capacity(1024) };
+        let mut buf = Vec::new();
+        Self::encode_into(update, client_id, round, &mut buf);
+        buf
+    }
+
+    /// Serialize into `buf`, reusing its capacity (cleared first):
+    /// repeated encodes through a persistent buffer allocate nothing
+    /// once it has grown to the message size. The round loop itself
+    /// uses [`Encoder::new`] — its output is moved into the upload, so
+    /// it pays exactly one exact-size allocation per encode (see
+    /// [`ClientUpdate::wire_len`]); this entry point is for callers
+    /// that keep a buffer across encodes (benches, long-lived peers).
+    pub fn encode_into(update: &ClientUpdate, client_id: u32, round: u64, buf: &mut Vec<u8>) {
+        buf.clear();
+        buf.reserve_exact(update.wire_len());
+        let mut e = Encoder { buf: std::mem::take(buf) };
+        e.write_update(update, client_id, round);
+        debug_assert_eq!(e.buf.len(), update.wire_len(), "wire_len drifted from encoder");
+        *buf = e.buf;
+    }
+
+    fn write_update(&mut self, update: &ClientUpdate, client_id: u32, round: u64) {
+        let e = self;
         e.u32(MAGIC);
         e.u8(VERSION);
         e.u8(update.scheme_tag());
@@ -143,7 +197,6 @@ impl Encoder {
                 }
             }
         }
-        e.buf
     }
 
     fn u8(&mut self, v: u8) {
@@ -411,6 +464,22 @@ mod tests {
     }
 
     #[test]
+    fn encode_into_reuses_buffer_and_matches_fresh_encode() {
+        let mut rng = Rng::new(106);
+        let shapes = vec![vec![20, 30], vec![20]];
+        let mut codec = ClientCodec::new(&shapes, QrrConfig::with_p(0.3));
+        let mut buf = Vec::new();
+        for round in 0..5u64 {
+            let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+            let up = ClientUpdate::Qrr { msgs: codec.encode(&grads) };
+            Encoder::encode_into(&up, 7, round, &mut buf);
+            assert_eq!(buf, Encoder::new(&up, 7, round));
+            let dec = Decoder::decode(&buf).unwrap();
+            assert_eq!(dec.round, round);
+        }
+    }
+
+    #[test]
     fn corrupted_magic_rejected() {
         let mut rng = Rng::new(104);
         let up = ClientUpdate::Sgd { grads: vec![Tensor::randn(&[2, 2], &mut rng)] };
@@ -489,6 +558,7 @@ mod tests {
 
     fn assert_update_roundtrips(up: &ClientUpdate, client_id: u32, round: u64) {
         let bytes = Encoder::new(up, client_id, round);
+        assert_eq!(bytes.len(), up.wire_len(), "wire_len must be exact");
         let dec = Decoder::decode(&bytes).unwrap();
         assert_eq!(dec.client_id, client_id);
         assert_eq!(dec.round, round);

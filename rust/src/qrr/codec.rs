@@ -1,10 +1,23 @@
 //! Client/server codecs implementing QRR_c (paper eq. (19)) and the
 //! server-side inverse.
+//!
+//! Both directions come in a serial form (`encode`/`decode`) and a
+//! pool-backed per-layer form (`encode_on`/`decode_on`) that fans the
+//! independent parameter tensors out over an [`exec::ThreadPool`]
+//! (DESIGN.md §5). The quantizer underneath reuses thread-local code
+//! scratch, so neither form allocates intermediate code buffers in
+//! steady state.
+//!
+//! [`exec::ThreadPool`]: crate::exec::ThreadPool
+
+use std::sync::Mutex;
 
 use crate::compress::{
     compress_svd, compress_tucker, decompress_svd, decompress_tucker, svd_rank, tucker_ranks,
     SvdCompressed, TuckerCompressed,
 };
+use crate::exec::ThreadPool;
+use crate::linalg::SvdMethod;
 use crate::quant::{QuantState, Quantized};
 use crate::tensor::Tensor;
 
@@ -198,32 +211,59 @@ impl ClientCodec {
         self.states
             .iter_mut()
             .zip(grads.iter())
-            .map(|(st, g)| match st {
-                ParamState::Svd { u, s, v, nu, shape } => {
-                    debug_assert_eq!(g.shape(), &[shape.0, shape.1]);
-                    let c: SvdCompressed = compress_svd(g, *nu, method);
-                    let mu = u.quantize_update(&c.u, beta);
-                    let ms = s.quantize_update(&Tensor::vector(c.s.clone()), beta);
-                    let mv = v.quantize_update(&c.v, beta);
-                    ParamMsg::Svd { u: mu, s: ms, v: mv }
-                }
-                ParamState::Tucker { core, factors, ranks, shape } => {
-                    debug_assert_eq!(g.shape(), &shape[..]);
-                    let c: TuckerCompressed = compress_tucker(g, ranks, method);
-                    let mc = core.quantize_update(&c.core, beta);
-                    let mf = factors
-                        .iter_mut()
-                        .zip(c.factors.iter())
-                        .map(|(fs, f)| fs.quantize_update(f, beta))
-                        .collect();
-                    ParamMsg::Tucker { core: mc, factors: mf }
-                }
-                ParamState::Dense { q } => {
-                    let m = q.quantize_update(g, beta);
-                    ParamMsg::Dense { q: m }
-                }
-            })
+            .map(|(st, g)| encode_one(st, g, beta, method))
             .collect()
+    }
+
+    /// [`Self::encode`] with the per-parameter ℂ∘ℚ work (SVD/Tucker +
+    /// quantize) fanned out over `pool`. Identical output in the same
+    /// order; layers are independent, so this is a pure fan-out.
+    pub fn encode_on(&mut self, grads: &[Tensor], pool: &ThreadPool) -> Vec<ParamMsg> {
+        assert_eq!(grads.len(), self.states.len(), "gradient count mismatch");
+        let beta = self.cfg.beta;
+        let method = self.cfg.method;
+        let n = self.states.len();
+        let mut out: Vec<Option<ParamMsg>> = (0..n).map(|_| None).collect();
+        {
+            let slots: Vec<Mutex<&mut Option<ParamMsg>>> = out.iter_mut().map(Mutex::new).collect();
+            let states: Vec<Mutex<&mut ParamState>> =
+                self.states.iter_mut().map(Mutex::new).collect();
+            pool.for_each(n, |i| {
+                let mut st = states[i].lock().unwrap();
+                let msg = encode_one(&mut **st, &grads[i], beta, method);
+                **slots[i].lock().unwrap() = Some(msg);
+            });
+        }
+        out.into_iter().map(|m| m.expect("encoded")).collect()
+    }
+}
+
+/// Encode one parameter tensor against its mirrored state.
+fn encode_one(st: &mut ParamState, g: &Tensor, beta: u8, method: SvdMethod) -> ParamMsg {
+    match st {
+        ParamState::Svd { u, s, v, nu, shape } => {
+            debug_assert_eq!(g.shape(), &[shape.0, shape.1]);
+            let SvdCompressed { u: cu, s: cs, v: cv, .. } = compress_svd(g, *nu, method);
+            let mu = u.quantize_update(&cu, beta);
+            let ms = s.quantize_update(&Tensor::vector(cs), beta);
+            let mv = v.quantize_update(&cv, beta);
+            ParamMsg::Svd { u: mu, s: ms, v: mv }
+        }
+        ParamState::Tucker { core, factors, ranks, shape } => {
+            debug_assert_eq!(g.shape(), &shape[..]);
+            let c: TuckerCompressed = compress_tucker(g, ranks, method);
+            let mc = core.quantize_update(&c.core, beta);
+            let mf = factors
+                .iter_mut()
+                .zip(c.factors.iter())
+                .map(|(fs, f)| fs.quantize_update(f, beta))
+                .collect();
+            ParamMsg::Tucker { core: mc, factors: mf }
+        }
+        ParamState::Dense { q } => {
+            let m = q.quantize_update(g, beta);
+            ParamMsg::Dense { q: m }
+        }
     }
 }
 
@@ -258,37 +298,62 @@ impl ServerCodec {
         self.states
             .iter_mut()
             .zip(msgs.iter())
-            .map(|(st, msg)| match (st, msg) {
-                (ParamState::Svd { u, s, v, nu, shape }, ParamMsg::Svd { u: mu, s: ms, v: mv }) => {
-                    let qu = u.apply_update(mu).clone();
-                    let qs = s.apply_update(ms).data().to_vec();
-                    let qv = v.apply_update(mv).clone();
-                    let c = SvdCompressed {
-                        u: qu,
-                        s: qs,
-                        v: qv,
-                        shape: *shape,
-                    };
-                    debug_assert_eq!(c.rank(), *nu);
-                    decompress_svd(&c)
-                }
-                (
-                    ParamState::Tucker { core, factors, ranks: _, shape },
-                    ParamMsg::Tucker { core: mc, factors: mf },
-                ) => {
-                    assert_eq!(factors.len(), mf.len(), "factor count mismatch");
-                    let qcore = core.apply_update(mc).clone();
-                    let qf: Vec<Tensor> = factors
-                        .iter_mut()
-                        .zip(mf.iter())
-                        .map(|(fs, m)| fs.apply_update(m).clone())
-                        .collect();
-                    let c = TuckerCompressed { core: qcore, factors: qf, shape: shape.clone() };
-                    decompress_tucker(&c)
-                }
-                (ParamState::Dense { q }, ParamMsg::Dense { q: mq }) => q.apply_update(mq).clone(),
-                (st, _) => panic!("message kind does not match state kind {}", st.kind_name()),
-            })
+            .map(|(st, msg)| decode_one(st, msg))
             .collect()
+    }
+
+    /// [`Self::decode`] with the per-parameter ℂ⁻¹ reconstruction (the
+    /// SVD/Tucker matmuls) fanned out over `pool`. Identical output in
+    /// the same order.
+    pub fn decode_on(&mut self, msgs: &[ParamMsg], pool: &ThreadPool) -> Vec<Tensor> {
+        assert_eq!(msgs.len(), self.states.len(), "message count mismatch");
+        let n = self.states.len();
+        let mut out: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        {
+            let slots: Vec<Mutex<&mut Option<Tensor>>> = out.iter_mut().map(Mutex::new).collect();
+            let states: Vec<Mutex<&mut ParamState>> =
+                self.states.iter_mut().map(Mutex::new).collect();
+            pool.for_each(n, |i| {
+                let mut st = states[i].lock().unwrap();
+                let t = decode_one(&mut **st, &msgs[i]);
+                **slots[i].lock().unwrap() = Some(t);
+            });
+        }
+        out.into_iter().map(|t| t.expect("decoded")).collect()
+    }
+}
+
+/// Decode one parameter message against its mirrored state.
+fn decode_one(st: &mut ParamState, msg: &ParamMsg) -> Tensor {
+    match (st, msg) {
+        (ParamState::Svd { u, s, v, nu, shape }, ParamMsg::Svd { u: mu, s: ms, v: mv }) => {
+            let qu = u.apply_update(mu).clone();
+            let qs = s.apply_update(ms).data().to_vec();
+            let qv = v.apply_update(mv).clone();
+            let c = SvdCompressed {
+                u: qu,
+                s: qs,
+                v: qv,
+                shape: *shape,
+            };
+            debug_assert_eq!(c.rank(), *nu);
+            decompress_svd(&c)
+        }
+        (
+            ParamState::Tucker { core, factors, ranks: _, shape },
+            ParamMsg::Tucker { core: mc, factors: mf },
+        ) => {
+            assert_eq!(factors.len(), mf.len(), "factor count mismatch");
+            let qcore = core.apply_update(mc).clone();
+            let qf: Vec<Tensor> = factors
+                .iter_mut()
+                .zip(mf.iter())
+                .map(|(fs, m)| fs.apply_update(m).clone())
+                .collect();
+            let c = TuckerCompressed { core: qcore, factors: qf, shape: shape.clone() };
+            decompress_tucker(&c)
+        }
+        (ParamState::Dense { q }, ParamMsg::Dense { q: mq }) => q.apply_update(mq).clone(),
+        (st, _) => panic!("message kind does not match state kind {}", st.kind_name()),
     }
 }

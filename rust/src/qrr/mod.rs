@@ -151,6 +151,35 @@ mod tests {
     }
 
     #[test]
+    fn pooled_encode_decode_match_serial() {
+        let shapes = shapes();
+        let cfg = QrrConfig::with_p(0.2);
+        let mut rng = Rng::new(75);
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let pool = crate::exec::ThreadPool::new(4);
+
+        let mut c_serial = ClientCodec::new(&shapes, cfg);
+        let mut c_pooled = ClientCodec::new(&shapes, cfg);
+        let m1 = c_serial.encode(&grads);
+        let m2 = c_pooled.encode_on(&grads, &pool);
+        assert_eq!(m1.len(), m2.len());
+        for (a, b) in m1.iter().zip(m2.iter()) {
+            assert_eq!(a.wire_bits(), b.wire_bits());
+        }
+        for (cs, ps) in c_serial.states().iter().zip(c_pooled.states().iter()) {
+            assert!(cs.states_close(ps, 1e-6), "pooled encode diverged from serial");
+        }
+
+        let mut s_serial = ServerCodec::new(&shapes, cfg);
+        let mut s_pooled = ServerCodec::new(&shapes, cfg);
+        let g1 = s_serial.decode(&m1);
+        let g2 = s_pooled.decode_on(&m2, &pool);
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert!(a.rel_err(b) < 1e-6, "pooled decode diverged from serial");
+        }
+    }
+
+    #[test]
     fn repeated_same_gradient_refines() {
         // Feeding the same gradient repeatedly must reduce reconstruction
         // error: the differential grids shrink (same argument as LAQ).

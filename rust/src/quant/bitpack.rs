@@ -12,9 +12,19 @@ pub fn packed_len_bytes(n: usize, beta: u8) -> usize {
 
 /// Pack `codes` (each < 2^beta) into a byte vector, LSB-first.
 pub fn pack_codes(codes: &[u32], beta: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_codes_into(codes, beta, &mut out);
+    out
+}
+
+/// [`pack_codes`] into a reusable buffer: `out` is cleared, zero-filled
+/// to the packed length and written in place, so steady-state encodes
+/// allocate nothing.
+pub fn pack_codes_into(codes: &[u32], beta: u8, out: &mut Vec<u8>) {
     assert!((1..=16).contains(&beta), "beta must be in 1..=16");
     let mask = if beta == 32 { u32::MAX } else { (1u32 << beta) - 1 };
-    let mut out = vec![0u8; packed_len_bytes(codes.len(), beta)];
+    out.clear();
+    out.resize(packed_len_bytes(codes.len(), beta), 0);
     let mut bitpos = 0usize;
     for &c in codes {
         debug_assert!(c <= mask, "code {c} exceeds {beta} bits");
@@ -31,11 +41,17 @@ pub fn pack_codes(codes: &[u32], beta: u8) -> Vec<u8> {
         }
         bitpos += beta as usize;
     }
-    out
 }
 
 /// Unpack `n` codes of `beta` bits each from `bytes`.
 pub fn unpack_codes(bytes: &[u8], n: usize, beta: u8) -> Vec<u32> {
+    let mut out = Vec::new();
+    unpack_codes_into(bytes, n, beta, &mut out);
+    out
+}
+
+/// [`unpack_codes`] into a reusable buffer (cleared first).
+pub fn unpack_codes_into(bytes: &[u8], n: usize, beta: u8, out: &mut Vec<u32>) {
     assert!((1..=16).contains(&beta), "beta must be in 1..=16");
     assert!(
         bytes.len() >= packed_len_bytes(n, beta),
@@ -44,7 +60,8 @@ pub fn unpack_codes(bytes: &[u8], n: usize, beta: u8) -> Vec<u32> {
         packed_len_bytes(n, beta)
     );
     let mask = (1u64 << beta) - 1;
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     let mut bitpos = 0usize;
     for _ in 0..n {
         let byte = bitpos / 8;
@@ -59,7 +76,6 @@ pub fn unpack_codes(bytes: &[u8], n: usize, beta: u8) -> Vec<u32> {
         out.push(((window >> off) & mask) as u32);
         bitpos += beta as usize;
     }
-    out
 }
 
 #[cfg(test)]
@@ -87,6 +103,21 @@ mod tests {
         assert_eq!(packed_len_bytes(9, 1), 2);
         assert_eq!(packed_len_bytes(3, 5), 2); // 15 bits -> 2 bytes
         assert_eq!(packed_len_bytes(0, 8), 0);
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let mut rng = Rng::new(31);
+        let mut packed = Vec::new();
+        let mut codes_out = Vec::new();
+        for beta in [1u8, 7, 8, 13] {
+            let max = (1u64 << beta) as usize;
+            let codes: Vec<u32> = (0..257).map(|_| rng.below(max) as u32).collect();
+            pack_codes_into(&codes, beta, &mut packed);
+            assert_eq!(packed, pack_codes(&codes, beta), "beta={beta}");
+            unpack_codes_into(&packed, codes.len(), beta, &mut codes_out);
+            assert_eq!(codes_out, codes, "beta={beta}");
+        }
     }
 
     #[test]

@@ -10,9 +10,20 @@
 //!
 //! The guarantee `‖g − Q‖∞ ≤ τR` (eq. (18)) is property-tested below.
 
+use std::cell::RefCell;
+
 use crate::tensor::Tensor;
 
-use super::bitpack::{pack_codes, packed_len_bytes, unpack_codes};
+use super::bitpack::{pack_codes_into, packed_len_bytes, unpack_codes, unpack_codes_into};
+
+thread_local! {
+    /// Per-thread integer-code scratch shared by [`quantize`] and
+    /// [`dequantize`]: the codes are an intermediate (only their packed
+    /// form leaves `quantize`; only the reconstruction leaves
+    /// `dequantize`), so the round loop re-quantizing the same shapes
+    /// every round allocates no code buffer after warm-up.
+    static CODE_SCRATCH: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// A quantized tensor as it travels over the wire: one f32 radius plus
 /// β-bit packed codes (32 + βn bits, eq. (16)).
@@ -109,40 +120,46 @@ pub fn quantize(g: &Tensor, prev: &Tensor, beta: u8) -> (Quantized, Tensor) {
         radius = radius.max((x - p).abs());
     }
 
-    let mut codes = Vec::with_capacity(n);
-    let mut new_val = Tensor::zeros(g.shape());
-    if radius == 0.0 || !radius.is_finite() {
-        // Degenerate grid: g == prev exactly (or non-finite input clamped).
-        // All codes map to the center; new value = prev.
-        let radius = if radius.is_finite() { radius } else { 0.0 };
-        let center = levels / 2;
-        codes.resize(n, center);
-        new_val = prev.clone();
-        let packed = pack_codes(&codes, beta);
-        return (
+    CODE_SCRATCH.with(|cell| {
+        let mut codes = cell.borrow_mut();
+        codes.clear();
+        codes.reserve(n);
+
+        if radius == 0.0 || !radius.is_finite() {
+            // Degenerate grid: g == prev exactly (or non-finite input
+            // clamped). All codes map to the center; new value = prev.
+            let radius = if radius.is_finite() { radius } else { 0.0 };
+            let center = levels / 2;
+            codes.resize(n, center);
+            let mut packed = Vec::new();
+            pack_codes_into(&codes, beta, &mut packed);
+            return (
+                Quantized { radius, beta, len: n, packed },
+                prev.clone(),
+            );
+        }
+
+        let mut new_val = Tensor::zeros(g.shape());
+        let step = 2.0 * tau * radius as f64; // grid spacing
+        {
+            let out = new_val.data_mut();
+            for (i, (x, p)) in g.data().iter().zip(prev.data().iter()).enumerate() {
+                // eq. (15)
+                let t = ((*x - *p) as f64 + radius as f64) / step + 0.5;
+                let q = (t.floor() as i64).clamp(0, levels as i64) as u32;
+                codes.push(q);
+                // eq. (16)/(17): Q = prev + 2*tau*R*q - R
+                out[i] = *p + (step * q as f64 - radius as f64) as f32;
+            }
+        }
+        let mut packed = Vec::new();
+        pack_codes_into(&codes, beta, &mut packed);
+        debug_assert_eq!(packed.len(), packed_len_bytes(n, beta));
+        (
             Quantized { radius, beta, len: n, packed },
             new_val,
-        );
-    }
-
-    let step = 2.0 * tau * radius as f64; // grid spacing
-    {
-        let out = new_val.data_mut();
-        for (i, (x, p)) in g.data().iter().zip(prev.data().iter()).enumerate() {
-            // eq. (15)
-            let t = ((*x - *p) as f64 + radius as f64) / step + 0.5;
-            let q = (t.floor() as i64).clamp(0, levels as i64) as u32;
-            codes.push(q);
-            // eq. (16)/(17): Q = prev + 2*tau*R*q - R
-            out[i] = *p + (step * q as f64 - radius as f64) as f32;
-        }
-    }
-    let packed = pack_codes(&codes, beta);
-    debug_assert_eq!(packed.len(), packed_len_bytes(n, beta));
-    (
-        Quantized { radius, beta, len: n, packed },
-        new_val,
-    )
+        )
+    })
 }
 
 /// Server-side reconstruction (eq. (17)): previous quantized value plus
@@ -152,14 +169,15 @@ pub fn dequantize(msg: &Quantized, prev: &Tensor) -> Tensor {
     let levels = (1u32 << msg.beta) - 1;
     let tau = 1.0f64 / levels as f64;
     let step = 2.0 * tau * msg.radius as f64;
-    let codes = msg.codes();
     let mut out = Tensor::zeros(prev.shape());
-    {
+    CODE_SCRATCH.with(|cell| {
+        let mut codes = cell.borrow_mut();
+        unpack_codes_into(&msg.packed, msg.len, msg.beta, &mut codes);
         let o = out.data_mut();
         for (i, (&q, p)) in codes.iter().zip(prev.data().iter()).enumerate() {
             o[i] = *p + (step * q as f64 - msg.radius as f64) as f32;
         }
-    }
+    });
     out
 }
 

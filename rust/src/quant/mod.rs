@@ -9,5 +9,7 @@
 mod bitpack;
 mod laq;
 
-pub use bitpack::{pack_codes, packed_len_bytes, unpack_codes};
+pub use bitpack::{
+    pack_codes, pack_codes_into, packed_len_bytes, unpack_codes, unpack_codes_into,
+};
 pub use laq::{dequantize, quantize, wire_bits, QuantState, Quantized};
