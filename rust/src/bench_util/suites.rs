@@ -24,7 +24,10 @@ use crate::compress::{compress_svd, compress_tucker, tucker_ranks};
 use crate::config::{ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig};
 use crate::fl::metrics::{markdown_table, TableRow};
 use crate::fl::session::FlSessionBuilder;
-use crate::linalg::{matmul, matvec, qr_thin, svd_truncated, SvdMethod};
+use crate::linalg::{
+    gemm_acc, matmul, matmul_nt, matmul_tn, matvec, qr_thin, qr_thin_unblocked, svd_truncated,
+    SvdMethod,
+};
 use crate::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
 use crate::net::{ClientUpdate, Decoder, Encoder};
 use crate::qrr::{ClientCodec, QrrConfig, ServerCodec};
@@ -83,13 +86,65 @@ pub fn kernel_cases(suite: &mut Suite) {
         suite.case("gemm/matvec_200x784", Some(2.0 * (200 * 784) as f64), || {
             matvec(&a, &x)
         });
+        // large enough to take the pool-split row path (serve/inference)
+        let big = Tensor::randn(&[2048, 2048], &mut rng);
+        let xb = Tensor::randn(&[2048], &mut rng);
+        suite.case("gemm/matvec_2048x2048", Some(2.0 * (2048 * 2048) as f64), || {
+            matvec(&big, &xb)
+        });
     }
 
-    // QR on the randomized-SVD intermediate shapes
+    // transpose-variant kernels at the randomized-SVD projection /
+    // reconstruction shapes — packed straight from the strided source
+    {
+        let a = Tensor::randn(&[200, 784], &mut rng);
+        let q = Tensor::randn(&[200, 68], &mut rng);
+        let flops_tn = 2.0 * (784 * 200 * 68) as f64;
+        suite.case("gemm/tn_proj_784x200x68", Some(flops_tn), || matmul_tn(&a, &q));
+        let us = Tensor::randn(&[200, 68], &mut rng);
+        let v = Tensor::randn(&[784, 68], &mut rng);
+        let flops_nt = 2.0 * (200 * 68 * 784) as f64;
+        suite.case("gemm/nt_outer_200x68x784", Some(flops_nt), || matmul_nt(&us, &v));
+    }
+
+    // tall-skinny GEMM at QRR's actual shapes: the sketch Y = A·Ω
+    // (200×784 · 784×k) and the basis update (784×k · k×k)
+    for &k in &[20usize, 68] {
+        let a = Tensor::randn(&[200, 784], &mut rng);
+        let omega = Tensor::randn(&[784, k], &mut rng);
+        suite.case(
+            &format!("gemm/sketch_200x784x{k}"),
+            Some(2.0 * (200 * 784 * k) as f64),
+            || matmul(&a, &omega),
+        );
+        let y = Tensor::randn(&[784, k], &mut rng);
+        let rk = Tensor::randn(&[k, k], &mut rng);
+        suite.case(
+            &format!("gemm/basis_784x{k}x{k}"),
+            Some(2.0 * (784 * k * k) as f64),
+            || matmul(&y, &rk),
+        );
+    }
+
+    // the accumulate entry point C += A·B (no alloc+zero per product)
+    {
+        let a = Tensor::randn(&[512, 784], &mut rng);
+        let b = Tensor::randn(&[784, 200], &mut rng);
+        let mut c = Tensor::zeros(&[512, 200]);
+        let flops = 2.0 * (512 * 784 * 200) as f64;
+        suite.case("gemm/acc_fc1_512x784x200", Some(flops), move || {
+            c.scale(0.0);
+            gemm_acc(&mut c, &a, &b);
+        });
+    }
+
+    // QR on the randomized-SVD intermediate shapes: the blocked
+    // compact-WY path vs the scalar per-reflector reference
     let tall = Tensor::randn(&[784, 68], &mut rng);
     suite.case("qr/thin_784x68", None, || qr_thin(&tall));
     let mid = Tensor::randn(&[200, 68], &mut rng);
     suite.case("qr/thin_200x68", None, || qr_thin(&mid));
+    suite.case("qr/thin_unblocked_784x68", None, || qr_thin_unblocked(&tall));
 
     // SVD engines on the MLP's big gradient
     svd_engine_cases(suite);

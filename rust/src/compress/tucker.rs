@@ -6,7 +6,7 @@
 //! Reconstruction is 𝔊 ×₁ F₁ ×₂ F₂ … ×_N F_N.
 
 use crate::linalg::{svd_truncated, SvdMethod};
-use crate::tensor::{mode_n_product, unfold, Tensor};
+use crate::tensor::{mode_n_product, mode_n_product_t, unfold, Tensor};
 
 /// The Tucker factors of a compressed tensor gradient, as transmitted.
 #[derive(Debug, Clone)]
@@ -48,10 +48,11 @@ pub fn compress_tucker(g: &Tensor, ranks: &[usize], method: SvdMethod) -> Tucker
         factors.push(svd.u); // I_mode × r_mode
     }
 
-    // Core: project onto the factor bases, G = X ×_i Fᵢᵀ.
+    // Core: project onto the factor bases, G = X ×_i Fᵢᵀ — the packed
+    // GEMM reads Fᵢ through a strided view, no transpose copies.
     let mut core = g.clone();
     for (mode, f) in factors.iter().enumerate() {
-        core = mode_n_product(&core, mode, &f.transpose());
+        core = mode_n_product_t(&core, mode, f);
     }
 
     TuckerCompressed { core, factors, shape: g.shape().to_vec() }

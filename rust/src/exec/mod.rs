@@ -15,9 +15,9 @@ use std::sync::OnceLock;
 /// override or available parallelism, capped at 16.
 ///
 /// The environment is read **once per process** and cached — every
-/// construction site (the session pool, the GEMM row split, ad-hoc
-/// `parallel_for` calls) sees the same value, and the hot path never
-/// pays for an env lookup (DESIGN.md §4).
+/// construction site (the session pool, the crate-wide [`global_pool`],
+/// ad-hoc `parallel_for` calls) sees the same value, and the hot path
+/// never pays for an env lookup (DESIGN.md §4).
 pub fn default_threads() -> usize {
     static CACHED: OnceLock<usize> = OnceLock::new();
     *CACHED.get_or_init(|| {
@@ -31,4 +31,20 @@ pub fn default_threads() -> usize {
             .unwrap_or(4)
             .min(16)
     })
+}
+
+/// The crate-wide shared worker pool: created on first use with
+/// [`default_threads`] workers and kept for the life of the process.
+///
+/// This is the pool the GEMM/matvec parallel paths split work on. A
+/// **cached handle** means `QRR_THREADS` is honored once and
+/// consistently — no per-call pool construction or thread spawning —
+/// and because [`ThreadPool::for_each`] degrades to a serial loop when
+/// the calling thread is itself a pool worker, kernels invoked from
+/// inside a session's per-client fan-out (e.g. `absorb_updates_on`)
+/// can never oversubscribe the machine with nested parallelism
+/// (DESIGN.md §6).
+pub fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::default_size)
 }

@@ -199,8 +199,8 @@ impl Drop for ThreadPool {
 }
 
 /// Standalone scoped parallel-for over `0..n` with up to `threads`
-/// OS threads (spawned ad hoc; fine for coarse-grained work without a
-/// long-lived pool in scope, e.g. the GEMM row split).
+/// OS threads (spawned ad hoc; fine for one-off coarse-grained work —
+/// hot-path kernels use [`crate::exec::global_pool`] instead).
 pub fn parallel_for<F>(threads: usize, n: usize, f: F)
 where
     F: Fn(usize) + Send + Sync,

@@ -8,7 +8,8 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * [`tensor`] / [`linalg`] — dense-tensor and factorization substrate
-//!   (unfoldings, mode-n products, blocked matmul, QR, truncated SVD).
+//!   (unfoldings, mode-n products, packed micro-kernel GEMM, blocked
+//!   Householder QR, truncated SVD).
 //! * [`quant`] — the LAQ β-bit grid quantizer with real bit-packing.
 //! * [`compress`] — the ℂ/ℂ⁻¹ operators: truncated SVD for matrix
 //!   gradients, Tucker (HOSVD) for 4-D convolution gradients.

@@ -1,14 +1,325 @@
-//! Blocked, cache-friendly matrix multiplication.
+//! Packed micro-kernel GEMM on the crate's persistent thread pool.
 //!
-//! A micro-kernel-free but register-blocked GEMM: loop order i-k-j with
-//! 64×64×64 cache blocking and an 8-wide inner accumulation the compiler
-//! auto-vectorizes. Large products are split row-wise across threads.
+//! BLIS-style structure: three loops of cache blocking (NC × KC × MC)
+//! around an MR×NR register-tiled micro-kernel. Operand panels are
+//! packed into contiguous, zero-padded buffers once per cache block, so
+//! the inner kernel reads only unit-stride memory and the compiler keeps
+//! the 8×8 f32 accumulator tile in SIMD registers — no data-dependent
+//! branches in the hot loop. Packing reads through strided [`MatRef`]
+//! views, so the transpose variants ([`matmul_tn`], [`matmul_nt`]) pack
+//! straight from the strided source instead of materializing a
+//! `transpose()` copy, and the blocked QR updates sub-matrices in place
+//! through the same entry ([`gemm_strided`]).
+//!
+//! Pack buffers are thread-local scratch reused across calls. Large
+//! products split across the crate-wide shared pool
+//! ([`crate::exec::global_pool`]) as a 2-D grid of C row-bands ×
+//! N-panels via `ThreadPool::for_each`; called from inside a pool worker
+//! the split degrades to serial, so GEMMs nested under the session's
+//! per-client fan-out can never oversubscribe the machine
+//! (DESIGN.md §6).
+
+use std::cell::RefCell;
 
 use crate::tensor::Tensor;
 
-const BLOCK: usize = 64;
-/// Products larger than this many MACs go parallel.
+/// Micro-kernel tile rows: one tile is MR×NR f32 accumulators, small
+/// enough for the compiler to keep in SIMD registers.
+const MR: usize = 8;
+/// Micro-kernel tile columns.
+const NR: usize = 8;
+/// Rows of A packed per cache block (the L2-resident panel).
+const MC: usize = 128;
+/// Shared k-depth of the packed A/B blocks.
+const KC: usize = 256;
+/// Columns of B packed per cache block.
+const NC: usize = 512;
+/// Products with at least this many MACs split over the shared pool.
 const PAR_THRESHOLD: usize = 1 << 20;
+/// `matvec`s with at least this many MACs split rows over the pool.
+const MATVEC_PAR_THRESHOLD: usize = 1 << 20;
+
+// -------------------------------------------------------------- views
+
+/// Read-only strided matrix view: element (i, j) is
+/// `data[i * rs + j * cs]`. One packing routine walks A, Aᵀ, B, Bᵀ and
+/// the QR sub-blocks uniformly, without intermediate copies.
+#[derive(Clone, Copy)]
+pub(crate) struct MatRef<'a> {
+    data: &'a [f32],
+    /// row stride
+    rs: usize,
+    /// column stride
+    cs: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// Row-major view of a dense matrix with `cols` columns.
+    pub(crate) fn dense(data: &'a [f32], cols: usize) -> Self {
+        MatRef { data, rs: cols, cs: 1 }
+    }
+
+    /// Transposed view of a dense matrix stored with `cols` columns:
+    /// the logical (i, j) element is `data[j * cols + i]`.
+    pub(crate) fn transposed(data: &'a [f32], cols: usize) -> Self {
+        MatRef { data, rs: 1, cs: cols }
+    }
+
+    /// Arbitrary strides (sub-matrix views, e.g. the QR trailing block).
+    pub(crate) fn strided(data: &'a [f32], rs: usize, cs: usize) -> Self {
+        MatRef { data, rs, cs }
+    }
+}
+
+/// Raw output pointer handed to the 2-D tile grid. Safety: each task
+/// owns a disjoint row-band × column-panel region of C, and `for_each`
+/// joins every task before the owning frame returns.
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+// ------------------------------------------------------------ packing
+
+/// Thread-local pack-buffer scratch, reused across GEMM calls so the
+/// steady state allocates nothing.
+struct PackScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<PackScratch> =
+        const { RefCell::new(PackScratch { a: Vec::new(), b: Vec::new() }) };
+}
+
+/// Pack the `mc`×`kc` block of A at (i0, p0) into MR-row panels,
+/// k-major within each panel (`out[panel][p * MR + r]`), zero-padding
+/// the last panel to the full MR so the micro-kernel never branches.
+fn pack_a(a: MatRef, i0: usize, p0: usize, mc: usize, kc: usize, out: &mut [f32]) {
+    let mut panel_base = 0usize;
+    let mut ir = 0usize;
+    while ir < mc {
+        let rows = MR.min(mc - ir);
+        let dst = &mut out[panel_base..panel_base + MR * kc];
+        for p in 0..kc {
+            let col = &mut dst[p * MR..p * MR + MR];
+            let src = (i0 + ir) * a.rs + (p0 + p) * a.cs;
+            if rows == MR {
+                for (r, slot) in col.iter_mut().enumerate() {
+                    *slot = a.data[src + r * a.rs];
+                }
+            } else {
+                for (r, slot) in col.iter_mut().enumerate() {
+                    *slot = if r < rows { a.data[src + r * a.rs] } else { 0.0 };
+                }
+            }
+        }
+        panel_base += MR * kc;
+        ir += MR;
+    }
+}
+
+/// Pack the `kc`×`nc` block of B at (p0, j0) into NR-column panels,
+/// k-major within each panel (`out[panel][p * NR + j]`), zero-padded
+/// like [`pack_a`].
+fn pack_b(b: MatRef, p0: usize, j0: usize, kc: usize, nc: usize, out: &mut [f32]) {
+    let mut panel_base = 0usize;
+    let mut jr = 0usize;
+    while jr < nc {
+        let cols = NR.min(nc - jr);
+        let dst = &mut out[panel_base..panel_base + NR * kc];
+        for p in 0..kc {
+            let row = &mut dst[p * NR..p * NR + NR];
+            let src = (p0 + p) * b.rs + (j0 + jr) * b.cs;
+            if cols == NR {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot = b.data[src + j * b.cs];
+                }
+            } else {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot = if j < cols { b.data[src + j * b.cs] } else { 0.0 };
+                }
+            }
+        }
+        panel_base += NR * kc;
+        jr += NR;
+    }
+}
+
+// ------------------------------------------------------- micro-kernel
+
+/// The register tile: `acc[r][c] += Σ_p ap[p·MR+r] · bp[p·NR+c]`.
+/// Both panels are zero-padded, so the tile is always full MR×NR — the
+/// loop body is branch-free and auto-vectorizes to 8-lane FMAs.
+#[inline(always)]
+fn micro_kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    for p in 0..kc {
+        let a = &ap[p * MR..p * MR + MR];
+        let b = &bp[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            let row = &mut acc[r];
+            for (c, &bc) in b.iter().enumerate() {
+                row[c] += ar * bc;
+            }
+        }
+    }
+}
+
+/// `c[r·ldc + j] += alpha · acc[r][j]` over the real mr×nr extent of an
+/// edge tile. `c` points at the tile's top-left element.
+///
+/// # Safety
+/// The mr×nr region (row stride `ldc`) must be in bounds, and no other
+/// task may touch it concurrently — guaranteed by the disjoint 2-D tile
+/// grid in [`gemm_driver`].
+unsafe fn write_tile(
+    acc: &[[f32; NR]; MR],
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    alpha: f32,
+) {
+    for (r, arow) in acc.iter().enumerate().take(mr) {
+        let crow = c.add(r * ldc);
+        for (j, &v) in arow.iter().enumerate().take(nr) {
+            *crow.add(j) += alpha * v;
+        }
+    }
+}
+
+// ------------------------------------------------------------ drivers
+
+/// Serial packed GEMM over the C region rows [i0, i1) × cols [j0, j1):
+/// `C[i·ldc + j] += alpha · (A·B)[i, j]` with the full k extent.
+#[allow(clippy::too_many_arguments)]
+fn gemm_region(
+    a: MatRef,
+    b: MatRef,
+    c: *mut f32,
+    ldc: usize,
+    k: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    alpha: f32,
+) {
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        let a_need = MC.div_ceil(MR) * MR * KC;
+        let b_need = NC.div_ceil(NR) * NR * KC;
+        if s.a.len() < a_need {
+            s.a.resize(a_need, 0.0);
+        }
+        if s.b.len() < b_need {
+            s.b.resize(b_need, 0.0);
+        }
+        let PackScratch { a: apack, b: bpack } = &mut *s;
+        for jc in (j0..j1).step_by(NC) {
+            let nc = NC.min(j1 - jc);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                pack_b(b, pc, jc, kc, nc, bpack);
+                for ic in (i0..i1).step_by(MC) {
+                    let mc = MC.min(i1 - ic);
+                    pack_a(a, ic, pc, mc, kc, apack);
+                    let mut jr = 0usize;
+                    let mut bpanel_base = 0usize;
+                    while jr < nc {
+                        let nr_eff = NR.min(nc - jr);
+                        let bpanel = &bpack[bpanel_base..bpanel_base + NR * kc];
+                        let mut ir = 0usize;
+                        let mut apanel_base = 0usize;
+                        while ir < mc {
+                            let mr_eff = MR.min(mc - ir);
+                            let apanel = &apack[apanel_base..apanel_base + MR * kc];
+                            let mut acc = [[0f32; NR]; MR];
+                            micro_kernel(kc, apanel, bpanel, &mut acc);
+                            let base = (ic + ir) * ldc + jc + jr;
+                            // SAFETY: the tile lies inside this call's
+                            // [i0,i1)×[j0,j1) region of C (bounds checked
+                            // by the driver), disjoint from other tasks.
+                            unsafe {
+                                write_tile(&acc, c.add(base), ldc, mr_eff, nr_eff, alpha);
+                            }
+                            apanel_base += MR * kc;
+                            ir += MR;
+                        }
+                        bpanel_base += NR * kc;
+                        jr += NR;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Accumulating GEMM core: `C[i·ldc + j] += alpha · (A·B)[i, j]` for an
+/// m×k · k×n product. Splits over the shared pool above
+/// [`PAR_THRESHOLD`]; every element sums its k terms in the same order
+/// regardless of the split, so results are bit-identical across thread
+/// counts.
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: MatRef,
+    b: MatRef,
+    c: &mut [f32],
+    ldc: usize,
+    alpha: f32,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return; // accumulate semantics: nothing to add
+    }
+    assert!(c.len() >= (m - 1) * ldc + n, "gemm output region out of bounds");
+    if m * k * n < PAR_THRESHOLD {
+        gemm_region(a, b, c.as_mut_ptr(), ldc, k, 0, m, 0, n, alpha);
+        return;
+    }
+    let pool = crate::exec::global_pool();
+    let threads = pool.size().max(1);
+    // ~2 row bands per worker, rounded to the tile height; column
+    // panels at the pack width. Each grid cell runs the full k loop
+    // serially, so the tiling never changes the summation order.
+    let band = m.div_ceil(2 * threads).div_ceil(MR) * MR;
+    let nbands = m.div_ceil(band);
+    let npanels = n.div_ceil(NC);
+    let cptr = SendPtr(c.as_mut_ptr());
+    let cref = &cptr;
+    pool.for_each(nbands * npanels, |t| {
+        let bi = t / npanels;
+        let pj = t % npanels;
+        let i0 = bi * band;
+        let i1 = m.min(i0 + band);
+        let j0 = pj * NC;
+        let j1 = n.min(j0 + NC);
+        gemm_region(a, b, cref.0, ldc, k, i0, i1, j0, j1, alpha);
+    });
+}
+
+/// Strided-output accumulate entry for in-crate callers (the blocked QR
+/// panel updates): `c[i·ldc + j] += alpha · (A·B)[i, j]`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_strided(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: MatRef,
+    b: MatRef,
+    c: &mut [f32],
+    ldc: usize,
+    alpha: f32,
+) {
+    gemm_driver(m, k, n, a, b, c, ldc, alpha);
+}
+
+// --------------------------------------------------------- public API
 
 /// C = A · B for row-major matrices (m×k)·(k×n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -18,39 +329,130 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(ka, kb, "matmul inner dims {ka} != {kb}");
     let mut c = Tensor::zeros(&[m, n]);
-    gemm(a.data(), b.data(), c.data_mut(), m, ka, n);
+    gemm_driver(
+        m,
+        ka,
+        n,
+        MatRef::dense(a.data(), ka),
+        MatRef::dense(b.data(), n),
+        c.data_mut(),
+        n,
+        1.0,
+    );
     c
 }
 
-/// C = Aᵀ · B where A is (k×m) — avoids materializing the transpose.
+/// C = Aᵀ · B where A is (k×m) — packs directly from the strided
+/// source; no transpose copy is materialized.
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
     let (k, m) = (a.shape()[0], a.shape()[1]);
     let (kb, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, kb, "matmul_tn inner dims {k} != {kb}");
-    // Aᵀ(m×k) row i = A column i (stride m). Transposing A up front and
-    // running the blocked kernel is faster than strided access.
-    let at = a.transpose();
     let mut c = Tensor::zeros(&[m, n]);
-    gemm(at.data(), b.data(), c.data_mut(), m, k, n);
+    gemm_driver(
+        m,
+        k,
+        n,
+        MatRef::transposed(a.data(), m),
+        MatRef::dense(b.data(), n),
+        c.data_mut(),
+        n,
+        1.0,
+    );
     c
 }
 
-/// C = A · Bᵀ where B is (n×k).
+/// C = A · Bᵀ where B is (n×k) — packs directly from the strided
+/// source; no transpose copy is materialized.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (n, kb) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, kb, "matmul_nt inner dims {k} != {kb}");
-    let bt = b.transpose();
     let mut c = Tensor::zeros(&[m, n]);
-    gemm(a.data(), bt.data(), c.data_mut(), m, k, n);
+    gemm_driver(
+        m,
+        k,
+        n,
+        MatRef::dense(a.data(), k),
+        MatRef::transposed(b.data(), k),
+        c.data_mut(),
+        n,
+        1.0,
+    );
     c
 }
 
-/// y = A · x for a matrix (m×n) and vector (n).
+/// C += A · B — the accumulate entry point: callers with a live output
+/// (bias-initialized activations, QR panel updates) skip the
+/// allocate-and-zero of an intermediate product tensor.
+pub fn gemm_acc(c: &mut Tensor, a: &Tensor, b: &Tensor) {
+    assert_eq!(a.ndim(), 2, "gemm_acc lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "gemm_acc rhs must be 2-D");
+    let (m, ka) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(ka, kb, "gemm_acc inner dims {ka} != {kb}");
+    assert_eq!(c.shape(), &[m, n], "gemm_acc output shape mismatch");
+    gemm_driver(
+        m,
+        ka,
+        n,
+        MatRef::dense(a.data(), ka),
+        MatRef::dense(b.data(), n),
+        c.data_mut(),
+        n,
+        1.0,
+    );
+}
+
+/// C += Aᵀ · B where A is (k×m).
+pub fn gemm_acc_tn(c: &mut Tensor, a: &Tensor, b: &Tensor) {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "gemm_acc_tn inner dims {k} != {kb}");
+    assert_eq!(c.shape(), &[m, n], "gemm_acc_tn output shape mismatch");
+    gemm_driver(
+        m,
+        k,
+        n,
+        MatRef::transposed(a.data(), m),
+        MatRef::dense(b.data(), n),
+        c.data_mut(),
+        n,
+        1.0,
+    );
+}
+
+/// C += A · Bᵀ where B is (n×k).
+pub fn gemm_acc_nt(c: &mut Tensor, a: &Tensor, b: &Tensor) {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, kb) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "gemm_acc_nt inner dims {k} != {kb}");
+    assert_eq!(c.shape(), &[m, n], "gemm_acc_nt output shape mismatch");
+    gemm_driver(
+        m,
+        k,
+        n,
+        MatRef::dense(a.data(), k),
+        MatRef::transposed(b.data(), k),
+        c.data_mut(),
+        n,
+        1.0,
+    );
+}
+
+// ------------------------------------------------------------- matvec
+
+/// y = A · x for a matrix (m×n) and vector (n): 8-lane chunked
+/// accumulation the compiler vectorizes, with rows split over the
+/// shared pool for large m (the serve/inference path).
 pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(x.ndim(), 1);
@@ -59,88 +461,50 @@ pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
     let mut y = vec![0f32; m];
     let ad = a.data();
     let xd = x.data();
-    for i in 0..m {
-        let row = &ad[i * n..(i + 1) * n];
-        let mut acc = 0f32;
-        for j in 0..n {
-            acc += row[j] * xd[j];
+    if m * n >= MATVEC_PAR_THRESHOLD && m > 1 {
+        let pool = crate::exec::global_pool();
+        let chunk = m.div_ceil(pool.size().max(1) * 4).max(1);
+        let tasks = m.div_ceil(chunk);
+        let yptr = SendPtr(y.as_mut_ptr());
+        let yref = &yptr;
+        pool.for_each(tasks, |t| {
+            let r0 = t * chunk;
+            let r1 = m.min(r0 + chunk);
+            for i in r0..r1 {
+                let v = dot8(&ad[i * n..(i + 1) * n], xd);
+                // SAFETY: each row index belongs to exactly one task.
+                unsafe {
+                    *yref.0.add(i) = v;
+                }
+            }
+        });
+    } else {
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot8(&ad[i * n..(i + 1) * n], xd);
         }
-        y[i] = acc;
     }
     Tensor::vector(y)
 }
 
-/// Core blocked kernel: c(m×n) += a(m×k) · b(k×n); c must be zeroed.
-fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    if m * k * n >= PAR_THRESHOLD {
-        gemm_parallel(a, b, c, m, k, n);
-    } else {
-        gemm_serial(a, b, c, m, k, n, 0, m);
-    }
-}
-
-fn gemm_parallel(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    let threads = crate::exec::default_threads().min(m).max(1);
-    let rows_per = m.div_ceil(threads);
-    // Split C into disjoint row bands, one per thread.
-    let bands: Vec<(usize, &mut [f32])> = {
-        let mut bands = Vec::new();
-        let mut rest = c;
-        let mut row = 0usize;
-        while row < m {
-            let take = rows_per.min(m - row);
-            let (head, tail) = rest.split_at_mut(take * n);
-            bands.push((row, head));
-            rest = tail;
-            row += take;
-        }
-        bands
-    };
-    std::thread::scope(|s| {
-        for (row0, band) in bands {
-            let rows = band.len() / n;
-            s.spawn(move || {
-                gemm_serial(a, b, band, m, k, n, row0, row0 + rows);
-            });
-        }
-    });
-}
-
-/// Serial blocked kernel over rows [r0, r1). `c` holds only those rows.
-fn gemm_serial(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    _m: usize,
-    k: usize,
-    n: usize,
-    r0: usize,
-    r1: usize,
-) {
-    for bi in (r0..r1).step_by(BLOCK) {
-        let bi_end = (bi + BLOCK).min(r1);
-        for bk in (0..k).step_by(BLOCK) {
-            let bk_end = (bk + BLOCK).min(k);
-            for bj in (0..n).step_by(BLOCK) {
-                let bj_end = (bj + BLOCK).min(n);
-                for i in bi..bi_end {
-                    let arow = &a[i * k..(i + 1) * k];
-                    let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
-                    for kk in bk..bk_end {
-                        let aik = arow[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[kk * n..(kk + 1) * n];
-                        // contiguous j loop: auto-vectorizes
-                        for j in bj..bj_end {
-                            crow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            }
+/// Dot product with 8 independent partial sums (vectorizes to one FMA
+/// lane set), reduced pairwise at the end.
+#[inline]
+fn dot8(row: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), x.len());
+    let mut acc = [0f32; 8];
+    let chunks = row.len() / 8;
+    for c in 0..chunks {
+        let r = &row[c * 8..c * 8 + 8];
+        let v = &x[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += r[l] * v[l];
         }
     }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for j in chunks * 8..row.len() {
+        s += row[j] * x[j];
+    }
+    s
 }
 
 #[cfg(test)]
@@ -176,6 +540,28 @@ mod tests {
     }
 
     #[test]
+    fn matches_naive_tile_edges() {
+        // every combination of exactly-on / one-off the MR/NR/KC tile
+        // boundaries, plus degenerate m=1 / n=1 / k=1 strips
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[
+            (8, 8, 8),
+            (9, 9, 9),
+            (7, 16, 9),
+            (8, 1, 17),
+            (17, 3, 8),
+            (1, 9, 1),
+            (1, 300, 1),
+            (64, 64, 64),
+            (65, 129, 67),
+        ] {
+            let a = Tensor::randn(&[m, k], &mut rng);
+            let b = Tensor::randn(&[k, n], &mut rng);
+            assert!(matmul(&a, &b).rel_err(&naive(&a, &b)) < 1e-4, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
     fn matches_naive_unaligned_sizes() {
         let mut rng = Rng::new(2);
         let a = Tensor::randn(&[65, 130], &mut rng);
@@ -193,6 +579,22 @@ mod tests {
     }
 
     #[test]
+    fn empty_inner_dim_is_zero() {
+        // k = 0: the product is the zero matrix, and the accumulate
+        // entry leaves C untouched
+        let a = Tensor::zeros(&[3, 0]);
+        let b = Tensor::zeros(&[0, 4]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape(), &[3, 4]);
+        assert_eq!(c.fro_norm(), 0.0);
+        let mut rng = Rng::new(8);
+        let mut acc = Tensor::randn(&[3, 4], &mut rng);
+        let before = acc.clone();
+        gemm_acc(&mut acc, &a, &b);
+        assert_eq!(acc, before);
+    }
+
+    #[test]
     fn tn_and_nt_variants() {
         let mut rng = Rng::new(4);
         let a = Tensor::randn(&[20, 12], &mut rng);
@@ -206,6 +608,27 @@ mod tests {
         let c3 = matmul_nt(&d, &e); // (12x9)
         let c4 = matmul(&d, &e.transpose());
         assert!(c3.rel_err(&c4) < 1e-5);
+    }
+
+    #[test]
+    fn gemm_acc_adds_onto_existing_output() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[13, 21], &mut rng);
+        let b = Tensor::randn(&[21, 17], &mut rng);
+        let c0 = Tensor::randn(&[13, 17], &mut rng);
+        let want = c0.add(&naive(&a, &b));
+
+        let mut c = c0.clone();
+        gemm_acc(&mut c, &a, &b);
+        assert!(c.rel_err(&want) < 1e-4);
+
+        let mut c = c0.clone();
+        gemm_acc_tn(&mut c, &a.transpose(), &b);
+        assert!(c.rel_err(&want) < 1e-4);
+
+        let mut c = c0.clone();
+        gemm_acc_nt(&mut c, &a, &b.transpose());
+        assert!(c.rel_err(&want) < 1e-4);
     }
 
     #[test]
@@ -227,6 +650,22 @@ mod tests {
         let ym = matmul(&a, &xm);
         for i in 0..13 {
             assert!((y.data()[i] - ym.data()[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_parallel_path_matches_serial_math() {
+        // 1100 * 1000 > MATVEC_PAR_THRESHOLD: rows split over the pool
+        let mut rng = Rng::new(10);
+        let a = Tensor::randn(&[1100, 1000], &mut rng);
+        let x = Tensor::randn(&[1000], &mut rng);
+        let y = matvec(&a, &x);
+        for i in (0..1100).step_by(97) {
+            let mut want = 0f64;
+            for j in 0..1000 {
+                want += a.get2(i, j) as f64 * x.data()[j] as f64;
+            }
+            assert!((y.data()[i] as f64 - want).abs() < 1e-2, "row {i}");
         }
     }
 

@@ -1,10 +1,13 @@
-//! Dense linear algebra substrate: blocked matmul, Householder QR and
-//! truncated SVD (exact one-sided Jacobi + randomized subspace
-//! iteration).
+//! Dense linear algebra substrate: packed micro-kernel GEMM, blocked
+//! Householder QR and truncated SVD (exact one-sided Jacobi +
+//! randomized subspace iteration).
 //!
 //! This is the engine behind the paper's compression operator ℂ:
 //! truncated SVD for matrix gradients (eq. (5)-(8)) and the per-mode
-//! SVDs of the Tucker/HOSVD factorization (eq. (9)).
+//! SVDs of the Tucker/HOSVD factorization (eq. (9)). The GEMM
+//! subsystem (DESIGN.md §6) is the single hottest kernel in the crate —
+//! every SVD, QR, mode-n product and model forward/backward bottoms
+//! out in it.
 
 mod eig;
 mod matmul;
@@ -12,6 +15,6 @@ mod qr;
 mod svd;
 
 pub use eig::sym_eig_jacobi;
-pub use matmul::{matmul, matmul_nt, matmul_tn, matvec};
-pub use qr::{orthonormalize, qr_thin, QrThin};
+pub use matmul::{gemm_acc, gemm_acc_nt, gemm_acc_tn, matmul, matmul_nt, matmul_tn, matvec};
+pub use qr::{orthonormalize, qr_thin, qr_thin_unblocked, QrThin};
 pub use svd::{svd_jacobi, svd_truncated, Svd, SvdMethod};

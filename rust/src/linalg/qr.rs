@@ -1,10 +1,23 @@
-//! Thin (economy) QR decomposition via Householder reflections.
+//! Thin (economy) QR decomposition via blocked Householder reflections.
 //!
 //! Used by the randomized SVD range-finder: Q is an orthonormal basis of
 //! the sketch Y = AΩ. For m ≥ n, returns Q (m×n) with orthonormal
 //! columns and upper-triangular R (n×n) with A = QR.
+//!
+//! [`qr_thin`] is blocked (compact-WY, DESIGN.md §6): each NB-column
+//! panel is factored with scalar reflections, the block reflector
+//! H₁…H_nb = I − V·T·Vᵀ is accumulated into a small upper-triangular T,
+//! and the trailing-matrix update and the thin-Q build are applied as
+//! pairs of GEMMs through the packed kernel — turning the inner loop of
+//! randomized SVD's power iteration into level-3 BLAS.
+//! [`qr_thin_unblocked`] keeps the scalar per-reflector path as the
+//! parity oracle and micro-benchmark reference.
 
+use super::matmul::{gemm_strided, MatRef};
 use crate::tensor::Tensor;
+
+/// Panel width of the blocked factorization.
+const NB: usize = 32;
 
 /// Result of a thin QR factorization.
 #[derive(Debug, Clone)]
@@ -15,8 +28,193 @@ pub struct QrThin {
     pub r: Tensor,
 }
 
-/// Thin QR of an m×n matrix with m ≥ n (Householder).
+/// Thin QR of an m×n matrix with m ≥ n — blocked Householder
+/// (compact WY). Same reflector sign convention as
+/// [`qr_thin_unblocked`], so the factors of the two paths agree to
+/// floating-point reordering.
 pub fn qr_thin(a: &Tensor) -> QrThin {
+    assert_eq!(a.ndim(), 2, "qr expects a matrix");
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert!(m >= n, "qr_thin requires m >= n (got {m}x{n})");
+
+    let mut r = a.data().to_vec();
+    // Per panel: (k0, nb, V, T). V is (m−k0)×nb row-major with the unit
+    // diagonal stored explicitly (zeros above it); T is nb×nb upper
+    // triangular with H₁…H_nb = I − V·T·Vᵀ.
+    let mut panel_store: Vec<(usize, usize, Vec<f32>, Vec<f32>)> = Vec::new();
+
+    let mut k0 = 0usize;
+    while k0 < n {
+        let nb = NB.min(n - k0);
+        let rows = m - k0;
+        let mut v = vec![0f32; rows * nb];
+        let mut tau = vec![0f32; nb];
+
+        // Factor the panel with scalar reflections, updating only the
+        // panel's own columns.
+        for j in 0..nb {
+            let col = k0 + j;
+            let xlen = rows - j;
+            let mut norm2 = 0f64;
+            for i in 0..xlen {
+                let t = r[(k0 + j + i) * n + col] as f64;
+                norm2 += t * t;
+            }
+            if norm2 == 0.0 {
+                continue; // tau stays 0: H_j = I
+            }
+            let norm = norm2.sqrt();
+            let x0 = r[(k0 + j) * n + col] as f64;
+            let alpha = if x0 >= 0.0 { -norm } else { norm };
+            let v0 = x0 - alpha;
+            // ‖v‖² = (x0 − α)² + Σ_{i>0} xᵢ², with v the unnormalized
+            // reflector; normalizing to a unit diagonal (u = v/v0)
+            // rescales β = 2/‖v‖² into τ = β·v0².
+            let vnorm2 = norm2 - 2.0 * x0 * alpha + alpha * alpha;
+            tau[j] = (2.0 * v0 * v0 / vnorm2) as f32;
+            v[j * nb + j] = 1.0;
+            for i in 1..xlen {
+                v[(j + i) * nb + j] = (r[(k0 + j + i) * n + col] as f64 / v0) as f32;
+            }
+            // Apply H_j = I − τ·u·uᵀ to the panel columns j..nb (the
+            // pivot column itself collapses to α·e₁).
+            for jj in j..nb {
+                let cc = k0 + jj;
+                let mut dot = 0f64;
+                for i in 0..xlen {
+                    dot += v[(j + i) * nb + j] as f64 * r[(k0 + j + i) * n + cc] as f64;
+                }
+                let s = tau[j] as f64 * dot;
+                for i in 0..xlen {
+                    r[(k0 + j + i) * n + cc] -= (s * v[(j + i) * nb + j] as f64) as f32;
+                }
+            }
+        }
+
+        // Accumulate T: T[j][j] = τ_j, T[0..j][j] = −τ_j·T[0..j][0..j]·w
+        // with w = V(:, 0..j)ᵀ·v_j.
+        let mut t = vec![0f32; nb * nb];
+        for j in 0..nb {
+            t[j * nb + j] = tau[j];
+            if j == 0 || tau[j] == 0.0 {
+                continue;
+            }
+            let mut w = vec![0f64; j];
+            for i in j..rows {
+                let vij = v[i * nb + j] as f64;
+                for (l, wl) in w.iter_mut().enumerate() {
+                    *wl += v[i * nb + l] as f64 * vij;
+                }
+            }
+            for row in 0..j {
+                let mut s = 0f64;
+                for (l, &wl) in w.iter().enumerate().skip(row) {
+                    s += t[row * nb + l] as f64 * wl;
+                }
+                t[row * nb + j] = (-(tau[j] as f64) * s) as f32;
+            }
+        }
+
+        // Trailing update: A[k0.., k0+nb..] −= V·(Tᵀ·(Vᵀ·A)) — two big
+        // GEMMs around a small one, all through the packed kernel.
+        let ntrail = n - (k0 + nb);
+        if ntrail > 0 {
+            let off = k0 * n + k0 + nb;
+            let mut w = vec![0f32; nb * ntrail];
+            gemm_strided(
+                nb,
+                rows,
+                ntrail,
+                MatRef::transposed(&v, nb),
+                MatRef::strided(&r[off..], n, 1),
+                &mut w,
+                ntrail,
+                1.0,
+            );
+            let mut w2 = vec![0f32; nb * ntrail];
+            gemm_strided(
+                nb,
+                nb,
+                ntrail,
+                MatRef::transposed(&t, nb),
+                MatRef::dense(&w, ntrail),
+                &mut w2,
+                ntrail,
+                1.0,
+            );
+            gemm_strided(
+                rows,
+                nb,
+                ntrail,
+                MatRef::dense(&v, nb),
+                MatRef::dense(&w2, ntrail),
+                &mut r[off..],
+                n,
+                -1.0,
+            );
+        }
+        panel_store.push((k0, nb, v, t));
+        k0 += nb;
+    }
+
+    // Zero the strictly-lower part of R and truncate to n×n.
+    let mut r_out = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in i..n {
+            r_out.set2(i, j, r[i * n + j]);
+        }
+    }
+
+    // Thin Q: apply the block reflectors to the first n columns of I,
+    // innermost panel first — Q ← (I − V·T·Vᵀ)·Q per panel in reverse.
+    let mut q = vec![0f32; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for (k0, nb, v, t) in panel_store.iter().rev() {
+        let (k0, nb) = (*k0, *nb);
+        let rows = m - k0;
+        let off = k0 * n;
+        let mut w = vec![0f32; nb * n];
+        gemm_strided(
+            nb,
+            rows,
+            n,
+            MatRef::transposed(v, nb),
+            MatRef::strided(&q[off..], n, 1),
+            &mut w,
+            n,
+            1.0,
+        );
+        let mut w2 = vec![0f32; nb * n];
+        gemm_strided(
+            nb,
+            nb,
+            n,
+            MatRef::dense(t, nb),
+            MatRef::dense(&w, n),
+            &mut w2,
+            n,
+            1.0,
+        );
+        gemm_strided(
+            rows,
+            nb,
+            n,
+            MatRef::dense(v, nb),
+            MatRef::dense(&w2, n),
+            &mut q[off..],
+            n,
+            -1.0,
+        );
+    }
+    QrThin { q: Tensor::matrix(m, n, q), r: r_out }
+}
+
+/// Thin QR via scalar per-reflector Householder updates — the reference
+/// path the blocked factorization is checked against (and the
+/// `qr/thin_unblocked_*` benchmark baseline).
+pub fn qr_thin_unblocked(a: &Tensor) -> QrThin {
     assert_eq!(a.ndim(), 2, "qr expects a matrix");
     let (m, n) = (a.shape()[0], a.shape()[1]);
     assert!(m >= n, "qr_thin requires m >= n (got {m}x{n})");
@@ -98,8 +296,8 @@ pub fn qr_thin(a: &Tensor) -> QrThin {
 /// Orthonormal basis of the columns of `y` via **CholeskyQR2** — the
 /// GEMM-dominant orthonormalization used on the randomized-SVD hot path
 /// (EXPERIMENTS.md §Perf: ~6× faster than Householder at 784×68, and the
-/// formulation that maps to the MXU). Falls back to Householder when the
-/// Gram matrix is numerically rank-deficient.
+/// formulation that maps to the MXU). Falls back to (blocked)
+/// Householder when the Gram matrix is numerically rank-deficient.
 pub fn orthonormalize(y: &Tensor) -> Tensor {
     match chol_qr(y).and_then(|q1| chol_qr(&q1)) {
         Some(q) => q,
@@ -183,6 +381,44 @@ mod tests {
         for &(m, n) in &[(4, 4), (10, 3), (50, 20), (128, 16), (7, 1)] {
             let a = Tensor::randn(&[m, n], &mut rng);
             check_qr(&a, 1e-4);
+        }
+    }
+
+    #[test]
+    fn qr_multi_panel_shapes() {
+        // widths past NB exercise the T accumulation and the blocked
+        // trailing/Q updates across several panels
+        let mut rng = Rng::new(14);
+        for &(m, n) in &[(90, 70), (100, 64), (65, 33), (40, 40)] {
+            let a = Tensor::randn(&[m, n], &mut rng);
+            check_qr(&a, 1e-3);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_unblocked_factors() {
+        // same sign convention ⇒ the factors agree directly, not just
+        // up to column signs
+        let mut rng = Rng::new(15);
+        for &(m, n) in &[(4, 4), (10, 3), (50, 20), (90, 70), (64, 33), (7, 1)] {
+            let a = Tensor::randn(&[m, n], &mut rng);
+            let blk = qr_thin(&a);
+            let scl = qr_thin_unblocked(&a);
+            assert!(blk.r.rel_err(&scl.r) < 1e-3, "{m}x{n} R err {}", blk.r.rel_err(&scl.r));
+            assert!(blk.q.rel_err(&scl.q) < 1e-3, "{m}x{n} Q err {}", blk.q.rel_err(&scl.q));
+        }
+    }
+
+    #[test]
+    fn unblocked_reference_invariants() {
+        let mut rng = Rng::new(16);
+        for &(m, n) in &[(10, 3), (50, 20), (64, 33)] {
+            let a = Tensor::randn(&[m, n], &mut rng);
+            let QrThin { q, r } = qr_thin_unblocked(&a);
+            let qr = matmul(&q, &r);
+            assert!(a.rel_err(&qr) < 1e-4);
+            let qtq = matmul_tn(&q, &q);
+            assert!(qtq.rel_err(&Tensor::eye(n)) < 1e-4);
         }
     }
 

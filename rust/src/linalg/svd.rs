@@ -274,13 +274,14 @@ fn svd_small_lhs(b: &Tensor, k: usize) -> Svd {
         }
     }
     // V = Bᵀ U diag(1/s)   (zero columns where sigma ~ 0)
-    let bt_u = matmul_tn(b, &u); // n×k
-    let mut v = bt_u;
-    for j in 0..k {
-        let inv = if s[j] > 1e-12 { 1.0 / s[j] } else { 0.0 };
-        for i in 0..n {
-            let x = v.get2(i, j) * inv;
-            v.set2(i, j, x);
+    let mut v = matmul_tn(b, &u); // n×k
+    let inv_s: Vec<f32> = s
+        .iter()
+        .map(|&sig| if sig > 1e-12 { 1.0 / sig } else { 0.0 })
+        .collect();
+    for row in v.data_mut().chunks_exact_mut(k) {
+        for (x, &inv) in row.iter_mut().zip(inv_s.iter()) {
+            *x *= inv;
         }
     }
     Svd { u, s, v }

@@ -4,26 +4,20 @@
 //! `backward`; the backward functions are verified against numerical
 //! differentiation in the module tests.
 
-use crate::linalg::{matmul, matmul_nt, matmul_tn};
+use crate::linalg::{gemm_acc_nt, matmul, matmul_nt, matmul_tn};
 use crate::tensor::Tensor;
 
 // ---------------------------------------------------------------- dense
 
 /// y[B,O] = x[B,I] · Wᵀ + b, with W stored [O, I] (torch convention —
-/// the layout the paper's D_out × D_in gradients use).
+/// the layout the paper's D_out × D_in gradients use). The output
+/// starts as the broadcast bias and the GEMM accumulates onto it — one
+/// pass over y instead of a product tensor plus a bias fix-up.
 pub fn dense_forward(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
     let bsz = x.shape()[0];
     let out = w.shape()[0];
-    let mut y = matmul_nt(x, w);
-    {
-        let yd = y.data_mut();
-        let bd = b.data();
-        for r in 0..bsz {
-            for o in 0..out {
-                yd[r * out + o] += bd[o];
-            }
-        }
-    }
+    let mut y = Tensor::matrix(bsz, out, b.data().repeat(bsz));
+    gemm_acc_nt(&mut y, x, w);
     y
 }
 

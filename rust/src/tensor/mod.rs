@@ -11,4 +11,4 @@ mod unfold;
 
 pub use dense::Tensor;
 pub use ops::*;
-pub use unfold::{fold, mode_n_product, unfold};
+pub use unfold::{fold, mode_n_product, mode_n_product_t, unfold};

@@ -104,6 +104,27 @@ pub fn mode_n_product(x: &Tensor, mode: usize, f: &Tensor) -> Tensor {
     fold(&prod, mode, &new_shape)
 }
 
+/// Mode-n product with the transposed factor, Y = X ×_n Fᵀ, where F is
+/// I_n × J — the HOSVD core projection (𝔊 = 𝔛 ×ᵢ Fᵢᵀ). The packed GEMM
+/// reads F through a strided view, so no transposed copy of the factor
+/// is materialized.
+pub fn mode_n_product_t(x: &Tensor, mode: usize, f: &Tensor) -> Tensor {
+    assert_eq!(f.ndim(), 2, "factor must be a matrix");
+    let (i_n, j) = (f.shape()[0], f.shape()[1]);
+    assert_eq!(
+        x.shape()[mode],
+        i_n,
+        "mode-{mode} product: factor rows {} != tensor dim {}",
+        i_n,
+        x.shape()[mode]
+    );
+    let unf = unfold(x, mode);
+    let prod = crate::linalg::matmul_tn(f, &unf);
+    let mut new_shape = x.shape().to_vec();
+    new_shape[mode] = j;
+    fold(&prod, mode, &new_shape)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +169,18 @@ mod tests {
         let y = mode_n_product(&x, 1, &f);
         assert_eq!(y.shape(), &[2, 1]);
         assert_eq!(y.data(), &[3., 7.]);
+    }
+
+    #[test]
+    fn mode_product_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[5, 4, 3], &mut rng);
+        for mode in 0..3 {
+            let f = Tensor::randn(&[x.shape()[mode], 2], &mut rng);
+            let fast = mode_n_product_t(&x, mode, &f);
+            let slow = mode_n_product(&x, mode, &f.transpose());
+            assert!(fast.rel_err(&slow) < 1e-5, "mode {mode}");
+        }
     }
 
     #[test]

@@ -6,7 +6,10 @@ use qrr::compress::{
     compress_svd, compress_tucker, decompress_svd, decompress_tucker, svd_is_smaller, svd_rank,
     tucker_is_smaller, tucker_ranks,
 };
-use qrr::linalg::SvdMethod;
+use qrr::linalg::{
+    gemm_acc, gemm_acc_nt, gemm_acc_tn, matmul, matmul_nt, matmul_tn, qr_thin, qr_thin_unblocked,
+    SvdMethod,
+};
 use qrr::net::{ClientUpdate, Decoder, Encoder};
 use qrr::qrr::{ClientCodec, QrrConfig, ServerCodec};
 use qrr::quant::{dequantize, quantize, QuantState};
@@ -272,6 +275,92 @@ fn prop_payload_bits_formula() {
                 + (32 + 8 * nu as u64)
                 + (32 + 8 * (n * nu) as u64);
             assert_eq!(msgs[0].wire_bits(), expect);
+        },
+    );
+}
+
+// ------------------------------------------------------- packed GEMM
+
+/// f64-accumulated reference product.
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for kk in 0..k {
+                acc += a.get2(i, kk) as f64 * b.get2(kk, j) as f64;
+            }
+            c.set2(i, j, acc as f32);
+        }
+    }
+    c
+}
+
+#[test]
+fn prop_packed_gemm_matches_naive_all_variants() {
+    // adversarial shapes: off-tile sizes, m=1 / n=1 / k=1 strips, and
+    // the empty k=0 product, across all four transpose variants plus
+    // the accumulate entries
+    forall(
+        0xB1,
+        40,
+        |g| {
+            let dims = [0usize, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 65];
+            let m = *g.choose(&dims[1..]);
+            let k = *g.choose(&dims);
+            let n = *g.choose(&dims[1..]);
+            (
+                Tensor::randn(&[m, k], g.rng()),
+                Tensor::randn(&[k, n], g.rng()),
+                Tensor::randn(&[m, n], g.rng()),
+            )
+        },
+        |(a, b, c0)| {
+            let want = naive_matmul(&a, &b);
+            let tol = 1e-4 * (1.0 + want.max_norm());
+            assert!(matmul(&a, &b).sub(&want).max_norm() <= tol);
+            assert!(matmul_tn(&a.transpose(), &b).sub(&want).max_norm() <= tol);
+            assert!(matmul_nt(&a, &b.transpose()).sub(&want).max_norm() <= tol);
+
+            let want_acc = c0.add(&want);
+            let mut c = c0.clone();
+            gemm_acc(&mut c, &a, &b);
+            assert!(c.sub(&want_acc).max_norm() <= tol);
+            let mut c = c0.clone();
+            gemm_acc_tn(&mut c, &a.transpose(), &b);
+            assert!(c.sub(&want_acc).max_norm() <= tol);
+            let mut c = c0.clone();
+            gemm_acc_nt(&mut c, &a, &b.transpose());
+            assert!(c.sub(&want_acc).max_norm() <= tol);
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_qr_parity_with_scalar_path() {
+    // the blocked compact-WY factorization uses the scalar path's sign
+    // convention, so Q and R agree directly (to fp reordering), and the
+    // usual QR invariants hold
+    forall(
+        0xB2,
+        20,
+        |g| {
+            let n = g.usize_in(1, 40);
+            let m = n + g.usize_in(0, 60);
+            Tensor::randn(&[m, n], g.rng())
+        },
+        |a| {
+            let n = a.shape()[1];
+            let blk = qr_thin(&a);
+            let scl = qr_thin_unblocked(&a);
+            assert!(blk.r.rel_err(&scl.r) < 1e-3, "R err {}", blk.r.rel_err(&scl.r));
+            assert!(blk.q.rel_err(&scl.q) < 1e-3, "Q err {}", blk.q.rel_err(&scl.q));
+            let qtq = matmul_tn(&blk.q, &blk.q);
+            assert!(qtq.rel_err(&Tensor::eye(n)) < 1e-3);
+            let rec = matmul(&blk.q, &blk.r);
+            assert!(a.rel_err(&rec) < 1e-3);
         },
     );
 }
