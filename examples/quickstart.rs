@@ -56,5 +56,21 @@ fn main() -> anyhow::Result<()> {
         lossy.history.total_comms(),
         qrr_report.history.total_comms()
     );
+
+    // Dual-side: compress the broadcast too. The server delta-encodes
+    // the model through its own pipeline each round and clients
+    // reconstruct locally — no direction ships full precision.
+    cfg.participation = ParticipationConfig::Full;
+    let dual = FlSessionBuilder::new(&cfg)
+        .downlink(PipelineSpec::parse("svd(p=0.1)+laq(beta=8)")?)
+        .build()?
+        .run()?;
+    println!(
+        "dual-side downlink: {} vs full-precision broadcast {} ({:.1}% of the bits)",
+        qrr::util::fmt::bits_sci(dual.history.total_down_bits()),
+        qrr::util::fmt::bits_sci(qrr_report.history.total_down_bits()),
+        100.0 * dual.history.total_down_bits() as f64
+            / qrr_report.history.total_down_bits() as f64
+    );
     Ok(())
 }

@@ -41,6 +41,7 @@ fn main() {
                 median: Duration::from_secs_f64(r.step_secs),
                 mad: Duration::ZERO,
                 units_per_iter: None,
+                extras: Vec::new(),
             })
             .collect(),
     };

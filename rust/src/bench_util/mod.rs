@@ -31,6 +31,10 @@ pub struct BenchResult {
     pub mad: Duration,
     /// optional throughput unit count per iteration (elements, bits, …)
     pub units_per_iter: Option<f64>,
+    /// schema-stable numeric annotations, sorted by key (e.g. the round
+    /// suite's `bits_up`/`bits_down`/`ratio` accounting); absent from
+    /// the JSON when empty, so pre-existing baselines still parse
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
@@ -64,7 +68,21 @@ impl BenchResult {
         if let Some(u) = self.units_per_iter {
             pairs.push(("units_per_iter", Json::Num(u)));
         }
-        Json::obj(pairs)
+        let mut j = Json::obj(pairs);
+        if !self.extras.is_empty() {
+            if let Json::Obj(m) = &mut j {
+                m.insert(
+                    "extras".into(),
+                    Json::Obj(
+                        self.extras
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        j
     }
 
     /// Parse the object written by [`Self::to_json`].
@@ -92,6 +110,13 @@ impl BenchResult {
                     .ok_or_else(|| anyhow::anyhow!("mad_ns must be an integer"))?,
             ),
             units_per_iter: j.get("units_per_iter").and_then(Json::as_f64),
+            extras: match j.get("extras") {
+                Some(Json::Obj(m)) => m
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect(),
+                _ => Vec::new(),
+            },
         })
     }
 }
@@ -208,6 +233,7 @@ impl Bench {
             median,
             mad,
             units_per_iter: units,
+            extras: Vec::new(),
         };
         println!("{}", result.line());
         result
@@ -277,6 +303,7 @@ mod tests {
             median: Duration::from_nanos(1_234_567),
             mad: Duration::from_nanos(8_910),
             units_per_iter: Some(160_563_200.0),
+            extras: vec![("bits_down".into(), 12_345.0), ("bits_up".into(), 67_890.0)],
         };
         let back = BenchResult::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);

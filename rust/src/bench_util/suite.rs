@@ -65,10 +65,22 @@ impl Suite {
             median: elapsed,
             mad: Duration::ZERO,
             units_per_iter: None,
+            extras: Vec::new(),
         };
         println!("{}", r.line());
         self.results.push(r.clone());
         (value, r)
+    }
+
+    /// Attach schema-stable numeric annotations to the most recently
+    /// recorded case (stored sorted by key; emitted as the case's
+    /// `extras` object). The round suite uses this to record the
+    /// uplink/downlink bit accounting next to its timings.
+    pub fn annotate_last(&mut self, mut extras: Vec<(String, f64)>) {
+        if let Some(last) = self.results.last_mut() {
+            extras.sort_by(|a, b| a.0.cmp(&b.0));
+            last.extras = extras;
+        }
     }
 
     /// Seal the suite into its report.
@@ -292,6 +304,7 @@ mod tests {
             median: Duration::from_nanos(ns),
             mad: Duration::ZERO,
             units_per_iter: None,
+            extras: Vec::new(),
         }
     }
 

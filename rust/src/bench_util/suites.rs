@@ -219,6 +219,41 @@ pub fn kernel_cases(suite: &mut Suite) {
         dec_pooled.decode_on(&msgs, &pool)
     });
 
+    // downlink codec at the MLP's shapes: delta-encode the broadcast
+    // (svd+laq through the pipeline) and the client-side reconstruction
+    {
+        use crate::compress::pipeline::{DownlinkDecoder, DownlinkEncoder, PipelineSpec};
+        let spec = PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").expect("bench spec");
+        let init: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        // alternate between two parameter sets so every encode sees a
+        // real (non-vanishing) delta
+        let mut params_a = init.clone();
+        let mut params_b = init.clone();
+        for (a, b) in params_a.iter_mut().zip(params_b.iter_mut()) {
+            a.axpy(0.05, &Tensor::randn(a.shape(), &mut rng));
+            b.axpy(0.05, &Tensor::randn(b.shape(), &mut rng));
+        }
+        // pre-encode one broadcast for the decode case before the encode
+        // closure takes ownership of the parameter sets
+        let mut enc2 = DownlinkEncoder::new(&spec, &shapes, &init).expect("bench downlink");
+        let mut upd = enc2.encode(&params_a, 0);
+        let mut dec = DownlinkDecoder::new(&spec, &shapes, &init).expect("bench downlink");
+        let mut seq = 0u64;
+        suite.case("codec/downlink_decode", None, move || {
+            // fresh sequence number per apply: the decoder enforces
+            // exactly-once, in-order delivery
+            upd.seq = seq;
+            seq += 1;
+            dec.apply(&upd).expect("bench decode");
+        });
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).expect("bench downlink");
+        let mut flip = false;
+        suite.case("codec/downlink_encode", None, move || {
+            flip = !flip;
+            enc.encode(if flip { &params_a } else { &params_b }, 0)
+        });
+    }
+
     // native model grad step (the L3-side compute baseline)
     let model = NativeModel::new(ModelKind::Mlp);
     let spec = ModelSpec::new(ModelKind::Mlp);
@@ -261,27 +296,51 @@ pub fn round_cases(suite: &mut Suite) {
         ("full", ParticipationConfig::Full),
         ("uniform0.5", ParticipationConfig::Uniform { fraction: 0.5 }),
     ];
+    let bench_cfg = |scheme, participation| {
+        let mut cfg = ExperimentConfig::table1_default();
+        cfg.scheme = scheme;
+        cfg.participation = participation;
+        cfg.clients = 4;
+        cfg.batch = 16;
+        cfg.train_n = 512;
+        cfg.test_n = 64;
+        cfg.eval_every = u64::MAX; // never evaluate inside the bench
+        cfg.lr_schedule = vec![(0, 0.01)];
+        cfg
+    };
+    // each case primes one round first so the uplink/downlink bit
+    // accounting of a representative round rides along in the JSON
+    // (`extras`: bits_up / bits_down / ratio) next to the timing
+    fn run_case(suite: &mut Suite, name: &str, cfg: &ExperimentConfig) {
+        let mut session = FlSessionBuilder::new(cfg).quiet().build().expect("bench session");
+        session.step(0).expect("bench prime step");
+        let r0 = session.history().rounds[0].clone();
+        let mut it = 1u64;
+        suite.case(name, Some(1.0), move || {
+            session.step(it).expect("bench step");
+            it += 1;
+        });
+        suite.annotate_last(vec![
+            ("bits_up".into(), r0.bits as f64),
+            ("bits_down".into(), r0.down_bits as f64),
+            ("ratio".into(), r0.ratio),
+        ]);
+    }
     for (s_label, scheme) in schemes {
         for (p_label, participation) in parts {
-            let mut cfg = ExperimentConfig::table1_default();
-            cfg.scheme = scheme;
-            cfg.participation = participation;
-            cfg.clients = 4;
-            cfg.batch = 16;
-            cfg.train_n = 512;
-            cfg.test_n = 64;
-            cfg.eval_every = u64::MAX; // never evaluate inside the bench
-            cfg.lr_schedule = vec![(0, 0.01)];
-            let mut session = FlSessionBuilder::new(&cfg)
-                .quiet()
-                .build()
-                .expect("bench session");
-            let mut it = 0u64;
-            suite.case(&format!("round/{s_label}/{p_label}"), Some(1.0), move || {
-                session.step(it).expect("bench step");
-                it += 1;
-            });
+            let cfg = bench_cfg(scheme, participation);
+            run_case(suite, &format!("round/{s_label}/{p_label}"), &cfg);
         }
+    }
+    // dual-side: the same QRR round with the broadcast delta-encoded
+    // through the downlink pipeline (perf gate covers the new path)
+    {
+        let mut cfg = bench_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)), ParticipationConfig::Full);
+        cfg.downlink = Some(
+            crate::compress::pipeline::PipelineSpec::parse("svd(p=0.1)+laq(beta=8)")
+                .expect("bench spec"),
+        );
+        run_case(suite, "round/qrr_p0.2+downlink/full", &cfg);
     }
 }
 

@@ -8,11 +8,20 @@
 //!
 //! [`rank`] computes the paper's rank rules and the wire-size
 //! inequalities (8)/(11) that decide whether compression pays off.
+//!
+//! [`pipeline`] composes these operators (and the LAQ quantizer) into
+//! first-class compression pipelines with a spec grammar, a preset
+//! registry, and the dual-side downlink codec (DESIGN.md §7).
 
+pub mod pipeline;
 pub mod rank;
 mod svd;
 mod tucker;
 
+pub use pipeline::{
+    BuildCtx, CompressionPipeline, DownlinkDecoder, DownlinkEncoder, Feedback, PipelineClient,
+    PipelineServer, PipelineSpec, Quantizer, QuantizerSpec, RankReducer, ReducePlan, ReducerSpec,
+};
 pub use rank::{svd_rank, tucker_ranks, svd_is_smaller, tucker_is_smaller};
 pub use svd::{SvdCompressed, compress_svd, decompress_svd};
 pub use tucker::{TuckerCompressed, compress_tucker, decompress_tucker};

@@ -1,0 +1,1707 @@
+//! The composable compression-pipeline API (DESIGN.md §7).
+//!
+//! A pipeline is `rank-reduction × quantization × feedback`, the design
+//! space the structured-update taxonomy of Konečný et al. spans and of
+//! which the paper's QRR is one point:
+//!
+//! * [`RankReducer`] stages — [`Identity`], [`Svd`]`{p}`,
+//!   [`Tucker`]`{p}` — decide per parameter tensor how ℂ factors it
+//!   (each stage claims the shapes it applies to; unclaimed parameters
+//!   stay dense).
+//! * A [`Quantizer`] stage — [`Identity`] or [`Laq`]`{beta}` — decides
+//!   whether factors travel as β-bit LAQ grids (with mirrored
+//!   differential state on both sides) or as raw f32.
+//! * A [`Feedback`] wrapper — `None` or `ErrorFeedback` — optionally
+//!   re-injects the compression residual into the next round's input.
+//! * A `lazy` wrapper adds the SLAQ skip rule (valid only on the plain
+//!   `laq` pipeline, which is exactly the SLAQ comparator).
+//!
+//! Specs are written in a small grammar, e.g.
+//! `"svd(p=0.1)+laq(beta=8)+ef"`, parseable from JSON config and the
+//! CLI ([`PipelineSpec::parse`]); the legacy schemes are named presets
+//! resolving through the same registry ([`presets`]):
+//!
+//! | preset | spec |
+//! |---|---|
+//! | `sgd` | `identity` |
+//! | `slaq` | `laq(beta=8)+lazy` |
+//! | `qrr` | `svd(p=0.3)+tucker(p=0.3)+laq(beta=8)` |
+//! | `ef-qrr` | `svd(p=0.3)+tucker(p=0.3)+laq(beta=8)+ef` |
+//!
+//! [`CompressionPipeline::compile`] checks a spec against a model's
+//! parameter shapes and vends the mirrored halves: a [`PipelineClient`]
+//! (gradients in, wire update out) and a [`PipelineServer`] (wire update
+//! in, reconstructed gradients out). The legacy presets produce wire
+//! bytes bit-identical to the pre-pipeline scheme layer because the
+//! halves are built on the same machinery (`qrr::ClientCodec`
+//! state mirrors, `slaq::SlaqClient`).
+//!
+//! The same stages run on the **downlink**: [`DownlinkEncoder`] holds a
+//! shadow of the clients' model, each round encodes the parameter delta
+//! `θ_server − θ_shadow` through the pipeline into a versioned
+//! [`ServerUpdate`] wire message, and advances the shadow by its own
+//! reconstruction — so compression error feeds back into the next
+//! round's delta (dual-side low-rank compression à la Qiao et al.).
+//! [`DownlinkDecoder`] mirrors the state client-side and locally
+//! reconstructs the model, so rounds never ship full-precision
+//! parameters.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::{
+    compress_svd, compress_tucker, decompress_svd, decompress_tucker, svd_rank, tucker_ranks,
+    SvdCompressed, TuckerCompressed,
+};
+use crate::linalg::SvdMethod;
+use crate::net::wire::{ClientUpdate, ServerUpdate};
+use crate::qrr::{ClientCodec, EfClientCodec, ParamMsg, ParamState, QrrConfig, ServerCodec};
+use crate::slaq::{SlaqClient, SlaqConfig, SlaqServerState};
+use crate::tensor::Tensor;
+
+// ------------------------------------------------------------- stages
+
+/// A rank-reduction stage: decides, per parameter shape, how ℂ factors
+/// the tensor. Stages are consulted in spec order; the first to return
+/// a plan claims the parameter.
+pub trait RankReducer: Send + Sync {
+    /// Spec-grammar label, e.g. `svd(p=0.1)`.
+    fn label(&self) -> String;
+
+    /// The reduction plan for a parameter of `shape`, or `None` if this
+    /// stage does not apply to it.
+    fn plan(&self, shape: &[usize]) -> Option<ReducePlan>;
+}
+
+/// A quantization stage: decides how factor tensors travel.
+pub trait Quantizer: Send + Sync {
+    /// Spec-grammar label, e.g. `laq(beta=8)`.
+    fn label(&self) -> String;
+
+    /// Bits per element on the β-bit grid; `None` = full-precision f32.
+    fn beta(&self) -> Option<u8>;
+}
+
+/// The do-nothing stage: as a reducer it claims every shape as dense
+/// (no factorization); as a quantizer it sends raw f32.
+pub struct Identity;
+
+impl RankReducer for Identity {
+    fn label(&self) -> String {
+        "identity".into()
+    }
+
+    fn plan(&self, _shape: &[usize]) -> Option<ReducePlan> {
+        Some(ReducePlan::Dense)
+    }
+}
+
+impl Quantizer for Identity {
+    fn label(&self) -> String {
+        "identity".into()
+    }
+
+    fn beta(&self) -> Option<u8> {
+        None
+    }
+}
+
+/// Truncated SVD at rank ν = ⌈p·min(m,n)⌉ for matrix parameters
+/// (paper eq. (20)/(22)); does not apply to other ranks.
+pub struct Svd {
+    /// fraction of the original rank retained, in (0, 1]
+    pub p: f64,
+}
+
+impl RankReducer for Svd {
+    fn label(&self) -> String {
+        format!("svd(p={})", self.p)
+    }
+
+    fn plan(&self, shape: &[usize]) -> Option<ReducePlan> {
+        (shape.len() == 2)
+            .then(|| ReducePlan::Svd { nu: svd_rank(shape[0], shape[1], self.p) })
+    }
+}
+
+/// Tucker/HOSVD at per-mode ranks rᵢ = ⌈p·Iᵢ⌉ for parameters of 3+
+/// modes (paper eq. (21)/(23)).
+pub struct Tucker {
+    /// fraction of each mode's rank retained, in (0, 1]
+    pub p: f64,
+}
+
+impl RankReducer for Tucker {
+    fn label(&self) -> String {
+        format!("tucker(p={})", self.p)
+    }
+
+    fn plan(&self, shape: &[usize]) -> Option<ReducePlan> {
+        (shape.len() >= 3).then(|| ReducePlan::Tucker { ranks: tucker_ranks(shape, self.p) })
+    }
+}
+
+/// The LAQ β-bit grid quantizer (paper §II-B) with mirrored
+/// differential state per factor.
+pub struct Laq {
+    /// bits per element, 1..=16
+    pub beta: u8,
+}
+
+impl Quantizer for Laq {
+    fn label(&self) -> String {
+        format!("laq(beta={})", self.beta)
+    }
+
+    fn beta(&self) -> Option<u8> {
+        Some(self.beta)
+    }
+}
+
+/// Whether the client re-injects its compression residual into the next
+/// round's gradient before compressing (Seide et al. / Karimireddy et
+/// al. error feedback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Feedback {
+    /// compression error is dropped (the paper's plain QRR)
+    #[default]
+    None,
+    /// residual accumulates and is re-sent (`+ef` in the grammar)
+    ErrorFeedback,
+}
+
+/// Compiled per-parameter reduction plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReducePlan {
+    /// no factorization; the tensor is (possibly quantized and) sent whole
+    Dense,
+    /// truncated SVD at rank ν
+    Svd {
+        /// retained rank
+        nu: usize,
+    },
+    /// Tucker at per-mode ranks
+    Tucker {
+        /// retained per-mode ranks
+        ranks: Vec<usize>,
+    },
+}
+
+// ---------------------------------------------------------------- spec
+
+/// A rank-reducer stage in a [`PipelineSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReducerSpec {
+    /// truncated SVD for matrices
+    Svd {
+        /// retained rank fraction, in (0, 1]
+        p: f64,
+    },
+    /// Tucker for 3+-mode tensors
+    Tucker {
+        /// retained per-mode rank fraction, in (0, 1]
+        p: f64,
+    },
+}
+
+impl ReducerSpec {
+    /// Instantiate the stage behind this spec (the boxed form for
+    /// callers composing `dyn RankReducer` stages).
+    pub fn stage(&self) -> Box<dyn RankReducer> {
+        match *self {
+            ReducerSpec::Svd { p } => Box::new(Svd { p }),
+            ReducerSpec::Tucker { p } => Box::new(Tucker { p }),
+        }
+    }
+
+    /// The stage's grammar label, without allocating a trait object.
+    pub fn label(&self) -> String {
+        match *self {
+            ReducerSpec::Svd { p } => Svd { p }.label(),
+            ReducerSpec::Tucker { p } => Tucker { p }.label(),
+        }
+    }
+
+    /// The stage's plan for `shape`, without allocating a trait object.
+    pub fn plan(&self, shape: &[usize]) -> Option<ReducePlan> {
+        match *self {
+            ReducerSpec::Svd { p } => Svd { p }.plan(shape),
+            ReducerSpec::Tucker { p } => Tucker { p }.plan(shape),
+        }
+    }
+
+    fn p(&self) -> f64 {
+        match *self {
+            ReducerSpec::Svd { p } | ReducerSpec::Tucker { p } => p,
+        }
+    }
+}
+
+/// A quantizer stage in a [`PipelineSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantizerSpec {
+    /// LAQ β-bit grids with mirrored differential state
+    Laq {
+        /// bits per element, 1..=16
+        beta: u8,
+    },
+}
+
+impl QuantizerSpec {
+    /// Instantiate the stage behind this spec (the boxed form for
+    /// callers composing `dyn Quantizer` stages).
+    pub fn stage(&self) -> Box<dyn Quantizer> {
+        match *self {
+            QuantizerSpec::Laq { beta } => Box::new(Laq { beta }),
+        }
+    }
+
+    /// The stage's grammar label, without allocating a trait object.
+    pub fn label(&self) -> String {
+        match *self {
+            QuantizerSpec::Laq { beta } => Laq { beta }.label(),
+        }
+    }
+}
+
+/// A parsed, validated compression-pipeline description.
+///
+/// Build one from the grammar with [`PipelineSpec::parse`], or from the
+/// preset constructors ([`sgd`](Self::sgd), [`slaq`](Self::slaq),
+/// [`qrr`](Self::qrr), [`qrr_ef`](Self::qrr_ef)). [`format`](Self::format)
+/// renders the canonical spec string; `parse ∘ format` is the identity.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PipelineSpec {
+    /// rank-reduction stages, consulted in order per parameter
+    pub reducers: Vec<ReducerSpec>,
+    /// the quantizer stage; `None` = identity (raw f32 factors)
+    pub quantizer: Option<QuantizerSpec>,
+    /// the feedback wrapper
+    pub feedback: Feedback,
+    /// the SLAQ lazy-skip wrapper (`+lazy`; plain-`laq` pipelines only)
+    pub lazy: bool,
+}
+
+impl PipelineSpec {
+    /// The `sgd` preset: identity pipeline, full-precision gradients.
+    pub fn sgd() -> Self {
+        PipelineSpec::default()
+    }
+
+    /// The `slaq` preset: `laq(beta=β)+lazy`.
+    pub fn slaq(beta: u8) -> Self {
+        PipelineSpec {
+            quantizer: Some(QuantizerSpec::Laq { beta }),
+            lazy: true,
+            ..Default::default()
+        }
+    }
+
+    /// The `qrr` preset: `svd(p)+tucker(p)+laq(beta=β)` — the paper's
+    /// scheme (SVD for matrices, Tucker for conv kernels, biases
+    /// quantize-only).
+    pub fn qrr(p: f64, beta: u8) -> Self {
+        PipelineSpec {
+            reducers: vec![ReducerSpec::Svd { p }, ReducerSpec::Tucker { p }],
+            quantizer: Some(QuantizerSpec::Laq { beta }),
+            ..Default::default()
+        }
+    }
+
+    /// The `ef-qrr` preset: [`qrr`](Self::qrr) plus error feedback.
+    pub fn qrr_ef(p: f64, beta: u8) -> Self {
+        PipelineSpec { feedback: Feedback::ErrorFeedback, ..Self::qrr(p, beta) }
+    }
+
+    /// Parse a spec string: a preset name (`sgd`, `slaq`, `qrr`,
+    /// `ef-qrr`, optionally with `(p=…,beta=…)` arguments) or a `+`-joined
+    /// stage list over `identity` / `svd(p=…)` / `tucker(p=…)` /
+    /// `laq(beta=…)` / `ef` / `lazy`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        ensure!(!s.is_empty(), "empty pipeline spec");
+        if let Some(spec) = Self::parse_preset(s)? {
+            return Ok(spec);
+        }
+        let mut spec = PipelineSpec::default();
+        let mut saw_identity = false;
+        let mut n_stages = 0usize;
+        for tok in s.split('+') {
+            let tok = tok.trim();
+            ensure!(!tok.is_empty(), "empty stage in {s:?} (trailing or doubled '+')");
+            n_stages += 1;
+            let (name, args) = split_stage(tok)?;
+            match name {
+                "identity" => {
+                    ensure!(args.is_empty(), "identity takes no arguments");
+                    saw_identity = true;
+                }
+                "svd" => {
+                    ensure!(
+                        !spec.reducers.iter().any(|r| matches!(r, ReducerSpec::Svd { .. })),
+                        "duplicate svd stage"
+                    );
+                    spec.reducers.push(ReducerSpec::Svd { p: arg_p(&args, tok)? });
+                }
+                "tucker" => {
+                    ensure!(
+                        !spec.reducers.iter().any(|r| matches!(r, ReducerSpec::Tucker { .. })),
+                        "duplicate tucker stage"
+                    );
+                    spec.reducers.push(ReducerSpec::Tucker { p: arg_p(&args, tok)? });
+                }
+                "laq" => {
+                    ensure!(spec.quantizer.is_none(), "duplicate laq stage");
+                    spec.quantizer = Some(QuantizerSpec::Laq { beta: arg_beta(&args, tok)? });
+                }
+                "ef" => {
+                    ensure!(args.is_empty(), "ef takes no arguments");
+                    ensure!(spec.feedback == Feedback::None, "duplicate ef stage");
+                    spec.feedback = Feedback::ErrorFeedback;
+                }
+                "lazy" => {
+                    ensure!(args.is_empty(), "lazy takes no arguments");
+                    ensure!(!spec.lazy, "duplicate lazy stage");
+                    spec.lazy = true;
+                }
+                other => bail!(
+                    "unknown stage {other:?} (identity | svd(p=..) | tucker(p=..) | \
+                     laq(beta=..) | ef | lazy, or a preset: sgd | slaq | qrr | ef-qrr)"
+                ),
+            }
+        }
+        if saw_identity {
+            ensure!(
+                n_stages == 1,
+                "identity must be the whole pipeline, not combined with other stages"
+            );
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn parse_preset(s: &str) -> Result<Option<Self>> {
+        let (name, args) = match split_stage(s) {
+            Ok(x) => x,
+            Err(_) => return Ok(None),
+        };
+        let spec = match name {
+            "sgd" => {
+                ensure!(args.is_empty(), "sgd takes no arguments");
+                Self::sgd()
+            }
+            "slaq" => Self::slaq(arg_beta_or(&args, 8, &["beta"], s)?),
+            "qrr" => Self::qrr(
+                arg_p_or(&args, 0.3, &["p", "beta"], s)?,
+                arg_beta_or(&args, 8, &["p", "beta"], s)?,
+            ),
+            "ef-qrr" | "qrr-ef" => Self::qrr_ef(
+                arg_p_or(&args, 0.3, &["p", "beta"], s)?,
+                arg_beta_or(&args, 8, &["p", "beta"], s)?,
+            ),
+            _ => return Ok(None),
+        };
+        Ok(Some(spec))
+    }
+
+    /// Range and composition checks (also run by [`parse`](Self::parse)).
+    pub fn validate(&self) -> Result<()> {
+        for r in &self.reducers {
+            let p = r.p();
+            ensure!(
+                p > 0.0 && p <= 1.0 && p.is_finite(),
+                "rank fraction p must be in (0,1], got {p}"
+            );
+        }
+        if let Some(QuantizerSpec::Laq { beta }) = self.quantizer {
+            ensure!((1..=16).contains(&beta), "laq beta must be in 1..=16, got {beta}");
+        }
+        if self.feedback == Feedback::ErrorFeedback {
+            ensure!(
+                self.quantizer.is_some(),
+                "ef requires the laq quantizer (raw-f32 pipelines keep no residual state)"
+            );
+        }
+        if self.lazy {
+            ensure!(
+                self.quantizer.is_some() && self.reducers.is_empty(),
+                "lazy (the SLAQ skip rule) applies only to the plain laq pipeline"
+            );
+            ensure!(
+                self.feedback == Feedback::None,
+                "lazy and ef cannot be combined"
+            );
+        }
+        Ok(())
+    }
+
+    /// The canonical spec string; [`parse`](Self::parse) inverts it.
+    pub fn format(&self) -> String {
+        let mut parts: Vec<String> = self.reducers.iter().map(|r| r.label()).collect();
+        if let Some(q) = &self.quantizer {
+            parts.push(q.label());
+        }
+        if self.feedback == Feedback::ErrorFeedback {
+            parts.push("ef".into());
+        }
+        if self.lazy {
+            parts.push("lazy".into());
+        }
+        if parts.is_empty() {
+            return "identity".into();
+        }
+        parts.join("+")
+    }
+
+    /// True for the all-identity pipeline (the `sgd` preset).
+    pub fn is_identity(&self) -> bool {
+        self.reducers.is_empty() && self.quantizer.is_none() && !self.lazy
+    }
+
+    /// [`validate`](Self::validate) plus the downlink-specific rules:
+    /// `lazy` is an uplink policy, and `ef` is redundant because the
+    /// delta-vs-shadow encoding already feeds compression error back.
+    /// The single source of truth for every downlink entry point
+    /// (config JSON, CLI overrides, [`DownlinkEncoder`]/[`DownlinkDecoder`]).
+    pub fn validate_downlink(&self) -> Result<()> {
+        self.validate()?;
+        ensure!(!self.lazy, "the lazy skip rule is an uplink policy; invalid on the downlink");
+        ensure!(
+            self.feedback == Feedback::None,
+            "downlink deltas are encoded against a shadow model, which already \
+             feeds compression error back; drop the explicit +ef"
+        );
+        Ok(())
+    }
+
+    fn beta(&self) -> Option<u8> {
+        self.quantizer.map(|q| match q {
+            QuantizerSpec::Laq { beta } => beta,
+        })
+    }
+
+    /// The plan the reducer stages produce for one parameter shape.
+    fn plan_for(&self, shape: &[usize]) -> ReducePlan {
+        for r in &self.reducers {
+            if let Some(plan) = r.plan(shape) {
+                return plan;
+            }
+        }
+        ReducePlan::Dense
+    }
+}
+
+fn split_stage(tok: &str) -> Result<(&str, Vec<(String, String)>)> {
+    match tok.split_once('(') {
+        None => {
+            ensure!(
+                tok.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+                "malformed stage {tok:?}"
+            );
+            Ok((tok, Vec::new()))
+        }
+        Some((name, rest)) => {
+            let inner = rest
+                .strip_suffix(')')
+                .ok_or_else(|| anyhow::anyhow!("unclosed '(' in stage {tok:?}"))?;
+            let mut args = Vec::new();
+            for kv in inner.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("expected key=value in {tok:?}, got {kv:?}"))?;
+                args.push((k.trim().to_string(), v.trim().to_string()));
+            }
+            Ok((name, args))
+        }
+    }
+}
+
+/// Reject any argument key this stage/preset does not accept, then look
+/// up `key`. Each call site passes exactly the keys it understands, so
+/// e.g. `svd(p=0.1,beta=4)` fails loudly instead of silently dropping
+/// the beta the user thought they set.
+fn arg<'a>(
+    args: &'a [(String, String)],
+    key: &str,
+    allowed: &[&str],
+    tok: &str,
+) -> Result<Option<&'a str>> {
+    for (k, _) in args {
+        ensure!(
+            allowed.iter().any(|a| a == k),
+            "unknown argument {k:?} in {tok:?} (accepted: {})",
+            allowed.join(", ")
+        );
+    }
+    Ok(args.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str()))
+}
+
+fn arg_p(args: &[(String, String)], tok: &str) -> Result<f64> {
+    arg(args, "p", &["p"], tok)?
+        .ok_or_else(|| anyhow::anyhow!("{tok:?} requires p=<fraction>"))?
+        .parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("bad p in {tok:?}"))
+}
+
+fn arg_p_or(args: &[(String, String)], default: f64, allowed: &[&str], tok: &str) -> Result<f64> {
+    match arg(args, "p", allowed, tok)? {
+        None => Ok(default),
+        Some(v) => v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad p in {tok:?}")),
+    }
+}
+
+fn arg_beta(args: &[(String, String)], tok: &str) -> Result<u8> {
+    arg(args, "beta", &["beta"], tok)?
+        .ok_or_else(|| anyhow::anyhow!("{tok:?} requires beta=<bits>"))?
+        .parse::<u8>()
+        .map_err(|_| anyhow::anyhow!("bad beta in {tok:?}"))
+}
+
+fn arg_beta_or(args: &[(String, String)], default: u8, allowed: &[&str], tok: &str) -> Result<u8> {
+    match arg(args, "beta", allowed, tok)? {
+        None => Ok(default),
+        Some(v) => v.parse::<u8>().map_err(|_| anyhow::anyhow!("bad beta in {tok:?}")),
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+/// One registered preset: a name resolving to a full spec.
+pub struct PresetInfo {
+    /// registry name (what configs/CLI write)
+    pub name: &'static str,
+    /// the spec the name resolves to (default parameters)
+    pub spec: String,
+    /// one-line description
+    pub summary: &'static str,
+}
+
+/// The preset registry: every legacy scheme as a named pipeline.
+pub fn presets() -> Vec<PresetInfo> {
+    vec![
+        PresetInfo {
+            name: "sgd",
+            spec: PipelineSpec::sgd().format(),
+            summary: "full-precision federated averaging (paper baseline)",
+        },
+        PresetInfo {
+            name: "slaq",
+            spec: PipelineSpec::slaq(8).format(),
+            summary: "lazily aggregated quantized gradients (paper comparator)",
+        },
+        PresetInfo {
+            name: "qrr",
+            spec: PipelineSpec::qrr(0.3, 8).format(),
+            summary: "quantized rank reduction (the paper's scheme); args p, beta",
+        },
+        PresetInfo {
+            name: "ef-qrr",
+            spec: PipelineSpec::qrr_ef(0.3, 8).format(),
+            summary: "QRR with client-side error feedback; args p, beta",
+        },
+    ]
+}
+
+/// One registered stage of the spec grammar.
+pub struct StageInfo {
+    /// grammar form
+    pub signature: &'static str,
+    /// one-line description
+    pub summary: &'static str,
+}
+
+/// The stage registry backing the spec grammar.
+pub fn stages() -> Vec<StageInfo> {
+    vec![
+        StageInfo {
+            signature: "identity",
+            summary: "no compression (must be the whole pipeline)",
+        },
+        StageInfo {
+            signature: "svd(p=<frac>)",
+            summary: "truncated SVD at rank ceil(p*min(m,n)) for matrix parameters",
+        },
+        StageInfo {
+            signature: "tucker(p=<frac>)",
+            summary: "Tucker/HOSVD at ranks ceil(p*I_i) for 3+-mode parameters",
+        },
+        StageInfo {
+            signature: "laq(beta=<bits>)",
+            summary: "LAQ beta-bit grid quantizer with mirrored differential state",
+        },
+        StageInfo {
+            signature: "ef",
+            summary: "error feedback: residual re-injected next round (needs laq)",
+        },
+        StageInfo {
+            signature: "lazy",
+            summary: "SLAQ lazy-skip rule (plain laq pipelines only)",
+        },
+    ]
+}
+
+// ------------------------------------------------------------ compile
+
+/// Client-side build context: parameters the SLAQ lazy rule needs.
+#[derive(Debug, Clone, Copy)]
+pub struct BuildCtx {
+    /// learning rate α (enters the SLAQ skip threshold)
+    pub alpha: f32,
+    /// number of clients C (enters the SLAQ skip threshold)
+    pub clients: usize,
+}
+
+/// A spec compiled against a model's parameter shapes; vends the
+/// mirrored [`PipelineClient`] / [`PipelineServer`] halves.
+pub struct CompressionPipeline {
+    spec: PipelineSpec,
+    label: String,
+    shapes: Vec<Vec<usize>>,
+    plans: Vec<ReducePlan>,
+    /// identity spec ⇒ emit the legacy full-precision `Sgd` wire form
+    passthrough: bool,
+}
+
+impl CompressionPipeline {
+    /// Validate `spec` and compile its per-parameter plans over `shapes`.
+    pub fn compile(spec: PipelineSpec, shapes: &[Vec<usize>]) -> Result<Self> {
+        spec.validate()?;
+        let plans = shapes.iter().map(|s| spec.plan_for(s)).collect();
+        Ok(CompressionPipeline {
+            label: spec.format(),
+            passthrough: spec.is_identity(),
+            spec,
+            shapes: shapes.to_vec(),
+            plans,
+        })
+    }
+
+    /// Compile from **custom stage objects** instead of a parsed spec —
+    /// the extensibility seam behind the [`RankReducer`] trait: the
+    /// boxed stages are consulted in order exactly like spec stages, so
+    /// a third-party reducer can claim shapes with its own policy (the
+    /// plan vocabulary stays [`ReducePlan`], which fixes the wire
+    /// format). Quantizer and feedback still come from the closed spec
+    /// vocabulary for the same reason. Parameters no stage claims stay
+    /// dense; the resulting pipeline never takes the legacy `Sgd`
+    /// passthrough (that wire form belongs to the `sgd` preset alone).
+    pub fn compile_with(
+        reducers: &[Box<dyn RankReducer>],
+        quantizer: Option<QuantizerSpec>,
+        feedback: Feedback,
+        shapes: &[Vec<usize>],
+    ) -> Result<Self> {
+        let spec = PipelineSpec { reducers: Vec::new(), quantizer, feedback, lazy: false };
+        spec.validate()?;
+        let plans = shapes
+            .iter()
+            .map(|s| {
+                reducers
+                    .iter()
+                    .find_map(|r| r.plan(s))
+                    .unwrap_or(ReducePlan::Dense)
+            })
+            .collect();
+        let mut parts: Vec<String> = reducers.iter().map(|r| r.label()).collect();
+        if let Some(q) = &spec.quantizer {
+            parts.push(q.label());
+        }
+        if spec.feedback == Feedback::ErrorFeedback {
+            parts.push("ef".into());
+        }
+        let label = if parts.is_empty() { "identity".into() } else { parts.join("+") };
+        Ok(CompressionPipeline {
+            label,
+            passthrough: false,
+            spec,
+            shapes: shapes.to_vec(),
+            plans,
+        })
+    }
+
+    /// The validated spec (custom-stage pipelines report an empty
+    /// reducer list — their policy lives in the stages).
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    /// Display label: the canonical spec string, or the joined stage
+    /// labels for a custom-stage pipeline.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Compiled per-parameter plans (tests / diagnostics).
+    pub fn plans(&self) -> &[ReducePlan] {
+        &self.plans
+    }
+
+    fn quant_states(&self) -> Vec<ParamState> {
+        self.shapes
+            .iter()
+            .zip(self.plans.iter())
+            .map(|(shape, plan)| match plan {
+                ReducePlan::Dense => ParamState::planned_dense(shape),
+                ReducePlan::Svd { nu } => ParamState::planned_svd(shape[0], shape[1], *nu),
+                ReducePlan::Tucker { ranks } => ParamState::planned_tucker(shape, ranks.clone()),
+            })
+            .collect()
+    }
+
+    fn qrr_config(&self, beta: u8) -> QrrConfig {
+        // p is display-only once states are planned
+        let p = self.spec.reducers.first().map(|r| r.p()).unwrap_or(0.0);
+        QrrConfig { p, beta, method: SvdMethod::Auto }
+    }
+
+    fn enc_core(&self) -> EncCore {
+        match self.spec.beta() {
+            None => EncCore::Raw(RawCodec {
+                shapes: self.shapes.clone(),
+                plans: self.plans.clone(),
+                method: SvdMethod::Auto,
+            }),
+            Some(beta) => {
+                let inner = ClientCodec::from_states(self.quant_states(), self.qrr_config(beta));
+                match self.spec.feedback {
+                    Feedback::None => EncCore::Laq(inner),
+                    Feedback::ErrorFeedback => {
+                        let mirror = ServerCodec::from_states(self.quant_states());
+                        EncCore::LaqEf(EfClientCodec::from_parts(inner, mirror, &self.shapes))
+                    }
+                }
+            }
+        }
+    }
+
+    fn dec_core(&self) -> DecCore {
+        match self.spec.beta() {
+            None => DecCore::Raw(RawCodec {
+                shapes: self.shapes.clone(),
+                plans: self.plans.clone(),
+                method: SvdMethod::Auto,
+            }),
+            // EF is server-transparent: same decoder as the plain pipeline
+            Some(_) => DecCore::Laq(ServerCodec::from_states(self.quant_states())),
+        }
+    }
+
+    /// The client half: gradients in, wire update out.
+    pub fn client(&self, ctx: &BuildCtx) -> PipelineClient {
+        let core = if self.passthrough {
+            ClientCore::Sgd
+        } else if self.spec.lazy {
+            let beta = self.spec.beta().expect("lazy validated to require laq");
+            ClientCore::Lazy(SlaqClient::new(
+                &self.shapes,
+                SlaqConfig { beta, ..SlaqConfig::paper(ctx.alpha, ctx.clients) },
+            ))
+        } else {
+            ClientCore::Pipe(self.enc_core())
+        };
+        PipelineClient { label: self.label.clone(), core }
+    }
+
+    /// The server half: one instance per client, mirroring its state.
+    pub fn server(&self) -> PipelineServer {
+        let core = if self.passthrough {
+            ServerCore::Sgd { shapes: self.shapes.clone() }
+        } else if self.spec.lazy {
+            ServerCore::Lazy(SlaqServerState::new(&self.shapes))
+        } else {
+            ServerCore::Pipe { core: self.dec_core(), shapes: self.shapes.clone() }
+        };
+        PipelineServer { label: self.label.clone(), core }
+    }
+}
+
+// ---------------------------------------------------------- raw codec
+
+/// Stateless codec for pipelines with the identity quantizer: factors
+/// travel as raw f32, reconstruction needs no mirrored state.
+#[derive(Debug, Clone)]
+struct RawCodec {
+    shapes: Vec<Vec<usize>>,
+    plans: Vec<ReducePlan>,
+    method: SvdMethod,
+}
+
+impl RawCodec {
+    /// True when every message matches this codec's plans — kinds and
+    /// factor dimensions — so [`decode`](Self::decode) cannot panic on
+    /// externally controlled input.
+    fn accepts(&self, msgs: &[ParamMsg]) -> bool {
+        if msgs.len() != self.plans.len() {
+            return false;
+        }
+        self.plans
+            .iter()
+            .zip(self.shapes.iter())
+            .zip(msgs.iter())
+            .all(|((plan, shape), msg)| match (plan, msg) {
+                (ReducePlan::Dense, ParamMsg::RawDense { t }) => t.shape() == &shape[..],
+                (ReducePlan::Svd { .. }, ParamMsg::RawSvd { u, s, v }) => {
+                    u.ndim() == 2
+                        && v.ndim() == 2
+                        && s.ndim() == 1
+                        && u.shape()[0] == shape[0]
+                        && v.shape()[0] == shape[1]
+                        && u.shape()[1] == s.len()
+                        && v.shape()[1] == s.len()
+                }
+                (ReducePlan::Tucker { .. }, ParamMsg::RawTucker { core, factors }) => {
+                    core.ndim() == shape.len()
+                        && factors.len() == shape.len()
+                        && factors.iter().enumerate().all(|(i, f)| {
+                            f.ndim() == 2
+                                && f.shape()[0] == shape[i]
+                                && f.shape()[1] == core.shape()[i]
+                        })
+                }
+                _ => false,
+            })
+    }
+
+    fn encode(&self, tensors: &[Tensor]) -> Vec<ParamMsg> {
+        assert_eq!(tensors.len(), self.plans.len(), "tensor count mismatch");
+        self.plans
+            .iter()
+            .zip(tensors.iter())
+            .map(|(plan, t)| match plan {
+                ReducePlan::Dense => ParamMsg::RawDense { t: t.clone() },
+                ReducePlan::Svd { nu } => {
+                    let c = compress_svd(t, *nu, self.method);
+                    ParamMsg::RawSvd { u: c.u, s: Tensor::vector(c.s), v: c.v }
+                }
+                ReducePlan::Tucker { ranks } => {
+                    let c = compress_tucker(t, ranks, self.method);
+                    ParamMsg::RawTucker { core: c.core, factors: c.factors }
+                }
+            })
+            .collect()
+    }
+
+    fn decode(&self, msgs: &[ParamMsg]) -> Vec<Tensor> {
+        assert_eq!(msgs.len(), self.plans.len(), "message count mismatch");
+        msgs.iter()
+            .zip(self.shapes.iter())
+            .map(|(msg, shape)| match msg {
+                ParamMsg::RawDense { t } => t.clone(),
+                ParamMsg::RawSvd { u, s, v } => decompress_svd(&SvdCompressed {
+                    u: u.clone(),
+                    s: s.data().to_vec(),
+                    v: v.clone(),
+                    shape: (shape[0], shape[1]),
+                }),
+                ParamMsg::RawTucker { core, factors } => decompress_tucker(&TuckerCompressed {
+                    core: core.clone(),
+                    factors: factors.clone(),
+                    shape: shape.clone(),
+                }),
+                other => panic!("raw pipeline received quantized message {other:?}"),
+            })
+            .collect()
+    }
+}
+
+// --------------------------------------------------------------- halves
+
+enum EncCore {
+    Raw(RawCodec),
+    Laq(ClientCodec),
+    LaqEf(EfClientCodec),
+}
+
+impl EncCore {
+    fn encode(&mut self, tensors: &[Tensor]) -> Vec<ParamMsg> {
+        match self {
+            EncCore::Raw(c) => c.encode(tensors),
+            EncCore::Laq(c) => c.encode(tensors),
+            EncCore::LaqEf(c) => c.encode(tensors),
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        match self {
+            EncCore::Raw(_) => 0,
+            EncCore::Laq(c) => c.mem_bytes(),
+            EncCore::LaqEf(c) => c.mem_bytes(),
+        }
+    }
+}
+
+enum DecCore {
+    Raw(RawCodec),
+    Laq(ServerCodec),
+}
+
+impl DecCore {
+    /// Whether `msgs` matches this decoder's plans/states exactly (the
+    /// no-panic precondition for [`decode`](Self::decode)).
+    fn accepts(&self, msgs: &[ParamMsg]) -> bool {
+        match self {
+            DecCore::Raw(c) => c.accepts(msgs),
+            DecCore::Laq(c) => c.accepts(msgs),
+        }
+    }
+
+    fn decode(&mut self, msgs: &[ParamMsg]) -> Vec<Tensor> {
+        match self {
+            DecCore::Raw(c) => c.decode(msgs),
+            DecCore::Laq(c) => c.decode(msgs),
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        match self {
+            DecCore::Raw(_) => 0,
+            DecCore::Laq(c) => c.mem_bytes(),
+        }
+    }
+}
+
+enum ClientCore {
+    Sgd,
+    Lazy(SlaqClient),
+    Pipe(EncCore),
+}
+
+/// The client half of a compiled pipeline: this round's gradients in,
+/// wire update out (`None` = lazily skipped).
+pub struct PipelineClient {
+    label: String,
+    core: ClientCore,
+}
+
+impl PipelineClient {
+    /// The spec string this half was compiled from.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Produce this round's update. `weights` are the freshly broadcast
+    /// parameters (the lazy rule observes them; other pipelines ignore
+    /// them).
+    pub fn produce(&mut self, weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
+        match &mut self.core {
+            ClientCore::Sgd => Some(ClientUpdate::Sgd { grads: grads.to_vec() }),
+            ClientCore::Lazy(c) => {
+                c.observe_weights(weights);
+                c.step(grads).map(|msg| ClientUpdate::Slaq { msg })
+            }
+            ClientCore::Pipe(core) => Some(ClientUpdate::Qrr { msgs: core.encode(grads) }),
+        }
+    }
+
+    /// Client-side pipeline state, in bytes (overhead experiment).
+    pub fn mem_bytes(&self) -> usize {
+        match &self.core {
+            ClientCore::Sgd => 0,
+            ClientCore::Lazy(c) => c.mem_bytes(),
+            ClientCore::Pipe(core) => core.mem_bytes(),
+        }
+    }
+}
+
+enum ServerCore {
+    Sgd { shapes: Vec<Vec<usize>> },
+    Lazy(SlaqServerState),
+    Pipe { core: DecCore, shapes: Vec<Vec<usize>> },
+}
+
+/// The server half of a compiled pipeline, one instance per client:
+/// wire update (or its absence) in, reconstructed gradients out.
+pub struct PipelineServer {
+    label: String,
+    core: ServerCore,
+}
+
+impl PipelineServer {
+    /// The spec string this half was compiled from.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Absorb the client's update and return the gradient contribution:
+    /// zeros for a missing upload, except the lazy pipeline which
+    /// re-contributes the stale gradient (the SLAQ semantics).
+    ///
+    /// A **mismatched** update — wrong scheme, entry kinds or factor
+    /// sizes — is discarded exactly like a lost frame (warn + no state
+    /// change): the bytes are peer-controlled, so a misconfigured or
+    /// hostile client must never panic the server mid-round.
+    pub fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
+        match &mut self.core {
+            ServerCore::Sgd { shapes } => {
+                match update {
+                    Some(ClientUpdate::Sgd { grads })
+                        if grads.len() == shapes.len()
+                            && grads
+                                .iter()
+                                .zip(shapes.iter())
+                                .all(|(g, s)| g.shape() == &s[..]) =>
+                    {
+                        return grads.clone();
+                    }
+                    Some(_) => log::warn!(
+                        "identity pipeline discarding mismatched update (wrong scheme/shape)"
+                    ),
+                    None => {}
+                }
+                shapes.iter().map(|s| Tensor::zeros(s)).collect()
+            }
+            ServerCore::Lazy(state) => {
+                match update {
+                    Some(ClientUpdate::Slaq { msg }) if state.accepts(msg) => state.apply(msg),
+                    Some(_) => log::warn!(
+                        "lazy pipeline discarding mismatched update (wrong scheme/shape)"
+                    ),
+                    None => {}
+                }
+                state.latest().into_iter().cloned().collect()
+            }
+            ServerCore::Pipe { core, shapes } => {
+                match update {
+                    Some(ClientUpdate::Qrr { msgs }) if core.accepts(msgs) => {
+                        return core.decode(msgs);
+                    }
+                    Some(_) => log::warn!(
+                        "pipeline discarding mismatched update (wrong scheme/kind/shape)"
+                    ),
+                    None => {}
+                }
+                shapes.iter().map(|s| Tensor::zeros(s)).collect()
+            }
+        }
+    }
+
+    /// Server-side pipeline state for this client, in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        match &self.core {
+            ServerCore::Sgd { .. } => 0,
+            ServerCore::Lazy(s) => s.mem_bytes(),
+            ServerCore::Pipe { core, .. } => core.mem_bytes(),
+        }
+    }
+}
+
+// ------------------------------------------------------------ downlink
+
+/// Server side of downlink compression: encodes the broadcast as a
+/// compressed **parameter delta** against a shadow of what clients
+/// currently hold, and advances the shadow by its own reconstruction —
+/// so the next delta automatically re-sends this round's compression
+/// error.
+pub struct DownlinkEncoder {
+    enc: EncCore,
+    mirror: DecCore,
+    shadow: Vec<Tensor>,
+    /// dense broadcast counter stamped into each [`ServerUpdate`]
+    seq: u64,
+}
+
+impl DownlinkEncoder {
+    /// Build over a model's shapes; `init` is the initial parameter set
+    /// both sides agree on out of band (the shadow's starting point).
+    pub fn new(spec: &PipelineSpec, shapes: &[Vec<usize>], init: &[Tensor]) -> Result<Self> {
+        spec.validate_downlink()?;
+        let pipe = CompressionPipeline::compile(spec.clone(), shapes)?;
+        Ok(DownlinkEncoder {
+            enc: pipe.enc_core(),
+            mirror: pipe.dec_core(),
+            shadow: init.to_vec(),
+            seq: 0,
+        })
+    }
+
+    /// Encode `params` for broadcast at `round`. Advances the shadow to
+    /// the clients' post-decode reconstruction and stamps the next
+    /// sequence number (`round` is a free-form label and may jump; `seq`
+    /// is the lock-step counter the decoder enforces).
+    pub fn encode(&mut self, params: &[Tensor], round: u64) -> ServerUpdate {
+        let delta: Vec<Tensor> = params
+            .iter()
+            .zip(self.shadow.iter())
+            .map(|(p, s)| p.sub(s))
+            .collect();
+        let msgs = self.enc.encode(&delta);
+        let rec = self.mirror.decode(&msgs);
+        for (s, r) in self.shadow.iter_mut().zip(rec.iter()) {
+            s.axpy(1.0, r);
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        ServerUpdate { seq, round, msgs }
+    }
+
+    /// The server's copy of the clients' current model reconstruction.
+    pub fn shadow(&self) -> &[Tensor] {
+        &self.shadow
+    }
+
+    /// Downlink codec state held server-side, in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.enc.mem_bytes()
+            + self.mirror.mem_bytes()
+            + self.shadow.iter().map(|t| t.len() * 4).sum::<usize>()
+    }
+}
+
+/// Client side of downlink compression: decodes each broadcast delta
+/// and locally reconstructs the model. Must stay in lock-step with the
+/// server's [`DownlinkEncoder`] (same spec, same `init`).
+pub struct DownlinkDecoder {
+    dec: DecCore,
+    params: Vec<Tensor>,
+    /// sequence number the next broadcast must carry
+    next_seq: u64,
+}
+
+impl DownlinkDecoder {
+    /// Build the mirror decoder; see [`DownlinkEncoder::new`].
+    pub fn new(spec: &PipelineSpec, shapes: &[Vec<usize>], init: &[Tensor]) -> Result<Self> {
+        spec.validate_downlink()?;
+        let pipe = CompressionPipeline::compile(spec.clone(), shapes)?;
+        Ok(DownlinkDecoder { dec: pipe.dec_core(), params: init.to_vec(), next_seq: 0 })
+    }
+
+    /// Apply one broadcast: decode the delta and advance the local model.
+    ///
+    /// The differential codec state must apply every broadcast exactly
+    /// once, in order, so anything but the next sequence number —
+    /// a replay, a reordering, or a **gap** from a lost broadcast — is
+    /// rejected without touching the state (a gap would silently
+    /// desynchronize the mirrored quantizer grids forever). Mismatched
+    /// message kinds/shapes are rejected the same way.
+    pub fn apply(&mut self, update: &ServerUpdate) -> Result<&[Tensor]> {
+        ensure!(
+            update.seq == self.next_seq,
+            "broadcast out of sequence: got seq {}, expected {} \
+             (a broadcast was lost, replayed or reordered)",
+            update.seq,
+            self.next_seq
+        );
+        ensure!(
+            self.dec.accepts(&update.msgs),
+            "broadcast does not match the downlink pipeline (kind/shape mismatch)"
+        );
+        let delta = self.dec.decode(&update.msgs);
+        for (p, d) in self.params.iter_mut().zip(delta.iter()) {
+            p.axpy(1.0, d);
+        }
+        self.next_seq += 1;
+        Ok(&self.params)
+    }
+
+    /// The locally reconstructed model parameters.
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    /// Downlink codec state held client-side, in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.dec.mem_bytes() + self.params.iter().map(|t| t.len() * 4).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mlp_shapes() -> Vec<Vec<usize>> {
+        vec![vec![20, 30], vec![20], vec![4, 3, 3, 3]]
+    }
+
+    // ------------------------------------------------ grammar round-trips
+
+    #[test]
+    fn every_preset_parses_and_round_trips() {
+        for p in presets() {
+            let spec = PipelineSpec::parse(p.name).unwrap();
+            assert_eq!(spec.format(), p.spec, "preset {}", p.name);
+            let back = PipelineSpec::parse(&spec.format()).unwrap();
+            assert_eq!(back, spec, "preset {} spec round-trip", p.name);
+        }
+    }
+
+    #[test]
+    fn preset_arguments_resolve() {
+        assert_eq!(PipelineSpec::parse("qrr(p=0.2)").unwrap(), PipelineSpec::qrr(0.2, 8));
+        assert_eq!(
+            PipelineSpec::parse("qrr(p=0.1,beta=4)").unwrap(),
+            PipelineSpec::qrr(0.1, 4)
+        );
+        assert_eq!(PipelineSpec::parse("slaq(beta=12)").unwrap(), PipelineSpec::slaq(12));
+        assert_eq!(
+            PipelineSpec::parse("ef-qrr(p=0.05)").unwrap(),
+            PipelineSpec::qrr_ef(0.05, 8)
+        );
+        assert_eq!(PipelineSpec::parse("sgd").unwrap(), PipelineSpec::sgd());
+    }
+
+    #[test]
+    fn every_stage_combination_round_trips() {
+        let combos = [
+            "identity",
+            "laq(beta=8)",
+            "laq(beta=8)+lazy",
+            "svd(p=0.1)",
+            "tucker(p=0.25)",
+            "svd(p=0.1)+tucker(p=0.25)",
+            "svd(p=0.1)+laq(beta=8)",
+            "tucker(p=0.25)+laq(beta=4)",
+            "svd(p=0.1)+tucker(p=0.25)+laq(beta=8)",
+            "laq(beta=8)+ef",
+            "svd(p=0.1)+laq(beta=8)+ef",
+            "svd(p=0.1)+tucker(p=0.25)+laq(beta=8)+ef",
+        ];
+        for s in combos {
+            let spec = PipelineSpec::parse(s).unwrap();
+            assert_eq!(spec.format(), s, "canonical form drifted for {s:?}");
+            assert_eq!(PipelineSpec::parse(&spec.format()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        for bad in [
+            "",
+            "rle(p=0.1)",                      // unknown stage
+            "svd",                             // missing p
+            "svd(p=0)",                        // p out of range
+            "svd(p=1.5)",                      // p out of range
+            "svd(p=abc)",                      // unparseable p
+            "svd(q=0.1)",                      // unknown argument
+            "laq",                             // missing beta
+            "laq(beta=0)",                     // beta out of range
+            "laq(beta=17)",                    // beta out of range
+            "svd(p=0.1)+laq(beta=8)+",         // trailing +
+            "+svd(p=0.1)",                     // leading +
+            "svd(p=0.1)++laq(beta=8)",         // doubled +
+            "svd(p=0.1",                       // unclosed paren
+            "ef",                              // ef without laq
+            "svd(p=0.1)+ef",                   // ef without laq
+            "lazy",                            // lazy without laq
+            "svd(p=0.1)+laq(beta=8)+lazy",     // lazy with reducers
+            "laq(beta=8)+ef+lazy",             // lazy with ef
+            "identity+laq(beta=8)",            // identity not alone
+            "svd(p=0.1)+svd(p=0.2)",           // duplicate stage
+            "laq(beta=8)+laq(beta=4)",         // duplicate quantizer
+            "sgd(p=0.1)",                      // preset with bogus args
+            "slaq(p=0.2)",                     // preset arg it doesn't take
+            "svd(p=0.1,beta=4)",               // beta on a reducer stage
+            "laq(beta=8,p=0.5)",               // p on the quantizer stage
+        ] {
+            assert!(PipelineSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn registry_lists_presets_and_stages() {
+        let ps = presets();
+        assert_eq!(ps.len(), 4);
+        for p in &ps {
+            // every listed preset must resolve through the parser
+            PipelineSpec::parse(p.name).unwrap();
+            PipelineSpec::parse(&p.spec).unwrap();
+        }
+        assert!(stages().len() >= 6);
+    }
+
+    // ------------------------------------------------- compiled behavior
+
+    #[test]
+    fn custom_dyn_stage_compiles_through_the_trait_seam() {
+        // a third-party RankReducer with its own policy: SVD only for
+        // wide matrices, everything else left dense
+        struct WideOnly {
+            p: f64,
+        }
+        impl RankReducer for WideOnly {
+            fn label(&self) -> String {
+                format!("wide-only(p={})", self.p)
+            }
+            fn plan(&self, shape: &[usize]) -> Option<ReducePlan> {
+                (shape.len() == 2 && shape[1] > shape[0])
+                    .then(|| ReducePlan::Svd { nu: svd_rank(shape[0], shape[1], self.p) })
+            }
+        }
+        let shapes = vec![vec![20usize, 30], vec![30, 20], vec![20]];
+        let stages: Vec<Box<dyn RankReducer>> = vec![Box::new(WideOnly { p: 0.2 })];
+        let pipe = CompressionPipeline::compile_with(
+            &stages,
+            Some(QuantizerSpec::Laq { beta: 8 }),
+            Feedback::None,
+            &shapes,
+        )
+        .unwrap();
+        assert!(matches!(pipe.plans()[0], ReducePlan::Svd { .. }), "wide matrix claimed");
+        assert!(matches!(pipe.plans()[1], ReducePlan::Dense), "tall matrix left dense");
+        assert!(matches!(pipe.plans()[2], ReducePlan::Dense));
+        assert_eq!(pipe.label(), "wide-only(p=0.2)+laq(beta=8)");
+
+        // the mirrored halves work end to end like any spec pipeline
+        let mut rng = Rng::new(910);
+        let grads: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let mut c = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+        let mut s = pipe.server();
+        let up = c.produce(&[], &grads).unwrap();
+        let back = s.absorb(Some(&up));
+        assert_eq!(back.len(), 3);
+        // the dense-kept tall matrix is quantize-only: near-exact
+        assert!(grads[1].rel_err(&back[1]) < 0.01);
+    }
+
+    #[test]
+    fn boxed_spec_stages_match_the_spec_path() {
+        // ReducerSpec::stage()/QuantizerSpec::stage() vend the same
+        // behavior the enum path compiles
+        let shapes = mlp_shapes();
+        let spec = PipelineSpec::qrr(0.3, 8);
+        let stages: Vec<Box<dyn RankReducer>> = spec.reducers.iter().map(|r| r.stage()).collect();
+        let by_stages = CompressionPipeline::compile_with(
+            &stages,
+            spec.quantizer,
+            spec.feedback,
+            &shapes,
+        )
+        .unwrap();
+        let by_spec = CompressionPipeline::compile(spec, &shapes).unwrap();
+        assert_eq!(by_stages.plans(), by_spec.plans());
+        assert_eq!(by_stages.label(), by_spec.label());
+
+        // the Identity stage and the Quantizer::beta contract
+        assert_eq!(RankReducer::plan(&Identity, &[4, 5]), Some(ReducePlan::Dense));
+        assert_eq!(Quantizer::beta(&Identity), None);
+        assert_eq!(QuantizerSpec::Laq { beta: 8 }.stage().beta(), Some(8));
+        // ef with the identity quantizer is invalid through this entry too
+        assert!(CompressionPipeline::compile_with(
+            &stages,
+            None,
+            Feedback::ErrorFeedback,
+            &shapes
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn plans_assign_reducers_by_shape() {
+        let spec = PipelineSpec::qrr(0.5, 8);
+        let pipe = CompressionPipeline::compile(spec, &mlp_shapes()).unwrap();
+        assert!(matches!(pipe.plans()[0], ReducePlan::Svd { .. }));
+        assert!(matches!(pipe.plans()[1], ReducePlan::Dense));
+        assert!(matches!(pipe.plans()[2], ReducePlan::Tucker { .. }));
+
+        // svd-only pipeline leaves the conv kernel dense
+        let spec = PipelineSpec::parse("svd(p=0.5)+laq(beta=8)").unwrap();
+        let pipe = CompressionPipeline::compile(spec, &mlp_shapes()).unwrap();
+        assert!(matches!(pipe.plans()[2], ReducePlan::Dense));
+    }
+
+    #[test]
+    fn identity_pipeline_is_lossless() {
+        let shapes = mlp_shapes();
+        let spec = PipelineSpec::parse("identity").unwrap();
+        let pipe = CompressionPipeline::compile(spec, &shapes).unwrap();
+        let mut c = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+        let mut s = pipe.server();
+        let mut rng = Rng::new(900);
+        let grads: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let up = c.produce(&[], &grads).unwrap();
+        let back = s.absorb(Some(&up));
+        for (a, b) in grads.iter().zip(back.iter()) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(c.mem_bytes(), 0);
+        assert_eq!(s.mem_bytes(), 0);
+    }
+
+    #[test]
+    fn raw_svd_pipeline_reconstructs_without_quantization() {
+        // svd(p) with the identity quantizer: truncation error only
+        let shapes = vec![vec![30usize, 40]];
+        let mut rng = Rng::new(901);
+        let u = Tensor::randn(&[30, 3], &mut rng);
+        let v = Tensor::randn(&[3, 40], &mut rng);
+        let g = crate::linalg::matmul(&u, &v); // rank 3
+        let spec = PipelineSpec::parse("svd(p=0.2)").unwrap(); // rank 6 >= 3
+        let pipe = CompressionPipeline::compile(spec, &shapes).unwrap();
+        let mut c = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+        let mut s = pipe.server();
+        let up = c.produce(&[], std::slice::from_ref(&g)).unwrap();
+        let back = s.absorb(Some(&up));
+        assert!(g.rel_err(&back[0]) < 1e-4, "err {}", g.rel_err(&back[0]));
+        // and the payload is smaller than dense
+        assert!(up.payload_bits() < 32 * g.len() as u64);
+    }
+
+    #[test]
+    fn laq_only_pipeline_quantizes_every_parameter() {
+        let shapes = mlp_shapes();
+        let spec = PipelineSpec::parse("laq(beta=12)").unwrap();
+        let pipe = CompressionPipeline::compile(spec, &shapes).unwrap();
+        let mut c = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+        let mut s = pipe.server();
+        let mut rng = Rng::new(902);
+        let grads: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let up = c.produce(&[], &grads).unwrap();
+        let back = s.absorb(Some(&up));
+        for (a, b) in grads.iter().zip(back.iter()) {
+            assert!(a.rel_err(b) < 0.01, "err {}", a.rel_err(b));
+        }
+    }
+
+    #[test]
+    fn mirrored_halves_stay_in_sync_over_rounds() {
+        let shapes = mlp_shapes();
+        for spec_str in ["qrr(p=0.2)", "svd(p=0.3)+laq(beta=8)", "laq(beta=8)+ef"] {
+            let spec = PipelineSpec::parse(spec_str).unwrap();
+            let pipe = CompressionPipeline::compile(spec, &shapes).unwrap();
+            let mut c = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+            let mut s = pipe.server();
+            let mut rng = Rng::new(903);
+            let mut errs = Vec::new();
+            let g0: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+            for _ in 0..6 {
+                let up = c.produce(&[], &g0).unwrap();
+                let back = s.absorb(Some(&up));
+                errs.push(g0[0].rel_err(&back[0]));
+            }
+            // differential/EF state refines on a repeated gradient
+            assert!(
+                errs.last().unwrap() <= &(errs[0] + 1e-6),
+                "{spec_str}: no refinement {errs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_upload_contributes_zeros_except_lazy() {
+        let shapes = mlp_shapes();
+        let pipe = CompressionPipeline::compile(PipelineSpec::qrr(0.3, 8), &shapes).unwrap();
+        let mut s = pipe.server();
+        for t in s.absorb(None) {
+            assert_eq!(t.fro_norm(), 0.0);
+        }
+    }
+
+    #[test]
+    fn mismatched_updates_are_discarded_not_panics() {
+        // the wire bytes are peer-controlled: every wire-decodable update
+        // of the wrong scheme, kind or shape must be treated like a lost
+        // frame, never a server panic
+        let shapes = mlp_shapes();
+        let mut rng = Rng::new(909);
+        let grads: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+
+        // a raw (identity-quantizer) update aimed at a quantized server
+        let raw_pipe =
+            CompressionPipeline::compile(PipelineSpec::parse("svd(p=0.2)").unwrap(), &shapes)
+                .unwrap();
+        let raw_up = raw_pipe
+            .client(&BuildCtx { alpha: 0.01, clients: 2 })
+            .produce(&[], &grads)
+            .unwrap();
+        let qrr_pipe = CompressionPipeline::compile(PipelineSpec::qrr(0.2, 8), &shapes).unwrap();
+        let mut server = qrr_pipe.server();
+        for t in server.absorb(Some(&raw_up)) {
+            assert_eq!(t.fro_norm(), 0.0, "mismatched update must contribute zeros");
+        }
+
+        // wrong scheme tags against every server core
+        let sgd_up = ClientUpdate::Sgd { grads: grads.clone() };
+        for t in server.absorb(Some(&sgd_up)) {
+            assert_eq!(t.fro_norm(), 0.0);
+        }
+        let mut identity_server =
+            CompressionPipeline::compile(PipelineSpec::sgd(), &shapes).unwrap().server();
+        let qrr_up = qrr_pipe
+            .client(&BuildCtx { alpha: 0.01, clients: 2 })
+            .produce(&[], &grads)
+            .unwrap();
+        for t in identity_server.absorb(Some(&qrr_up)) {
+            assert_eq!(t.fro_norm(), 0.0);
+        }
+        let mut lazy_server =
+            CompressionPipeline::compile(PipelineSpec::slaq(8), &shapes).unwrap().server();
+        // SLAQ absence semantics: stale state (zeros initially), no panic
+        let _ = lazy_server.absorb(Some(&qrr_up));
+
+        // wrong shapes inside the right scheme: an Sgd update whose
+        // tensors do not match the model
+        let bogus = ClientUpdate::Sgd { grads: vec![Tensor::zeros(&[3])] };
+        for t in identity_server.absorb(Some(&bogus)) {
+            assert_eq!(t.fro_norm(), 0.0);
+        }
+
+        // a wire-craftable payload with the right lengths but a beta
+        // outside the quantizer grid (the decoder accepts any beta
+        // byte) must be discarded, not panic in dequantize
+        let laq_pipe =
+            CompressionPipeline::compile(PipelineSpec::parse("laq(beta=8)").unwrap(), &shapes)
+                .unwrap();
+        let mut laq_server = laq_pipe.server();
+        let hostile = ClientUpdate::Qrr {
+            msgs: shapes
+                .iter()
+                .map(|sh| {
+                    let len = sh.iter().product::<usize>();
+                    ParamMsg::Dense {
+                        q: crate::quant::Quantized {
+                            radius: 1.0,
+                            beta: 42,
+                            len,
+                            packed: vec![0u8; crate::quant::packed_len_bytes(len, 42)],
+                        },
+                    }
+                })
+                .collect(),
+        };
+        for t in laq_server.absorb(Some(&hostile)) {
+            assert_eq!(t.fro_norm(), 0.0, "hostile beta must be discarded");
+        }
+        // non-finite radius likewise
+        let nan_radius = ClientUpdate::Qrr {
+            msgs: shapes
+                .iter()
+                .map(|sh| {
+                    let len = sh.iter().product::<usize>();
+                    ParamMsg::Dense {
+                        q: crate::quant::Quantized {
+                            radius: f32::NAN,
+                            beta: 8,
+                            len,
+                            packed: vec![0u8; crate::quant::packed_len_bytes(len, 8)],
+                        },
+                    }
+                })
+                .collect(),
+        };
+        for t in laq_server.absorb(Some(&nan_radius)) {
+            assert_eq!(t.fro_norm(), 0.0, "non-finite radius must be discarded");
+        }
+    }
+
+    // --------------------------------------------------------- downlink
+
+    #[test]
+    fn downlink_rejects_lazy_and_ef() {
+        let shapes = mlp_shapes();
+        let mut rng = Rng::new(904);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        for bad in ["laq(beta=8)+lazy", "svd(p=0.1)+laq(beta=8)+ef"] {
+            let spec = PipelineSpec::parse(bad).unwrap();
+            assert!(DownlinkEncoder::new(&spec, &shapes, &init).is_err(), "{bad}");
+            assert!(DownlinkDecoder::new(&spec, &shapes, &init).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn downlink_shadow_mirrors_client_reconstruction() {
+        let shapes = mlp_shapes();
+        let mut rng = Rng::new(905);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let spec = PipelineSpec::parse("svd(p=0.5)+laq(beta=8)").unwrap();
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).unwrap();
+        let mut dec = DownlinkDecoder::new(&spec, &shapes, &init).unwrap();
+
+        let mut params = init.clone();
+        for round in 0..8u64 {
+            // simulate a descent step
+            for p in params.iter_mut() {
+                p.axpy(0.05, &Tensor::randn(p.shape(), &mut rng));
+            }
+            let upd = enc.encode(&params, round);
+            let rec = dec.apply(&upd).unwrap();
+            // the server's shadow and the client's model are the same state
+            for (a, b) in enc.shadow().iter().zip(rec.iter()) {
+                assert!(a.rel_err(b) < 1e-6, "shadow diverged from client");
+            }
+        }
+        // delta feedback: the reconstruction tracks the true parameters
+        for (p, r) in params.iter().zip(dec.params().iter()) {
+            assert!(
+                p.rel_err(r) < 0.6,
+                "reconstruction lost the signal: {}",
+                p.rel_err(r)
+            );
+        }
+    }
+
+    #[test]
+    fn identity_downlink_is_lossless_and_fullprice() {
+        let shapes = vec![vec![6usize, 4], vec![6]];
+        let mut rng = Rng::new(906);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let spec = PipelineSpec::sgd();
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).unwrap();
+        let mut dec = DownlinkDecoder::new(&spec, &shapes, &init).unwrap();
+        let mut params = init.clone();
+        params[0].axpy(1.0, &Tensor::randn(&[6, 4], &mut rng));
+        let upd = enc.encode(&params, 0);
+        assert_eq!(upd.payload_bits(), 32 * (6 * 4 + 6));
+        let rec = dec.apply(&upd).unwrap();
+        for (p, r) in params.iter().zip(rec.iter()) {
+            assert!(p.rel_err(r) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn downlink_decoder_rejects_replays_reorders_and_gaps() {
+        let shapes = vec![vec![5usize, 4]];
+        let mut rng = Rng::new(908);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let spec = PipelineSpec::parse("laq(beta=8)").unwrap();
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).unwrap();
+        let mut dec = DownlinkDecoder::new(&spec, &shapes, &init).unwrap();
+        let mut params = init.clone();
+        let mut next = |enc: &mut DownlinkEncoder, params: &mut Vec<Tensor>, rng: &mut Rng| {
+            params[0].axpy(0.2, &Tensor::randn(&[5, 4], rng));
+            enc.encode(params, 0) // round label free-form; seq is what counts
+        };
+        let upd0 = next(&mut enc, &mut params, &mut rng);
+        let upd1 = next(&mut enc, &mut params, &mut rng);
+        let upd2 = next(&mut enc, &mut params, &mut rng);
+        assert_eq!((upd0.seq, upd1.seq, upd2.seq), (0, 1, 2));
+
+        // reordered: seq 1 before seq 0
+        assert!(dec.apply(&upd1).is_err());
+        let snapshot = dec.apply(&upd0).unwrap().to_vec();
+        // replayed: seq 0 twice
+        assert!(dec.apply(&upd0).is_err());
+        // gap: seq 2 while 1 is missing — a lost broadcast would silently
+        // desynchronize the differential grids, so it must be an error
+        assert!(dec.apply(&upd2).is_err());
+        for (a, b) in snapshot.iter().zip(dec.params().iter()) {
+            assert_eq!(a, b, "rejected broadcast mutated the model");
+        }
+        // in-order delivery proceeds
+        assert!(dec.apply(&upd1).is_ok());
+        assert!(dec.apply(&upd2).is_ok());
+        // and a mismatched payload is rejected even at the right seq
+        let mut bad = next(&mut enc, &mut params, &mut rng);
+        bad.msgs.push(ParamMsg::RawDense { t: Tensor::zeros(&[5, 4]) });
+        assert!(dec.apply(&bad).is_err());
+    }
+
+    #[test]
+    fn compressed_downlink_ships_fewer_bits_than_identity() {
+        let shapes = vec![vec![50usize, 80], vec![50]];
+        let mut rng = Rng::new(907);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let mut params = init.clone();
+        params[0].axpy(0.1, &Tensor::randn(&[50, 80], &mut rng));
+
+        let dense_bits = {
+            let mut enc = DownlinkEncoder::new(&PipelineSpec::sgd(), &shapes, &init).unwrap();
+            enc.encode(&params, 0).payload_bits()
+        };
+        let spec = PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap();
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).unwrap();
+        let compressed_bits = enc.encode(&params, 0).payload_bits();
+        assert!(
+            compressed_bits * 2 < dense_bits,
+            "compressed {compressed_bits} vs dense {dense_bits}"
+        );
+    }
+}

@@ -5,6 +5,7 @@ pub mod json;
 
 pub use json::{Json, JsonError};
 
+use crate::compress::pipeline::PipelineSpec;
 use crate::data::DatasetKind;
 use crate::fl::SchemeKind;
 use crate::model::ModelKind;
@@ -263,6 +264,13 @@ pub struct ExperimentConfig {
     pub participation: ParticipationConfig,
     /// how the server combines client contributions
     pub aggregation: AggregationConfig,
+    /// uplink compression-pipeline override: when set, every client runs
+    /// this spec instead of the per-client resolution of `scheme`
+    /// (see `compress::pipeline`)
+    pub uplink: Option<PipelineSpec>,
+    /// downlink compression pipeline: when set, the server broadcasts
+    /// compressed parameter deltas instead of full-precision parameters
+    pub downlink: Option<PipelineSpec>,
 }
 
 impl ExperimentConfig {
@@ -288,6 +296,8 @@ impl ExperimentConfig {
             sharding: Sharding::Iid,
             participation: ParticipationConfig::Full,
             aggregation: AggregationConfig::Sum,
+            uplink: None,
+            downlink: None,
         }
     }
 
@@ -351,7 +361,7 @@ impl ExperimentConfig {
                 ("p_hi", Json::Num(hi)),
             ]),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("model", Json::Str(self.model.name().into())),
             (
@@ -424,7 +434,14 @@ impl ExperimentConfig {
                 },
             ),
             ("aggregation", Json::Str(self.aggregation.label().into())),
-        ])
+        ];
+        if let Some(spec) = &self.uplink {
+            fields.push(("uplink", Json::Str(spec.format())));
+        }
+        if let Some(spec) = &self.downlink {
+            fields.push(("downlink", Json::Str(spec.format())));
+        }
+        Json::obj(fields)
     }
 
     /// Parse from JSON (fields missing fall back to table1 defaults).
@@ -558,6 +575,24 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("aggregation").and_then(Json::as_str) {
             c.aggregation = AggregationConfig::parse(v)?;
+        }
+        if let Some(v) = j.get("uplink") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("uplink must be a pipeline spec string"))?;
+            c.uplink = Some(
+                PipelineSpec::parse(s).map_err(|e| anyhow::anyhow!("uplink spec: {e}"))?,
+            );
+        }
+        if let Some(v) = j.get("downlink") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("downlink must be a pipeline spec string"))?;
+            let spec =
+                PipelineSpec::parse(s).map_err(|e| anyhow::anyhow!("downlink spec: {e}"))?;
+            spec.validate_downlink()
+                .map_err(|e| anyhow::anyhow!("downlink spec: {e}"))?;
+            c.downlink = Some(spec);
         }
         anyhow::ensure!(c.clients > 0, "need at least one client");
         anyhow::ensure!(c.batch > 0, "batch must be positive");
@@ -711,6 +746,42 @@ mod tests {
         assert!(AggregationConfig::parse("sum").is_ok());
         assert!(AggregationConfig::parse("weighted_mean").is_ok());
         assert!(AggregationConfig::parse("median").is_err());
+    }
+
+    #[test]
+    fn uplink_downlink_json_roundtrip() {
+        let mut c = ExperimentConfig::table1_default();
+        c.uplink = Some(PipelineSpec::parse("svd(p=0.2)+laq(beta=8)+ef").unwrap());
+        c.downlink = Some(PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap());
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.uplink, c.uplink);
+        assert_eq!(back.downlink, c.downlink);
+
+        // absent fields stay None
+        let plain = ExperimentConfig::from_json(&ExperimentConfig::table1_default().to_json())
+            .unwrap();
+        assert_eq!(plain.uplink, None);
+        assert_eq!(plain.downlink, None);
+    }
+
+    #[test]
+    fn bad_pipeline_specs_fail_config_parse() {
+        for (field, spec) in [
+            ("uplink", r#""rle(p=0.1)""#),
+            ("uplink", r#""svd(p=0.1)+""#),
+            ("downlink", r#""laq(beta=99)""#),
+            // downlink rejects the uplink-only wrappers
+            ("downlink", r#""laq(beta=8)+lazy""#),
+            ("downlink", r#""svd(p=0.1)+laq(beta=8)+ef""#),
+            // spec must be a string
+            ("downlink", "42"),
+        ] {
+            let j = Json::parse(&format!(r#"{{"{field}": {spec}}}"#)).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&j).is_err(),
+                "accepted {field}={spec}"
+            );
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod serve;
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
+use crate::compress::pipeline::PipelineSpec;
 use crate::config::{
     AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig,
 };
@@ -85,6 +86,18 @@ pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get("aggregation") {
         cfg.aggregation = AggregationConfig::parse(v)?;
+    }
+    if let Some(v) = args.get("uplink") {
+        cfg.uplink = Some(
+            PipelineSpec::parse(v).map_err(|e| anyhow::anyhow!("--uplink: {e}"))?,
+        );
+    }
+    if let Some(v) = args.get("downlink") {
+        let spec =
+            PipelineSpec::parse(v).map_err(|e| anyhow::anyhow!("--downlink: {e}"))?;
+        spec.validate_downlink()
+            .map_err(|e| anyhow::anyhow!("--downlink: {e}"))?;
+        cfg.downlink = Some(spec);
     }
     Ok(())
 }
@@ -305,6 +318,30 @@ mod tests {
         );
         let mut cfg = ExperimentConfig::table1_default();
         assert!(apply_overrides(&mut cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn uplink_downlink_overrides_apply() {
+        let mut cfg = ExperimentConfig::table1_default();
+        let args = crate::cli::Args::parse(
+            "exp table1 --uplink qrr(p=0.2) --downlink svd(p=0.1)+laq(beta=8)"
+                .split_whitespace()
+                .map(String::from),
+        );
+        apply_overrides(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.uplink, Some(PipelineSpec::qrr(0.2, 8)));
+        assert_eq!(
+            cfg.downlink,
+            Some(PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap())
+        );
+
+        for bad in ["--downlink laq(beta=8)+lazy", "--uplink nonsense"] {
+            let mut cfg = ExperimentConfig::table1_default();
+            let args = crate::cli::Args::parse(
+                format!("exp table1 {bad}").split_whitespace().map(String::from),
+            );
+            assert!(apply_overrides(&mut cfg, &args).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -14,6 +14,13 @@ pub struct RoundMetrics {
     pub train_loss: f32,
     /// bits uploaded by all clients this round
     pub bits: u64,
+    /// bits broadcast by the server this round (the downlink; the
+    /// full-precision parameter size when no downlink pipeline runs)
+    pub down_bits: u64,
+    /// total compression ratio for the round: (uplink + downlink bits) ÷
+    /// what full-precision traffic of the same shape would cost — 1.0
+    /// for the SGD baseline, < 1 when either direction compresses
+    pub ratio: f64,
     /// number of client→server communications this round
     pub comms: u32,
     /// ℓ2 norm of the aggregated gradient
@@ -29,6 +36,8 @@ pub struct EvalPoint {
     pub iter: u64,
     /// cumulative bits uploaded up to this iteration
     pub cum_bits: u64,
+    /// cumulative bits broadcast up to this iteration
+    pub cum_down_bits: u64,
     /// test loss
     pub loss: f32,
     /// test accuracy in [0,1]
@@ -55,6 +64,11 @@ impl History {
     /// Total bits uploaded (paper's `# Bits` column).
     pub fn total_bits(&self) -> u64 {
         self.rounds.iter().map(|r| r.bits).sum()
+    }
+
+    /// Total bits broadcast by the server (the downlink direction).
+    pub fn total_down_bits(&self) -> u64 {
+        self.rounds.iter().map(|r| r.down_bits).sum()
     }
 
     /// Total communications (paper's `# Communications` column).
@@ -88,6 +102,7 @@ impl History {
             algorithm: self.label.clone(),
             iterations: self.iterations(),
             bits: self.total_bits(),
+            down_bits: self.total_down_bits(),
             comms: self.total_comms(),
             loss: self.final_eval().map(|e| e.loss).unwrap_or(f32::NAN),
             accuracy: self.final_eval().map(|e| e.accuracy).unwrap_or(f64::NAN),
@@ -97,17 +112,24 @@ impl History {
 
     /// CSV of the per-round series (for the "vs iterations" figures).
     pub fn rounds_csv(&self) -> String {
-        let mut s = String::from("iter,train_loss,bits,cum_bits,comms,grad_norm,net_time_s\n");
+        let mut s = String::from(
+            "iter,train_loss,bits,cum_bits,down_bits,cum_down_bits,ratio,comms,grad_norm,net_time_s\n",
+        );
         let mut cum = 0u64;
+        let mut cum_down = 0u64;
         for r in &self.rounds {
             cum += r.bits;
+            cum_down += r.down_bits;
             let _ = writeln!(
                 s,
-                "{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{}",
                 r.iter,
                 r.train_loss,
                 r.bits,
                 cum,
+                r.down_bits,
+                cum_down,
+                r.ratio,
                 r.comms,
                 r.grad_norm,
                 r.net_time.as_secs_f64()
@@ -118,9 +140,13 @@ impl History {
 
     /// CSV of evaluation points (for the "vs bits" figures).
     pub fn evals_csv(&self) -> String {
-        let mut s = String::from("iter,cum_bits,test_loss,test_accuracy\n");
+        let mut s = String::from("iter,cum_bits,cum_down_bits,test_loss,test_accuracy\n");
         for e in &self.evals {
-            let _ = writeln!(s, "{},{},{},{}", e.iter, e.cum_bits, e.loss, e.accuracy);
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{}",
+                e.iter, e.cum_bits, e.cum_down_bits, e.loss, e.accuracy
+            );
         }
         s
     }
@@ -135,6 +161,8 @@ pub struct TableRow {
     pub iterations: u64,
     /// total uploaded bits
     pub bits: u64,
+    /// total broadcast (downlink) bits
+    pub down_bits: u64,
     /// total communications
     pub comms: u64,
     /// final test loss
@@ -145,20 +173,22 @@ pub struct TableRow {
     pub grad_norm: f64,
 }
 
-/// Render rows as the paper's markdown table.
+/// Render rows as the paper's markdown table (plus the downlink column
+/// the dual-side pipelines add).
 pub fn markdown_table(rows: &[TableRow]) -> String {
     let mut s = String::new();
     s.push_str(
-        "| Algorithm | # Iterations | # Bits | # Communications | Loss | Accuracy | Gradient l2 norm |\n",
+        "| Algorithm | # Iterations | # Bits | # Down Bits | # Communications | Loss | Accuracy | Gradient l2 norm |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|\n");
     for r in rows {
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {:.3} | {} | {:.3} |",
+            "| {} | {} | {} | {} | {} | {:.3} | {} | {:.3} |",
             r.algorithm,
             r.iterations,
             crate::util::fmt::bits_sci(r.bits),
+            crate::util::fmt::bits_sci(r.down_bits),
             r.comms,
             r.loss,
             crate::util::fmt::pct(r.accuracy),
@@ -179,12 +209,20 @@ mod tests {
                 iter: i,
                 train_loss: 1.0 / (i + 1) as f32,
                 bits: 100,
+                down_bits: 40,
+                ratio: 0.25,
                 comms: 10,
                 grad_norm: 2.0,
                 net_time: Duration::from_millis(5),
             });
         }
-        h.evals.push(EvalPoint { iter: 2, cum_bits: 300, loss: 0.5, accuracy: 0.9 });
+        h.evals.push(EvalPoint {
+            iter: 2,
+            cum_bits: 300,
+            cum_down_bits: 120,
+            loss: 0.5,
+            accuracy: 0.9,
+        });
         h
     }
 
@@ -192,6 +230,7 @@ mod tests {
     fn totals() {
         let h = hist();
         assert_eq!(h.total_bits(), 300);
+        assert_eq!(h.total_down_bits(), 120);
         assert_eq!(h.total_comms(), 30);
         assert_eq!(h.iterations(), 3);
         assert_eq!(h.final_grad_norm(), 2.0);
@@ -204,10 +243,13 @@ mod tests {
         let row = h.table_row();
         assert_eq!(row.algorithm, "QRR(p=0.1)");
         assert_eq!(row.bits, 300);
+        assert_eq!(row.down_bits, 120);
         let md = markdown_table(&[row]);
+        assert!(md.contains("# Down Bits"));
         assert!(md.contains("| QRR(p=0.1) |"));
         assert!(md.contains("90.00%"));
         assert!(md.contains("3.000e2"));
+        assert!(md.contains("1.200e2"));
     }
 
     #[test]
@@ -216,8 +258,12 @@ mod tests {
         let csv = h.rounds_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 4); // header + 3 rows
-        assert!(lines[3].contains(",300,")); // cumulative
+        assert!(lines[0].contains("down_bits"));
+        assert!(lines[0].contains("ratio"));
+        assert!(lines[3].contains(",300,")); // cumulative uplink
+        assert!(lines[3].contains(",120,")); // cumulative downlink
         let ecsv = h.evals_csv();
         assert!(ecsv.lines().count() == 2);
+        assert!(ecsv.starts_with("iter,cum_bits,cum_down_bits,"));
     }
 }

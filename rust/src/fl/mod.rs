@@ -14,7 +14,10 @@ pub mod session;
 
 pub use client::{ClientRoundOutput, FlClient};
 pub use metrics::{EvalPoint, History, RoundMetrics};
-pub use scheme::{make_client_scheme, make_server_scheme, ClientScheme, SchemeKind, ServerScheme};
+pub use scheme::{
+    make_client_scheme, make_client_scheme_spec, make_server_scheme, make_server_scheme_spec,
+    ClientScheme, SchemeKind, ServerScheme,
+};
 pub use server::FlServer;
 pub use session::{
     Aggregation, CsvSink, DeadlineCutoff, FlSession, FlSessionBuilder, FullSync, LinkDropout,

@@ -1,12 +1,21 @@
-//! Update schemes: SGD (FedAvg baseline), SLAQ and QRR behind a common
-//! client/server trait pair, so the round loop is scheme-agnostic.
+//! Update schemes: thin adapters over the composable
+//! [`compress::pipeline`](crate::compress::pipeline) API (DESIGN.md §7).
+//!
+//! The round loop stays scheme-agnostic behind the
+//! [`ClientScheme`]/[`ServerScheme`] trait pair; what used to be four
+//! hard-wired scheme structs is now one pair of pipeline adapters.
+//! [`SchemeKind`] survives as the legacy preset enum — each kind
+//! resolves to a [`PipelineSpec`] through the same registry the spec
+//! grammar uses, and produces wire output bit-identical to the
+//! pre-pipeline scheme layer (a property the tests below pin down).
 
+use crate::compress::pipeline::{
+    BuildCtx, CompressionPipeline, PipelineClient, PipelineServer, PipelineSpec,
+};
 use crate::net::ClientUpdate;
-use crate::qrr::{ClientCodec, EfClientCodec, QrrConfig, ServerCodec};
-use crate::slaq::{SlaqClient, SlaqConfig, SlaqServerState};
 use crate::tensor::Tensor;
 
-/// Which scheme an experiment runs.
+/// Which legacy preset an experiment runs (sugar over [`PipelineSpec`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SchemeKind {
     /// full-precision federated averaging (paper's SGD baseline)
@@ -35,6 +44,29 @@ impl SchemeKind {
             SchemeKind::QrrEf { p } => format!("EF-QRR(p={p})"),
         }
     }
+
+    /// The pipeline spec this preset resolves to at `beta` bits.
+    ///
+    /// The pre-pipeline codecs accepted any `p` (the rank rules clamp:
+    /// p ≥ 1 is full rank, p ≤ 0 is rank 1), so the legacy enum keeps
+    /// that tolerance by clamping into the spec grammar's (0, 1] — the
+    /// resulting ranks are identical to what the old codecs computed,
+    /// and the no-`Result` constructors below stay panic-free.
+    pub fn to_spec(&self, beta: u8) -> PipelineSpec {
+        let clamp = |p: f64| {
+            if p.is_finite() {
+                p.clamp(f64::MIN_POSITIVE, 1.0)
+            } else {
+                1.0
+            }
+        };
+        match *self {
+            SchemeKind::Sgd => PipelineSpec::sgd(),
+            SchemeKind::Slaq => PipelineSpec::slaq(beta),
+            SchemeKind::Qrr { p } => PipelineSpec::qrr(clamp(p), beta),
+            SchemeKind::QrrEf { p } => PipelineSpec::qrr_ef(clamp(p), beta),
+        }
+    }
 }
 
 /// Client side of a scheme: gradients in, wire update out.
@@ -58,7 +90,49 @@ pub trait ServerScheme: Send {
     fn mem_bytes(&self) -> usize;
 }
 
-/// Build the client half for `kind` over a model with `shapes`.
+impl ClientScheme for PipelineClient {
+    fn produce(&mut self, weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
+        PipelineClient::produce(self, weights, grads)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        PipelineClient::mem_bytes(self)
+    }
+}
+
+impl ServerScheme for PipelineServer {
+    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
+        PipelineServer::absorb(self, update)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        PipelineServer::mem_bytes(self)
+    }
+}
+
+/// Build the client half of a pipeline spec over a model's `shapes`.
+/// `alpha`/`clients` feed the SLAQ lazy rule when the spec carries it.
+pub fn make_client_scheme_spec(
+    spec: &PipelineSpec,
+    shapes: &[Vec<usize>],
+    alpha: f32,
+    clients: usize,
+) -> anyhow::Result<Box<dyn ClientScheme>> {
+    let pipe = CompressionPipeline::compile(spec.clone(), shapes)?;
+    Ok(Box::new(pipe.client(&BuildCtx { alpha, clients })))
+}
+
+/// Build the matching server half (must mirror the client's spec).
+pub fn make_server_scheme_spec(
+    spec: &PipelineSpec,
+    shapes: &[Vec<usize>],
+) -> anyhow::Result<Box<dyn ServerScheme>> {
+    let pipe = CompressionPipeline::compile(spec.clone(), shapes)?;
+    Ok(Box::new(pipe.server()))
+}
+
+/// Build the client half for the legacy preset `kind` over a model with
+/// `shapes` — resolves through the pipeline registry.
 pub fn make_client_scheme(
     kind: SchemeKind,
     shapes: &[Vec<usize>],
@@ -66,18 +140,8 @@ pub fn make_client_scheme(
     alpha: f32,
     clients: usize,
 ) -> Box<dyn ClientScheme> {
-    match kind {
-        SchemeKind::Sgd => Box::new(SgdClient),
-        SchemeKind::Slaq => Box::new(SlaqClientScheme {
-            inner: SlaqClient::new(shapes, SlaqConfig { beta, ..SlaqConfig::paper(alpha, clients) }),
-        }),
-        SchemeKind::Qrr { p } => Box::new(QrrClientScheme {
-            codec: ClientCodec::new(shapes, QrrConfig { p, beta, ..QrrConfig::default() }),
-        }),
-        SchemeKind::QrrEf { p } => Box::new(EfClientScheme {
-            codec: EfClientCodec::new(shapes, QrrConfig { p, beta, ..QrrConfig::default() }),
-        }),
-    }
+    make_client_scheme_spec(&kind.to_spec(beta), shapes, alpha, clients)
+        .expect("legacy presets always compile")
 }
 
 /// Build the matching server half (must mirror the client's config).
@@ -86,142 +150,16 @@ pub fn make_server_scheme(
     shapes: &[Vec<usize>],
     beta: u8,
 ) -> Box<dyn ServerScheme> {
-    match kind {
-        SchemeKind::Sgd => Box::new(SgdServer { shapes: shapes.to_vec() }),
-        SchemeKind::Slaq => Box::new(SlaqServerScheme { inner: SlaqServerState::new(shapes) }),
-        // EF-QRR is server-transparent: same decoder as plain QRR.
-        SchemeKind::Qrr { p } | SchemeKind::QrrEf { p } => Box::new(QrrServerScheme {
-            codec: ServerCodec::new(shapes, QrrConfig { p, beta, ..QrrConfig::default() }),
-            shapes: shapes.to_vec(),
-        }),
-    }
-}
-
-// ------------------------------------------------------------------ SGD
-
-struct SgdClient;
-
-impl ClientScheme for SgdClient {
-    fn produce(&mut self, _weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
-        Some(ClientUpdate::Sgd { grads: grads.to_vec() })
-    }
-
-    fn mem_bytes(&self) -> usize {
-        0
-    }
-}
-
-struct SgdServer {
-    shapes: Vec<Vec<usize>>,
-}
-
-impl ServerScheme for SgdServer {
-    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
-        match update {
-            Some(ClientUpdate::Sgd { grads }) => grads.clone(),
-            Some(_) => panic!("SGD server got non-SGD update"),
-            // SGD never skips; treat absence as zero contribution
-            None => self.shapes.iter().map(|s| Tensor::zeros(s)).collect(),
-        }
-    }
-
-    fn mem_bytes(&self) -> usize {
-        0
-    }
-}
-
-// ----------------------------------------------------------------- SLAQ
-
-struct SlaqClientScheme {
-    inner: SlaqClient,
-}
-
-impl ClientScheme for SlaqClientScheme {
-    fn produce(&mut self, weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
-        self.inner.observe_weights(weights);
-        self.inner.step(grads).map(|msg| ClientUpdate::Slaq { msg })
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.inner.mem_bytes()
-    }
-}
-
-struct SlaqServerScheme {
-    inner: SlaqServerState,
-}
-
-impl ServerScheme for SlaqServerScheme {
-    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
-        if let Some(u) = update {
-            match u {
-                ClientUpdate::Slaq { msg } => self.inner.apply(msg),
-                _ => panic!("SLAQ server got non-SLAQ update"),
-            }
-        }
-        // skipped or not: contribute the latest (possibly stale) gradient
-        self.inner.latest().into_iter().cloned().collect()
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.inner.mem_bytes()
-    }
-}
-
-// ------------------------------------------------------------------ QRR
-
-struct QrrClientScheme {
-    codec: ClientCodec,
-}
-
-impl ClientScheme for QrrClientScheme {
-    fn produce(&mut self, _weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
-        Some(ClientUpdate::Qrr { msgs: self.codec.encode(grads) })
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.codec.mem_bytes()
-    }
-}
-
-struct QrrServerScheme {
-    codec: ServerCodec,
-    shapes: Vec<Vec<usize>>,
-}
-
-impl ServerScheme for QrrServerScheme {
-    fn absorb(&mut self, update: Option<&ClientUpdate>) -> Vec<Tensor> {
-        match update {
-            Some(ClientUpdate::Qrr { msgs }) => self.codec.decode(msgs),
-            Some(_) => panic!("QRR server got non-QRR update"),
-            // partial participation: no upload, no state change, zero
-            // contribution this round
-            None => self.shapes.iter().map(|s| Tensor::zeros(s)).collect(),
-        }
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.codec.mem_bytes()
-    }
-}
-
-struct EfClientScheme {
-    codec: EfClientCodec,
-}
-
-impl ClientScheme for EfClientScheme {
-    fn produce(&mut self, _weights: &[Tensor], grads: &[Tensor]) -> Option<ClientUpdate> {
-        Some(ClientUpdate::Qrr { msgs: self.codec.encode(grads) })
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.codec.mem_bytes()
-    }
+    make_server_scheme_spec(&kind.to_spec(beta), shapes)
+        .expect("legacy presets always compile")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::Encoder;
+    use crate::qrr::{ClientCodec, EfClientCodec, QrrConfig};
+    use crate::slaq::{SlaqClient, SlaqConfig};
     use crate::util::Rng;
 
     fn shapes() -> Vec<Vec<usize>> {
@@ -286,5 +224,102 @@ mod tests {
         assert_eq!(sgd.mem_bytes(), 0);
         assert!(slaq.mem_bytes() > qrr.mem_bytes());
         assert!(qrr.mem_bytes() > 0);
+    }
+
+    #[test]
+    fn out_of_range_p_keeps_legacy_clamping_behavior() {
+        // the old codecs accepted any p (rank rules clamp); the legacy
+        // enum must not start panicking on the same inputs
+        let mut rng = Rng::new(115);
+        let g = grads(&mut rng);
+        for (p, equiv) in [(1.5, 1.0), (0.0, f64::MIN_POSITIVE), (f64::NAN, 1.0)] {
+            let mut c = make_client_scheme(SchemeKind::Qrr { p }, &shapes(), 8, 0.001, 10);
+            let mut e = make_client_scheme(SchemeKind::Qrr { p: equiv }, &shapes(), 8, 0.001, 10);
+            assert_eq!(
+                Encoder::new(&c.produce(&[], &g).unwrap(), 0, 0),
+                Encoder::new(&e.produce(&[], &g).unwrap(), 0, 0),
+                "p={p} did not clamp to {equiv}"
+            );
+        }
+        // EF variant takes the same clamp path
+        let _ = make_client_scheme(SchemeKind::QrrEf { p: 2.0 }, &shapes(), 8, 0.001, 10);
+        let _ = make_server_scheme(SchemeKind::Qrr { p: -1.0 }, &shapes(), 8);
+    }
+
+    #[test]
+    fn spec_built_scheme_matches_preset() {
+        let mut rng = Rng::new(113);
+        let spec = PipelineSpec::parse("qrr(p=0.2)").unwrap();
+        let mut by_spec = make_client_scheme_spec(&spec, &shapes(), 0.001, 10).unwrap();
+        let mut by_kind = make_client_scheme(SchemeKind::Qrr { p: 0.2 }, &shapes(), 8, 0.001, 10);
+        let g = grads(&mut rng);
+        let a = Encoder::new(&by_spec.produce(&[], &g).unwrap(), 0, 0);
+        let b = Encoder::new(&by_kind.produce(&[], &g).unwrap(), 0, 0);
+        assert_eq!(a, b);
+    }
+
+    /// The acceptance-criterion pin: every legacy preset resolved
+    /// through the pipeline registry emits wire bytes identical to the
+    /// pre-redesign codecs it replaced (driven directly here).
+    #[test]
+    fn legacy_presets_are_bit_identical_to_legacy_codecs() {
+        let shapes = shapes();
+        let mut rng = Rng::new(114);
+        let rounds: Vec<(Vec<Tensor>, Vec<Tensor>)> = (0..4)
+            .map(|_| (grads(&mut rng), grads(&mut rng)))
+            .collect();
+        let wire = |up: &ClientUpdate, round: u64| Encoder::new(up, 3, round);
+
+        // SGD: raw gradients
+        let mut c = make_client_scheme(SchemeKind::Sgd, &shapes, 8, 0.05, 3);
+        for (round, (_, g)) in rounds.iter().enumerate() {
+            let expect = ClientUpdate::Sgd { grads: g.clone() };
+            assert_eq!(
+                wire(&c.produce(&[], g).unwrap(), round as u64),
+                wire(&expect, round as u64),
+                "sgd drifted at round {round}"
+            );
+        }
+
+        // SLAQ: the lazy LAQ client, observing weights each round
+        let mut c = make_client_scheme(SchemeKind::Slaq, &shapes, 8, 0.05, 3);
+        let mut legacy = SlaqClient::new(&shapes, SlaqConfig { beta: 8, ..SlaqConfig::paper(0.05, 3) });
+        for (round, (w, g)) in rounds.iter().enumerate() {
+            let got = c.produce(w, g);
+            legacy.observe_weights(w);
+            let expect = legacy.step(g).map(|msg| ClientUpdate::Slaq { msg });
+            match (got, expect) {
+                (None, None) => {}
+                (Some(a), Some(b)) => assert_eq!(
+                    wire(&a, round as u64),
+                    wire(&b, round as u64),
+                    "slaq drifted at round {round}"
+                ),
+                (a, b) => panic!("slaq skip decision drifted: {:?} vs {:?}", a.is_some(), b.is_some()),
+            }
+        }
+
+        // QRR / EF-QRR: the differential factor codecs
+        let cfg = QrrConfig::with_p(0.2);
+        let mut c = make_client_scheme(SchemeKind::Qrr { p: 0.2 }, &shapes, 8, 0.05, 3);
+        let mut legacy = ClientCodec::new(&shapes, cfg);
+        for (round, (_, g)) in rounds.iter().enumerate() {
+            let expect = ClientUpdate::Qrr { msgs: legacy.encode(g) };
+            assert_eq!(
+                wire(&c.produce(&[], g).unwrap(), round as u64),
+                wire(&expect, round as u64),
+                "qrr drifted at round {round}"
+            );
+        }
+        let mut c = make_client_scheme(SchemeKind::QrrEf { p: 0.2 }, &shapes, 8, 0.05, 3);
+        let mut legacy = EfClientCodec::new(&shapes, cfg);
+        for (round, (_, g)) in rounds.iter().enumerate() {
+            let expect = ClientUpdate::Qrr { msgs: legacy.encode(g) };
+            assert_eq!(
+                wire(&c.produce(&[], g).unwrap(), round as u64),
+                wire(&expect, round as u64),
+                "ef-qrr drifted at round {round}"
+            );
+        }
     }
 }

@@ -15,31 +15,36 @@
 //!   round,
 //! * any number of [`MetricsSink`]s — observers of round/eval metrics
 //!   (replacing the old hard-wired `History` plumbing),
-//! * the existing `ClientScheme`/`ServerScheme` pair chosen per client
-//!   from the experiment's [`SchemeConfig`](crate::config::SchemeConfig).
+//! * per-client compression pipelines (DESIGN.md §7): the uplink spec
+//!   resolves from the experiment's
+//!   [`SchemeConfig`](crate::config::SchemeConfig) preset or a
+//!   [`FlSessionBuilder::uplink`] override, and an optional
+//!   [`FlSessionBuilder::downlink`] pipeline makes the session
+//!   dual-side — the server broadcasts delta-encoded
+//!   [`ServerUpdate`](crate::net::ServerUpdate)s instead of
+//!   full-precision parameters.
 //!
-//! The old [`Coordinator`](crate::coordinator::Coordinator) is a thin
-//! shim over this module; experiments, examples and `qrr serve` all go
-//! through the builder.
+//! Experiments, examples and `qrr serve` all go through the builder
+//! (the old `Coordinator` shim is gone).
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::compress::pipeline::{
+    BuildCtx, CompressionPipeline, DownlinkDecoder, DownlinkEncoder, PipelineSpec,
+};
 use crate::config::{AggregationConfig, Backend, ExperimentConfig, ParticipationConfig};
 use crate::data::{self, Dataset};
 use crate::exec::ThreadPool;
 use crate::model::{native::NativeModel, ModelOps, ModelSpec};
 use crate::net::transport::{InProcTransport, Transport, TransportError};
-use crate::net::{ClientUpdate, Decoder, LinkModel};
+use crate::net::{ClientUpdate, Decoder, Encoder, LinkModel};
 use crate::tensor::Tensor;
 use crate::util::{PhaseTimes, Rng};
 
-use super::{
-    make_client_scheme, make_server_scheme, ClientRoundOutput, EvalPoint, FlClient, FlServer,
-    History, RoundMetrics,
-};
+use super::{ClientRoundOutput, EvalPoint, FlClient, FlServer, History, RoundMetrics};
 
 // ------------------------------------------------------- participation
 
@@ -501,6 +506,22 @@ impl FlSessionBuilder {
         self
     }
 
+    /// Run every client's uplink through this compression pipeline,
+    /// overriding the per-client resolution of `cfg.scheme`.
+    pub fn uplink(mut self, spec: PipelineSpec) -> Self {
+        self.cfg.uplink = Some(spec);
+        self
+    }
+
+    /// Compress the server broadcast through this pipeline (dual-side
+    /// compression): each round ships a delta-encoded
+    /// [`ServerUpdate`](crate::net::ServerUpdate) instead of
+    /// full-precision parameters, and clients locally reconstruct.
+    pub fn downlink(mut self, spec: PipelineSpec) -> Self {
+        self.cfg.downlink = Some(spec);
+        self
+    }
+
     /// Assemble the session: load + shard data, build links, per-client
     /// schemes, the server, and wire up the pluggable seams.
     pub fn build(self) -> Result<FlSession> {
@@ -541,25 +562,50 @@ impl FlSessionBuilder {
         let mut clients = Vec::with_capacity(cfg.clients);
         let mut shard_sizes = Vec::with_capacity(cfg.clients);
         let mut server_schemes = Vec::with_capacity(cfg.clients);
+        let ctx = BuildCtx { alpha: cfg.alpha0(), clients: cfg.clients };
         for (i, (shard, link)) in shards.into_iter().zip(links.iter()).enumerate() {
-            let kind = cfg
-                .scheme
-                .kind_for_client(link, cfg.link_slow_bps, cfg.link_fast_bps);
-            log::debug!("client {i}: link {:.0} bps, scheme {}", link.bandwidth_bps, kind.name());
+            // uplink: an explicit pipeline spec applies to every client;
+            // otherwise the scheme preset resolves per client (adaptive p)
+            let uplink_spec = match &cfg.uplink {
+                Some(s) => s.clone(),
+                None => cfg
+                    .scheme
+                    .kind_for_client(link, cfg.link_slow_bps, cfg.link_fast_bps)
+                    .to_spec(cfg.beta),
+            };
+            log::debug!(
+                "client {i}: link {:.0} bps, pipeline {}",
+                link.bandwidth_bps,
+                uplink_spec.format()
+            );
+            let pipe = CompressionPipeline::compile(uplink_spec, &shapes)?;
             shard_sizes.push(shard.len());
             clients.push(FlClient::new(
                 i as u32,
                 shard,
                 Arc::clone(&model),
-                make_client_scheme(kind, &shapes, cfg.beta, cfg.alpha0(), cfg.clients),
+                Box::new(pipe.client(&ctx)),
                 *link,
                 cfg.batch,
                 seed_rng.next_u64(),
             ));
-            server_schemes.push(make_server_scheme(kind, &shapes, cfg.beta));
+            server_schemes.push(Box::new(pipe.server()) as Box<dyn super::ServerScheme>);
         }
 
         let params = spec.init_params(cfg.seed ^ 0x1217);
+        let model_len: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        // dual-side: both downlink halves start from the init parameters
+        // (agreed out of band), mirrored exactly like the uplink codecs
+        let downlink = match &cfg.downlink {
+            None => None,
+            Some(dl_spec) => {
+                log::debug!("downlink pipeline {}", dl_spec.format());
+                Some(DownlinkState {
+                    encoder: DownlinkEncoder::new(dl_spec, &shapes, &params)?,
+                    decoder: DownlinkDecoder::new(dl_spec, &shapes, &params)?,
+                })
+            }
+        };
         let server = FlServer::new(params, server_schemes, cfg.alpha0());
 
         let participation = self
@@ -582,7 +628,12 @@ impl FlSessionBuilder {
             self.recv_timeout
         );
 
-        let history = History::new(cfg.scheme.label());
+        let label = cfg
+            .uplink
+            .as_ref()
+            .map(|s| s.format())
+            .unwrap_or_else(|| cfg.scheme.label());
+        let history = History::new(label);
         let round_rng = Rng::new(cfg.seed ^ 0xFAC7);
         let cfg_clients = cfg.clients;
         let pool = ThreadPool::new(self.threads.unwrap_or_else(crate::exec::default_threads));
@@ -603,10 +654,20 @@ impl FlSessionBuilder {
             phases: PhaseTimes::new(),
             round_rng,
             cum_bits: 0,
+            cum_down_bits: 0,
+            model_len,
+            downlink,
             client_rounds: vec![0; cfg_clients],
             pool,
         })
     }
+}
+
+/// The mirrored downlink codec pair: the server-side delta encoder and
+/// the (shared, broadcast) client-side reconstruction.
+struct DownlinkState {
+    encoder: DownlinkEncoder,
+    decoder: DownlinkDecoder,
 }
 
 // ------------------------------------------------------------- session
@@ -631,6 +692,11 @@ pub struct FlSession {
     /// round-level RNG (participation sampling / dropout draws)
     round_rng: Rng,
     cum_bits: u64,
+    cum_down_bits: u64,
+    /// total parameter count (downlink accounting baseline)
+    model_len: usize,
+    /// dual-side compression state; `None` = full-precision broadcast
+    downlink: Option<DownlinkState>,
     /// how many rounds each client has computed (mirrors the client's
     /// wire `round` counter, used to reject stale/duplicate frames)
     client_rounds: Vec<u64>,
@@ -702,9 +768,24 @@ impl FlSession {
             self.server.set_alpha(alpha);
         }
 
-        // broadcast: clients share a handle to the central parameters —
-        // a refcount bump, not a model copy
-        let weights = self.server.params_shared();
+        // broadcast. Without a downlink pipeline, clients share a handle
+        // to the central parameters — a refcount bump, not a model copy —
+        // and the accounting charges the full-precision parameter size.
+        // With one, the server delta-encodes through its pipeline into a
+        // versioned ServerUpdate, the bytes cross the real wire codec,
+        // and the clients' (shared) decoder locally reconstructs.
+        let mut down_bits = 32 * self.model_len as u64;
+        let weights: Arc<Vec<Tensor>> = match &mut self.downlink {
+            None => self.server.params_shared(),
+            Some(dl) => {
+                let upd = dl.encoder.encode(self.server.params(), it);
+                down_bits = upd.payload_bits();
+                let bytes = Encoder::server(&upd);
+                let decoded = Decoder::decode_server(&bytes)
+                    .expect("self-encoded broadcast always decodes");
+                Arc::new(dl.decoder.apply(&decoded)?.to_vec())
+            }
+        };
 
         // participation: who computes this round
         let n = self.clients.len();
@@ -856,10 +937,17 @@ impl FlSession {
         let grad_norm = self.server.apply_aggregate(&agg);
 
         self.cum_bits += bits;
+        self.cum_down_bits += down_bits;
+        // total compression ratio: this round's shipped bits vs the
+        // full-precision cost of the same traffic pattern (comms uploads
+        // + one broadcast) — 1.0 for the uncompressed baseline
+        let full_bits = 32 * self.model_len as u64;
         let m = RoundMetrics {
             iter: it,
             train_loss: (loss_sum / participants.max(1) as f64) as f32,
             bits,
+            down_bits,
+            ratio: (bits + down_bits) as f64 / ((comms as u64 + 1) * full_bits) as f64,
             comms,
             grad_norm,
             net_time,
@@ -899,6 +987,7 @@ impl FlSession {
         let point = EvalPoint {
             iter: it,
             cum_bits: self.cum_bits,
+            cum_down_bits: self.cum_down_bits,
             loss: (loss_sum / total.max(1) as f64) as f32,
             accuracy: correct as f64 / total.max(1) as f64,
         };
@@ -1018,11 +1107,85 @@ mod tests {
         assert_eq!(h.iterations(), 6);
         // 3 clients × 159,010 params × 32 bits × 6 rounds
         assert_eq!(h.total_bits(), 3 * 159_010 * 32 * 6);
+        // full-precision broadcast: one model per round on the downlink
+        assert_eq!(h.total_down_bits(), 159_010 * 32 * 6);
+        // the SGD baseline ships exactly the full-precision traffic
+        for r in &h.rounds {
+            assert!((r.ratio - 1.0).abs() < 1e-12, "sgd ratio {}", r.ratio);
+        }
         assert_eq!(h.total_comms(), 18);
         assert!(h.evals.len() >= 2);
         let first = h.evals.first().unwrap().loss;
         let last = h.evals.last().unwrap().loss;
         assert!(last < first, "no learning: {first} -> {last}");
+    }
+
+    #[test]
+    fn dual_side_session_compresses_downlink_and_learns() {
+        let cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        let dl = crate::compress::pipeline::PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap();
+        let report = FlSessionBuilder::new(&cfg)
+            .downlink(dl)
+            .quiet()
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let h = &report.history;
+        assert_eq!(h.iterations(), 6);
+        // strictly fewer downlink bits than the full-precision broadcast
+        assert!(
+            h.total_down_bits() < 159_010 * 32 * 6,
+            "downlink not compressed: {}",
+            h.total_down_bits()
+        );
+        assert!(h.total_down_bits() > 0);
+        for r in &h.rounds {
+            assert!(r.ratio < 1.0, "dual-side round ratio {} not < 1", r.ratio);
+        }
+        // lossy broadcast must still learn
+        let first = h.evals.first().unwrap().loss;
+        let last = h.evals.last().unwrap().loss;
+        assert!(last < first, "no learning under dual-side: {first} -> {last}");
+        assert_eq!(
+            h.evals.last().unwrap().cum_down_bits,
+            h.total_down_bits(),
+            "eval points must carry the downlink accounting"
+        );
+    }
+
+    #[test]
+    fn dual_side_session_deterministic_given_seed() {
+        let cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        let dl = crate::compress::pipeline::PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap();
+        let run = || {
+            FlSessionBuilder::new(&cfg)
+                .downlink(dl.clone())
+                .quiet()
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let (r1, r2) = (run(), run());
+        assert_eq!(r1.history.total_bits(), r2.history.total_bits());
+        assert_eq!(r1.history.total_down_bits(), r2.history.total_down_bits());
+        let a = r1.history.evals.last().unwrap();
+        let b = r2.history.evals.last().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn uplink_spec_override_applies_to_every_client() {
+        let mut cfg = tiny_cfg(SchemeConfig::Sgd);
+        cfg.uplink =
+            Some(crate::compress::pipeline::PipelineSpec::parse("qrr(p=0.2)").unwrap());
+        let report = FlSession::from_config(&cfg).unwrap().run().unwrap();
+        // the uplink actually compressed (scheme said SGD, spec won)
+        assert!(report.history.total_bits() < 3 * 159_010 * 32 * 6 / 5);
+        assert_eq!(report.history.label, "svd(p=0.2)+tucker(p=0.2)+laq(beta=8)");
+        assert!(report.client_mem_bytes > 0, "pipeline state not accounted");
     }
 
     #[test]

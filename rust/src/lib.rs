@@ -12,7 +12,10 @@
 //!   Householder QR, truncated SVD).
 //! * [`quant`] — the LAQ β-bit grid quantizer with real bit-packing.
 //! * [`compress`] — the ℂ/ℂ⁻¹ operators: truncated SVD for matrix
-//!   gradients, Tucker (HOSVD) for 4-D convolution gradients.
+//!   gradients, Tucker (HOSVD) for 4-D convolution gradients — and
+//!   [`compress::pipeline`], the composable
+//!   rank-reduction × quantization × feedback pipeline API with its
+//!   spec grammar and preset registry.
 //! * [`qrr`] — the paper's QRR operator (eq. 19): compress → quantize on
 //!   the client, dequantize → reconstruct on the server.
 //! * [`slaq`] — the SLAQ baseline (lazily aggregated quantized gradients).
@@ -24,8 +27,6 @@
 //!   a pure-Rust reference implementation of the paper's models.
 //! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
-//! * [`coordinator`] — round orchestration, parallel client execution,
-//!   adaptive per-client rank selection.
 //! * [`data`] — MNIST/CIFAR-10 loaders plus deterministic synthetic
 //!   generators used when the real datasets are not on disk.
 //!
@@ -51,7 +52,6 @@ pub mod bench_util;
 pub mod cli;
 pub mod compress;
 pub mod config;
-pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod experiments;
@@ -71,11 +71,11 @@ pub use tensor::Tensor;
 
 /// One-stop imports for driving experiments through the session API.
 pub mod prelude {
+    pub use crate::compress::pipeline::{CompressionPipeline, PipelineSpec};
     pub use crate::config::{
         AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig,
         Sharding,
     };
-    pub use crate::coordinator::Coordinator;
     pub use crate::data::DatasetKind;
     pub use crate::fl::session::{
         Aggregation, CsvSink, DeadlineCutoff, FlSession, FlSessionBuilder, FullSync, LinkDropout,

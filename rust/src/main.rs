@@ -33,6 +33,7 @@ fn run(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "serve" => qrr::experiments::serve::run_cli(args),
         "bench" => qrr::bench_util::suites::run_cli(args),
+        "schemes" => cmd_schemes(),
         "info" => cmd_info(),
         "" | "help" | "--help" => {
             print_help();
@@ -56,6 +57,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     let report = session.run()?;
     qrr::experiments::write_run_outputs(out_dir, &cfg.name, &report)?;
     println!("{}", report.markdown_table());
+    Ok(())
+}
+
+/// `qrr schemes` — list the compression-pipeline registry: presets and
+/// the stage grammar (smoke-tested in CI so the registry cannot drift).
+fn cmd_schemes() -> Result<()> {
+    use qrr::compress::pipeline;
+    println!("presets (usable anywhere a pipeline spec is accepted):");
+    for p in pipeline::presets() {
+        println!("  {:<8} = {:<44} {}", p.name, p.spec, p.summary);
+        // the registry must stay self-consistent: every listed preset and
+        // its expansion parse back through the grammar
+        pipeline::PipelineSpec::parse(p.name)?;
+        pipeline::PipelineSpec::parse(&p.spec)?;
+    }
+    println!("\nstages (compose with '+', e.g. \"svd(p=0.1)+laq(beta=8)+ef\"):");
+    for s in pipeline::stages() {
+        println!("  {:<18} {}", s.signature, s.summary);
+    }
+    println!(
+        "\nuplink:   --uplink SPEC   (per-experiment; overrides --schemes)\n\
+         downlink: --downlink SPEC (dual-side; server broadcasts compressed deltas)\n\
+         example:  qrr train --config cfg.json --downlink \"svd(p=0.1)+laq(beta=8)\""
+    );
     Ok(())
 }
 
@@ -86,6 +111,7 @@ USAGE:
     qrr serve [options]          run the FL server+clients over real TCP
     qrr bench [suite] [options]  run the perf suites, write BENCH_*.json
                                  suite: kernels | round | all (default)
+    qrr schemes                  list compression-pipeline presets + stages
     qrr info                     toolchain / artifact status
 
 BENCH OPTIONS:
@@ -111,6 +137,10 @@ COMMON OPTIONS (exp/train):
     --participation P who participates each round:
                       full | <fraction> | dropout:<fraction>:<drop_prob> | deadline:<secs>
     --aggregation A   sum (paper eq. (2)) | weighted_mean (FedAvg)
+    --uplink SPEC     compression pipeline for every client's uplink
+                      (preset or stage spec — see `qrr schemes`)
+    --downlink SPEC   dual-side: broadcast compressed parameter deltas,
+                      e.g. --downlink "svd(p=0.1)+laq(beta=8)"
 
 ENVIRONMENT:
     QRR_THREADS       worker threads (default: cores, max 16; read once

@@ -21,4 +21,4 @@ pub use link::LinkModel;
 pub use transport::{
     InProcTransport, TcpClient, TcpServerTransport, TcpTransport, Transport, TransportError,
 };
-pub use wire::{ClientUpdate, Decoder, Encoder, WireError};
+pub use wire::{ClientUpdate, Decoder, Encoder, ServerUpdate, WireError};

@@ -1,17 +1,29 @@
-//! Wire format for client→server updates.
+//! Wire format for client→server updates and the server→client
+//! broadcast.
 //!
-//! Layout (little-endian):
+//! Client update layout (little-endian):
 //!
 //! ```text
 //! header:  magic u32 = 0x51525257 ("QRRW") | version u8 | scheme u8 |
 //!          client_id u32 | round u64 | n_entries u32
 //! entry:   kind u8 | payload…
-//!   kind 0 dense-f32 : ndim u8, dims u32×ndim, f32×n
-//!   kind 1 quantized : radius f32, beta u8, len u64, packed bytes
-//!   kind 2 svd       : 3 × quantized (U, Σ, V) + shape (m,n) u32×2 + nu u32
-//!   kind 3 tucker    : shape ndim u8 + dims + ranks + core quantized +
-//!                      n_factors u8 + factors
+//!   kind 0 dense-f32  : ndim u8, dims u32×ndim, f32×n
+//!   kind 1 quantized  : radius f32, beta u8, len u64, packed bytes
+//!   kind 2 svd        : 3 × quantized (U, Σ, V)
+//!   kind 3 tucker     : core quantized + n_factors u8 + factors
+//!   kind 4 raw svd    : 3 × dense-f32 (U, σ vector, V)
+//!   kind 5 raw tucker : dense-f32 core + n_factors u8 + dense-f32×n
 //! ```
+//!
+//! Kinds 4/5 (and kind 0 inside a pipeline update) carry the factors of
+//! identity-quantizer pipelines at full precision; the legacy schemes
+//! never emit them, so their byte layout is untouched.
+//!
+//! The downlink broadcast is a [`ServerUpdate`]: its own magic
+//! (`"QRRB"`), a version byte, a dense `seq` counter (the downlink
+//! decoder enforces exactly-once in-order delivery), the round label,
+//! and the same entry encoding — sized exactly by
+//! [`ServerUpdate::wire_len`] like [`ClientUpdate`].
 //!
 //! `payload_bits` (what the experiments count) excludes the fixed header
 //! and the shape/rank metadata: exactly the paper's accounting of
@@ -26,6 +38,9 @@ use crate::tensor::Tensor;
 
 const MAGIC: u32 = 0x5152_5257;
 const VERSION: u8 = 1;
+/// "QRRB" — the server→client broadcast stream.
+const SERVER_MAGIC: u32 = 0x5152_5242;
+const SERVER_VERSION: u8 = 1;
 
 /// Errors produced when decoding a wire message.
 #[derive(Debug, Error)]
@@ -92,28 +107,73 @@ impl ClientUpdate {
         // magic u32 | version u8 | scheme u8 | client_id u32 | round u64
         // | n_entries u32
         const HEADER: usize = 4 + 1 + 1 + 4 + 8 + 4;
-        fn q_len(q: &Quantized) -> usize {
-            // radius f32 | beta u8 | len u64 | packed bytes
-            4 + 1 + 8 + q.packed.len()
-        }
         let body: usize = match self {
-            ClientUpdate::Sgd { grads } => grads
-                .iter()
-                .map(|g| 1 + 1 + 4 * g.ndim() + 4 * g.len())
-                .sum(),
+            ClientUpdate::Sgd { grads } => grads.iter().map(|g| 1 + dense_len(g)).sum(),
             ClientUpdate::Slaq { msg } => msg.params.iter().map(|q| 1 + q_len(q)).sum(),
-            ClientUpdate::Qrr { msgs } => msgs
-                .iter()
-                .map(|m| match m {
-                    ParamMsg::Dense { q } => 1 + q_len(q),
-                    ParamMsg::Svd { u, s, v } => 1 + q_len(u) + q_len(s) + q_len(v),
-                    ParamMsg::Tucker { core, factors } => {
-                        1 + q_len(core) + 1 + factors.iter().map(q_len).sum::<usize>()
-                    }
-                })
-                .sum(),
+            ClientUpdate::Qrr { msgs } => msgs.iter().map(param_msg_len).sum(),
         };
         HEADER + body
+    }
+}
+
+/// Serialized bytes of one quantized factor: radius f32 | beta u8 |
+/// len u64 | packed bytes.
+fn q_len(q: &Quantized) -> usize {
+    4 + 1 + 8 + q.packed.len()
+}
+
+/// Serialized bytes of one dense-f32 tensor: ndim u8 | dims u32×ndim |
+/// f32×n.
+fn dense_len(t: &Tensor) -> usize {
+    1 + 4 * t.ndim() + 4 * t.len()
+}
+
+/// Exact serialized bytes of one per-parameter entry (kind byte
+/// included), shared by [`ClientUpdate::wire_len`] and
+/// [`ServerUpdate::wire_len`].
+fn param_msg_len(m: &ParamMsg) -> usize {
+    match m {
+        ParamMsg::Dense { q } => 1 + q_len(q),
+        ParamMsg::Svd { u, s, v } => 1 + q_len(u) + q_len(s) + q_len(v),
+        ParamMsg::Tucker { core, factors } => {
+            1 + q_len(core) + 1 + factors.iter().map(q_len).sum::<usize>()
+        }
+        ParamMsg::RawDense { t } => 1 + dense_len(t),
+        ParamMsg::RawSvd { u, s, v } => 1 + dense_len(u) + dense_len(s) + dense_len(v),
+        ParamMsg::RawTucker { core, factors } => {
+            1 + dense_len(core) + 1 + factors.iter().map(dense_len).sum::<usize>()
+        }
+    }
+}
+
+/// The server→client broadcast: the compressed parameter delta for one
+/// round, encoded with the same per-parameter entries as a pipeline
+/// [`ClientUpdate`] (see [`crate::compress::pipeline::DownlinkEncoder`]).
+#[derive(Debug, Clone)]
+pub struct ServerUpdate {
+    /// dense per-broadcast counter (0, 1, 2, …): the differential
+    /// downlink codec must apply every broadcast exactly once in order,
+    /// so the decoder rejects any `seq` that is not the next expected —
+    /// unlike `round`, which is a free-form label and may jump
+    pub seq: u64,
+    /// FL round index this broadcast opens
+    pub round: u64,
+    /// per-parameter delta messages in spec order
+    pub msgs: Vec<ParamMsg>,
+}
+
+impl ServerUpdate {
+    /// The `#bits` the downlink accounting charges: factor payloads
+    /// only, same rules as [`ClientUpdate::payload_bits`].
+    pub fn payload_bits(&self) -> u64 {
+        self.msgs.iter().map(|m| m.wire_bits()).sum()
+    }
+
+    /// Exact serialized size in bytes, mirroring [`Encoder::server`].
+    pub fn wire_len(&self) -> usize {
+        // magic u32 | version u8 | seq u64 | round u64 | n_entries u32
+        const HEADER: usize = 4 + 1 + 8 + 8 + 4;
+        HEADER + self.msgs.iter().map(param_msg_len).sum::<usize>()
     }
 }
 
@@ -174,26 +234,63 @@ impl Encoder {
             ClientUpdate::Qrr { msgs } => {
                 e.u32(msgs.len() as u32);
                 for m in msgs {
-                    match m {
-                        ParamMsg::Dense { q } => {
-                            e.u8(1);
-                            e.quantized(q);
-                        }
-                        ParamMsg::Svd { u, s, v } => {
-                            e.u8(2);
-                            e.quantized(u);
-                            e.quantized(s);
-                            e.quantized(v);
-                        }
-                        ParamMsg::Tucker { core, factors } => {
-                            e.u8(3);
-                            e.quantized(core);
-                            e.u8(factors.len() as u8);
-                            for f in factors {
-                                e.quantized(f);
-                            }
-                        }
-                    }
+                    e.param_msg(m);
+                }
+            }
+        }
+    }
+
+    /// Serialize a [`ServerUpdate`] into a fresh, exactly-sized buffer.
+    pub fn server(update: &ServerUpdate) -> Vec<u8> {
+        let mut e = Encoder { buf: Vec::with_capacity(update.wire_len()) };
+        e.u32(SERVER_MAGIC);
+        e.u8(SERVER_VERSION);
+        e.u64(update.seq);
+        e.u64(update.round);
+        e.u32(update.msgs.len() as u32);
+        for m in &update.msgs {
+            e.param_msg(m);
+        }
+        debug_assert_eq!(e.buf.len(), update.wire_len(), "wire_len drifted from encoder");
+        e.buf
+    }
+
+    fn param_msg(&mut self, m: &ParamMsg) {
+        match m {
+            ParamMsg::Dense { q } => {
+                self.u8(1);
+                self.quantized(q);
+            }
+            ParamMsg::Svd { u, s, v } => {
+                self.u8(2);
+                self.quantized(u);
+                self.quantized(s);
+                self.quantized(v);
+            }
+            ParamMsg::Tucker { core, factors } => {
+                self.u8(3);
+                self.quantized(core);
+                self.u8(factors.len() as u8);
+                for f in factors {
+                    self.quantized(f);
+                }
+            }
+            ParamMsg::RawDense { t } => {
+                self.u8(0);
+                self.dense(t);
+            }
+            ParamMsg::RawSvd { u, s, v } => {
+                self.u8(4);
+                self.dense(u);
+                self.dense(s);
+                self.dense(v);
+            }
+            ParamMsg::RawTucker { core, factors } => {
+                self.u8(5);
+                self.dense(core);
+                self.u8(factors.len() as u8);
+                for f in factors {
+                    self.dense(f);
                 }
             }
         }
@@ -282,31 +379,66 @@ impl<'a> Decoder<'a> {
             2 => {
                 let mut msgs = Vec::with_capacity(n);
                 for _ in 0..n {
-                    let kind = d.u8()?;
-                    msgs.push(match kind {
-                        1 => ParamMsg::Dense { q: d.quantized()? },
-                        2 => ParamMsg::Svd {
-                            u: d.quantized()?,
-                            s: d.quantized()?,
-                            v: d.quantized()?,
-                        },
-                        3 => {
-                            let core = d.quantized()?;
-                            let nf = d.u8()? as usize;
-                            let mut factors = Vec::with_capacity(nf);
-                            for _ in 0..nf {
-                                factors.push(d.quantized()?);
-                            }
-                            ParamMsg::Tucker { core, factors }
-                        }
-                        k => return Err(WireError::UnknownKind(k)),
-                    });
+                    msgs.push(d.param_msg()?);
                 }
                 ClientUpdate::Qrr { msgs }
             }
             s => return Err(WireError::UnknownScheme(s)),
         };
         Ok(DecodedMsg { client_id, round, update })
+    }
+
+    /// Decode a server broadcast produced by [`Encoder::server`].
+    pub fn decode_server(buf: &'a [u8]) -> Result<ServerUpdate, WireError> {
+        let mut d = Decoder { buf, pos: 0 };
+        if d.u32()? != SERVER_MAGIC || d.u8()? != SERVER_VERSION {
+            return Err(WireError::BadHeader);
+        }
+        let seq = d.u64()?;
+        let round = d.u64()?;
+        let n = d.u32()? as usize;
+        let mut msgs = Vec::with_capacity(n);
+        for _ in 0..n {
+            msgs.push(d.param_msg()?);
+        }
+        Ok(ServerUpdate { seq, round, msgs })
+    }
+
+    fn param_msg(&mut self) -> Result<ParamMsg, WireError> {
+        let kind = self.u8()?;
+        Ok(match kind {
+            0 => ParamMsg::RawDense { t: self.dense()? },
+            1 => ParamMsg::Dense { q: self.quantized()? },
+            2 => ParamMsg::Svd {
+                u: self.quantized()?,
+                s: self.quantized()?,
+                v: self.quantized()?,
+            },
+            3 => {
+                let core = self.quantized()?;
+                let nf = self.u8()? as usize;
+                let mut factors = Vec::with_capacity(nf);
+                for _ in 0..nf {
+                    factors.push(self.quantized()?);
+                }
+                ParamMsg::Tucker { core, factors }
+            }
+            4 => ParamMsg::RawSvd {
+                u: self.dense()?,
+                s: self.dense()?,
+                v: self.dense()?,
+            },
+            5 => {
+                let core = self.dense()?;
+                let nf = self.u8()? as usize;
+                let mut factors = Vec::with_capacity(nf);
+                for _ in 0..nf {
+                    factors.push(self.dense()?);
+                }
+                ParamMsg::RawTucker { core, factors }
+            }
+            k => return Err(WireError::UnknownKind(k)),
+        })
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
@@ -476,6 +608,108 @@ mod tests {
             assert_eq!(buf, Encoder::new(&up, 7, round));
             let dec = Decoder::decode(&buf).unwrap();
             assert_eq!(dec.round, round);
+        }
+    }
+
+    #[test]
+    fn raw_entries_roundtrip_in_client_update() {
+        let mut rng = Rng::new(107);
+        let up = ClientUpdate::Qrr {
+            msgs: vec![
+                ParamMsg::RawDense { t: Tensor::randn(&[7], &mut rng) },
+                ParamMsg::RawSvd {
+                    u: Tensor::randn(&[6, 2], &mut rng),
+                    s: Tensor::randn(&[2], &mut rng),
+                    v: Tensor::randn(&[5, 2], &mut rng),
+                },
+                ParamMsg::RawTucker {
+                    core: Tensor::randn(&[2, 2, 2], &mut rng),
+                    factors: vec![
+                        Tensor::randn(&[4, 2], &mut rng),
+                        Tensor::randn(&[3, 2], &mut rng),
+                        Tensor::randn(&[3, 2], &mut rng),
+                    ],
+                },
+            ],
+        };
+        let bytes = Encoder::new(&up, 9, 3);
+        assert_eq!(bytes.len(), up.wire_len());
+        // raw payloads are 32 bits per f32 element
+        assert_eq!(
+            up.payload_bits(),
+            32 * (7 + (12 + 2 + 10) + (8 + 8 + 6 + 6)) as u64
+        );
+        let dec = Decoder::decode(&bytes).unwrap();
+        match dec.update {
+            ClientUpdate::Qrr { msgs } => {
+                match (&msgs[0], &msgs[1], &msgs[2]) {
+                    (
+                        ParamMsg::RawDense { t },
+                        ParamMsg::RawSvd { u, s, v },
+                        ParamMsg::RawTucker { core, factors },
+                    ) => {
+                        assert_eq!(t.shape(), &[7]);
+                        assert_eq!(u.shape(), &[6, 2]);
+                        assert_eq!(s.shape(), &[2]);
+                        assert_eq!(v.shape(), &[5, 2]);
+                        assert_eq!(core.shape(), &[2, 2, 2]);
+                        assert_eq!(factors.len(), 3);
+                    }
+                    other => panic!("kinds changed across the wire: {other:?}"),
+                }
+            }
+            _ => panic!("wrong scheme"),
+        }
+    }
+
+    #[test]
+    fn server_update_roundtrip_exact_wire_len() {
+        let mut rng = Rng::new(108);
+        let shapes = vec![vec![20, 30], vec![20]];
+        let mut codec = ClientCodec::new(&shapes, QrrConfig::with_p(0.3));
+        let deltas: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let upd = ServerUpdate { seq: 5, round: 41, msgs: codec.encode(&deltas) };
+        let bytes = Encoder::server(&upd);
+        assert_eq!(bytes.len(), upd.wire_len(), "server wire_len must be exact");
+        let back = Decoder::decode_server(&bytes).unwrap();
+        assert_eq!(back.seq, 5);
+        assert_eq!(back.round, 41);
+        assert_eq!(back.payload_bits(), upd.payload_bits());
+        assert_eq!(back.msgs.len(), upd.msgs.len());
+    }
+
+    #[test]
+    fn server_update_rejects_client_bytes_and_vice_versa() {
+        let mut rng = Rng::new(109);
+        let up = ClientUpdate::Sgd { grads: vec![Tensor::randn(&[3, 3], &mut rng)] };
+        let client_bytes = Encoder::new(&up, 0, 0);
+        assert!(matches!(
+            Decoder::decode_server(&client_bytes),
+            Err(WireError::BadHeader)
+        ));
+        let upd = ServerUpdate {
+            seq: 0,
+            round: 0,
+            msgs: vec![ParamMsg::RawDense { t: Tensor::randn(&[3], &mut rng) }],
+        };
+        let server_bytes = Encoder::server(&upd);
+        assert!(matches!(
+            Decoder::decode(&server_bytes),
+            Err(WireError::BadHeader)
+        ));
+    }
+
+    #[test]
+    fn server_update_truncation_is_an_error() {
+        let mut rng = Rng::new(110);
+        let upd = ServerUpdate {
+            seq: 2,
+            round: 7,
+            msgs: vec![ParamMsg::RawDense { t: Tensor::randn(&[16], &mut rng) }],
+        };
+        let bytes = Encoder::server(&upd);
+        for cut in [0, 4, 12, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Decoder::decode_server(&bytes[..cut]).is_err(), "cut={cut}");
         }
     }
 

@@ -47,10 +47,34 @@ pub enum ParamMsg {
         /// Q(∂J/∂b) codes
         q: Quantized,
     },
+    /// Unquantized truncated-SVD factors (a `svd(p)` pipeline stage with
+    /// the identity quantizer — see [`crate::compress::pipeline`]).
+    RawSvd {
+        /// U (m×ν), full precision
+        u: Tensor,
+        /// the ν singular values as a vector
+        s: Tensor,
+        /// V (n×ν), full precision
+        v: Tensor,
+    },
+    /// Unquantized Tucker factors.
+    RawTucker {
+        /// core tensor, full precision
+        core: Tensor,
+        /// F₁…F_N, full precision
+        factors: Vec<Tensor>,
+    },
+    /// Unreduced, unquantized tensor (identity reducer + identity
+    /// quantizer inside a mixed pipeline).
+    RawDense {
+        /// the raw values
+        t: Tensor,
+    },
 }
 
 impl ParamMsg {
-    /// Exact payload size in bits (32 + βn per quantized factor, eq. (16)).
+    /// Exact payload size in bits (32 + βn per quantized factor,
+    /// eq. (16); 32 per f32 for unquantized factors).
     pub fn wire_bits(&self) -> u64 {
         match self {
             ParamMsg::Svd { u, s, v } => u.wire_bits() + s.wire_bits() + v.wire_bits(),
@@ -58,6 +82,11 @@ impl ParamMsg {
                 core.wire_bits() + factors.iter().map(|f| f.wire_bits()).sum::<u64>()
             }
             ParamMsg::Dense { q } => q.wire_bits(),
+            ParamMsg::RawSvd { u, s, v } => 32 * (u.len() + s.len() + v.len()) as u64,
+            ParamMsg::RawTucker { core, factors } => {
+                32 * (core.len() + factors.iter().map(|f| f.len()).sum::<usize>()) as u64
+            }
+            ParamMsg::RawDense { t } => 32 * t.len() as u64,
         }
     }
 }
@@ -99,32 +128,40 @@ pub enum ParamState {
 impl ParamState {
     fn new(shape: &[usize], cfg: &QrrConfig) -> Self {
         match shape.len() {
-            2 => {
-                let (m, n) = (shape[0], shape[1]);
-                let nu = svd_rank(m, n, cfg.p);
-                ParamState::Svd {
-                    u: QuantState::zeros(&[m, nu]),
-                    s: QuantState::zeros(&[nu]),
-                    v: QuantState::zeros(&[n, nu]),
-                    nu,
-                    shape: (m, n),
-                }
-            }
-            d if d >= 3 => {
-                let ranks = tucker_ranks(shape, cfg.p);
-                let factors = shape
-                    .iter()
-                    .zip(ranks.iter())
-                    .map(|(&dim, &r)| QuantState::zeros(&[dim, r]))
-                    .collect();
-                ParamState::Tucker {
-                    core: QuantState::zeros(&ranks),
-                    factors,
-                    ranks,
-                    shape: shape.to_vec(),
-                }
-            }
-            _ => ParamState::Dense { q: QuantState::zeros(shape) },
+            2 => Self::planned_svd(shape[0], shape[1], svd_rank(shape[0], shape[1], cfg.p)),
+            d if d >= 3 => Self::planned_tucker(shape, tucker_ranks(shape, cfg.p)),
+            _ => Self::planned_dense(shape),
+        }
+    }
+
+    /// Quantize-only state for a parameter left unreduced.
+    pub fn planned_dense(shape: &[usize]) -> Self {
+        ParamState::Dense { q: QuantState::zeros(shape) }
+    }
+
+    /// State for an m×n matrix parameter truncated-SVD-reduced to rank ν.
+    pub fn planned_svd(m: usize, n: usize, nu: usize) -> Self {
+        ParamState::Svd {
+            u: QuantState::zeros(&[m, nu]),
+            s: QuantState::zeros(&[nu]),
+            v: QuantState::zeros(&[n, nu]),
+            nu,
+            shape: (m, n),
+        }
+    }
+
+    /// State for an N-D parameter Tucker-reduced at per-mode `ranks`.
+    pub fn planned_tucker(shape: &[usize], ranks: Vec<usize>) -> Self {
+        let factors = shape
+            .iter()
+            .zip(ranks.iter())
+            .map(|(&dim, &r)| QuantState::zeros(&[dim, r]))
+            .collect();
+        ParamState::Tucker {
+            core: QuantState::zeros(&ranks),
+            factors,
+            ranks,
+            shape: shape.to_vec(),
         }
     }
 
@@ -146,6 +183,35 @@ impl ParamState {
                 core.mem_bytes() + factors.iter().map(|f| f.mem_bytes()).sum::<usize>()
             }
             ParamState::Dense { q } => q.mem_bytes(),
+        }
+    }
+
+    /// True when `msg` is exactly the kind and factor sizes this state
+    /// expects — the precondition for [`decode`](ServerCodec::decode).
+    /// Servers use it to discard wire-valid-but-mismatched frames (an
+    /// external peer controls the bytes) instead of panicking mid-round.
+    pub fn accepts(&self, msg: &ParamMsg) -> bool {
+        match (self, msg) {
+            (ParamState::Svd { u, s, v, .. }, ParamMsg::Svd { u: mu, s: ms, v: mv }) => {
+                mu.wellformed(u.value().len())
+                    && ms.wellformed(s.value().len())
+                    && mv.wellformed(v.value().len())
+            }
+            (
+                ParamState::Tucker { core, factors, .. },
+                ParamMsg::Tucker { core: mc, factors: mf },
+            ) => {
+                mc.wellformed(core.value().len())
+                    && factors.len() == mf.len()
+                    && factors
+                        .iter()
+                        .zip(mf.iter())
+                        .all(|(fs, m)| m.wellformed(fs.value().len()))
+            }
+            (ParamState::Dense { q }, ParamMsg::Dense { q: mq }) => {
+                mq.wellformed(q.value().len())
+            }
+            _ => false,
         }
     }
 
@@ -184,6 +250,15 @@ impl ClientCodec {
     /// Build the codec for a model with the given parameter shapes.
     pub fn new(shapes: &[Vec<usize>], cfg: QrrConfig) -> Self {
         let states = shapes.iter().map(|s| ParamState::new(s, &cfg)).collect();
+        ClientCodec { cfg, states }
+    }
+
+    /// Build from externally planned per-parameter states — the
+    /// [`compress::pipeline`](crate::compress::pipeline) entry point,
+    /// where the reducer stages decide each parameter's plan instead of
+    /// the fixed ndim rules of [`Self::new`]. `cfg.p` is ignored (the
+    /// plans already fix every rank); `cfg.beta`/`cfg.method` apply.
+    pub fn from_states(states: Vec<ParamState>, cfg: QrrConfig) -> Self {
         ClientCodec { cfg, states }
     }
 
@@ -282,6 +357,12 @@ impl ServerCodec {
         ServerCodec { states }
     }
 
+    /// Mirror codec from externally planned states (must match the
+    /// client's plans — see [`ClientCodec::from_states`]).
+    pub fn from_states(states: Vec<ParamState>) -> Self {
+        ServerCodec { states }
+    }
+
     /// Access per-parameter states.
     pub fn states(&self) -> &[ParamState] {
         &self.states
@@ -290,6 +371,14 @@ impl ServerCodec {
     /// Server-side state memory in bytes (held per client).
     pub fn mem_bytes(&self) -> usize {
         self.states.iter().map(|s| s.mem_bytes()).sum()
+    }
+
+    /// True when every message matches this codec's mirrored states —
+    /// the precondition under which [`decode`](Self::decode) cannot
+    /// panic on externally controlled input.
+    pub fn accepts(&self, msgs: &[ParamMsg]) -> bool {
+        msgs.len() == self.states.len()
+            && self.states.iter().zip(msgs.iter()).all(|(st, m)| st.accepts(m))
     }
 
     /// Decode one message set into reconstructed gradients.

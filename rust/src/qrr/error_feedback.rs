@@ -39,6 +39,17 @@ impl EfClientCodec {
         }
     }
 
+    /// Wrap an externally planned codec pair (the
+    /// [`compress::pipeline`](crate::compress::pipeline) `ef` stage).
+    /// `inner` and `mirror` must share one plan over `shapes`.
+    pub fn from_parts(inner: ClientCodec, mirror: ServerCodec, shapes: &[Vec<usize>]) -> Self {
+        EfClientCodec {
+            inner,
+            mirror,
+            residual: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+
     /// Encode with error feedback; same message type as plain QRR.
     pub fn encode(&mut self, grads: &[Tensor]) -> Vec<ParamMsg> {
         assert_eq!(grads.len(), self.residual.len());

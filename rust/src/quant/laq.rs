@@ -49,6 +49,19 @@ impl Quantized {
     pub fn codes(&self) -> Vec<u32> {
         unpack_codes(&self.packed, self.len, self.beta)
     }
+
+    /// True when this payload is internally consistent and carries
+    /// exactly `expect_len` elements: β on the supported grid, a finite
+    /// radius, and packed bytes sized exactly for (len, β). This is the
+    /// precondition for dequantizing **peer-controlled** input — the
+    /// wire decoder checks syntax only, so servers gate on this before
+    /// letting a payload near the asserting dequantize path.
+    pub fn wellformed(&self, expect_len: usize) -> bool {
+        self.len == expect_len
+            && (1..=16).contains(&self.beta)
+            && self.radius.is_finite()
+            && self.packed.len() == packed_len_bytes(self.len, self.beta)
+    }
 }
 
 /// Exact wire size of quantizing `n` elements at `beta` bits (eq. (16)).

@@ -194,6 +194,18 @@ impl SlaqServerState {
         SlaqServerState { states: shapes.iter().map(|s| QuantState::zeros(s)).collect() }
     }
 
+    /// True when `msg` carries one payload per parameter with the
+    /// expected lengths — the precondition for [`Self::apply`] on
+    /// externally controlled input.
+    pub fn accepts(&self, msg: &SlaqMsg) -> bool {
+        msg.params.len() == self.states.len()
+            && self
+                .states
+                .iter()
+                .zip(msg.params.iter())
+                .all(|(st, q)| q.wellformed(st.value().len()))
+    }
+
     /// Apply a received message; afterwards [`Self::latest`] returns the
     /// client's new quantized gradient.
     pub fn apply(&mut self, msg: &SlaqMsg) {

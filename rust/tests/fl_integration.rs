@@ -1,10 +1,16 @@
 //! End-to-end FL integration: full rounds across schemes, wire decode at
 //! the server, metric invariants, link simulation and failure handling.
 
+use qrr::compress::pipeline::PipelineSpec;
 use qrr::config::{ExperimentConfig, PPolicy, SchemeConfig};
-use qrr::coordinator::Coordinator;
 use qrr::data::DatasetKind;
+use qrr::fl::session::{FlSessionBuilder, RunReport};
 use qrr::model::ModelKind;
+
+/// Run a config through the session builder, every seam at its default.
+fn run(cfg: &ExperimentConfig) -> RunReport {
+    FlSessionBuilder::new(cfg).quiet().build().unwrap().run().unwrap()
+}
 
 fn tiny(scheme: SchemeConfig, model: ModelKind, dataset: DatasetKind) -> ExperimentConfig {
     let mut c = ExperimentConfig::table1_default();
@@ -29,7 +35,7 @@ fn all_schemes_learn_on_mlp() {
         SchemeConfig::Qrr(PPolicy::Fixed(0.3)),
     ] {
         let cfg = tiny(scheme, ModelKind::Mlp, DatasetKind::Mnist);
-        let report = Coordinator::from_config(&cfg).unwrap().run().unwrap();
+        let report = run(&cfg);
         let h = &report.history;
         let first = h.evals.first().unwrap();
         let last = h.evals.last().unwrap();
@@ -52,7 +58,7 @@ fn cnn_round_with_tucker_compression() {
         ModelKind::Cnn,
         DatasetKind::Mnist,
     );
-    let report = Coordinator::from_config(&cfg).unwrap().run().unwrap();
+    let report = run(&cfg);
     assert!(report.history.evals.last().unwrap().loss.is_finite());
     // CNN: QRR bits must be far under SGD's 32 bits/param
     let dense_bits = 3 * 8 * qrr::model::ModelSpec::new(ModelKind::Cnn).num_params() as u64 * 32;
@@ -71,7 +77,7 @@ fn vgg_adaptive_p_runs() {
     cfg.train_n = 90;
     cfg.test_n = 30;
     cfg.eval_every = 3;
-    let report = Coordinator::from_config(&cfg).unwrap().run().unwrap();
+    let report = run(&cfg);
     assert_eq!(report.history.iterations(), 3);
     assert!(report.history.total_bits() > 0);
 }
@@ -80,12 +86,7 @@ fn vgg_adaptive_p_runs() {
 fn bit_ordering_matches_paper_qrr_lt_slaq_lt_sgd() {
     let bits = |scheme| {
         let cfg = tiny(scheme, ModelKind::Mlp, DatasetKind::Mnist);
-        Coordinator::from_config(&cfg)
-            .unwrap()
-            .run()
-            .unwrap()
-            .history
-            .total_bits()
+        run(&cfg).history.total_bits()
     };
     let sgd = bits(SchemeConfig::Sgd);
     let slaq = bits(SchemeConfig::Slaq);
@@ -102,20 +103,12 @@ fn bit_ordering_matches_paper_qrr_lt_slaq_lt_sgd() {
 #[test]
 fn comms_counted_per_upload() {
     let cfg = tiny(SchemeConfig::Sgd, ModelKind::Mlp, DatasetKind::Mnist);
-    let h = Coordinator::from_config(&cfg)
-        .unwrap()
-        .run()
-        .unwrap()
-        .history;
+    let h = run(&cfg).history;
     // SGD never skips: comms == clients * iters
     assert_eq!(h.total_comms(), 3 * 8);
     // SLAQ may skip but never exceeds
     let cfg = tiny(SchemeConfig::Slaq, ModelKind::Mlp, DatasetKind::Mnist);
-    let h = Coordinator::from_config(&cfg)
-        .unwrap()
-        .run()
-        .unwrap()
-        .history;
+    let h = run(&cfg).history;
     assert!(h.total_comms() <= 24);
     assert!(h.total_comms() >= 3); // at least the first round
 }
@@ -129,18 +122,8 @@ fn net_time_reflects_link_speeds() {
     let mut slow = fast.clone();
     slow.link_slow_bps = 1e5;
     slow.link_fast_bps = 1e5;
-    let t_fast = Coordinator::from_config(&fast)
-        .unwrap()
-        .run()
-        .unwrap()
-        .history
-        .total_net_time();
-    let t_slow = Coordinator::from_config(&slow)
-        .unwrap()
-        .run()
-        .unwrap()
-        .history
-        .total_net_time();
+    let t_fast = run(&fast).history.total_net_time();
+    let t_slow = run(&slow).history.total_net_time();
     assert!(t_slow > t_fast * 100, "{t_slow:?} vs {t_fast:?}");
 }
 
@@ -176,7 +159,7 @@ fn qrr_survives_quiet_gradient_rounds() {
 #[test]
 fn run_report_markdown_has_paper_columns() {
     let cfg = tiny(SchemeConfig::Qrr(PPolicy::Fixed(0.2)), ModelKind::Mlp, DatasetKind::Mnist);
-    let report = Coordinator::from_config(&cfg).unwrap().run().unwrap();
+    let report = run(&cfg);
     let md = report.markdown_table();
     for col in ["Algorithm", "# Iterations", "# Bits", "# Communications", "Loss", "Accuracy"] {
         assert!(md.contains(col), "missing column {col}: {md}");
@@ -188,11 +171,7 @@ fn run_report_markdown_has_paper_columns() {
 fn per_round_train_loss_trends_down_under_sgd() {
     let mut cfg = tiny(SchemeConfig::Sgd, ModelKind::Mlp, DatasetKind::Mnist);
     cfg.iters = 20;
-    let h = Coordinator::from_config(&cfg)
-        .unwrap()
-        .run()
-        .unwrap()
-        .history;
+    let h = run(&cfg).history;
     let head: f64 = h.rounds[..5].iter().map(|r| r.train_loss as f64).sum::<f64>() / 5.0;
     let tail: f64 = h.rounds[15..].iter().map(|r| r.train_loss as f64).sum::<f64>() / 5.0;
     assert!(tail < head, "train loss head {head} tail {tail}");
@@ -206,15 +185,15 @@ fn ef_qrr_trains_stably_at_tiny_p() {
     // compression. (The strict bias-removal property is proven at unit
     // level in qrr::error_feedback::tests — over a short noisy run EF and
     // plain QRR trade places, so here we check learning + sane loss.)
-    let run = |scheme| {
+    let train = |scheme| {
         let mut cfg = tiny(scheme, ModelKind::Mlp, DatasetKind::Mnist);
         cfg.iters = 15;
         cfg.lr_schedule = vec![(0, 0.02)];
-        let h = Coordinator::from_config(&cfg).unwrap().run().unwrap().history;
+        let h = run(&cfg).history;
         (h.evals.first().unwrap().loss, h.evals.last().unwrap().loss)
     };
-    let (plain_first, plain_last) = run(SchemeConfig::Qrr(PPolicy::Fixed(0.05)));
-    let (ef_first, ef_last) = run(SchemeConfig::QrrEf(PPolicy::Fixed(0.05)));
+    let (plain_first, plain_last) = train(SchemeConfig::Qrr(PPolicy::Fixed(0.05)));
+    let (ef_first, ef_last) = train(SchemeConfig::QrrEf(PPolicy::Fixed(0.05)));
     assert!(plain_last < plain_first, "plain QRR no learning");
     assert!(ef_last < ef_first, "EF-QRR no learning");
     assert!(
@@ -227,12 +206,7 @@ fn ef_qrr_trains_stably_at_tiny_p() {
 fn ef_qrr_same_wire_bits_as_plain() {
     let bits = |scheme| {
         let cfg = tiny(scheme, ModelKind::Mlp, DatasetKind::Mnist);
-        Coordinator::from_config(&cfg)
-            .unwrap()
-            .run()
-            .unwrap()
-            .history
-            .total_bits()
+        run(&cfg).history.total_bits()
     };
     assert_eq!(
         bits(SchemeConfig::Qrr(PPolicy::Fixed(0.2))),
@@ -247,7 +221,7 @@ fn non_iid_sharding_still_learns() {
         let mut cfg = tiny(SchemeConfig::Qrr(PPolicy::Fixed(0.3)), ModelKind::Mlp, DatasetKind::Mnist);
         cfg.sharding = sharding;
         cfg.iters = 12;
-        let h = Coordinator::from_config(&cfg).unwrap().run().unwrap().history;
+        let h = run(&cfg).history;
         let first = h.evals.first().unwrap().loss;
         let last = h.evals.last().unwrap().loss;
         assert!(last < first, "{sharding:?}: {first} -> {last}");
@@ -261,8 +235,90 @@ fn partial_participation_reduces_comms_proportionally() {
     cfg.clients = 4;
     cfg.participation = ParticipationConfig::Uniform { fraction: 0.5 };
     cfg.iters = 10;
-    let h = Coordinator::from_config(&cfg).unwrap().run().unwrap().history;
+    let h = run(&cfg).history;
     // ceil(0.5*4)=2 participants per round
     assert_eq!(h.total_comms(), 2 * 10);
     assert!(h.evals.last().unwrap().loss.is_finite());
+}
+
+#[test]
+fn adaptive_p_assigns_different_ranks() {
+    // migrated from the retired coordinator shim: per-client adaptive p
+    // must produce different factor-state sizes per link speed
+    let cfg = tiny(
+        SchemeConfig::Qrr(PPolicy::Adaptive { lo: 0.1, hi: 0.3 }),
+        ModelKind::Mlp,
+        DatasetKind::Mnist,
+    );
+    let session = FlSessionBuilder::new(&cfg).quiet().build().unwrap();
+    let mems: Vec<usize> = session
+        .clients()
+        .iter()
+        .map(|c| c.scheme_mem_bytes())
+        .collect();
+    assert!(mems.windows(2).any(|w| w[0] != w[1]), "mems {mems:?}");
+}
+
+#[test]
+fn lr_schedule_transitions_mid_run() {
+    // migrated from the retired coordinator shim
+    let mut cfg = tiny(SchemeConfig::Sgd, ModelKind::Mlp, DatasetKind::Mnist);
+    cfg.lr_schedule = vec![(0, 0.05), (3, 0.01)];
+    let mut session = FlSessionBuilder::new(&cfg).quiet().build().unwrap();
+    session.step(0).unwrap();
+    assert_eq!(session.server().alpha(), 0.05);
+    session.step(3).unwrap();
+    assert_eq!(session.server().alpha(), 0.01);
+}
+
+// ----------------------------------------------------------- dual-side
+
+#[test]
+fn dual_side_downlink_converges_and_beats_sgd_baseline() {
+    // the acceptance scenario: --downlink "svd(p=0.1)+laq(beta=8)" on the
+    // synth workload converges and ships strictly fewer downlink bits
+    // than the SGD baseline's full-precision broadcast
+    let base = tiny(SchemeConfig::Qrr(PPolicy::Fixed(0.2)), ModelKind::Mlp, DatasetKind::Mnist);
+    let sgd_down_bits = {
+        let mut cfg = base.clone();
+        cfg.scheme = SchemeConfig::Sgd;
+        run(&cfg).history.total_down_bits()
+    };
+    let mut cfg = base;
+    cfg.downlink = Some(PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap());
+    let h = run(&cfg).history;
+    assert!(
+        h.total_down_bits() < sgd_down_bits,
+        "dual-side downlink {} not below SGD baseline {}",
+        h.total_down_bits(),
+        sgd_down_bits
+    );
+    // far below, in fact: p=0.1 factors + 8-bit codes
+    assert!(h.total_down_bits() * 3 < sgd_down_bits);
+    let first = h.evals.first().unwrap().loss;
+    let last = h.evals.last().unwrap().loss;
+    assert!(last < first, "dual-side run did not converge: {first} -> {last}");
+    // uplink and downlink are accounted separately
+    assert!(h.total_bits() > 0);
+    assert_ne!(h.total_bits(), h.total_down_bits());
+    for r in &h.rounds {
+        assert!(r.ratio < 1.0, "round ratio {} not < 1", r.ratio);
+    }
+}
+
+#[test]
+fn dual_side_matches_uncompressed_downlink_closely_at_high_rank() {
+    // a near-lossless downlink (p=1, beta=12) must track the
+    // uncompressed broadcast's learning curve
+    let base = tiny(SchemeConfig::Sgd, ModelKind::Mlp, DatasetKind::Mnist);
+    let plain = run(&base).history;
+    let mut cfg = base;
+    cfg.downlink = Some(PipelineSpec::parse("svd(p=1.0)+laq(beta=12)").unwrap());
+    let dual = run(&cfg).history;
+    let a = plain.evals.last().unwrap().loss;
+    let b = dual.evals.last().unwrap().loss;
+    assert!(
+        (a - b).abs() < 0.25 * a.abs().max(0.1),
+        "near-lossless downlink diverged: {a} vs {b}"
+    );
 }

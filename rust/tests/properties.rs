@@ -1,4 +1,4 @@
-//! Property-based sweeps over the coordinator-side invariants (the
+//! Property-based sweeps over the session-side invariants (the
 //! proptest substitute — `qrr::testing::prop`): quantizer bounds,
 //! codec synchronization, wire round-trips, rank rules, tensor algebra.
 

@@ -134,6 +134,32 @@ fn uniform_sampling_with_weighted_mean_learns() {
 }
 
 #[test]
+fn dual_side_compression_over_tcp_transport() {
+    // dual-side: QRR uplink over real sockets + svd+laq downlink deltas —
+    // no direction ships full-precision parameters
+    let mut cfg = tiny_base();
+    cfg.iters = 4;
+    cfg.eval_every = 4;
+    cfg.downlink = Some(PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap());
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let mut session = FlSessionBuilder::new(&cfg)
+        .transport(Box::new(transport))
+        .recv_timeout(Duration::from_secs(5))
+        .quiet()
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    let h = &report.history;
+    assert_eq!(h.total_comms(), 4 * 4, "every upload must cross the socket");
+    assert!(h.total_bits() > 0);
+    // downlink strictly below the full-precision broadcast baseline
+    let model_params = 159_010u64;
+    assert!(h.total_down_bits() < 4 * 32 * model_params);
+    assert!(h.total_down_bits() > 0);
+    assert!(h.evals.last().unwrap().loss.is_finite());
+}
+
+#[test]
 fn tcp_binding_composes_with_dropout() {
     // real sockets + lossy participation in one builder chain: dropped
     // uploads never reach the socket and the server times out cleanly
