@@ -83,12 +83,18 @@ impl Suite {
         }
     }
 
-    /// Seal the suite into its report.
+    /// Seal the suite into its report, stamping the execution
+    /// environment (threads, SIMD dispatch level, detected CPU
+    /// features) so committed baselines say what machine and dispatch
+    /// produced them.
     pub fn finish(self) -> SuiteReport {
         SuiteReport {
             suite: self.name,
             mode: if self.bench.fast { "fast".into() } else { "full".into() },
             threads: crate::exec::default_threads(),
+            simd: crate::exec::simd::level().label().to_string(),
+            cpu: crate::exec::simd::cpu_features().to_string(),
+            estimated: false,
             cases: self.results,
         }
     }
@@ -103,6 +109,16 @@ pub struct SuiteReport {
     pub mode: String,
     /// worker threads in effect during the run
     pub threads: usize,
+    /// effective SIMD dispatch level during the run (`scalar`/`avx2`;
+    /// `"unknown"` for baselines predating the field)
+    pub simd: String,
+    /// CPU vector features detected on the producing machine,
+    /// independent of any `QRR_SIMD` override
+    pub cpu: String,
+    /// true when the numbers are hand-estimated placeholders rather
+    /// than a measured run — `--check` reports against these without
+    /// failing the gate
+    pub estimated: bool,
     /// per-case results in execution order
     pub cases: Vec<BenchResult>,
 }
@@ -115,6 +131,9 @@ impl SuiteReport {
             ("suite", Json::Str(self.suite.clone())),
             ("mode", Json::Str(self.mode.clone())),
             ("threads", Json::Num(self.threads as f64)),
+            ("simd", Json::Str(self.simd.clone())),
+            ("cpu", Json::Str(self.cpu.clone())),
+            ("estimated", Json::Bool(self.estimated)),
             (
                 "cases",
                 Json::Arr(self.cases.iter().map(BenchResult::to_json).collect()),
@@ -144,10 +163,17 @@ impl SuiteReport {
             .iter()
             .map(BenchResult::from_json)
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // environment stamps default for baselines predating them
+        let opt_str = |k: &str, default: &str| -> String {
+            j.get(k).and_then(Json::as_str).unwrap_or(default).to_string()
+        };
         Ok(SuiteReport {
             suite: str_field("suite")?,
             mode: str_field("mode")?,
             threads: j.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            simd: opt_str("simd", "unknown"),
+            cpu: opt_str("cpu", "unknown"),
+            estimated: j.get("estimated").and_then(Json::as_bool).unwrap_or(false),
             cases,
         })
     }
@@ -309,7 +335,15 @@ mod tests {
     }
 
     fn report(cases: Vec<BenchResult>) -> SuiteReport {
-        SuiteReport { suite: "t".into(), mode: "fast".into(), threads: 4, cases }
+        SuiteReport {
+            suite: "t".into(),
+            mode: "fast".into(),
+            threads: 4,
+            simd: "scalar".into(),
+            cpu: "avx2,fma".into(),
+            estimated: false,
+            cases,
+        }
     }
 
     #[test]
@@ -332,6 +366,30 @@ mod tests {
         assert_eq!(rep.cases.len(), 2);
         assert_eq!(rep.cases[0].name, "a");
         assert_eq!(rep.cases[1].name, "b");
+        // the report is stamped with the run's execution environment
+        assert_eq!(rep.simd, crate::exec::simd::level().label());
+        assert_eq!(rep.cpu, crate::exec::simd::cpu_features());
+        assert!(!rep.estimated);
+    }
+
+    #[test]
+    fn legacy_reports_default_environment_stamps() {
+        // baselines committed before the simd/cpu/estimated fields must
+        // still parse, with explicit "unknown"/false defaults
+        let j = Json::parse(
+            r#"{"schema":"qrr-bench/1","suite":"kernels","mode":"fast","threads":4,"cases":[]}"#,
+        )
+        .unwrap();
+        let rep = SuiteReport::from_json(&j).unwrap();
+        assert_eq!(rep.simd, "unknown");
+        assert_eq!(rep.cpu, "unknown");
+        assert!(!rep.estimated);
+        // and an estimated marker round-trips
+        let mut rep2 = report(vec![]);
+        rep2.estimated = true;
+        let back = SuiteReport::from_json(&rep2.to_json()).unwrap();
+        assert!(back.estimated);
+        assert_eq!(back, rep2);
     }
 
     #[test]

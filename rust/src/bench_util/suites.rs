@@ -31,7 +31,7 @@ use crate::linalg::{
 use crate::model::{native::NativeModel, ModelKind, ModelOps, ModelSpec};
 use crate::net::{ClientUpdate, Decoder, Encoder};
 use crate::qrr::{ClientCodec, QrrConfig, ServerCodec};
-use crate::quant::{pack_codes, quantize, unpack_codes};
+use crate::quant::{dequantize, pack_codes, quantize, unpack_codes};
 use crate::slaq::SlaqMsg;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -172,6 +172,36 @@ pub fn kernel_cases(suite: &mut Suite) {
     suite.case("quant/unpack_beta8_159k", Some(n as f64), || {
         unpack_codes(&packed, n, 8)
     });
+
+    // the fused LAQ pass at a second grid width and the decode direction
+    suite.case("quant/laq_fused_beta4_159k", Some(n as f64), || {
+        quantize(&flat, &prev, 4)
+    });
+    let (msg8, _) = quantize(&flat, &prev, 8);
+    suite.case("quant/laq_fused_dequant_beta8_159k", Some(n as f64), || {
+        dequantize(&msg8, &prev)
+    });
+
+    // raw SIMD-layer primitives (dispatched at the process level) at an
+    // L1-resident length and the flat MLP-gradient length
+    {
+        use crate::exec::simd;
+        let big = Tensor::randn(&[n], &mut rng);
+        suite.case("simd/dot_159k", Some(n as f64), || {
+            simd::dot(flat.data(), big.data())
+        });
+        let xs = Tensor::randn(&[4096], &mut rng);
+        let ys = Tensor::randn(&[4096], &mut rng);
+        suite.case("simd/dot_4k", Some(4096.0), || simd::dot(xs.data(), ys.data()));
+        let mut acc = Tensor::zeros(&[n]);
+        suite.case("simd/axpy_159k", Some(n as f64), move || {
+            simd::axpy(acc.data_mut(), 0.5, big.data())
+        });
+        let mut acc4 = Tensor::zeros(&[4096]);
+        suite.case("simd/axpy_4k", Some(4096.0), move || {
+            simd::axpy(acc4.data_mut(), 0.5, ys.data())
+        });
+    }
 
     // wire encode/decode across all four entry kinds
     let shapes = vec![vec![200usize, 784], vec![200], vec![10, 200], vec![10]];
@@ -442,7 +472,9 @@ pub fn maybe_write_json(report: &SuiteReport) {
 /// gate never destroys the numbers it failed against. A missing
 /// baseline bootstraps (the current run is recorded as the baseline
 /// and the gate passes); an unreadable baseline is a hard error, not a
-/// silent bootstrap.
+/// silent bootstrap. A baseline marked `"estimated": true` (hand-written
+/// placeholder numbers, no measured run behind them) is diffed and
+/// reported but never fails the gate — the deltas would be fiction.
 pub fn run_cli(args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -469,9 +501,11 @@ pub fn run_cli(args: &Args) -> Result<()> {
     for name in names {
         let bench = if fast { Bench::fast() } else { Bench::default() };
         println!(
-            "== qrr bench: {name} ({} mode, {} threads) ==",
+            "== qrr bench: {name} ({} mode, {} threads, simd {}, cpu {}) ==",
             if fast { "fast" } else { "full" },
-            crate::exec::default_threads()
+            crate::exec::default_threads(),
+            crate::exec::simd::level().label(),
+            crate::exec::simd::cpu_features()
         );
         let mut suite = Suite::new(name, bench);
         match name {
@@ -500,13 +534,26 @@ pub fn run_cli(args: &Args) -> Result<()> {
                     base.mode, report.mode
                 );
             }
+            if base.simd != report.simd || base.cpu != report.cpu {
+                println!(
+                    "note: baseline environment (simd {}, cpu {}) != current (simd {}, cpu {})",
+                    base.simd, base.cpu, report.simd, report.cpu
+                );
+            }
+            if base.estimated {
+                println!(
+                    "note: baseline {path} is an ESTIMATED placeholder, not a measured run — \
+                     deltas below are informational and will not fail the gate; regenerate \
+                     with `qrr bench {name} --out .` on the reference hardware to arm it"
+                );
+            }
             println!(
                 "-- {name} vs committed baseline (threshold {:.0}%) --",
                 100.0 * threshold
             );
             for d in report.diff(&base, threshold) {
                 println!("{}", d.line());
-                if d.class == DeltaClass::Regressed {
+                if d.class == DeltaClass::Regressed && !base.estimated {
                     regressed.push(d.name);
                 }
             }

@@ -141,7 +141,11 @@ impl RankReducer for Tucker {
 }
 
 /// The LAQ β-bit grid quantizer (paper §II-B) with mirrored
-/// differential state per factor.
+/// differential state per factor. The grids are computed by the fused
+/// SIMD sweep in [`crate::exec::simd`] (radius scan + branchless code
+/// and reconstruction in one pass, DESIGN.md §8); codes are identical
+/// on every dispatch level, so pipeline wire bytes never depend on
+/// `QRR_SIMD`.
 pub struct Laq {
     /// bits per element, 1..=16
     pub beta: u8,

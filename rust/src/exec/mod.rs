@@ -1,13 +1,18 @@
-//! Execution substrate: a small work-stealing-free thread pool and
-//! scoped parallel iteration.
+//! Execution substrate: a small work-stealing-free thread pool, scoped
+//! parallel iteration, and the runtime-dispatched SIMD kernel layer.
 //!
 //! The offline crate cache has neither `tokio` nor `rayon`; FL rounds are
 //! compute-bound fan-out/fan-in over ~10 clients, which this pool covers
-//! with far less machinery (see DESIGN.md §4).
+//! with far less machinery (see DESIGN.md §4). The [`simd`] module holds
+//! the crate's vector kernels — AVX2+FMA with a portable scalar
+//! fallback, selected once per process via CPU detection or `QRR_SIMD`
+//! (DESIGN.md §8).
 
 mod pool;
+pub mod simd;
 
 pub use pool::{parallel_for, ThreadPool};
+pub use simd::SimdLevel;
 
 use std::sync::OnceLock;
 

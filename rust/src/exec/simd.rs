@@ -1,0 +1,1285 @@
+//! Runtime-dispatched SIMD kernel layer (DESIGN.md §8).
+//!
+//! Every float hot loop in the crate — the GEMM micro-kernel, the LAQ
+//! grid quantizer, the BLAS-1 updates under aggregation/error-feedback,
+//! the `‖·‖∞` reduction scans — routes through this module. At first
+//! use the process picks one dispatch [`level`]:
+//!
+//! * [`SimdLevel::Avx2`] — explicit AVX2+FMA kernels (x86-64 with both
+//!   `avx2` and `fma` detected via `is_x86_feature_detected!`),
+//! * [`SimdLevel::Scalar`] — the portable fallback in [`scalar`], which
+//!   doubles as the parity oracle for the vector paths.
+//!
+//! `QRR_SIMD=scalar|avx2` overrides detection and — like `QRR_THREADS`
+//! — is read **once per process**, so a run never mixes paths: the
+//! mirrored client/server quantizer states and the per-element GEMM
+//! summation order are deterministic for a given machine + env.
+//!
+//! Determinism contract (property-tested in `tests/simd_parity.rs` and
+//! below):
+//!
+//! * **elementwise float kernels** ([`axpy`], [`sum_into`], [`scale`],
+//!   [`mul`]) and the **reduction scans** ([`max_abs`],
+//!   [`max_abs_diff`]) are bit-exact across dispatch levels — the AVX2
+//!   paths deliberately use mul+add (no FMA contraction) and exact
+//!   abs/max lanes;
+//! * the **fused LAQ pass** ([`laq_quantize`], [`laq_dequantize`]) is
+//!   bit-exact across levels: the grid math runs in f64 on both paths
+//!   with identical rounding, so the wire codes never depend on the
+//!   dispatch;
+//! * **integer kernels** ([`pack_codes_into`], [`unpack_codes_into`])
+//!   are bit-exact by construction (word-at-a-time u64 bit-buffer,
+//!   specialized β∈{1,2,4,8,16} fast paths, tested byte-for-byte
+//!   against the byte-at-a-time reference);
+//! * [`dot`] and the GEMM tile accumulate with FMA on AVX2 and agree
+//!   with the scalar path within floating-point tolerance only.
+
+use std::sync::OnceLock;
+
+/// Vector instruction level a process dispatches its kernels at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels (the fallback and parity oracle).
+    Scalar,
+    /// Explicit AVX2+FMA kernels (x86-64 only).
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Lower-case label, matching the values `QRR_SIMD` accepts.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The dispatch level in effect for this process: the `QRR_SIMD` env
+/// override (`scalar` | `avx2`) or CPU detection, decided **once** and
+/// cached — kernels branch on a cached value, never on the environment.
+/// A `QRR_SIMD=avx2` request on a machine without avx2+fma falls back
+/// to scalar (with a warning) instead of executing illegal instructions.
+pub fn level() -> SimdLevel {
+    static CACHED: OnceLock<SimdLevel> = OnceLock::new();
+    *CACHED.get_or_init(|| match std::env::var("QRR_SIMD").ok().as_deref() {
+        Some("scalar") => SimdLevel::Scalar,
+        Some("avx2") => {
+            if avx2_available() {
+                SimdLevel::Avx2
+            } else {
+                eprintln!("warning: QRR_SIMD=avx2 set but avx2+fma not detected; using scalar");
+                SimdLevel::Scalar
+            }
+        }
+        Some(other) => {
+            eprintln!("warning: unknown QRR_SIMD={other:?} (scalar|avx2); auto-detecting");
+            detect()
+        }
+        None => detect(),
+    })
+}
+
+/// True when this process dispatches to the AVX2+FMA kernels — the
+/// cached branch the hot paths take.
+#[inline]
+pub fn avx2_enabled() -> bool {
+    level() == SimdLevel::Avx2
+}
+
+fn detect() -> SimdLevel {
+    if avx2_available() {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// The vector features the running CPU actually reports, independent of
+/// any `QRR_SIMD` override — recorded in bench suite reports so
+/// committed baselines say what machine produced them.
+#[cfg(target_arch = "x86_64")]
+pub fn cpu_features() -> &'static str {
+    match (std::is_x86_feature_detected!("avx2"), std::is_x86_feature_detected!("fma")) {
+        (true, true) => "avx2,fma",
+        (true, false) => "avx2",
+        (false, true) => "fma",
+        (false, false) => "x86-64-baseline",
+    }
+}
+
+/// The vector features the running CPU actually reports (non-x86-64
+/// builds have no vector kernels and always dispatch scalar).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn cpu_features() -> &'static str {
+    "portable"
+}
+
+// -------------------------------------------------------- float kernels
+
+/// Dot product `Σ a[i]·b[i]` with 8 independent partial sums (the
+/// matvec row kernel). FMA-accumulated on AVX2; scalar and vector paths
+/// agree within floating-point tolerance.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() is true only when avx2+fma were
+            // detected on this CPU.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    scalar::dot(a, b)
+}
+
+/// `y[i] += alpha · x[i]` — the BLAS-1 update under error feedback,
+/// weighted aggregation and descent. Bit-exact across dispatch levels;
+/// `alpha == 1.0` takes the multiply-free [`sum_into`] path.
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    if alpha == 1.0 {
+        // 1.0 · x is exact: the plain sum is bit-identical and cheaper.
+        sum_into_unchecked(y, x);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            unsafe { avx2::axpy(y, alpha, x) };
+            return;
+        }
+    }
+    scalar::axpy(y, alpha, x)
+}
+
+/// `acc[i] += x[i]` — the aggregation sum. Bit-exact across dispatch
+/// levels.
+pub fn sum_into(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "sum_into length mismatch");
+    sum_into_unchecked(acc, x);
+}
+
+fn sum_into_unchecked(acc: &mut [f32], x: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            unsafe { avx2::sum_into(acc, x) };
+            return;
+        }
+    }
+    scalar::sum_into(acc, x)
+}
+
+/// `a[i] *= alpha` — factor/step scaling. Bit-exact across dispatch
+/// levels.
+pub fn scale(a: &mut [f32], alpha: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            unsafe { avx2::scale(a, alpha) };
+            return;
+        }
+    }
+    scalar::scale(a, alpha)
+}
+
+/// `a[i] *= b[i]` — elementwise multiply (the SVD `U·diag(s)` /
+/// `V·diag(1/s)` row scaling). Bit-exact across dispatch levels.
+pub fn mul(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "mul length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            unsafe { avx2::mul(a, b) };
+            return;
+        }
+    }
+    scalar::mul(a, b)
+}
+
+/// `max_i |a[i]|` (0.0 for an empty slice) — the ℓ∞ norm scan.
+/// Bit-exact across dispatch levels; NaN elements are skipped on both
+/// paths (`f32::max` semantics).
+pub fn max_abs(a: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            return unsafe { avx2::max_abs(a) };
+        }
+    }
+    scalar::max_abs(a)
+}
+
+/// `max_i |a[i] − b[i]|` (0.0 for empty slices) — the LAQ grid-radius
+/// scan `‖g − prev‖∞`. Bit-exact across dispatch levels; NaN diffs are
+/// skipped on both paths (`f32::max` semantics), so even a poisoned
+/// gradient yields the same radius — and thus the same wire bytes —
+/// at every level.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            return unsafe { avx2::max_abs_diff(a, b) };
+        }
+    }
+    scalar::max_abs_diff(a, b)
+}
+
+// ------------------------------------------------------ fused LAQ pass
+
+/// Fused LAQ quantize sweep (paper eq. (15)–(17)): in one pass over
+/// `g`/`prev`, compute the branchless grid code
+/// `q = clamp(⌊(g−prev+R)/(2τR) + ½⌋, 0, 2^β−1)` into `codes` and the
+/// reconstruction `prev + 2τR·q − R` into `out`. The grid math runs in
+/// f64 on both dispatch paths with identical rounding, so codes and
+/// reconstruction are bit-exact across levels.
+///
+/// `radius` must be finite and positive (the degenerate `R = 0` grid is
+/// the caller's fast path); all slices must share one length.
+pub fn laq_quantize(
+    g: &[f32],
+    prev: &[f32],
+    radius: f32,
+    beta: u8,
+    codes: &mut [u32],
+    out: &mut [f32],
+) {
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    assert!(
+        radius.is_finite() && radius > 0.0,
+        "laq_quantize requires a positive finite radius"
+    );
+    let n = g.len();
+    assert!(
+        prev.len() == n && codes.len() == n && out.len() == n,
+        "laq_quantize length mismatch"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            unsafe { avx2::laq_quantize(g, prev, radius, beta, codes, out) };
+            return;
+        }
+    }
+    scalar::laq_quantize(g, prev, radius, beta, codes, out)
+}
+
+/// Fused LAQ dequantize sweep (paper eq. (17)): `out = prev + 2τR·q − R`
+/// from unpacked codes. Accepts any finite radius (a zero radius
+/// reproduces `prev`). Bit-exact across dispatch levels.
+pub fn laq_dequantize(codes: &[u32], prev: &[f32], radius: f32, beta: u8, out: &mut [f32]) {
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    let n = codes.len();
+    assert!(
+        prev.len() == n && out.len() == n,
+        "laq_dequantize length mismatch"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() implies avx2+fma were detected.
+            unsafe { avx2::laq_dequantize(codes, prev, radius, beta, out) };
+            return;
+        }
+    }
+    scalar::laq_dequantize(codes, prev, radius, beta, out)
+}
+
+// -------------------------------------------------------- bit packing
+
+/// Pack `codes` (each < 2^β) LSB-first into `out` (cleared and sized to
+/// exactly ⌈βn/8⌉ bytes): a u64 bit-buffer drained six bytes at a time,
+/// with dedicated byte-aligned fast paths for β ∈ {1, 2, 4, 8, 16}.
+/// Bit-exact with the byte-at-a-time reference for every β.
+pub fn pack_codes_into(codes: &[u32], beta: u8, out: &mut Vec<u8>) {
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    out.clear();
+    out.resize((codes.len() * beta as usize).div_ceil(8), 0);
+    match beta {
+        8 => pack_beta8(codes, out),
+        16 => pack_beta16(codes, out),
+        1 => pack_pow2::<1>(codes, out),
+        2 => pack_pow2::<2>(codes, out),
+        4 => pack_pow2::<4>(codes, out),
+        _ => pack_generic(codes, beta, out),
+    }
+}
+
+/// Unpack `n` β-bit codes from `bytes` into `out` (cleared first),
+/// mirroring [`pack_codes_into`]'s fast paths.
+pub fn unpack_codes_into(bytes: &[u8], n: usize, beta: u8, out: &mut Vec<u32>) {
+    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
+    let need = (n * beta as usize).div_ceil(8);
+    assert!(
+        bytes.len() >= need,
+        "byte stream too short: {} < {need}",
+        bytes.len()
+    );
+    out.clear();
+    out.reserve(n);
+    match beta {
+        8 => out.extend(bytes[..n].iter().map(|&b| b as u32)),
+        16 => out.extend(
+            bytes[..2 * n]
+                .chunks_exact(2)
+                .map(|p| u16::from_le_bytes([p[0], p[1]]) as u32),
+        ),
+        1 => unpack_pow2::<1>(bytes, n, out),
+        2 => unpack_pow2::<2>(bytes, n, out),
+        4 => unpack_pow2::<4>(bytes, n, out),
+        _ => unpack_generic(bytes, n, beta, out),
+    }
+}
+
+/// β = 8: one code per byte.
+fn pack_beta8(codes: &[u32], out: &mut [u8]) {
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        debug_assert!(c <= 0xFF, "code {c} exceeds 8 bits");
+        *o = c as u8;
+    }
+}
+
+/// β = 16: one little-endian u16 per code.
+fn pack_beta16(codes: &[u32], out: &mut [u8]) {
+    for (o, &c) in out.chunks_exact_mut(2).zip(codes.iter()) {
+        debug_assert!(c <= 0xFFFF, "code {c} exceeds 16 bits");
+        o.copy_from_slice(&(c as u16).to_le_bytes());
+    }
+}
+
+/// β ∈ {1, 2, 4}: 8/β codes per byte, no code ever crosses a byte.
+fn pack_pow2<const B: usize>(codes: &[u32], out: &mut [u8]) {
+    let per = 8 / B;
+    let mask = (1u32 << B) - 1;
+    let full = codes.len() / per;
+    for (i, byte) in out.iter_mut().enumerate().take(full) {
+        let mut b = 0u32;
+        for (j, &c) in codes[i * per..(i + 1) * per].iter().enumerate() {
+            debug_assert!(c <= mask, "code {c} exceeds {B} bits");
+            b |= (c & mask) << (j * B);
+        }
+        *byte = b as u8;
+    }
+    let rest = &codes[full * per..];
+    if !rest.is_empty() {
+        let mut b = 0u32;
+        for (j, &c) in rest.iter().enumerate() {
+            debug_assert!(c <= mask, "code {c} exceeds {B} bits");
+            b |= (c & mask) << (j * B);
+        }
+        out[full] = b as u8;
+    }
+}
+
+/// Any β in 1..=16: u64 bit-buffer, OR codes in at the fill level,
+/// drain 48 bits (six whole bytes) at a time. The fill never exceeds
+/// 47 + 16 = 63 bits, so the buffer cannot overflow.
+fn pack_generic(codes: &[u32], beta: u8, out: &mut [u8]) {
+    let b = beta as u32;
+    let mask = (1u32 << b) - 1;
+    let mut acc = 0u64;
+    let mut fill = 0u32;
+    let mut pos = 0usize;
+    for &c in codes {
+        debug_assert!(c <= mask, "code {c} exceeds {beta} bits");
+        acc |= ((c & mask) as u64) << fill;
+        fill += b;
+        if fill >= 48 {
+            out[pos..pos + 6].copy_from_slice(&acc.to_le_bytes()[..6]);
+            acc >>= 48;
+            fill -= 48;
+            pos += 6;
+        }
+    }
+    while fill > 0 {
+        out[pos] = acc as u8;
+        acc >>= 8;
+        pos += 1;
+        fill = fill.saturating_sub(8);
+    }
+    debug_assert_eq!(pos, out.len());
+}
+
+/// β ∈ {1, 2, 4}: expand 8/β codes out of each byte.
+fn unpack_pow2<const B: usize>(bytes: &[u8], n: usize, out: &mut Vec<u32>) {
+    let per = 8 / B;
+    let mask = (1u32 << B) - 1;
+    let full = n / per;
+    for &byte in &bytes[..full] {
+        let w = byte as u32;
+        for j in 0..per {
+            out.push((w >> (j * B)) & mask);
+        }
+    }
+    let rest = n - full * per;
+    if rest > 0 {
+        let w = bytes[full] as u32;
+        for j in 0..rest {
+            out.push((w >> (j * B)) & mask);
+        }
+    }
+}
+
+/// Any β in 1..=16: refill the u64 bit-buffer byte-wise (at most two
+/// reads per code since β ≤ 16), then mask the code off the bottom.
+fn unpack_generic(bytes: &[u8], n: usize, beta: u8, out: &mut Vec<u32>) {
+    let b = beta as u32;
+    let mask = (1u64 << b) - 1;
+    let mut acc = 0u64;
+    let mut fill = 0u32;
+    let mut pos = 0usize;
+    for _ in 0..n {
+        while fill < b {
+            acc |= (bytes[pos] as u64) << fill;
+            pos += 1;
+            fill += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= b;
+        fill -= b;
+    }
+}
+
+// ------------------------------------------------------------- scalar
+
+/// Portable reference kernels: the dispatch fallback on machines (or
+/// under `QRR_SIMD=scalar`) without AVX2+FMA, and the parity oracle the
+/// vector paths are property-tested against.
+pub mod scalar {
+    /// Dot product with 8 independent partial sums, reduced pairwise —
+    /// mirrors the AVX2 kernel's lane structure so the two paths agree
+    /// closely (the vector path additionally contracts to FMA).
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0f32; 8];
+        let chunks = a.len() / 8;
+        for c in 0..chunks {
+            let x = &a[c * 8..c * 8 + 8];
+            let y = &b[c * 8..c * 8 + 8];
+            for l in 0..8 {
+                acc[l] += x[l] * y[l];
+            }
+        }
+        let mut s =
+            ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+        for j in chunks * 8..a.len() {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// `y[i] += alpha · x[i]`.
+    pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// `acc[i] += x[i]`.
+    pub fn sum_into(acc: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        for (a, &xi) in acc.iter_mut().zip(x.iter()) {
+            *a += xi;
+        }
+    }
+
+    /// `a[i] *= alpha`.
+    pub fn scale(a: &mut [f32], alpha: f32) {
+        for x in a.iter_mut() {
+            *x *= alpha;
+        }
+    }
+
+    /// `a[i] *= b[i]`.
+    pub fn mul(a: &mut [f32], b: &[f32]) {
+        debug_assert_eq!(a.len(), b.len());
+        for (x, &y) in a.iter_mut().zip(b.iter()) {
+            *x *= y;
+        }
+    }
+
+    /// `max_i |a[i]|` (0.0 when empty).
+    pub fn max_abs(a: &[f32]) -> f32 {
+        a.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// `max_i |a[i] − b[i]|` (0.0 when empty).
+    pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b.iter())
+            .fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs()))
+    }
+
+    /// Fused LAQ quantize sweep; see [`super::laq_quantize`]. The grid
+    /// math is f64 exactly as the paper-reproduction loop always was.
+    pub fn laq_quantize(
+        g: &[f32],
+        prev: &[f32],
+        radius: f32,
+        beta: u8,
+        codes: &mut [u32],
+        out: &mut [f32],
+    ) {
+        debug_assert!(g.len() == prev.len() && g.len() == codes.len() && g.len() == out.len());
+        let levels = (1u32 << beta) - 1;
+        let tau = 1.0f64 / levels as f64;
+        let step = 2.0 * tau * radius as f64;
+        let r = radius as f64;
+        let it = g.iter().zip(prev.iter()).zip(codes.iter_mut()).zip(out.iter_mut());
+        for (((x, p), c), o) in it {
+            // eq. (15): branchless grid code
+            let t = ((*x - *p) as f64 + r) / step + 0.5;
+            let q = (t.floor() as i64).clamp(0, levels as i64) as u32;
+            *c = q;
+            // eq. (16)/(17): Q = prev + 2τR·q − R
+            *o = *p + (step * q as f64 - r) as f32;
+        }
+    }
+
+    /// Fused LAQ dequantize sweep; see [`super::laq_dequantize`].
+    pub fn laq_dequantize(codes: &[u32], prev: &[f32], radius: f32, beta: u8, out: &mut [f32]) {
+        debug_assert!(codes.len() == prev.len() && codes.len() == out.len());
+        let levels = (1u32 << beta) - 1;
+        let tau = 1.0f64 / levels as f64;
+        let step = 2.0 * tau * radius as f64;
+        let r = radius as f64;
+        for ((&q, p), o) in codes.iter().zip(prev.iter()).zip(out.iter_mut()) {
+            *o = *p + (step * q as f64 - r) as f32;
+        }
+    }
+}
+
+// --------------------------------------------------------------- avx2
+
+/// Explicit AVX2+FMA kernels. Every function here is `unsafe` with the
+/// same contract: **the caller must have verified `avx2` and `fma` are
+/// available on the running CPU** (the dispatch wrappers in the parent
+/// module do; tests gate on `is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// FMA-accumulated dot product, 8 lanes, reduced pairwise in the
+    /// scalar order.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let x = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let y = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            acc = _mm256_fmadd_ps(x, y, acc);
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+        for j in chunks * 8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// `y[i] += alpha · x[i]`, deliberately mul+add (not FMA) so the
+    /// result is bit-exact with the scalar path.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let a = _mm256_set1_ps(alpha);
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let yp = y.as_mut_ptr().add(c * 8);
+            let yv = _mm256_loadu_ps(yp);
+            let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
+            _mm256_storeu_ps(yp, _mm256_add_ps(yv, _mm256_mul_ps(a, xv)));
+        }
+        for j in chunks * 8..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// `acc[i] += x[i]`, bit-exact with the scalar path.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sum_into(acc: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        let n = acc.len();
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let ap = acc.as_mut_ptr().add(c * 8);
+            let av = _mm256_loadu_ps(ap);
+            let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
+            _mm256_storeu_ps(ap, _mm256_add_ps(av, xv));
+        }
+        for j in chunks * 8..n {
+            acc[j] += x[j];
+        }
+    }
+
+    /// `a[i] *= alpha`, bit-exact with the scalar path.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale(a: &mut [f32], alpha: f32) {
+        let n = a.len();
+        let m = _mm256_set1_ps(alpha);
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let p = a.as_mut_ptr().add(c * 8);
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), m));
+        }
+        for j in chunks * 8..n {
+            a[j] *= alpha;
+        }
+    }
+
+    /// `a[i] *= b[i]`, bit-exact with the scalar path.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mul(a: &mut [f32], b: &[f32]) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let p = a.as_mut_ptr().add(c * 8);
+            let bv = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), bv));
+        }
+        for j in chunks * 8..n {
+            a[j] *= b[j];
+        }
+    }
+
+    /// `max_i |a[i]|`, bit-exact with the scalar path — including NaN
+    /// inputs: `vmaxps` returns its **second** operand when either is
+    /// NaN, so keeping the accumulator second skips NaN lanes exactly
+    /// like `f32::max` does in the scalar fold.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn max_abs(a: &[f32]) -> f32 {
+        let n = a.len();
+        let sign = _mm256_set1_ps(-0.0);
+        let mut m = _mm256_setzero_ps();
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            m = _mm256_max_ps(_mm256_andnot_ps(sign, v), m);
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+        let mut s = 0f32;
+        for &l in &lanes {
+            s = s.max(l);
+        }
+        for j in chunks * 8..n {
+            s = s.max(a[j].abs());
+        }
+        s
+    }
+
+    /// `max_i |a[i] − b[i]|`, bit-exact with the scalar path — NaN
+    /// diffs are skipped like `f32::max` skips them (accumulator kept
+    /// as `vmaxps`'s second operand; see [`max_abs`]).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let sign = _mm256_set1_ps(-0.0);
+        let mut m = _mm256_setzero_ps();
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let x = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let y = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            m = _mm256_max_ps(_mm256_andnot_ps(sign, _mm256_sub_ps(x, y)), m);
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+        let mut s = 0f32;
+        for &l in &lanes {
+            s = s.max(l);
+        }
+        for j in chunks * 8..n {
+            s = s.max((a[j] - b[j]).abs());
+        }
+        s
+    }
+
+    /// One 4-lane f64 step of the LAQ grid: code + reconstruction for
+    /// four pre-widened diffs. The op sequence (add, div, add, floor,
+    /// clamp, mul, sub) matches the scalar path exactly, so the result
+    /// is bit-identical lane-for-lane.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn laq_lane4(
+        d: __m256d,
+        step: __m256d,
+        r: __m256d,
+        half: __m256d,
+        zero: __m256d,
+        levels: __m256d,
+    ) -> (__m128i, __m128) {
+        let t = _mm256_add_pd(_mm256_div_pd(_mm256_add_pd(d, r), step), half);
+        let q = _mm256_min_pd(_mm256_max_pd(_mm256_floor_pd(t), zero), levels);
+        let rec = _mm256_sub_pd(_mm256_mul_pd(step, q), r);
+        (_mm256_cvttpd_epi32(q), _mm256_cvtpd_ps(rec))
+    }
+
+    /// Fused LAQ quantize sweep: the f32 innovation is widened to f64
+    /// and pushed through [`laq_lane4`] eight elements per iteration;
+    /// bit-exact with [`super::scalar::laq_quantize`].
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn laq_quantize(
+        g: &[f32],
+        prev: &[f32],
+        radius: f32,
+        beta: u8,
+        codes: &mut [u32],
+        out: &mut [f32],
+    ) {
+        let n = g.len();
+        debug_assert!(prev.len() == n && codes.len() == n && out.len() == n);
+        let levels = (1u32 << beta) - 1;
+        let tau = 1.0f64 / levels as f64;
+        let step = 2.0 * tau * radius as f64;
+        let step_pd = _mm256_set1_pd(step);
+        let r_pd = _mm256_set1_pd(radius as f64);
+        let half_pd = _mm256_set1_pd(0.5);
+        let zero_pd = _mm256_setzero_pd();
+        let lev_pd = _mm256_set1_pd(levels as f64);
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let gv = _mm256_loadu_ps(g.as_ptr().add(c * 8));
+            let pv = _mm256_loadu_ps(prev.as_ptr().add(c * 8));
+            // f32 subtraction first (one rounding, as in the scalar
+            // path), then widen exactly to f64
+            let d = _mm256_sub_ps(gv, pv);
+            let d_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let d_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+            let (q_lo, rec_lo) = laq_lane4(d_lo, step_pd, r_pd, half_pd, zero_pd, lev_pd);
+            let (q_hi, rec_hi) = laq_lane4(d_hi, step_pd, r_pd, half_pd, zero_pd, lev_pd);
+            let cp = codes.as_mut_ptr().add(c * 8);
+            _mm_storeu_si128(cp as *mut __m128i, q_lo);
+            _mm_storeu_si128(cp.add(4) as *mut __m128i, q_hi);
+            let op = out.as_mut_ptr().add(c * 8);
+            let p_lo = _mm256_castps256_ps128(pv);
+            let p_hi = _mm256_extractf128_ps::<1>(pv);
+            _mm_storeu_ps(op, _mm_add_ps(p_lo, rec_lo));
+            _mm_storeu_ps(op.add(4), _mm_add_ps(p_hi, rec_hi));
+        }
+        let done = chunks * 8;
+        super::scalar::laq_quantize(
+            &g[done..],
+            &prev[done..],
+            radius,
+            beta,
+            &mut codes[done..],
+            &mut out[done..],
+        );
+    }
+
+    /// Fused LAQ dequantize sweep, four codes per iteration; bit-exact
+    /// with [`super::scalar::laq_dequantize`].
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn laq_dequantize(
+        codes: &[u32],
+        prev: &[f32],
+        radius: f32,
+        beta: u8,
+        out: &mut [f32],
+    ) {
+        let n = codes.len();
+        debug_assert!(prev.len() == n && out.len() == n);
+        let levels = (1u32 << beta) - 1;
+        let tau = 1.0f64 / levels as f64;
+        let step = 2.0 * tau * radius as f64;
+        let step_pd = _mm256_set1_pd(step);
+        let r_pd = _mm256_set1_pd(radius as f64);
+        let chunks = n / 4;
+        for c in 0..chunks {
+            // codes are ≤ 2^16−1, so the i32 reinterpretation is exact
+            let q = _mm_loadu_si128(codes.as_ptr().add(c * 4) as *const __m128i);
+            let q_pd = _mm256_cvtepi32_pd(q);
+            let rec = _mm256_sub_pd(_mm256_mul_pd(step_pd, q_pd), r_pd);
+            let p = _mm_loadu_ps(prev.as_ptr().add(c * 4));
+            _mm_storeu_ps(
+                out.as_mut_ptr().add(c * 4),
+                _mm_add_ps(p, _mm256_cvtpd_ps(rec)),
+            );
+        }
+        let done = chunks * 4;
+        let tail = &mut out[done..];
+        super::scalar::laq_dequantize(&codes[done..], &prev[done..], radius, beta, tail);
+    }
+
+    /// The 8×8 f32 GEMM register tile:
+    /// `acc[r][c] += Σ_p ap[p·8+r] · bp[p·8+c]`, held in eight YMM
+    /// accumulators with one broadcast + FMA per (p, r). Panels follow
+    /// the packed layout of `linalg::matmul` (k-major, zero-padded).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (see the module contract); `ap`/`bp` must hold
+    /// at least `kc·8` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_tile_8x8(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; 8]; 8]) {
+        debug_assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8);
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        let mut c4 = _mm256_loadu_ps(acc[4].as_ptr());
+        let mut c5 = _mm256_loadu_ps(acc[5].as_ptr());
+        let mut c6 = _mm256_loadu_ps(acc[6].as_ptr());
+        let mut c7 = _mm256_loadu_ps(acc[7].as_ptr());
+        for p in 0..kc {
+            let b = _mm256_loadu_ps(bp.as_ptr().add(p * 8));
+            let a = ap.as_ptr().add(p * 8);
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), b, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), b, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), b, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), b, c3);
+            c4 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(4)), b, c4);
+            c5 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(5)), b, c5);
+            c6 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(6)), b, c6);
+            c7 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(7)), b, c7);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+        _mm256_storeu_ps(acc[4].as_mut_ptr(), c4);
+        _mm256_storeu_ps(acc[5].as_mut_ptr(), c5);
+        _mm256_storeu_ps(acc[6].as_mut_ptr(), c6);
+        _mm256_storeu_ps(acc[7].as_mut_ptr(), c7);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Lengths that straddle every lane/remainder boundary.
+    const LENS: [usize; 15] = [0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100, 1037];
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-3.0, 3.0)).collect()
+    }
+
+    #[test]
+    fn level_is_cached_and_consistent() {
+        let l = level();
+        assert_eq!(l, level());
+        assert_eq!(avx2_enabled(), l == SimdLevel::Avx2);
+        assert!(matches!(l.label(), "scalar" | "avx2"));
+        assert!(!cpu_features().is_empty());
+    }
+
+    #[test]
+    fn dispatched_elementwise_kernels_match_scalar_bitwise() {
+        // Whatever level this process dispatches at, the elementwise
+        // kernels must be bit-exact with the scalar oracle.
+        let mut rng = Rng::new(900);
+        for &n in &LENS {
+            let x = rand_vec(&mut rng, n);
+            let y0 = rand_vec(&mut rng, n);
+
+            let mut a = y0.clone();
+            axpy(&mut a, 0.37, &x);
+            let mut b = y0.clone();
+            scalar::axpy(&mut b, 0.37, &x);
+            assert_eq!(bits(&a), bits(&b), "axpy n={n}");
+
+            let mut a = y0.clone();
+            sum_into(&mut a, &x);
+            let mut b = y0.clone();
+            scalar::sum_into(&mut b, &x);
+            assert_eq!(bits(&a), bits(&b), "sum_into n={n}");
+
+            let mut a = y0.clone();
+            scale(&mut a, -1.7);
+            let mut b = y0.clone();
+            scalar::scale(&mut b, -1.7);
+            assert_eq!(bits(&a), bits(&b), "scale n={n}");
+
+            let mut a = y0.clone();
+            mul(&mut a, &x);
+            let mut b = y0.clone();
+            scalar::mul(&mut b, &x);
+            assert_eq!(bits(&a), bits(&b), "mul n={n}");
+
+            assert_eq!(max_abs(&x).to_bits(), scalar::max_abs(&x).to_bits(), "max_abs n={n}");
+            assert_eq!(
+                max_abs_diff(&x, &y0).to_bits(),
+                scalar::max_abs_diff(&x, &y0).to_bits(),
+                "max_abs_diff n={n}"
+            );
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(901);
+        for &n in &LENS {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let d = dot(&x, &y);
+            let s = scalar::dot(&x, &y);
+            assert!(
+                (d - s).abs() <= 1e-4 * s.abs().max(1.0),
+                "dot n={n}: {d} vs {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_scans_skip_nan_like_scalar() {
+        // a poisoned gradient must yield the same radius on every
+        // dispatch level: NaN is skipped exactly like f32::max skips it
+        let mut x = vec![0.5f32; 24];
+        x[3] = 5.0;
+        x[11] = f32::NAN; // same lane as the 5.0 (stride 8)
+        x[19] = 1.0;
+        assert_eq!(max_abs(&x).to_bits(), scalar::max_abs(&x).to_bits());
+        assert_eq!(max_abs(&x), 5.0);
+        let zeros = vec![0.0f32; 24];
+        let d = max_abs_diff(&x, &zeros);
+        assert_eq!(d.to_bits(), scalar::max_abs_diff(&x, &zeros).to_bits());
+        assert_eq!(d, 5.0);
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+                // SAFETY: avx2+fma detected above.
+                let (va, vd) = unsafe { (avx2::max_abs(&x), avx2::max_abs_diff(&x, &zeros)) };
+                assert_eq!(va, 5.0);
+                assert_eq!(vd, 5.0);
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_alpha_one_is_plain_sum() {
+        let mut rng = Rng::new(902);
+        let x = rand_vec(&mut rng, 100);
+        let y0 = rand_vec(&mut rng, 100);
+        let mut a = y0.clone();
+        axpy(&mut a, 1.0, &x);
+        let mut b = y0.clone();
+        sum_into(&mut b, &x);
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn laq_fused_matches_scalar_bitwise() {
+        let mut rng = Rng::new(903);
+        for &n in &LENS {
+            for beta in [1u8, 2, 3, 4, 7, 8, 11, 16] {
+                let g = rand_vec(&mut rng, n);
+                let prev = rand_vec(&mut rng, n);
+                let radius = scalar::max_abs_diff(&g, &prev);
+                if radius == 0.0 {
+                    continue; // degenerate grid is the caller's path
+                }
+                let mut c_d = vec![0u32; n];
+                let mut o_d = vec![0f32; n];
+                laq_quantize(&g, &prev, radius, beta, &mut c_d, &mut o_d);
+                let mut c_s = vec![0u32; n];
+                let mut o_s = vec![0f32; n];
+                scalar::laq_quantize(&g, &prev, radius, beta, &mut c_s, &mut o_s);
+                assert_eq!(c_d, c_s, "codes n={n} beta={beta}");
+                assert_eq!(bits(&o_d), bits(&o_s), "recon n={n} beta={beta}");
+
+                let mut r_d = vec![0f32; n];
+                laq_dequantize(&c_d, &prev, radius, beta, &mut r_d);
+                let mut r_s = vec![0f32; n];
+                scalar::laq_dequantize(&c_s, &prev, radius, beta, &mut r_s);
+                assert_eq!(bits(&r_d), bits(&r_s), "dequant n={n} beta={beta}");
+                // quantize's own reconstruction and dequantize agree
+                assert_eq!(bits(&o_d), bits(&r_d), "paths n={n} beta={beta}");
+            }
+        }
+    }
+
+    #[test]
+    fn laq_fused_respects_error_bound() {
+        let mut rng = Rng::new(904);
+        for beta in [1u8, 2, 4, 8, 12, 16] {
+            let n = 257;
+            let g = rand_vec(&mut rng, n);
+            let prev = rand_vec(&mut rng, n);
+            let radius = max_abs_diff(&g, &prev);
+            let levels = (1u32 << beta) - 1;
+            let tau = 1.0 / levels as f32;
+            let mut codes = vec![0u32; n];
+            let mut out = vec![0f32; n];
+            laq_quantize(&g, &prev, radius, beta, &mut codes, &mut out);
+            let hi = levels;
+            assert!(codes.iter().all(|&c| c <= hi), "beta={beta}");
+            let bound = tau * radius * (1.0 + 1e-4) + 1e-7;
+            for i in 0..n {
+                assert!(
+                    (g[i] - out[i]).abs() <= bound,
+                    "beta={beta} i={i}: err {} > {bound}",
+                    (g[i] - out[i]).abs()
+                );
+            }
+        }
+    }
+
+    /// The byte-at-a-time packers the word-at-a-time paths must match
+    /// byte-for-byte (the pre-SIMD production code).
+    mod reference {
+        pub fn pack(codes: &[u32], beta: u8) -> Vec<u8> {
+            let mask = (1u32 << beta) - 1;
+            let mut out = vec![0u8; (codes.len() * beta as usize).div_ceil(8)];
+            let mut bitpos = 0usize;
+            for &c in codes {
+                let c = (c & mask) as u64;
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let merged = c << off;
+                out[byte] |= (merged & 0xFF) as u8;
+                if off + beta as usize > 8 {
+                    out[byte + 1] |= ((merged >> 8) & 0xFF) as u8;
+                }
+                if off + beta as usize > 16 {
+                    out[byte + 2] |= ((merged >> 16) & 0xFF) as u8;
+                }
+                bitpos += beta as usize;
+            }
+            out
+        }
+
+        pub fn unpack(bytes: &[u8], n: usize, beta: u8) -> Vec<u32> {
+            let mask = (1u64 << beta) - 1;
+            let mut out = Vec::with_capacity(n);
+            let mut bitpos = 0usize;
+            for _ in 0..n {
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let mut window = bytes[byte] as u64;
+                if byte + 1 < bytes.len() {
+                    window |= (bytes[byte + 1] as u64) << 8;
+                }
+                if byte + 2 < bytes.len() {
+                    window |= (bytes[byte + 2] as u64) << 16;
+                }
+                out.push(((window >> off) & mask) as u32);
+                bitpos += beta as usize;
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn pack_unpack_match_reference_byte_for_byte() {
+        let mut rng = Rng::new(905);
+        let mut packed = Vec::new();
+        let mut codes_out = Vec::new();
+        for beta in 1..=16u8 {
+            let max = (1u64 << beta) as usize;
+            for &n in &LENS {
+                let codes: Vec<u32> = (0..n).map(|_| rng.below(max) as u32).collect();
+                pack_codes_into(&codes, beta, &mut packed);
+                let want = reference::pack(&codes, beta);
+                assert_eq!(packed, want, "pack beta={beta} n={n}");
+                unpack_codes_into(&packed, n, beta, &mut codes_out);
+                assert_eq!(codes_out, codes, "unpack beta={beta} n={n}");
+                assert_eq!(
+                    reference::unpack(&packed, n, beta),
+                    codes,
+                    "ref unpack beta={beta} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_boundary_codes_all_betas() {
+        for beta in 1..=16u8 {
+            let hi = (1u32 << beta) - 1;
+            let codes = vec![0, hi, hi, 0, hi, 0, 0, hi, hi];
+            let mut packed = Vec::new();
+            pack_codes_into(&codes, beta, &mut packed);
+            assert_eq!(packed, reference::pack(&codes, beta), "beta={beta}");
+            let mut back = Vec::new();
+            unpack_codes_into(&packed, codes.len(), beta, &mut back);
+            assert_eq!(back, codes, "beta={beta}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_match_scalar_directly() {
+        // Stronger than the dispatched tests: exercise the vector
+        // kernels explicitly whenever the CPU has them, even under
+        // QRR_SIMD=scalar.
+        if !(std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")) {
+            return;
+        }
+        let mut rng = Rng::new(906);
+        for &n in &LENS {
+            let x = rand_vec(&mut rng, n);
+            let y0 = rand_vec(&mut rng, n);
+
+            let mut a = y0.clone();
+            // SAFETY: avx2+fma detected above.
+            unsafe { avx2::axpy(&mut a, -0.61, &x) };
+            let mut b = y0.clone();
+            scalar::axpy(&mut b, -0.61, &x);
+            assert_eq!(bits(&a), bits(&b), "axpy n={n}");
+
+            let mut a = y0.clone();
+            // SAFETY: avx2+fma detected above.
+            unsafe { avx2::sum_into(&mut a, &x) };
+            let mut b = y0.clone();
+            scalar::sum_into(&mut b, &x);
+            assert_eq!(bits(&a), bits(&b), "sum_into n={n}");
+
+            let mut a = y0.clone();
+            // SAFETY: avx2+fma detected above.
+            unsafe { avx2::mul(&mut a, &x) };
+            let mut b = y0.clone();
+            scalar::mul(&mut b, &x);
+            assert_eq!(bits(&a), bits(&b), "mul n={n}");
+
+            let mut a = y0.clone();
+            // SAFETY: avx2+fma detected above.
+            unsafe { avx2::scale(&mut a, 2.5) };
+            let mut b = y0.clone();
+            scalar::scale(&mut b, 2.5);
+            assert_eq!(bits(&a), bits(&b), "scale n={n}");
+
+            // SAFETY: avx2+fma detected above.
+            let (ma, md) = unsafe { (avx2::max_abs(&x), avx2::max_abs_diff(&x, &y0)) };
+            assert_eq!(ma.to_bits(), scalar::max_abs(&x).to_bits(), "max_abs n={n}");
+            assert_eq!(
+                md.to_bits(),
+                scalar::max_abs_diff(&x, &y0).to_bits(),
+                "max_abs_diff n={n}"
+            );
+
+            // SAFETY: avx2+fma detected above.
+            let d = unsafe { avx2::dot(&x, &y0) };
+            let s = scalar::dot(&x, &y0);
+            assert!((d - s).abs() <= 1e-4 * s.abs().max(1.0), "dot n={n}");
+
+            let radius = scalar::max_abs_diff(&x, &y0);
+            if radius > 0.0 {
+                let mut c_v = vec![0u32; n];
+                let mut o_v = vec![0f32; n];
+                // SAFETY: avx2+fma detected above.
+                unsafe { avx2::laq_quantize(&x, &y0, radius, 5, &mut c_v, &mut o_v) };
+                let mut c_s = vec![0u32; n];
+                let mut o_s = vec![0f32; n];
+                scalar::laq_quantize(&x, &y0, radius, 5, &mut c_s, &mut o_s);
+                assert_eq!(c_v, c_s, "laq codes n={n}");
+                assert_eq!(bits(&o_v), bits(&o_s), "laq recon n={n}");
+                let mut r_v = vec![0f32; n];
+                // SAFETY: avx2+fma detected above.
+                unsafe { avx2::laq_dequantize(&c_v, &y0, radius, 5, &mut r_v) };
+                let mut r_s = vec![0f32; n];
+                scalar::laq_dequantize(&c_s, &y0, radius, 5, &mut r_s);
+                assert_eq!(bits(&r_v), bits(&r_s), "laq dequant n={n}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_gemm_tile_matches_naive() {
+        if !(std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")) {
+            return;
+        }
+        let mut rng = Rng::new(907);
+        for &kc in &[0usize, 1, 2, 7, 64, 200] {
+            let ap = rand_vec(&mut rng, kc * 8);
+            let bp = rand_vec(&mut rng, kc * 8);
+            let mut acc = [[0f32; 8]; 8];
+            // SAFETY: avx2+fma detected above.
+            unsafe { avx2::gemm_tile_8x8(kc, &ap, &bp, &mut acc) };
+            for r in 0..8 {
+                for c in 0..8 {
+                    let mut want = 0f64;
+                    for p in 0..kc {
+                        want += ap[p * 8 + r] as f64 * bp[p * 8 + c] as f64;
+                    }
+                    assert!(
+                        (acc[r][c] as f64 - want).abs() <= 1e-3 * want.abs().max(1.0),
+                        "kc={kc} ({r},{c}): {} vs {want}",
+                        acc[r][c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn laq_quantize_rejects_zero_radius() {
+        let g = [1.0f32];
+        let p = [0.0f32];
+        let mut c = [0u32];
+        let mut o = [0f32];
+        laq_quantize(&g, &p, 0.0, 8, &mut c, &mut o);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_beta_zero() {
+        let mut out = Vec::new();
+        pack_codes_into(&[0], 0, &mut out);
+    }
+}

@@ -231,7 +231,9 @@ pub trait Aggregation: Send {
 pub struct SumAggregation;
 
 /// Sum a non-empty set of per-client gradient lists elementwise (shared
-/// with the legacy `FlServer::aggregate` path).
+/// with the legacy `FlServer::aggregate` path). `axpy(1.0, ·)` routes
+/// to the SIMD [`crate::exec::simd::sum_into`] kernel (the multiply-free
+/// α = 1 fast path) while keeping the per-tensor shape assert.
 pub(crate) fn sum_contribs(contribs: Vec<Vec<Tensor>>) -> Vec<Tensor> {
     let mut it = contribs.into_iter();
     let mut acc = it.next().expect("at least one client");

@@ -3,9 +3,11 @@
 //! BLIS-style structure: three loops of cache blocking (NC × KC × MC)
 //! around an MR×NR register-tiled micro-kernel. Operand panels are
 //! packed into contiguous, zero-padded buffers once per cache block, so
-//! the inner kernel reads only unit-stride memory and the compiler keeps
-//! the 8×8 f32 accumulator tile in SIMD registers — no data-dependent
-//! branches in the hot loop. Packing reads through strided [`MatRef`]
+//! the inner kernel reads only unit-stride memory; the 8×8 f32 tile is
+//! an explicit AVX2+FMA register kernel when the process dispatches at
+//! that level (`exec::simd`, DESIGN.md §8) and the auto-vectorized
+//! scalar tile otherwise — no data-dependent branches in the hot loop
+//! either way. Packing reads through strided [`MatRef`]
 //! views, so the transpose variants ([`matmul_tn`], [`matmul_nt`]) pack
 //! straight from the strided source instead of materializing a
 //! `transpose()` copy, and the blocked QR updates sub-matrices in place
@@ -149,11 +151,34 @@ fn pack_b(b: MatRef, p0: usize, j0: usize, kc: usize, nc: usize, out: &mut [f32]
 
 // ------------------------------------------------------- micro-kernel
 
+// The AVX2 register tile in `exec::simd::avx2` is hard-wired to the
+// 8×8 shape; changing MR/NR requires a matching vector kernel.
+const _: () = assert!(MR == 8 && NR == 8);
+
 /// The register tile: `acc[r][c] += Σ_p ap[p·MR+r] · bp[p·NR+c]`.
-/// Both panels are zero-padded, so the tile is always full MR×NR — the
-/// loop body is branch-free and auto-vectorizes to 8-lane FMAs.
+/// Dispatches to the explicit AVX2+FMA tile
+/// ([`crate::exec::simd::avx2::gemm_tile_8x8`]) when the process runs
+/// at that level, else to the scalar tile below (DESIGN.md §8).
 #[inline(always)]
 fn micro_kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::exec::simd::avx2_enabled() {
+            // SAFETY: avx2_enabled() is true only when avx2+fma were
+            // detected on this CPU at first dispatch.
+            unsafe { crate::exec::simd::avx2::gemm_tile_8x8(kc, ap, bp, acc) };
+            return;
+        }
+    }
+    micro_kernel_scalar(kc, ap, bp, acc);
+}
+
+/// The portable tile — the fallback and the parity oracle for the AVX2
+/// kernel. Both panels are zero-padded, so the tile is always full
+/// MR×NR: the loop body is branch-free and auto-vectorizes to 8-lane
+/// FMAs on targets whose baseline has them.
+#[inline(always)]
+fn micro_kernel_scalar(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
     for p in 0..kc {
         let a = &ap[p * MR..p * MR + MR];
@@ -450,9 +475,10 @@ pub fn gemm_acc_nt(c: &mut Tensor, a: &Tensor, b: &Tensor) {
 
 // ------------------------------------------------------------- matvec
 
-/// y = A · x for a matrix (m×n) and vector (n): 8-lane chunked
-/// accumulation the compiler vectorizes, with rows split over the
-/// shared pool for large m (the serve/inference path).
+/// y = A · x for a matrix (m×n) and vector (n): each row is one
+/// [`crate::exec::simd::dot`] (8-lane FMA on AVX2, 8 partial sums on
+/// the scalar path), with rows split over the shared pool for large m
+/// (the serve/inference path).
 pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(x.ndim(), 1);
@@ -471,7 +497,7 @@ pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
             let r0 = t * chunk;
             let r1 = m.min(r0 + chunk);
             for i in r0..r1 {
-                let v = dot8(&ad[i * n..(i + 1) * n], xd);
+                let v = crate::exec::simd::dot(&ad[i * n..(i + 1) * n], xd);
                 // SAFETY: each row index belongs to exactly one task.
                 unsafe {
                     *yref.0.add(i) = v;
@@ -480,31 +506,10 @@ pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
         });
     } else {
         for (i, yi) in y.iter_mut().enumerate() {
-            *yi = dot8(&ad[i * n..(i + 1) * n], xd);
+            *yi = crate::exec::simd::dot(&ad[i * n..(i + 1) * n], xd);
         }
     }
     Tensor::vector(y)
-}
-
-/// Dot product with 8 independent partial sums (vectorizes to one FMA
-/// lane set), reduced pairwise at the end.
-#[inline]
-fn dot8(row: &[f32], x: &[f32]) -> f32 {
-    debug_assert_eq!(row.len(), x.len());
-    let mut acc = [0f32; 8];
-    let chunks = row.len() / 8;
-    for c in 0..chunks {
-        let r = &row[c * 8..c * 8 + 8];
-        let v = &x[c * 8..c * 8 + 8];
-        for l in 0..8 {
-            acc[l] += r[l] * v[l];
-        }
-    }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    for j in chunks * 8..row.len() {
-        s += row[j] * x[j];
-    }
-    s
 }
 
 #[cfg(test)]
@@ -666,6 +671,31 @@ mod tests {
                 want += a.get2(i, j) as f64 * x.data()[j] as f64;
             }
             assert!((y.data()[i] as f64 - want).abs() < 1e-2, "row {i}");
+        }
+    }
+
+    #[test]
+    fn micro_kernel_dispatch_matches_scalar_tile() {
+        // whatever the process dispatches at, the tile must agree with
+        // the scalar oracle on full and edge k-depths
+        let mut rng = Rng::new(11);
+        for &kc in &[0usize, 1, 3, 32, 256] {
+            let ap = Tensor::randn(&[kc * MR], &mut rng).into_vec();
+            let bp = Tensor::randn(&[kc * NR], &mut rng).into_vec();
+            let mut got = [[0f32; NR]; MR];
+            micro_kernel(kc, &ap, &bp, &mut got);
+            let mut want = [[0f32; NR]; MR];
+            micro_kernel_scalar(kc, &ap, &bp, &mut want);
+            for r in 0..MR {
+                for c in 0..NR {
+                    assert!(
+                        (got[r][c] - want[r][c]).abs() <= 1e-4 * want[r][c].abs().max(1.0),
+                        "kc={kc} ({r},{c}): {} vs {}",
+                        got[r][c],
+                        want[r][c]
+                    );
+                }
+            }
         }
     }
 

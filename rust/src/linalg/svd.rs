@@ -38,16 +38,11 @@ impl Svd {
             // rank-0 factorization: the zero matrix
             return Tensor::zeros(&[m, n]);
         }
-        // scale columns of U by s row-wise on the raw slice, then
-        // multiply by Vᵀ
+        // scale columns of U by s row-wise on the raw slice (one SIMD
+        // multiply per row), then multiply by Vᵀ
         let mut us = self.u.clone();
-        {
-            let d = us.data_mut();
-            for row in d.chunks_exact_mut(k) {
-                for (x, &sig) in row.iter_mut().zip(self.s.iter()) {
-                    *x *= sig;
-                }
-            }
+        for row in us.data_mut().chunks_exact_mut(k) {
+            crate::exec::simd::mul(row, &self.s);
         }
         super::matmul_nt(&us, &self.v).reshape(&[m, n])
     }
@@ -280,9 +275,7 @@ fn svd_small_lhs(b: &Tensor, k: usize) -> Svd {
         .map(|&sig| if sig > 1e-12 { 1.0 / sig } else { 0.0 })
         .collect();
     for row in v.data_mut().chunks_exact_mut(k) {
-        for (x, &inv) in row.iter_mut().zip(inv_s.iter()) {
-            *x *= inv;
-        }
+        crate::exec::simd::mul(row, &inv_s);
     }
     Svd { u, s, v }
 }

@@ -87,6 +87,11 @@ fn cmd_schemes() -> Result<()> {
 fn cmd_info() -> Result<()> {
     println!("qrr {} — Quantized Rank Reduction reproduction", env!("CARGO_PKG_VERSION"));
     println!("threads: {}", qrr::exec::default_threads());
+    println!(
+        "simd: {} (cpu: {})",
+        qrr::exec::simd::level().label(),
+        qrr::exec::simd::cpu_features()
+    );
     println!("artifacts dir: {}", qrr::runtime::artifacts_dir().display());
     match qrr::runtime::Manifest::load(&qrr::runtime::artifacts_dir()) {
         Ok(m) => {
@@ -145,6 +150,8 @@ COMMON OPTIONS (exp/train):
 ENVIRONMENT:
     QRR_THREADS       worker threads (default: cores, max 16; read once
                       per process — sizes the session pool and kernels)
+    QRR_SIMD          kernel dispatch: scalar | avx2 (default: CPU
+                      detection; read once per process — see `qrr info`)
     QRR_BENCH_FAST    reduced bench sampling (same as --fast)
     QRR_BENCH_ITERS   iterations for the table benches (default 40)
     QRR_BENCH_JSON    directory: cargo-bench binaries emit BENCH_*.json

@@ -50,20 +50,28 @@ impl EfClientCodec {
         }
     }
 
-    /// Encode with error feedback; same message type as plain QRR.
+    /// Encode with error feedback; same message type as plain QRR. The
+    /// residual updates are the SIMD `sum_into`/`axpy` kernels
+    /// ([`crate::exec::simd`]) writing into the standing residual
+    /// buffers — no per-round residual allocation.
     pub fn encode(&mut self, grads: &[Tensor]) -> Vec<ParamMsg> {
         assert_eq!(grads.len(), self.residual.len());
         // m = grad + residual
         let m: Vec<Tensor> = grads
             .iter()
             .zip(self.residual.iter())
-            .map(|(g, e)| g.add(e))
+            .map(|(g, e)| {
+                let mut m = g.clone();
+                crate::exec::simd::sum_into(m.data_mut(), e.data());
+                m
+            })
             .collect();
         let msgs = self.inner.encode(&m);
-        // residual = m - reconstruction(msg)
+        // residual = m - reconstruction(msg), in place
         let rec = self.mirror.decode(&msgs);
         for ((e, mi), r) in self.residual.iter_mut().zip(m.iter()).zip(rec.iter()) {
-            *e = mi.sub(r);
+            e.data_mut().copy_from_slice(mi.data());
+            crate::exec::simd::axpy(e.data_mut(), -1.0, r.data());
         }
         msgs
     }

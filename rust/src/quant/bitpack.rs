@@ -4,6 +4,14 @@
 //! module makes that real: codes in `{0, …, 2^β−1}` are packed LSB-first
 //! into a byte stream, so the serialized payload is exactly
 //! ⌈βn/8⌉ bytes.
+//!
+//! The packers are the word-at-a-time kernels in [`crate::exec::simd`]
+//! (u64 bit-buffer, specialized β ∈ {1, 2, 4, 8, 16} fast paths); this
+//! module owns the sizing contract. The byte-at-a-time reference the
+//! fast paths are property-tested against byte-for-byte lives with the
+//! kernels (`exec::simd` tests and `tests/simd_parity.rs`).
+
+use crate::exec::simd;
 
 /// Number of bytes needed to pack `n` codes of `beta` bits each.
 pub fn packed_len_bytes(n: usize, beta: u8) -> usize {
@@ -19,28 +27,11 @@ pub fn pack_codes(codes: &[u32], beta: u8) -> Vec<u8> {
 
 /// [`pack_codes`] into a reusable buffer: `out` is cleared, zero-filled
 /// to the packed length and written in place, so steady-state encodes
-/// allocate nothing.
+/// allocate nothing. Delegates to the word-at-a-time kernel
+/// ([`crate::exec::simd::pack_codes_into`]).
 pub fn pack_codes_into(codes: &[u32], beta: u8, out: &mut Vec<u8>) {
-    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
-    let mask = if beta == 32 { u32::MAX } else { (1u32 << beta) - 1 };
-    out.clear();
-    out.resize(packed_len_bytes(codes.len(), beta), 0);
-    let mut bitpos = 0usize;
-    for &c in codes {
-        debug_assert!(c <= mask, "code {c} exceeds {beta} bits");
-        let c = (c & mask) as u64;
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let merged = c << off;
-        out[byte] |= (merged & 0xFF) as u8;
-        if off + beta as usize > 8 {
-            out[byte + 1] |= ((merged >> 8) & 0xFF) as u8;
-        }
-        if off + beta as usize > 16 {
-            out[byte + 2] |= ((merged >> 16) & 0xFF) as u8;
-        }
-        bitpos += beta as usize;
-    }
+    simd::pack_codes_into(codes, beta, out);
+    debug_assert_eq!(out.len(), packed_len_bytes(codes.len(), beta));
 }
 
 /// Unpack `n` codes of `beta` bits each from `bytes`.
@@ -50,32 +41,17 @@ pub fn unpack_codes(bytes: &[u8], n: usize, beta: u8) -> Vec<u32> {
     out
 }
 
-/// [`unpack_codes`] into a reusable buffer (cleared first).
+/// [`unpack_codes`] into a reusable buffer (cleared first). Delegates to
+/// the word-at-a-time kernel
+/// ([`crate::exec::simd::unpack_codes_into`]).
 pub fn unpack_codes_into(bytes: &[u8], n: usize, beta: u8, out: &mut Vec<u32>) {
-    assert!((1..=16).contains(&beta), "beta must be in 1..=16");
     assert!(
         bytes.len() >= packed_len_bytes(n, beta),
         "byte stream too short: {} < {}",
         bytes.len(),
         packed_len_bytes(n, beta)
     );
-    let mask = (1u64 << beta) - 1;
-    out.clear();
-    out.reserve(n);
-    let mut bitpos = 0usize;
-    for _ in 0..n {
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let mut window = bytes[byte] as u64;
-        if byte + 1 < bytes.len() {
-            window |= (bytes[byte + 1] as u64) << 8;
-        }
-        if byte + 2 < bytes.len() {
-            window |= (bytes[byte + 2] as u64) << 16;
-        }
-        out.push(((window >> off) & mask) as u32);
-        bitpos += beta as usize;
-    }
+    simd::unpack_codes_into(bytes, n, beta, out);
 }
 
 #[cfg(test)]

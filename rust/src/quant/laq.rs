@@ -9,9 +9,16 @@
 //! 3. new quantized value `Q_i = prev_i + 2τR·q_i − R` (eq. (16)/(17)).
 //!
 //! The guarantee `‖g − Q‖∞ ≤ τR` (eq. (18)) is property-tested below.
+//!
+//! The sweeps are the fused SIMD kernels in [`crate::exec::simd`]
+//! (DESIGN.md §8): a vectorized `‖g − prev‖∞` radius scan, then one
+//! branchless pass computing grid codes and reconstruction together.
+//! The grid math is f64 on every dispatch level with identical
+//! rounding, so wire codes do not depend on the level.
 
 use std::cell::RefCell;
 
+use crate::exec::simd;
 use crate::tensor::Tensor;
 
 use super::bitpack::{pack_codes_into, packed_len_bytes, unpack_codes, unpack_codes_into};
@@ -125,18 +132,13 @@ pub fn quantize(g: &Tensor, prev: &Tensor, beta: u8) -> (Quantized, Tensor) {
     assert!((1..=16).contains(&beta), "beta must be in 1..=16");
     let n = g.len();
     let levels = (1u32 << beta) - 1; // 2^beta - 1
-    let tau = 1.0f64 / levels as f64;
 
-    // R = ||g - prev||_inf
-    let mut radius = 0f32;
-    for (x, p) in g.data().iter().zip(prev.data().iter()) {
-        radius = radius.max((x - p).abs());
-    }
+    // R = ||g - prev||_inf — the vectorized radius scan
+    let radius = simd::max_abs_diff(g.data(), prev.data());
 
     CODE_SCRATCH.with(|cell| {
         let mut codes = cell.borrow_mut();
         codes.clear();
-        codes.reserve(n);
 
         if radius == 0.0 || !radius.is_finite() {
             // Degenerate grid: g == prev exactly (or non-finite input
@@ -152,19 +154,17 @@ pub fn quantize(g: &Tensor, prev: &Tensor, beta: u8) -> (Quantized, Tensor) {
             );
         }
 
+        // eq. (15)–(17) in one fused sweep: codes + reconstruction
         let mut new_val = Tensor::zeros(g.shape());
-        let step = 2.0 * tau * radius as f64; // grid spacing
-        {
-            let out = new_val.data_mut();
-            for (i, (x, p)) in g.data().iter().zip(prev.data().iter()).enumerate() {
-                // eq. (15)
-                let t = ((*x - *p) as f64 + radius as f64) / step + 0.5;
-                let q = (t.floor() as i64).clamp(0, levels as i64) as u32;
-                codes.push(q);
-                // eq. (16)/(17): Q = prev + 2*tau*R*q - R
-                out[i] = *p + (step * q as f64 - radius as f64) as f32;
-            }
-        }
+        codes.resize(n, 0);
+        simd::laq_quantize(
+            g.data(),
+            prev.data(),
+            radius,
+            beta,
+            &mut codes,
+            new_val.data_mut(),
+        );
         let mut packed = Vec::new();
         pack_codes_into(&codes, beta, &mut packed);
         debug_assert_eq!(packed.len(), packed_len_bytes(n, beta));
@@ -179,17 +179,11 @@ pub fn quantize(g: &Tensor, prev: &Tensor, beta: u8) -> (Quantized, Tensor) {
 /// the decoded innovation.
 pub fn dequantize(msg: &Quantized, prev: &Tensor) -> Tensor {
     assert_eq!(msg.len, prev.len(), "dequantize length mismatch");
-    let levels = (1u32 << msg.beta) - 1;
-    let tau = 1.0f64 / levels as f64;
-    let step = 2.0 * tau * msg.radius as f64;
     let mut out = Tensor::zeros(prev.shape());
     CODE_SCRATCH.with(|cell| {
         let mut codes = cell.borrow_mut();
         unpack_codes_into(&msg.packed, msg.len, msg.beta, &mut codes);
-        let o = out.data_mut();
-        for (i, (&q, p)) in codes.iter().zip(prev.data().iter()).enumerate() {
-            o[i] = *p + (step * q as f64 - msg.radius as f64) as f32;
-        }
+        simd::laq_dequantize(&codes, prev.data(), msg.radius, msg.beta, out.data_mut());
     });
     out
 }

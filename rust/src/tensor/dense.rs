@@ -186,24 +186,22 @@ impl Tensor {
         self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
     }
 
-    /// Max (ℓ∞) norm.
+    /// Max (ℓ∞) norm — the SIMD [`crate::exec::simd::max_abs`] scan.
     pub fn max_norm(&self) -> f32 {
-        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+        crate::exec::simd::max_abs(&self.data)
     }
 
-    /// Elementwise a += alpha * b.
+    /// Elementwise a += alpha * b — the SIMD
+    /// [`crate::exec::simd::axpy`] kernel (bit-exact across dispatch
+    /// levels; `alpha == 1.0` takes the multiply-free sum path).
     pub fn axpy(&mut self, alpha: f32, b: &Tensor) {
         assert_eq!(self.shape, b.shape, "axpy shape mismatch");
-        for (x, y) in self.data.iter_mut().zip(b.data.iter()) {
-            *x += alpha * y;
-        }
+        crate::exec::simd::axpy(&mut self.data, alpha, &b.data);
     }
 
-    /// Elementwise scale.
+    /// Elementwise scale — the SIMD [`crate::exec::simd::scale`] kernel.
     pub fn scale(&mut self, alpha: f32) {
-        for x in self.data.iter_mut() {
-            *x *= alpha;
-        }
+        crate::exec::simd::scale(&mut self.data, alpha);
     }
 
     /// a - b as a new tensor.

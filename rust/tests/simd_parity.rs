@@ -1,0 +1,221 @@
+//! Scalar-vs-SIMD parity for the dispatched kernel layer (DESIGN.md §8).
+//!
+//! Runs against whatever level this process dispatches at (CPU
+//! detection or `QRR_SIMD`): under the CI `QRR_SIMD=scalar` gate this
+//! pins the portable fallback; on AVX2 hardware it pins the vector
+//! kernels. Elementwise float kernels and the fused LAQ pass must be
+//! **bit-exact** against the scalar oracle, integer packers
+//! **byte-for-byte**; `dot` and the GEMM tile agree within tolerance.
+
+use qrr::exec::simd;
+use qrr::linalg::{matmul, matmul_nt, matmul_tn};
+use qrr::quant::{dequantize, pack_codes, packed_len_bytes, quantize, unpack_codes};
+use qrr::util::Rng;
+use qrr::Tensor;
+
+/// Lengths straddling the 8-lane width, the 4-lane f64 width and every
+/// remainder boundary.
+const LENS: [usize; 14] = [0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33, 100, 1037];
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn elementwise_kernels_bit_exact_vs_scalar_oracle() {
+    let mut rng = Rng::new(0xD15);
+    for &n in &LENS {
+        for alpha in [0.37f32, -1.0, 1.0, 0.0] {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+
+            let mut got = y.clone();
+            simd::axpy(&mut got, alpha, &x);
+            let mut want = y.clone();
+            simd::scalar::axpy(&mut want, alpha, &x);
+            assert_eq!(bits(&got), bits(&want), "axpy n={n} alpha={alpha}");
+
+            let mut got = y.clone();
+            simd::sum_into(&mut got, &x);
+            let mut want = y.clone();
+            simd::scalar::sum_into(&mut want, &x);
+            assert_eq!(bits(&got), bits(&want), "sum_into n={n}");
+
+            let mut got = y.clone();
+            simd::scale(&mut got, alpha);
+            let mut want = y.clone();
+            simd::scalar::scale(&mut want, alpha);
+            assert_eq!(bits(&got), bits(&want), "scale n={n} alpha={alpha}");
+
+            let mut got = y.clone();
+            simd::mul(&mut got, &x);
+            let mut want = y.clone();
+            simd::scalar::mul(&mut want, &x);
+            assert_eq!(bits(&got), bits(&want), "mul n={n}");
+
+            assert_eq!(
+                simd::max_abs(&x).to_bits(),
+                simd::scalar::max_abs(&x).to_bits(),
+                "max_abs n={n}"
+            );
+            assert_eq!(
+                simd::max_abs_diff(&x, &y).to_bits(),
+                simd::scalar::max_abs_diff(&x, &y).to_bits(),
+                "max_abs_diff n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_matches_scalar_within_tolerance() {
+    let mut rng = Rng::new(0xD07);
+    for &n in &LENS {
+        let x = rand_vec(&mut rng, n);
+        let y = rand_vec(&mut rng, n);
+        let got = simd::dot(&x, &y);
+        let want = simd::scalar::dot(&x, &y);
+        assert!(
+            (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+            "dot n={n}: {got} vs {want}"
+        );
+        // and against a slow f64 reference
+        let exact: f64 = x.iter().zip(y.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!(
+            (got as f64 - exact).abs() <= 1e-3 * exact.abs().max(1.0),
+            "dot n={n}: {got} vs exact {exact}"
+        );
+    }
+}
+
+#[test]
+fn laq_fused_pass_bit_exact_vs_scalar_oracle() {
+    let mut rng = Rng::new(0x1A0);
+    for &n in &LENS {
+        for beta in 1..=16u8 {
+            let g = rand_vec(&mut rng, n);
+            let prev = rand_vec(&mut rng, n);
+            let radius = simd::scalar::max_abs_diff(&g, &prev);
+            if radius == 0.0 {
+                continue;
+            }
+            let mut codes = vec![0u32; n];
+            let mut out = vec![0f32; n];
+            simd::laq_quantize(&g, &prev, radius, beta, &mut codes, &mut out);
+            let mut codes_s = vec![0u32; n];
+            let mut out_s = vec![0f32; n];
+            simd::scalar::laq_quantize(&g, &prev, radius, beta, &mut codes_s, &mut out_s);
+            assert_eq!(codes, codes_s, "codes n={n} beta={beta}");
+            assert_eq!(bits(&out), bits(&out_s), "recon n={n} beta={beta}");
+
+            let mut dec = vec![0f32; n];
+            simd::laq_dequantize(&codes, &prev, radius, beta, &mut dec);
+            assert_eq!(bits(&dec), bits(&out), "dequant n={n} beta={beta}");
+        }
+    }
+}
+
+#[test]
+fn bitpack_byte_for_byte_all_betas_adversarial_lengths() {
+    // byte-at-a-time reference, independent of the crate's packers
+    fn ref_pack(codes: &[u32], beta: u8) -> Vec<u8> {
+        let mut out = vec![0u8; packed_len_bytes(codes.len(), beta)];
+        let mut bitpos = 0usize;
+        for &c in codes {
+            let merged = (c as u64) << (bitpos % 8);
+            let byte = bitpos / 8;
+            out[byte] |= (merged & 0xFF) as u8;
+            if bitpos % 8 + beta as usize > 8 {
+                out[byte + 1] |= ((merged >> 8) & 0xFF) as u8;
+            }
+            if bitpos % 8 + beta as usize > 16 {
+                out[byte + 2] |= ((merged >> 16) & 0xFF) as u8;
+            }
+            bitpos += beta as usize;
+        }
+        out
+    }
+    let mut rng = Rng::new(0xB17);
+    for beta in 1..=16u8 {
+        let max = (1u64 << beta) as usize;
+        for &n in &LENS {
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(max) as u32).collect();
+            let packed = pack_codes(&codes, beta);
+            assert_eq!(packed.len(), packed_len_bytes(n, beta), "len beta={beta} n={n}");
+            assert_eq!(packed, ref_pack(&codes, beta), "pack beta={beta} n={n}");
+            assert_eq!(unpack_codes(&packed, n, beta), codes, "unpack beta={beta} n={n}");
+        }
+    }
+}
+
+#[test]
+fn quantizer_wire_bytes_deterministic_and_within_bound() {
+    // end to end through the public quantizer: the paper's eq. (18)
+    // bound holds and repeated encodes of the same input produce
+    // identical wire bytes (process-global dispatch)
+    let mut rng = Rng::new(0x0E8);
+    for &n in &[1usize, 7, 63, 64, 65, 1037] {
+        for beta in [1u8, 2, 4, 8, 16] {
+            let g = Tensor::randn(&[n], &mut rng);
+            let prev = Tensor::randn(&[n], &mut rng);
+            let (msg, q) = quantize(&g, &prev, beta);
+            let (msg2, _) = quantize(&g, &prev, beta);
+            assert_eq!(msg, msg2, "non-deterministic encode n={n} beta={beta}");
+            let tau = 1.0 / ((1u32 << beta) - 1) as f32;
+            let bound = tau * msg.radius * (1.0 + 1e-4) + 1e-7;
+            assert!(
+                g.sub(&q).max_norm() <= bound,
+                "eq18 n={n} beta={beta}: {} > {bound}",
+                g.sub(&q).max_norm()
+            );
+            // the server-side reconstruction agrees with the client's
+            let back = dequantize(&msg, &prev);
+            assert_eq!(bits(q.data()), bits(back.data()), "n={n} beta={beta}");
+        }
+    }
+}
+
+#[test]
+fn gemm_dispatch_matches_naive_on_adversarial_shapes() {
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    acc += a.get2(i, kk) as f64 * b.get2(kk, j) as f64;
+                }
+                c.set2(i, j, acc as f32);
+            }
+        }
+        c
+    }
+    let mut rng = Rng::new(0x6E0);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (8, 8, 8),
+        (9, 7, 9),
+        (7, 300, 5),
+        (65, 129, 67),
+        (1, 9, 1),
+    ] {
+        let a = Tensor::randn(&[m, k], &mut rng);
+        let b = Tensor::randn(&[k, n], &mut rng);
+        let want = naive(&a, &b);
+        assert!(matmul(&a, &b).rel_err(&want) < 1e-4, "{m}x{k}x{n}");
+        assert!(
+            matmul_tn(&a.transpose(), &b).rel_err(&want) < 1e-4,
+            "tn {m}x{k}x{n}"
+        );
+        assert!(
+            matmul_nt(&a, &b.transpose()).rel_err(&want) < 1e-4,
+            "nt {m}x{k}x{n}"
+        );
+    }
+}
