@@ -1,0 +1,370 @@
+//! A minimal, comment- and string-aware Rust tokenizer.
+//!
+//! `qrr-audit`'s rules are lexical: they match token shapes
+//! (`.unwrap` as punct + ident, `vec!` as ident + punct, `env::var` as
+//! a path) rather than parsing Rust. What makes that sound is this
+//! lexer's classification — the word `unsafe` inside a string literal,
+//! a `// comment`, or a doc example must never look like code. The
+//! lexer therefore handles the full literal grammar the crate uses:
+//! line and (nested) block comments, plain/byte strings with escapes,
+//! raw strings with arbitrary `#` fences, char literals vs. lifetimes,
+//! and numeric literals.
+//!
+//! It deliberately does **not** interpret `#[cfg]`, macros, or modules:
+//! every token in the file is audited, test code included. Exceptions
+//! are expressed in the source via `// qrr-audit: allow(<rule>)`
+//! pragmas (see [`super::rules`]), not by the lexer.
+
+/// One lexeme with its classification.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Single punctuation character (operators are not glued).
+    Punct(char),
+    /// String/char/byte/numeric literal — contents are opaque to rules.
+    Lit,
+    /// `// …` comment; the payload is everything after the `//`, so a
+    /// doc comment `/// x` arrives as `"/ x"` and `//! x` as `"! x"`.
+    LineComment(String),
+    /// `/* … */` comment (nesting folded into one token).
+    BlockComment(String),
+}
+
+/// A token plus the 1-indexed source lines it spans.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// The lexeme.
+    pub tok: Tok,
+    /// First line of the token.
+    pub line: u32,
+    /// Last line (differs from `line` only for multi-line literals and
+    /// block comments).
+    pub end_line: u32,
+}
+
+impl Token {
+    fn at(tok: Tok, line: u32) -> Self {
+        Token { tok, line, end_line: line }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. The lexer never fails: unterminated literals or
+/// comments simply end at EOF (the audited tree is compiler-checked
+/// anyway, so malformed input only arises in fixtures).
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    /// Advance one char, tracking the line counter.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                self.string(false);
+            } else if c == '\'' {
+                self.char_or_lifetime();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if is_ident_start(c) {
+                self.ident_or_prefixed_literal();
+            } else {
+                let line = self.line;
+                self.bump();
+                self.out.push(Token::at(Tok::Punct(c), line));
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        self.bump();
+        self.bump(); // the two slashes
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.push(Token::at(Tok::LineComment(text), line));
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        self.bump();
+        self.bump(); // "/*"
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    text.push_str("/*");
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                }
+                (Some(c), _) => {
+                    text.push(c);
+                    self.bump();
+                }
+                (None, _) => break, // unterminated: end at EOF
+            }
+        }
+        self.out.push(Token {
+            tok: Tok::BlockComment(text),
+            line,
+            end_line: self.line,
+        });
+    }
+
+    /// A `"…"` literal with `\` escapes; `raw` disables escapes (the
+    /// body of a no-hash raw string).
+    fn string(&mut self, raw: bool) {
+        let line = self.line;
+        self.bump(); // opening quote
+        while let Some(c) = self.bump() {
+            if c == '"' {
+                break;
+            }
+            if c == '\\' && !raw {
+                self.bump(); // the escaped char (possibly a quote)
+            }
+        }
+        self.out.push(Token { tok: Tok::Lit, line, end_line: self.line });
+    }
+
+    /// A raw string body after its `#` fence has been counted: runs to
+    /// `"` followed by `hashes` `#` characters.
+    fn raw_string(&mut self, hashes: usize) {
+        let line = self.line;
+        self.bump(); // opening quote
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                for k in 0..hashes {
+                    if self.peek(k) != Some('#') {
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+        }
+        self.out.push(Token { tok: Tok::Lit, line, end_line: self.line });
+    }
+
+    /// `'a'` / `'\n'` are char literals; `'a` (no closing quote after
+    /// one ident char) is a lifetime, which lexes as punct + ident so
+    /// rules never see a phantom literal.
+    fn char_or_lifetime(&mut self) {
+        let line = self.line;
+        match (self.peek(1), self.peek(2)) {
+            // escape: always a char literal
+            (Some('\\'), _) => {
+                self.bump(); // '
+                self.bump(); // backslash
+                self.bump(); // escaped char
+                while let Some(c) = self.bump() {
+                    if c == '\'' {
+                        break;
+                    }
+                }
+                self.out.push(Token { tok: Tok::Lit, line, end_line: self.line });
+            }
+            // 'x' — single char closed by a quote
+            (Some(_), Some('\'')) => {
+                self.bump();
+                self.bump();
+                self.bump();
+                self.out.push(Token::at(Tok::Lit, line));
+            }
+            // lifetime: consume the quote, let the ident lex normally
+            _ => {
+                self.bump();
+                self.out.push(Token::at(Tok::Punct('\''), line));
+            }
+        }
+    }
+
+    /// Numeric literal: digits plus the alphanumeric soup of suffixes
+    /// and bases (`0xFF`, `1_000u64`, `1e9`). A decimal point is part of
+    /// the literal only when followed by a digit, so ranges (`0..n`) and
+    /// method calls on integers lex as separate tokens.
+    fn number(&mut self) {
+        let line = self.line;
+        while let Some(c) = self.peek(0) {
+            if is_ident_continue(c) {
+                self.bump();
+            } else if c == '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.out.push(Token::at(Tok::Lit, line));
+    }
+
+    /// An identifier — unless it is a raw/byte string prefix (`r"`,
+    /// `r#"`, `b"`, `br#"`, `c"`), in which case the whole literal is
+    /// consumed.
+    fn ident_or_prefixed_literal(&mut self) {
+        let line = self.line;
+        let mut name = String::new();
+        while let Some(c) = self.peek(0) {
+            if is_ident_continue(c) {
+                name.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let raw_capable = matches!(name.as_str(), "r" | "br" | "cr");
+        let plain_prefix = matches!(name.as_str(), "b" | "c");
+        match self.peek(0) {
+            Some('"') if raw_capable => self.raw_string(0),
+            Some('"') if plain_prefix => self.string(false),
+            Some('#') if raw_capable => {
+                let mut hashes = 0usize;
+                while self.peek(hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if self.peek(hashes) == Some('"') {
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    self.raw_string(hashes);
+                } else {
+                    // r#ident (raw identifier): emit the ident without
+                    // the fence
+                    self.out.push(Token::at(Tok::Ident(name), line));
+                }
+            }
+            _ => self.out.push(Token::at(Tok::Ident(name), line)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn code_words_in_comments_and_strings_are_not_idents() {
+        let src = "let x = \"unsafe unwrap\"; // unsafe in a comment\n/* unwrap */ call();";
+        assert_eq!(idents(src), vec!["let", "x", "call"]);
+    }
+
+    #[test]
+    fn raw_strings_with_hash_fences() {
+        let src = "let s = r#\"unsafe \" still \"# ; next";
+        assert_eq!(idents(src), vec!["let", "s", "next"]);
+        let src = "let s = r\"unwrap\"; after";
+        assert_eq!(idents(src), vec!["let", "s", "after"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let ids = idents(src);
+        assert!(ids.iter().filter(|s| s.as_str() == "a").count() >= 3);
+        // and a real char literal swallows its quotes
+        let ids = idents("let c = 'x'; let q = '\\''; done");
+        assert_eq!(ids, vec!["let", "c", "let", "q", "done"]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let toks = lex("a\nb\n  c");
+        let lines: Vec<(String, u32)> = toks
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some((s, t.line)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lines, vec![("a".into(), 1), ("b".into(), 2), ("c".into(), 3)]);
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let toks = lex("/* outer /* inner */ still */ after");
+        assert!(matches!(toks[0].tok, Tok::BlockComment(_)));
+        assert_eq!(idents("/* x */ after"), vec!["after"]);
+        let toks = lex("/* a\nb\nc */ z");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].end_line, 3);
+    }
+
+    #[test]
+    fn doc_comment_payload_keeps_marker() {
+        let toks = lex("/// # Safety\nfn f() {}");
+        match &toks[0].tok {
+            Tok::LineComment(text) => assert_eq!(text, "/ # Safety"),
+            other => panic!("expected comment, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges_or_methods() {
+        let src = "for i in 0..n { let y = 1.5; x.max(2) }";
+        let ids = idents(src);
+        assert!(ids.contains(&"n".to_string()));
+        assert!(ids.contains(&"max".to_string()));
+    }
+}

@@ -1,0 +1,398 @@
+//! `qrr-audit` — the crate's own static-analysis gate (DESIGN.md §9).
+//!
+//! A zero-dependency lexical analyzer that walks `src/**/*.rs` and
+//! enforces the correctness contracts this codebase leans on but the
+//! compiler cannot check:
+//!
+//! * **unsafe-audit** — every `unsafe` carries an immediately
+//!   preceding `// SAFETY:` comment (or `/// # Safety` doc section),
+//!   and `unsafe` only appears in the allowlisted kernel modules
+//!   ([`rules::UNSAFE_MODULES`]).
+//! * **no-alloc** — regions fenced with `// qrr-audit: no-alloc` …
+//!   `// qrr-audit: end` (GEMM micro-kernels, the fused LAQ sweeps,
+//!   bit-pack word loops, `Encoder::encode_into`) must not allocate:
+//!   no `vec!`/`format!`, `.to_vec()`/`.clone()`/`.collect()`,
+//!   `Vec::new`/`Box::new`/`String::from`.
+//! * **no-panic** — regions fenced with `// qrr-audit: no-panic`
+//!   (the wire-format decode half, quantizer well-formedness and
+//!   `accepts` precondition checks) must not contain `.unwrap()`,
+//!   `.expect()`, or panicking macros; `debug_assert*` stays legal.
+//! * **env-once** — `std::env::var`/`var_os` only in the sanctioned
+//!   seams ([`rules::ENV_MODULES`]); everything else goes through the
+//!   cached accessors in [`crate::util::env`].
+//!
+//! The tree check additionally requires the *anchor* fences to exist
+//! (e.g. `net::wire` must fence its decoder), so deleting a pragma
+//! cannot silently disable a rule.
+//!
+//! Run it as `qrr audit [--check]` or via the dedicated binary
+//! `cargo run --bin qrr_audit -- --check` (CI's audit job). Without
+//! `--check` it reports and exits 0; with `--check` any finding is
+//! fatal. `--list-rules` prints the registry, `--root DIR` overrides
+//! the scanned tree (used by the CLI self-tests).
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::cli::Args;
+use rules::{FenceKind, FileCtx};
+
+/// One finding, addressed `file:line` with its rule name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Display path of the offending file.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: u32,
+    /// Rule name (one of [`rules::KNOWN_RULES`]).
+    pub rule: &'static str,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Map a path relative to `src/` onto the crate module path:
+/// `net/wire.rs` → `net::wire`, `exec/mod.rs` → `exec`,
+/// `lib.rs` → `""` (crate root), `bin/qrr_audit.rs` → `bin::qrr_audit`.
+pub fn module_path(rel: &Path) -> String {
+    let mut parts: Vec<&str> = rel
+        .iter()
+        .filter_map(|c| c.to_str())
+        .collect();
+    if let Some(last) = parts.last_mut() {
+        *last = last.strip_suffix(".rs").unwrap_or(last);
+    }
+    match parts.last().copied() {
+        Some("mod") => {
+            parts.pop();
+        }
+        Some("lib") if parts.len() == 1 => {
+            parts.pop();
+        }
+        _ => {}
+    }
+    parts.join("::")
+}
+
+/// Check a single source text (the fixture-friendly entry point: the
+/// self-tests feed synthetic sources through this). `file` is only
+/// used for diagnostics; `module` decides allowlist membership.
+pub fn check_source(file: &str, module: &str, src: &str) -> Vec<Diagnostic> {
+    rules::run_rules(&FileCtx::new(file, module, src))
+}
+
+/// Result of [`check_tree`].
+#[derive(Debug)]
+pub struct TreeReport {
+    /// All findings, per-file order then line order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// How many `.rs` files were scanned.
+    pub files_scanned: usize,
+}
+
+/// Modules that must contain at least one `no-panic` fence. These are
+/// the decode/precondition surfaces the crate promises stay panic-free
+/// on attacker-controlled bytes; the anchor check stops a pragma
+/// deletion from silently disabling the rule.
+const NO_PANIC_ANCHORS: &[&str] = &["net::wire", "quant::laq"];
+
+/// Modules that must contain at least one `no-alloc` fence (the hot
+/// kernel loops and the encoder hot path).
+const NO_ALLOC_ANCHORS: &[&str] = &["exec::simd", "linalg::matmul", "net::wire"];
+
+/// Walk every `.rs` file under `src_root`, run the registry on each,
+/// and verify the anchor fences exist.
+pub fn check_tree(src_root: &Path) -> anyhow::Result<TreeReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    files.sort();
+    let mut diagnostics = Vec::new();
+    let mut fences_by_module: Vec<(String, FenceKind)> = Vec::new();
+    let mut module_file: BTreeMap<String, String> = BTreeMap::new();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path.strip_prefix(src_root).unwrap_or(path);
+        let module = module_path(rel);
+        let display = path.display().to_string();
+        module_file.entry(module.clone()).or_insert_with(|| display.clone());
+        let ctx = FileCtx::new(&display, &module, &src);
+        for fence in &ctx.pragmas.fences {
+            fences_by_module.push((module.clone(), fence.kind));
+        }
+        diagnostics.extend(rules::run_rules(&ctx));
+    }
+    for (kind, anchors) in
+        [(FenceKind::NoPanic, NO_PANIC_ANCHORS), (FenceKind::NoAlloc, NO_ALLOC_ANCHORS)]
+    {
+        for module in anchors {
+            let present = fences_by_module.iter().any(|(m, k)| m == module && *k == kind);
+            if !present {
+                diagnostics.push(Diagnostic {
+                    file: module_file.get(*module).cloned().unwrap_or_else(|| module.to_string()),
+                    line: 1,
+                    rule: rules::RULE_PRAGMA,
+                    msg: format!(
+                        "module `{module}` must contain at least one `// qrr-audit: {}` fence \
+                         (anchor check)",
+                        kind.label()
+                    ),
+                });
+            }
+        }
+    }
+    Ok(TreeReport { diagnostics, files_scanned: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("reading dir {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `qrr audit` / `qrr_audit` entry point.
+pub fn run_cli(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("list-rules") {
+        print_rules();
+        return Ok(());
+    }
+    let root = args
+        .get("root")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("src"));
+    let report = check_tree(&root)?;
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    println!(
+        "qrr-audit: {} file(s) scanned, {} finding(s)",
+        report.files_scanned,
+        report.diagnostics.len()
+    );
+    if args.has_flag("check") && !report.diagnostics.is_empty() {
+        anyhow::bail!("qrr-audit --check failed with {} finding(s)", report.diagnostics.len());
+    }
+    Ok(())
+}
+
+fn print_rules() {
+    println!("qrr-audit rules:");
+    for rule in rules::REGISTRY {
+        println!("  {:<14} {}", rule.name, rule.summary);
+    }
+    println!("  {:<14} malformed fence/allow pragmas are findings themselves", rules::RULE_PRAGMA);
+    println!("\npragmas (plain `//` comments):");
+    println!("  // qrr-audit: no-alloc | no-panic    open a fence");
+    println!("  // qrr-audit: end                    close it");
+    println!("  // qrr-audit: allow(<rule>)          suppress <rule> on this line and the next");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn by_rule<'d>(diags: &'d [Diagnostic], rule: &str) -> Vec<&'d Diagnostic> {
+        diags.iter().filter(|d| d.rule == rule).collect()
+    }
+
+    // ---- unsafe-audit -------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_fires_twice_outside_allowlist() {
+        let src = "fn f(p: *const u8) {\n    unsafe { p.read_volatile() };\n}\n";
+        let out = check_source("fixture.rs", "fixture", src);
+        let hits = by_rule(&out, rules::RULE_UNSAFE);
+        // one finding for the missing SAFETY comment, one for the module
+        assert_eq!(hits.len(), 2);
+        assert!(hits.iter().all(|d| d.line == 2 && d.file == "fixture.rs"));
+        assert!(hits.iter().any(|d| d.msg.contains("SAFETY")));
+        assert!(hits.iter().any(|d| d.msg.contains("allowlist")));
+    }
+
+    #[test]
+    fn unsafe_with_safety_in_allowlisted_module_is_clean() {
+        let src = "fn f(p: *const u8) {\n    // SAFETY: p is valid for reads by contract.\n    unsafe { p.read_volatile() };\n}\n";
+        assert!(check_source("fixture.rs", "exec::simd", src).is_empty());
+    }
+
+    #[test]
+    fn trailing_safety_comment_on_the_same_line_counts() {
+        let src = "unsafe impl Send for X {} // SAFETY: no shared state.\n";
+        assert!(check_source("fixture.rs", "linalg::matmul", src).is_empty());
+    }
+
+    #[test]
+    fn allow_pragma_suppresses_unsafe_findings_on_next_line() {
+        let src = "// qrr-audit: allow(unsafe-audit)\nunsafe impl Send for X {}\n";
+        assert!(check_source("fixture.rs", "fixture", src).is_empty());
+        // but not two lines down
+        let src = "// qrr-audit: allow(unsafe-audit)\nfn g() {}\nunsafe fn f() {}\n";
+        let out = check_source("fixture.rs", "fixture", src);
+        assert!(out.iter().all(|d| d.line == 3));
+        assert!(!out.is_empty());
+    }
+
+    // ---- no-alloc -----------------------------------------------------
+
+    #[test]
+    fn no_alloc_fence_catches_every_denied_form() {
+        let src = r#"fn f() {
+    // qrr-audit: no-alloc
+    let a = vec![1];
+    let b = a.to_vec();
+    let c = b.clone();
+    let d: Vec<i32> = c.iter().copied().collect();
+    let e: Vec<i32> = Vec::new();
+    let f = Box::new(0);
+    let g = String::from("x");
+    let h = format!("{}", 1);
+    // qrr-audit: end
+    let outside = vec![2];
+}
+"#;
+        let out = check_source("fixture.rs", "fixture", src);
+        let hits = by_rule(&out, rules::RULE_NO_ALLOC);
+        let lines: Vec<u32> = hits.iter().map(|d| d.line).collect();
+        assert_eq!(lines, vec![3, 4, 5, 6, 7, 8, 9, 10]);
+        assert!(hits[0].msg.contains("`vec!`"));
+        assert!(hits[1].msg.contains("`.to_vec()`"));
+        assert!(hits[4].msg.contains("`Vec::new`"));
+        assert!(hits[6].msg.contains("`String::from`"));
+        // line 12 (`outside`) is past the fence — no finding there
+        assert!(out.iter().all(|d| d.line <= 10));
+    }
+
+    #[test]
+    fn no_alloc_permits_the_borrowed_forms() {
+        let src = "fn f(buf: &mut Vec<u8>, s: &[u8]) {\n    // qrr-audit: no-alloc\n    buf.copy_from_slice(s);\n    let x = s.len().min(4);\n    // qrr-audit: end\n}\n";
+        assert!(check_source("fixture.rs", "fixture", src).is_empty());
+    }
+
+    #[test]
+    fn allow_pragma_suppresses_one_alloc_line() {
+        let src = "fn f() {\n    // qrr-audit: no-alloc\n    // qrr-audit: allow(no-alloc)\n    let a = vec![1];\n    let b = vec![2];\n    // qrr-audit: end\n}\n";
+        let out = check_source("fixture.rs", "fixture", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 5);
+    }
+
+    // ---- no-panic -----------------------------------------------------
+
+    #[test]
+    fn no_panic_fence_catches_unwrap_expect_and_macros() {
+        let src = r#"fn f(o: Option<u8>) -> u8 {
+    // qrr-audit: no-panic
+    let a = o.unwrap();
+    let b = o.expect("boom");
+    assert!(a == b);
+    assert_eq!(a, b);
+    if a > 9 { panic!("no"); }
+    if b > 9 { unreachable!(); }
+    debug_assert!(a <= 9);
+    // qrr-audit: end
+    o.unwrap()
+}
+"#;
+        let out = check_source("fixture.rs", "fixture", src);
+        let hits = by_rule(&out, rules::RULE_NO_PANIC);
+        let lines: Vec<u32> = hits.iter().map(|d| d.line).collect();
+        // debug_assert! on line 9 is allowed; the unwrap on line 11 is
+        // outside the fence
+        assert_eq!(lines, vec![3, 4, 5, 6, 7, 8]);
+        assert!(hits[0].msg.contains("`.unwrap()`"));
+        assert!(hits[2].msg.contains("`assert!`"));
+    }
+
+    #[test]
+    fn words_in_strings_and_comments_never_fire() {
+        let src = "fn f() {\n    // qrr-audit: no-panic\n    let s = \"x.unwrap() panic! vec![]\"; // .unwrap() in prose\n    let t = s.len();\n    // qrr-audit: end\n}\n";
+        assert!(check_source("fixture.rs", "fixture", src).is_empty());
+    }
+
+    // ---- env-once -----------------------------------------------------
+
+    #[test]
+    fn env_var_outside_sanctioned_modules_fires() {
+        let src = "fn f() -> Option<String> {\n    std::env::var(\"QRR_X\").ok()\n}\n";
+        let out = check_source("fixture.rs", "fl::session", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].line, out[0].rule), (2, rules::RULE_ENV_ONCE));
+        assert!(out[0].msg.contains("sanctioned seams"));
+        // var_os too
+        let src2 = "fn f() { let _ = std::env::var_os(\"X\"); }\n";
+        assert_eq!(check_source("fixture.rs", "fl::session", src2).len(), 1);
+    }
+
+    #[test]
+    fn env_var_in_sanctioned_module_and_env_macro_are_clean() {
+        let src = "fn f() -> Option<String> { std::env::var(\"QRR_X\").ok() }\n";
+        assert!(check_source("fixture.rs", "util::env", src).is_empty());
+        // env!("...") is the compile-time macro, not a process read;
+        // set_var/remove_var (test-only mutations) are not reads
+        let src2 = "fn f() { let _ = env!(\"CARGO_PKG_VERSION\"); std::env::remove_var(\"X\"); }\n";
+        assert!(check_source("fixture.rs", "fl::session", src2).is_empty());
+    }
+
+    // ---- pragmas + plumbing -------------------------------------------
+
+    #[test]
+    fn unclosed_fence_is_a_finding_and_still_enforced() {
+        let src = "fn f(o: Option<u8>) {\n    // qrr-audit: no-panic\n    o.unwrap();\n}\n";
+        let out = check_source("fixture.rs", "fixture", src);
+        assert!(out.iter().any(|d| d.rule == rules::RULE_PRAGMA && d.line == 2));
+        assert!(out.iter().any(|d| d.rule == rules::RULE_NO_PANIC && d.line == 3));
+    }
+
+    #[test]
+    fn diagnostic_display_is_file_line_rule() {
+        let d = Diagnostic {
+            file: "src/net/wire.rs".into(),
+            line: 42,
+            rule: rules::RULE_NO_PANIC,
+            msg: "panic path in a no-panic region: `.unwrap()`".into(),
+        };
+        assert_eq!(
+            d.to_string(),
+            "src/net/wire.rs:42: [no-panic] panic path in a no-panic region: `.unwrap()`"
+        );
+    }
+
+    #[test]
+    fn module_paths_map_like_the_crate() {
+        let m = |s: &str| module_path(Path::new(s));
+        assert_eq!(m("net/wire.rs"), "net::wire");
+        assert_eq!(m("exec/mod.rs"), "exec");
+        assert_eq!(m("lib.rs"), "");
+        assert_eq!(m("main.rs"), "main");
+        assert_eq!(m("bin/qrr_audit.rs"), "bin::qrr_audit");
+    }
+
+    #[test]
+    fn the_crate_itself_passes_the_audit() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = check_tree(&root).expect("walk src tree");
+        assert!(report.files_scanned > 20, "expected the full tree, got {}", report.files_scanned);
+        let rendered: Vec<String> =
+            report.diagnostics.iter().map(|d| d.to_string()).collect();
+        assert!(rendered.is_empty(), "audit findings:\n{}", rendered.join("\n"));
+    }
+}

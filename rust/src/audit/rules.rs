@@ -1,0 +1,538 @@
+//! The rule registry and pragma/fence machinery for `qrr-audit`.
+//!
+//! Rules are lexical checks over a [`FileCtx`] — the tokenized source
+//! plus per-line classification tables. Regions of interest are marked
+//! in the source itself with pragma comments (plain `//` comments, not
+//! doc comments):
+//!
+//! ```text
+//! // qrr-audit: no-alloc      open an allocation-free fence
+//! // qrr-audit: no-panic      open a panic-free fence
+//! // qrr-audit: end           close the open fence
+//! // qrr-audit: allow(rule)   suppress `rule` on this line and the next
+//! ```
+//!
+//! Fences do not nest; an unclosed fence is itself a finding (and is
+//! still enforced to end-of-file, so forgetting `end` fails closed).
+//! The four rules and what they deny are documented on [`REGISTRY`].
+
+use super::lexer::{lex, Tok, Token};
+use super::Diagnostic;
+
+/// Rule name: `unsafe` hygiene (SAFETY comments + module allowlist).
+pub const RULE_UNSAFE: &str = "unsafe-audit";
+/// Rule name: allocation-free fenced regions.
+pub const RULE_NO_ALLOC: &str = "no-alloc";
+/// Rule name: panic-free fenced regions.
+pub const RULE_NO_PANIC: &str = "no-panic";
+/// Rule name: environment reads only in sanctioned modules.
+pub const RULE_ENV_ONCE: &str = "env-once";
+/// Pseudo-rule for malformed pragmas (stray `end`, unclosed fences,
+/// unknown directives).
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// Every rule name `allow(...)` accepts.
+pub const KNOWN_RULES: &[&str] =
+    &[RULE_UNSAFE, RULE_NO_ALLOC, RULE_NO_PANIC, RULE_ENV_ONCE, RULE_PRAGMA];
+
+/// Modules allowed to contain `unsafe` at all. Everything else must
+/// stay safe Rust — the point is that a reviewer knows exactly where
+/// to look.
+pub const UNSAFE_MODULES: &[&str] = &["exec::simd", "exec::pool", "linalg::matmul"];
+
+/// Modules allowed to read process environment variables
+/// (`std::env::var` / `var_os`). The cached accessors live in
+/// `util::env`; the exec seams read their knobs once at dispatch/pool
+/// init; `util::logging` reads `QRR_LOG` once.
+pub const ENV_MODULES: &[&str] =
+    &["exec", "exec::simd", "exec::pool", "util::env", "util::logging"];
+
+/// What kind of fence a pragma opened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FenceKind {
+    /// `// qrr-audit: no-alloc`
+    NoAlloc,
+    /// `// qrr-audit: no-panic`
+    NoPanic,
+}
+
+impl FenceKind {
+    /// The pragma spelling (also the rule name that polices the fence).
+    pub fn label(self) -> &'static str {
+        match self {
+            FenceKind::NoAlloc => RULE_NO_ALLOC,
+            FenceKind::NoPanic => RULE_NO_PANIC,
+        }
+    }
+}
+
+/// One fenced region, inclusive of the pragma lines themselves.
+#[derive(Debug, Clone, Copy)]
+pub struct Fence {
+    /// Fence kind.
+    pub kind: FenceKind,
+    /// Line of the opening pragma.
+    pub start: u32,
+    /// Line of the closing pragma (`u32::MAX` when unclosed — the
+    /// fence is still enforced to end-of-file).
+    pub end: u32,
+}
+
+/// Parsed pragma comments of one file.
+#[derive(Debug, Default)]
+pub struct Pragmas {
+    /// Closed (or EOF-truncated) fenced regions.
+    pub fences: Vec<Fence>,
+    /// `(line, rule)` suppressions: rule findings on `line` and
+    /// `line + 1` are dropped.
+    pub allows: Vec<(u32, String)>,
+    /// Malformed-pragma findings (reported under [`RULE_PRAGMA`]).
+    pub errors: Vec<Diagnostic>,
+}
+
+/// Tokenized source plus the per-line tables the rules consult.
+#[derive(Debug)]
+pub struct FileCtx<'a> {
+    /// Display path used in diagnostics.
+    pub file: String,
+    /// `::`-separated module path (`""` for the crate root).
+    pub module: String,
+    /// Raw source lines (for attribute-line detection).
+    pub lines: Vec<&'a str>,
+    /// The token stream.
+    pub tokens: Vec<Token>,
+    /// Parsed pragmas.
+    pub pragmas: Pragmas,
+    line_code: Vec<bool>,
+    line_comment: Vec<bool>,
+    line_safety: Vec<bool>,
+}
+
+impl<'a> FileCtx<'a> {
+    /// Lex `src` and build the line tables and pragmas.
+    pub fn new(file: &str, module: &str, src: &'a str) -> FileCtx<'a> {
+        let tokens = lex(src);
+        let lines: Vec<&str> = src.lines().collect();
+        let n = lines
+            .len()
+            .max(tokens.last().map(|t| t.end_line as usize).unwrap_or(0));
+        let mut line_code = vec![false; n];
+        let mut line_comment = vec![false; n];
+        let mut line_safety = vec![false; n];
+        for t in &tokens {
+            let span = (t.line as usize - 1)..(t.end_line as usize).min(n);
+            let (is_comment, safety) = match &t.tok {
+                Tok::LineComment(s) | Tok::BlockComment(s) => {
+                    (true, s.contains("SAFETY:") || s.contains("# Safety"))
+                }
+                _ => (false, false),
+            };
+            for l in span {
+                if is_comment {
+                    line_comment[l] = true;
+                    line_safety[l] |= safety;
+                } else {
+                    line_code[l] = true;
+                }
+            }
+        }
+        let pragmas = parse_pragmas(file, &tokens);
+        FileCtx {
+            file: file.to_string(),
+            module: module.to_string(),
+            lines,
+            tokens,
+            pragmas,
+            line_code,
+            line_comment,
+            line_safety,
+        }
+    }
+
+    fn diag(&self, rule: &'static str, line: u32, msg: String) -> Diagnostic {
+        Diagnostic { file: self.file.clone(), line, rule, msg }
+    }
+
+    fn flag(&self, table: &[bool], line: u32) -> bool {
+        table.get(line as usize - 1).copied().unwrap_or(false)
+    }
+
+    /// Is the `unsafe` on `line` covered by a SAFETY comment? True when
+    /// a comment on the same line, or on the contiguous run of
+    /// comment/attribute lines immediately above, contains `SAFETY:` or
+    /// `# Safety`. Blank lines and ordinary code lines break the run.
+    fn safety_covered(&self, line: u32) -> bool {
+        if self.flag(&self.line_safety, line) {
+            return true;
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            if self.flag(&self.line_safety, l) {
+                return true;
+            }
+            if self.flag(&self.line_code, l) {
+                let raw = self.lines.get(l as usize - 1).map_or("", |s| s.trim_start());
+                if raw.starts_with("#[") || raw.starts_with("#![") {
+                    continue; // attributes sit between the comment and the item
+                }
+                return false;
+            }
+            if self.flag(&self.line_comment, l) {
+                continue; // a multi-line comment: keep looking for its SAFETY line
+            }
+            return false; // blank line: not "immediately preceding"
+        }
+        false
+    }
+
+    /// Code tokens only (comments stripped), for adjacency matching.
+    fn code_tokens(&self) -> Vec<&Token> {
+        self.tokens
+            .iter()
+            .filter(|t| !matches!(t.tok, Tok::LineComment(_) | Tok::BlockComment(_)))
+            .collect()
+    }
+
+    fn in_fence(&self, kind: FenceKind, line: u32) -> bool {
+        self.pragmas
+            .fences
+            .iter()
+            .any(|f| f.kind == kind && f.start <= line && line <= f.end)
+    }
+}
+
+fn parse_pragmas(file: &str, tokens: &[Token]) -> Pragmas {
+    let mut p = Pragmas::default();
+    let mut open: Option<(FenceKind, u32)> = None;
+    let err = |line: u32, msg: String| Diagnostic {
+        file: file.to_string(),
+        line,
+        rule: RULE_PRAGMA,
+        msg,
+    };
+    for t in tokens {
+        let Tok::LineComment(text) = &t.tok else { continue };
+        let Some(rest) = text.trim_start().strip_prefix("qrr-audit:") else {
+            continue;
+        };
+        let directive = rest.trim();
+        match directive {
+            "no-alloc" | "no-panic" => {
+                let kind = if directive == "no-alloc" {
+                    FenceKind::NoAlloc
+                } else {
+                    FenceKind::NoPanic
+                };
+                if let Some((prev, start)) = open.take() {
+                    p.errors.push(err(
+                        t.line,
+                        format!(
+                            "fence opened while the `{}` fence from line {start} is still open \
+                             (fences do not nest)",
+                            prev.label()
+                        ),
+                    ));
+                    p.fences.push(Fence { kind: prev, start, end: t.line });
+                }
+                open = Some((kind, t.line));
+            }
+            "end" => match open.take() {
+                Some((kind, start)) => p.fences.push(Fence { kind, start, end: t.line }),
+                None => {
+                    p.errors.push(err(t.line, "`qrr-audit: end` with no open fence".to_string()))
+                }
+            },
+            _ => {
+                if let Some(rule) =
+                    directive.strip_prefix("allow(").and_then(|s| s.strip_suffix(')'))
+                {
+                    let rule = rule.trim();
+                    if KNOWN_RULES.contains(&rule) {
+                        p.allows.push((t.line, rule.to_string()));
+                    } else {
+                        p.errors.push(err(
+                            t.line,
+                            format!(
+                                "allow({rule}) names an unknown rule (known: {})",
+                                KNOWN_RULES.join(", ")
+                            ),
+                        ));
+                    }
+                } else {
+                    p.errors.push(err(
+                        t.line,
+                        format!(
+                            "unknown qrr-audit directive `{directive}` \
+                             (expected no-alloc, no-panic, end, or allow(<rule>))"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if let Some((kind, start)) = open {
+        p.errors.push(err(
+            start,
+            format!("`{}` fence is never closed with `qrr-audit: end`", kind.label()),
+        ));
+        // fail closed: enforce the fence to end-of-file anyway
+        p.fences.push(Fence { kind, start, end: u32::MAX });
+    }
+    p
+}
+
+/// One registered rule.
+#[derive(Debug)]
+pub struct Rule {
+    /// Stable rule name (used in diagnostics and `allow(...)`).
+    pub name: &'static str,
+    /// One-line description for `--list-rules`.
+    pub summary: &'static str,
+    /// The check itself.
+    pub check: fn(&FileCtx) -> Vec<Diagnostic>,
+}
+
+/// The rule registry, in reporting order.
+pub const REGISTRY: &[Rule] = &[
+    Rule {
+        name: RULE_UNSAFE,
+        summary: "every `unsafe` needs an immediately preceding SAFETY comment, and may \
+                  only appear in exec::simd, exec::pool, linalg::matmul",
+        check: check_unsafe,
+    },
+    Rule {
+        name: RULE_NO_ALLOC,
+        summary: "inside `// qrr-audit: no-alloc` fences: no vec!/format!, .to_vec/.clone/\
+                  .collect, Vec::new/Box::new/String::from",
+        check: check_no_alloc,
+    },
+    Rule {
+        name: RULE_NO_PANIC,
+        summary: "inside `// qrr-audit: no-panic` fences: no .unwrap/.expect or panicking \
+                  macros (panic!/assert!/unreachable!/todo!); debug_assert* is allowed",
+        check: check_no_panic,
+    },
+    Rule {
+        name: RULE_ENV_ONCE,
+        summary: "std::env::var / var_os only in the sanctioned seams (util::env, \
+                  util::logging, exec dispatch/pool init)",
+        check: check_env_once,
+    },
+];
+
+fn check_unsafe(ctx: &FileCtx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let allowed_module = UNSAFE_MODULES.contains(&ctx.module.as_str());
+    for t in &ctx.tokens {
+        let Tok::Ident(name) = &t.tok else { continue };
+        if name != "unsafe" {
+            continue;
+        }
+        if !allowed_module {
+            out.push(ctx.diag(
+                RULE_UNSAFE,
+                t.line,
+                format!(
+                    "`unsafe` in module `{}`, which is not on the unsafe allowlist ({})",
+                    ctx.module,
+                    UNSAFE_MODULES.join(", ")
+                ),
+            ));
+        }
+        if !ctx.safety_covered(t.line) {
+            out.push(ctx.diag(
+                RULE_UNSAFE,
+                t.line,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment \
+                 (or `/// # Safety` doc section)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Shared scanner for the two fence rules: flag macro calls
+/// (`name!`), method calls (`.name(`), and two-segment paths
+/// (`First::second`) inside fences of `kind`.
+fn scan_fence(
+    ctx: &FileCtx,
+    kind: FenceKind,
+    rule: &'static str,
+    what: &str,
+    macros: &[&str],
+    methods: &[&str],
+    paths: &[(&str, &str)],
+) -> Vec<Diagnostic> {
+    let code = ctx.code_tokens();
+    let punct_at = |i: usize, c: char| matches!(code.get(i), Some(t) if t.tok == Tok::Punct(c));
+    let ident_at = |i: usize| match code.get(i) {
+        Some(t) => match &t.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        },
+        None => None,
+    };
+    let mut out = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        let Tok::Ident(name) = &t.tok else { continue };
+        if !ctx.in_fence(kind, t.line) {
+            continue;
+        }
+        let name = name.as_str();
+        if macros.contains(&name) && punct_at(i + 1, '!') {
+            out.push(ctx.diag(rule, t.line, format!("{what}: `{name}!`")));
+        } else if methods.contains(&name) && i > 0 && punct_at(i - 1, '.') {
+            out.push(ctx.diag(rule, t.line, format!("{what}: `.{name}()`")));
+        } else if let Some((_, second)) = paths.iter().find(|(first, _)| *first == name) {
+            if punct_at(i + 1, ':') && punct_at(i + 2, ':') && ident_at(i + 3) == Some(second) {
+                out.push(ctx.diag(rule, t.line, format!("{what}: `{name}::{second}`")));
+            }
+        }
+    }
+    out
+}
+
+fn check_no_alloc(ctx: &FileCtx) -> Vec<Diagnostic> {
+    scan_fence(
+        ctx,
+        FenceKind::NoAlloc,
+        RULE_NO_ALLOC,
+        "allocation in a no-alloc region",
+        &["vec", "format"],
+        &["to_vec", "clone", "collect"],
+        &[("Vec", "new"), ("Box", "new"), ("String", "from")],
+    )
+}
+
+fn check_no_panic(ctx: &FileCtx) -> Vec<Diagnostic> {
+    scan_fence(
+        ctx,
+        FenceKind::NoPanic,
+        RULE_NO_PANIC,
+        "panic path in a no-panic region",
+        &["panic", "assert", "assert_eq", "assert_ne", "unreachable", "todo", "unimplemented"],
+        &["unwrap", "expect"],
+        &[],
+    )
+}
+
+fn check_env_once(ctx: &FileCtx) -> Vec<Diagnostic> {
+    if ENV_MODULES.contains(&ctx.module.as_str()) {
+        return Vec::new();
+    }
+    let code = ctx.code_tokens();
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        let Tok::Ident(name) = &code[i].tok else { continue };
+        if name != "env" {
+            continue;
+        }
+        let is = |j: usize, want: &Tok| matches!(code.get(j), Some(t) if t.tok == *want);
+        let reader = match code.get(i + 3).map(|t| &t.tok) {
+            Some(Tok::Ident(m)) if m == "var" || m == "var_os" => m.clone(),
+            _ => continue,
+        };
+        if is(i + 1, &Tok::Punct(':')) && is(i + 2, &Tok::Punct(':')) {
+            out.push(ctx.diag(
+                RULE_ENV_ONCE,
+                code[i].line,
+                format!(
+                    "`std::env::{reader}` in module `{}` — environment reads belong in the \
+                     sanctioned seams ({})",
+                    ctx.module,
+                    ENV_MODULES.join(", ")
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Run every registered rule plus the pragma-error findings, apply
+/// `allow(...)` suppressions, and return the findings sorted by line.
+pub fn run_rules(ctx: &FileCtx) -> Vec<Diagnostic> {
+    let mut out: Vec<Diagnostic> = ctx.pragmas.errors.clone();
+    for rule in REGISTRY {
+        out.extend((rule.check)(ctx));
+    }
+    out.retain(|d| {
+        !ctx.pragmas
+            .allows
+            .iter()
+            .any(|(line, rule)| rule == d.rule && (d.line == *line || d.line == *line + 1))
+    });
+    out.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fences_parse_with_lines() {
+        let src = "fn f() {\n// qrr-audit: no-alloc\nlet x = 1;\n// qrr-audit: end\n}\n";
+        let ctx = FileCtx::new("t.rs", "m", src);
+        assert!(ctx.pragmas.errors.is_empty());
+        assert_eq!(ctx.pragmas.fences.len(), 1);
+        let f = ctx.pragmas.fences[0];
+        assert_eq!((f.kind, f.start, f.end), (FenceKind::NoAlloc, 2, 4));
+    }
+
+    #[test]
+    fn unclosed_fence_fails_closed() {
+        let src = "// qrr-audit: no-panic\nfn f() {}\n";
+        let ctx = FileCtx::new("t.rs", "m", src);
+        assert_eq!(ctx.pragmas.errors.len(), 1);
+        assert!(ctx.pragmas.errors[0].msg.contains("never closed"));
+        // the fence still covers the rest of the file
+        assert!(ctx.in_fence(FenceKind::NoPanic, 2));
+    }
+
+    #[test]
+    fn stray_end_and_unknown_directive_are_reported() {
+        let src = "// qrr-audit: end\n// qrr-audit: frobnicate\n// qrr-audit: allow(nope)\n";
+        let ctx = FileCtx::new("t.rs", "m", src);
+        let msgs: Vec<&str> = ctx.pragmas.errors.iter().map(|d| d.msg.as_str()).collect();
+        assert_eq!(ctx.pragmas.errors.len(), 3);
+        assert!(msgs[0].contains("no open fence"));
+        assert!(msgs[1].contains("unknown qrr-audit directive"));
+        assert!(msgs[2].contains("unknown rule"));
+    }
+
+    #[test]
+    fn nested_fence_open_is_reported_and_split() {
+        let src = "// qrr-audit: no-alloc\nlet a = 1;\n// qrr-audit: no-panic\nlet b = 2;\n// qrr-audit: end\n";
+        let ctx = FileCtx::new("t.rs", "m", src);
+        assert_eq!(ctx.pragmas.errors.len(), 1);
+        assert!(ctx.pragmas.errors[0].msg.contains("do not nest"));
+        // both regions survive: the first truncated at the second open
+        assert!(ctx.in_fence(FenceKind::NoAlloc, 2));
+        assert!(ctx.in_fence(FenceKind::NoPanic, 4));
+        assert!(!ctx.in_fence(FenceKind::NoAlloc, 4));
+    }
+
+    #[test]
+    fn pragmas_in_strings_and_doc_comments_are_inert() {
+        let src = "let s = \"// qrr-audit: no-alloc\";\n/// qrr-audit: no-panic\nfn f() {}\n";
+        let ctx = FileCtx::new("t.rs", "m", src);
+        assert!(ctx.pragmas.fences.is_empty());
+        assert!(ctx.pragmas.errors.is_empty());
+    }
+
+    #[test]
+    fn safety_walk_skips_attributes_and_stops_at_blank_lines() {
+        let covered = "/// # Safety\n/// caller upholds x\n#[inline]\npub unsafe fn f() {}\n";
+        let ctx = FileCtx::new("t.rs", "exec::simd", covered);
+        assert!(run_rules(&ctx).is_empty());
+
+        let gap = "// SAFETY: stale\n\nunsafe fn f() {}\n";
+        let ctx = FileCtx::new("t.rs", "exec::simd", gap);
+        let out = run_rules(&ctx);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 3);
+        assert_eq!(out[0].rule, RULE_UNSAFE);
+    }
+}

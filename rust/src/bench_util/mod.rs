@@ -163,6 +163,7 @@ fn fmt_count(x: f64) -> String {
 }
 
 /// Benchmark runner with a time budget per case.
+#[derive(Debug)]
 pub struct Bench {
     /// warmup duration before sampling
     pub warmup: Duration,
@@ -198,7 +199,7 @@ impl Bench {
 
     /// [`Bench::fast`] when `QRR_BENCH_FAST` is set, else the default.
     pub fn from_env() -> Self {
-        if std::env::var("QRR_BENCH_FAST").is_ok() {
+        if crate::util::env::bench_fast() {
             Bench::fast()
         } else {
             Bench::default()

@@ -17,6 +17,7 @@ use super::{Bench, BenchResult};
 pub const SCHEMA: &str = "qrr-bench/1";
 
 /// A running suite: a name, a sampler, and the results so far.
+#[derive(Debug)]
 pub struct Suite {
     name: String,
     bench: Bench,

@@ -391,10 +391,7 @@ pub fn fixed_p_lineup() -> Vec<SchemeConfig> {
 /// runner; prints timings + the paper-shaped markdown table and the
 /// QRR/SGD bit ratios. Scale with `QRR_BENCH_ITERS` (default 40).
 pub fn run_table_bench(name: &str, base: ExperimentConfig, schemes: &[SchemeConfig]) {
-    let iters: u64 = std::env::var("QRR_BENCH_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(40);
+    let iters: u64 = crate::util::env::bench_iters().unwrap_or(40);
     let mut suite = Suite::new(name, Bench::from_env());
     let mut rows: Vec<TableRow> = Vec::new();
     println!("== {name} (reduced: {iters} iterations; QRR_BENCH_ITERS to change) ==");
@@ -445,7 +442,7 @@ pub fn run_standalone(name: &str, cases: impl FnOnce(&mut Suite)) -> SuiteReport
 /// that env var is set — the opt-in JSON trail for the `cargo bench`
 /// binaries; `qrr bench` writes unconditionally.
 pub fn maybe_write_json(report: &SuiteReport) {
-    if let Ok(dir) = std::env::var("QRR_BENCH_JSON") {
+    if let Some(dir) = crate::util::env::bench_json_dir() {
         let path = format!("{}/BENCH_{}.json", dir, report.suite);
         let write = || -> anyhow::Result<()> {
             std::fs::create_dir_all(&dir)
@@ -481,7 +478,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    let fast = args.has_flag("fast") || std::env::var("QRR_BENCH_FAST").is_ok();
+    let fast = args.has_flag("fast") || crate::util::env::bench_fast();
     let out_dir = args.get("out").unwrap_or(".");
     let check = args.has_flag("check");
     let threshold = args

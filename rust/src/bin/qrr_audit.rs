@@ -1,0 +1,17 @@
+//! `qrr_audit` — standalone entry point for the static-analysis gate
+//! (the same checker as `qrr audit`; CI runs this binary).
+//!
+//! ```text
+//! qrr_audit [--check] [--list-rules] [--root DIR]
+//! ```
+//!
+//! Without `--check` it reports findings and exits 0; with `--check`
+//! any finding exits 1. See `qrr::audit` for the rules.
+
+fn main() {
+    let args = qrr::cli::Args::parse(std::env::args().skip(1));
+    if let Err(e) = qrr::audit::run_cli(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

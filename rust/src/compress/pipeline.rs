@@ -83,6 +83,7 @@ pub trait Quantizer: Send + Sync {
 
 /// The do-nothing stage: as a reducer it claims every shape as dense
 /// (no factorization); as a quantizer it sends raw f32.
+#[derive(Debug)]
 pub struct Identity;
 
 impl RankReducer for Identity {
@@ -107,6 +108,7 @@ impl Quantizer for Identity {
 
 /// Truncated SVD at rank ν = ⌈p·min(m,n)⌉ for matrix parameters
 /// (paper eq. (20)/(22)); does not apply to other ranks.
+#[derive(Debug)]
 pub struct Svd {
     /// fraction of the original rank retained, in (0, 1]
     pub p: f64,
@@ -125,6 +127,7 @@ impl RankReducer for Svd {
 
 /// Tucker/HOSVD at per-mode ranks rᵢ = ⌈p·Iᵢ⌉ for parameters of 3+
 /// modes (paper eq. (21)/(23)).
+#[derive(Debug)]
 pub struct Tucker {
     /// fraction of each mode's rank retained, in (0, 1]
     pub p: f64,
@@ -146,6 +149,7 @@ impl RankReducer for Tucker {
 /// and reconstruction in one pass, DESIGN.md §8); codes are identical
 /// on every dispatch level, so pipeline wire bytes never depend on
 /// `QRR_SIMD`.
+#[derive(Debug)]
 pub struct Laq {
     /// bits per element, 1..=16
     pub beta: u8,
@@ -570,6 +574,7 @@ fn arg_beta_or(args: &[(String, String)], default: u8, allowed: &[&str], tok: &s
 // ------------------------------------------------------------ registry
 
 /// One registered preset: a name resolving to a full spec.
+#[derive(Debug)]
 pub struct PresetInfo {
     /// registry name (what configs/CLI write)
     pub name: &'static str,
@@ -606,6 +611,7 @@ pub fn presets() -> Vec<PresetInfo> {
 }
 
 /// One registered stage of the spec grammar.
+#[derive(Debug)]
 pub struct StageInfo {
     /// grammar form
     pub signature: &'static str,
@@ -656,6 +662,7 @@ pub struct BuildCtx {
 
 /// A spec compiled against a model's parameter shapes; vends the
 /// mirrored [`PipelineClient`] / [`PipelineServer`] halves.
+#[derive(Debug)]
 pub struct CompressionPipeline {
     spec: PipelineSpec,
     label: String,
@@ -833,6 +840,7 @@ impl RawCodec {
     /// True when every message matches this codec's plans — kinds and
     /// factor dimensions — so [`decode`](Self::decode) cannot panic on
     /// externally controlled input.
+    // qrr-audit: no-panic
     fn accepts(&self, msgs: &[ParamMsg]) -> bool {
         if msgs.len() != self.plans.len() {
             return false;
@@ -864,6 +872,7 @@ impl RawCodec {
                 _ => false,
             })
     }
+    // qrr-audit: end
 
     fn encode(&self, tensors: &[Tensor]) -> Vec<ParamMsg> {
         assert_eq!(tensors.len(), self.plans.len(), "tensor count mismatch");
@@ -909,6 +918,7 @@ impl RawCodec {
 
 // --------------------------------------------------------------- halves
 
+#[derive(Debug)]
 enum EncCore {
     Raw(RawCodec),
     Laq(ClientCodec),
@@ -933,6 +943,7 @@ impl EncCore {
     }
 }
 
+#[derive(Debug)]
 enum DecCore {
     Raw(RawCodec),
     Laq(ServerCodec),
@@ -941,12 +952,14 @@ enum DecCore {
 impl DecCore {
     /// Whether `msgs` matches this decoder's plans/states exactly (the
     /// no-panic precondition for [`decode`](Self::decode)).
+    // qrr-audit: no-panic
     fn accepts(&self, msgs: &[ParamMsg]) -> bool {
         match self {
             DecCore::Raw(c) => c.accepts(msgs),
             DecCore::Laq(c) => c.accepts(msgs),
         }
     }
+    // qrr-audit: end
 
     fn decode(&mut self, msgs: &[ParamMsg]) -> Vec<Tensor> {
         match self {
@@ -963,6 +976,7 @@ impl DecCore {
     }
 }
 
+#[derive(Debug)]
 enum ClientCore {
     Sgd,
     Lazy(SlaqClient),
@@ -971,6 +985,7 @@ enum ClientCore {
 
 /// The client half of a compiled pipeline: this round's gradients in,
 /// wire update out (`None` = lazily skipped).
+#[derive(Debug)]
 pub struct PipelineClient {
     label: String,
     core: ClientCore,
@@ -1006,6 +1021,7 @@ impl PipelineClient {
     }
 }
 
+#[derive(Debug)]
 enum ServerCore {
     Sgd { shapes: Vec<Vec<usize>> },
     Lazy(SlaqServerState),
@@ -1014,6 +1030,7 @@ enum ServerCore {
 
 /// The server half of a compiled pipeline, one instance per client:
 /// wire update (or its absence) in, reconstructed gradients out.
+#[derive(Debug)]
 pub struct PipelineServer {
     label: String,
     core: ServerCore,
@@ -1095,6 +1112,7 @@ impl PipelineServer {
 /// currently hold, and advances the shadow by its own reconstruction —
 /// so the next delta automatically re-sends this round's compression
 /// error.
+#[derive(Debug)]
 pub struct DownlinkEncoder {
     enc: EncCore,
     mirror: DecCore,
@@ -1153,6 +1171,7 @@ impl DownlinkEncoder {
 /// Client side of downlink compression: decodes each broadcast delta
 /// and locally reconstructs the model. Must stay in lock-step with the
 /// server's [`DownlinkEncoder`] (same spec, same `init`).
+#[derive(Debug)]
 pub struct DownlinkDecoder {
     dec: DecCore,
     params: Vec<Tensor>,

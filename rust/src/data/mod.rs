@@ -180,7 +180,7 @@ impl DatasetKind {
 pub fn load(kind: DatasetKind, train_n: usize, test_n: usize, seed: u64) -> (Dataset, Dataset) {
     match kind {
         DatasetKind::Mnist => {
-            if let Ok(dir) = std::env::var("MNIST_DIR") {
+            if let Some(dir) = crate::util::env::mnist_dir() {
                 match mnist::load_dir(&dir) {
                     Ok((tr, te)) => return (tr, te),
                     Err(e) => log::warn!("MNIST_DIR set but load failed ({e}); using synthetic"),
@@ -189,7 +189,7 @@ pub fn load(kind: DatasetKind, train_n: usize, test_n: usize, seed: u64) -> (Dat
             synth::mnist_like_pair(train_n, test_n, seed)
         }
         DatasetKind::Cifar10 => {
-            if let Ok(dir) = std::env::var("CIFAR_DIR") {
+            if let Some(dir) = crate::util::env::cifar_dir() {
                 match cifar::load_dir(&dir) {
                     Ok((tr, te)) => return (tr, te),
                     Err(e) => log::warn!("CIFAR_DIR set but load failed ({e}); using synthetic"),

@@ -25,6 +25,7 @@ type PanicSlot = Mutex<Option<Box<dyn Any + Send>>>;
 const WORKER_NAME_PREFIX: &str = "qrr-worker-";
 
 /// Fixed-size pool of worker threads executing boxed jobs.
+#[derive(Debug)]
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,

@@ -166,6 +166,9 @@ pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
 
 /// `acc[i] += x[i]` — the aggregation sum. Bit-exact across dispatch
 /// levels.
+// The aggregation inner loop: runs once per client per round over every
+// parameter — dispatch and kernel must not allocate.
+// qrr-audit: no-alloc
 pub fn sum_into(acc: &mut [f32], x: &[f32]) {
     assert_eq!(acc.len(), x.len(), "sum_into length mismatch");
     sum_into_unchecked(acc, x);
@@ -182,6 +185,7 @@ fn sum_into_unchecked(acc: &mut [f32], x: &[f32]) {
     }
     scalar::sum_into(acc, x)
 }
+// qrr-audit: end
 
 /// `a[i] *= alpha` — factor/step scaling. Bit-exact across dispatch
 /// levels.
@@ -254,6 +258,9 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 ///
 /// `radius` must be finite and positive (the degenerate `R = 0` grid is
 /// the caller's fast path); all slices must share one length.
+// The fused quantize/dequantize sweeps run on every wire payload;
+// callers pass reused buffers and the pass itself must not allocate.
+// qrr-audit: no-alloc
 pub fn laq_quantize(
     g: &[f32],
     prev: &[f32],
@@ -303,6 +310,7 @@ pub fn laq_dequantize(codes: &[u32], prev: &[f32], radius: f32, beta: u8, out: &
     }
     scalar::laq_dequantize(codes, prev, radius, beta, out)
 }
+// qrr-audit: end
 
 // -------------------------------------------------------- bit packing
 
@@ -350,6 +358,9 @@ pub fn unpack_codes_into(bytes: &[u8], n: usize, beta: u8, out: &mut Vec<u32>) {
     }
 }
 
+// Word-at-a-time packing loops: the wrappers above size the buffers;
+// the loops themselves only shift, mask and push.
+// qrr-audit: no-alloc
 /// β = 8: one code per byte.
 fn pack_beta8(codes: &[u32], out: &mut [u8]) {
     for (o, &c) in out.iter_mut().zip(codes.iter()) {
@@ -458,6 +469,7 @@ fn unpack_generic(bytes: &[u8], n: usize, beta: u8, out: &mut Vec<u32>) {
         fill -= b;
     }
 }
+// qrr-audit: end
 
 // ------------------------------------------------------------- scalar
 
@@ -496,12 +508,14 @@ pub mod scalar {
     }
 
     /// `acc[i] += x[i]`.
+    // qrr-audit: no-alloc
     pub fn sum_into(acc: &mut [f32], x: &[f32]) {
         debug_assert_eq!(acc.len(), x.len());
         for (a, &xi) in acc.iter_mut().zip(x.iter()) {
             *a += xi;
         }
     }
+    // qrr-audit: end
 
     /// `a[i] *= alpha`.
     pub fn scale(a: &mut [f32], alpha: f32) {
@@ -533,6 +547,7 @@ pub mod scalar {
 
     /// Fused LAQ quantize sweep; see [`super::laq_quantize`]. The grid
     /// math is f64 exactly as the paper-reproduction loop always was.
+    // qrr-audit: no-alloc
     pub fn laq_quantize(
         g: &[f32],
         prev: &[f32],
@@ -568,6 +583,7 @@ pub mod scalar {
             *o = *p + (step * q as f64 - r) as f32;
         }
     }
+    // qrr-audit: end
 }
 
 // --------------------------------------------------------------- avx2
@@ -587,23 +603,26 @@ pub mod avx2 {
     /// Requires avx2+fma (see the module contract).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let chunks = n / 8;
-        let mut acc = _mm256_setzero_ps();
-        for c in 0..chunks {
-            let x = _mm256_loadu_ps(a.as_ptr().add(c * 8));
-            let y = _mm256_loadu_ps(b.as_ptr().add(c * 8));
-            acc = _mm256_fmadd_ps(x, y, acc);
+        // SAFETY: caller guarantees avx2+fma; loads stay within a/b (chunks*8 <= len).
+        unsafe {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let chunks = n / 8;
+            let mut acc = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let x = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+                let y = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+                acc = _mm256_fmadd_ps(x, y, acc);
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+            let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+                + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+            for j in chunks * 8..n {
+                s += a[j] * b[j];
+            }
+            s
         }
-        let mut lanes = [0f32; 8];
-        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
-        let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
-            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
-        for j in chunks * 8..n {
-            s += a[j] * b[j];
-        }
-        s
     }
 
     /// `y[i] += alpha · x[i]`, deliberately mul+add (not FMA) so the
@@ -613,18 +632,21 @@ pub mod avx2 {
     /// Requires avx2+fma (see the module contract).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
-        debug_assert_eq!(y.len(), x.len());
-        let n = y.len();
-        let a = _mm256_set1_ps(alpha);
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let yp = y.as_mut_ptr().add(c * 8);
-            let yv = _mm256_loadu_ps(yp);
-            let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
-            _mm256_storeu_ps(yp, _mm256_add_ps(yv, _mm256_mul_ps(a, xv)));
-        }
-        for j in chunks * 8..n {
-            y[j] += alpha * x[j];
+        // SAFETY: caller guarantees avx2+fma; loads/stores stay within y/x (chunks*8 <= len).
+        unsafe {
+            debug_assert_eq!(y.len(), x.len());
+            let n = y.len();
+            let a = _mm256_set1_ps(alpha);
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let yp = y.as_mut_ptr().add(c * 8);
+                let yv = _mm256_loadu_ps(yp);
+                let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
+                _mm256_storeu_ps(yp, _mm256_add_ps(yv, _mm256_mul_ps(a, xv)));
+            }
+            for j in chunks * 8..n {
+                y[j] += alpha * x[j];
+            }
         }
     }
 
@@ -632,21 +654,26 @@ pub mod avx2 {
     ///
     /// # Safety
     /// Requires avx2+fma (see the module contract).
+    // qrr-audit: no-alloc
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn sum_into(acc: &mut [f32], x: &[f32]) {
-        debug_assert_eq!(acc.len(), x.len());
-        let n = acc.len();
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let ap = acc.as_mut_ptr().add(c * 8);
-            let av = _mm256_loadu_ps(ap);
-            let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
-            _mm256_storeu_ps(ap, _mm256_add_ps(av, xv));
-        }
-        for j in chunks * 8..n {
-            acc[j] += x[j];
+        // SAFETY: caller guarantees avx2+fma; loads/stores stay within acc/x (chunks*8 <= len).
+        unsafe {
+            debug_assert_eq!(acc.len(), x.len());
+            let n = acc.len();
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let ap = acc.as_mut_ptr().add(c * 8);
+                let av = _mm256_loadu_ps(ap);
+                let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
+                _mm256_storeu_ps(ap, _mm256_add_ps(av, xv));
+            }
+            for j in chunks * 8..n {
+                acc[j] += x[j];
+            }
         }
     }
+    // qrr-audit: end
 
     /// `a[i] *= alpha`, bit-exact with the scalar path.
     ///
@@ -654,15 +681,18 @@ pub mod avx2 {
     /// Requires avx2+fma (see the module contract).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn scale(a: &mut [f32], alpha: f32) {
-        let n = a.len();
-        let m = _mm256_set1_ps(alpha);
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let p = a.as_mut_ptr().add(c * 8);
-            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), m));
-        }
-        for j in chunks * 8..n {
-            a[j] *= alpha;
+        // SAFETY: caller guarantees avx2+fma; loads/stores stay within a (chunks*8 <= len).
+        unsafe {
+            let n = a.len();
+            let m = _mm256_set1_ps(alpha);
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let p = a.as_mut_ptr().add(c * 8);
+                _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), m));
+            }
+            for j in chunks * 8..n {
+                a[j] *= alpha;
+            }
         }
     }
 
@@ -672,16 +702,19 @@ pub mod avx2 {
     /// Requires avx2+fma (see the module contract).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn mul(a: &mut [f32], b: &[f32]) {
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let p = a.as_mut_ptr().add(c * 8);
-            let bv = _mm256_loadu_ps(b.as_ptr().add(c * 8));
-            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), bv));
-        }
-        for j in chunks * 8..n {
-            a[j] *= b[j];
+        // SAFETY: caller guarantees avx2+fma; loads/stores stay within a/b (chunks*8 <= len).
+        unsafe {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let p = a.as_mut_ptr().add(c * 8);
+                let bv = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+                _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), bv));
+            }
+            for j in chunks * 8..n {
+                a[j] *= b[j];
+            }
         }
     }
 
@@ -694,24 +727,27 @@ pub mod avx2 {
     /// Requires avx2+fma (see the module contract).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn max_abs(a: &[f32]) -> f32 {
-        let n = a.len();
-        let sign = _mm256_set1_ps(-0.0);
-        let mut m = _mm256_setzero_ps();
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let v = _mm256_loadu_ps(a.as_ptr().add(c * 8));
-            m = _mm256_max_ps(_mm256_andnot_ps(sign, v), m);
+        // SAFETY: caller guarantees avx2+fma; loads stay within a (chunks*8 <= len).
+        unsafe {
+            let n = a.len();
+            let sign = _mm256_set1_ps(-0.0);
+            let mut m = _mm256_setzero_ps();
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let v = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+                m = _mm256_max_ps(_mm256_andnot_ps(sign, v), m);
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+            let mut s = 0f32;
+            for &l in &lanes {
+                s = s.max(l);
+            }
+            for j in chunks * 8..n {
+                s = s.max(a[j].abs());
+            }
+            s
         }
-        let mut lanes = [0f32; 8];
-        _mm256_storeu_ps(lanes.as_mut_ptr(), m);
-        let mut s = 0f32;
-        for &l in &lanes {
-            s = s.max(l);
-        }
-        for j in chunks * 8..n {
-            s = s.max(a[j].abs());
-        }
-        s
     }
 
     /// `max_i |a[i] − b[i]|`, bit-exact with the scalar path — NaN
@@ -722,28 +758,32 @@ pub mod avx2 {
     /// Requires avx2+fma (see the module contract).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let sign = _mm256_set1_ps(-0.0);
-        let mut m = _mm256_setzero_ps();
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let x = _mm256_loadu_ps(a.as_ptr().add(c * 8));
-            let y = _mm256_loadu_ps(b.as_ptr().add(c * 8));
-            m = _mm256_max_ps(_mm256_andnot_ps(sign, _mm256_sub_ps(x, y)), m);
+        // SAFETY: caller guarantees avx2+fma; loads stay within a/b (chunks*8 <= len).
+        unsafe {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let sign = _mm256_set1_ps(-0.0);
+            let mut m = _mm256_setzero_ps();
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let x = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+                let y = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+                m = _mm256_max_ps(_mm256_andnot_ps(sign, _mm256_sub_ps(x, y)), m);
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+            let mut s = 0f32;
+            for &l in &lanes {
+                s = s.max(l);
+            }
+            for j in chunks * 8..n {
+                s = s.max((a[j] - b[j]).abs());
+            }
+            s
         }
-        let mut lanes = [0f32; 8];
-        _mm256_storeu_ps(lanes.as_mut_ptr(), m);
-        let mut s = 0f32;
-        for &l in &lanes {
-            s = s.max(l);
-        }
-        for j in chunks * 8..n {
-            s = s.max((a[j] - b[j]).abs());
-        }
-        s
     }
 
+    // qrr-audit: no-alloc
     /// One 4-lane f64 step of the LAQ grid: code + reconstruction for
     /// four pre-widened diffs. The op sequence (add, div, add, floor,
     /// clamp, mul, sub) matches the scalar path exactly, so the result
@@ -752,6 +792,9 @@ pub mod avx2 {
     /// # Safety
     /// Requires avx2+fma (see the module contract).
     #[inline]
+    // on toolchains where value-only intrinsics are safe inside a
+    // matching #[target_feature] fn, the body's unsafe block is redundant
+    #[allow(unused_unsafe)]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn laq_lane4(
         d: __m256d,
@@ -761,10 +804,13 @@ pub mod avx2 {
         zero: __m256d,
         levels: __m256d,
     ) -> (__m128i, __m128) {
-        let t = _mm256_add_pd(_mm256_div_pd(_mm256_add_pd(d, r), step), half);
-        let q = _mm256_min_pd(_mm256_max_pd(_mm256_floor_pd(t), zero), levels);
-        let rec = _mm256_sub_pd(_mm256_mul_pd(step, q), r);
-        (_mm256_cvttpd_epi32(q), _mm256_cvtpd_ps(rec))
+        // SAFETY: caller guarantees avx2+fma; value-only intrinsics, no memory access.
+        unsafe {
+            let t = _mm256_add_pd(_mm256_div_pd(_mm256_add_pd(d, r), step), half);
+            let q = _mm256_min_pd(_mm256_max_pd(_mm256_floor_pd(t), zero), levels);
+            let rec = _mm256_sub_pd(_mm256_mul_pd(step, q), r);
+            (_mm256_cvttpd_epi32(q), _mm256_cvtpd_ps(rec))
+        }
     }
 
     /// Fused LAQ quantize sweep: the f32 innovation is widened to f64
@@ -782,45 +828,50 @@ pub mod avx2 {
         codes: &mut [u32],
         out: &mut [f32],
     ) {
-        let n = g.len();
-        debug_assert!(prev.len() == n && codes.len() == n && out.len() == n);
-        let levels = (1u32 << beta) - 1;
-        let tau = 1.0f64 / levels as f64;
-        let step = 2.0 * tau * radius as f64;
-        let step_pd = _mm256_set1_pd(step);
-        let r_pd = _mm256_set1_pd(radius as f64);
-        let half_pd = _mm256_set1_pd(0.5);
-        let zero_pd = _mm256_setzero_pd();
-        let lev_pd = _mm256_set1_pd(levels as f64);
-        let chunks = n / 8;
-        for c in 0..chunks {
-            let gv = _mm256_loadu_ps(g.as_ptr().add(c * 8));
-            let pv = _mm256_loadu_ps(prev.as_ptr().add(c * 8));
-            // f32 subtraction first (one rounding, as in the scalar
-            // path), then widen exactly to f64
-            let d = _mm256_sub_ps(gv, pv);
-            let d_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
-            let d_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
-            let (q_lo, rec_lo) = laq_lane4(d_lo, step_pd, r_pd, half_pd, zero_pd, lev_pd);
-            let (q_hi, rec_hi) = laq_lane4(d_hi, step_pd, r_pd, half_pd, zero_pd, lev_pd);
-            let cp = codes.as_mut_ptr().add(c * 8);
-            _mm_storeu_si128(cp as *mut __m128i, q_lo);
-            _mm_storeu_si128(cp.add(4) as *mut __m128i, q_hi);
-            let op = out.as_mut_ptr().add(c * 8);
-            let p_lo = _mm256_castps256_ps128(pv);
-            let p_hi = _mm256_extractf128_ps::<1>(pv);
-            _mm_storeu_ps(op, _mm_add_ps(p_lo, rec_lo));
-            _mm_storeu_ps(op.add(4), _mm_add_ps(p_hi, rec_hi));
+        // SAFETY: caller guarantees avx2+fma; loads/stores stay within
+        // the equal-length slices (chunks*8 <= n) and laq_lane4 shares
+        // this fn's contract.
+        unsafe {
+            let n = g.len();
+            debug_assert!(prev.len() == n && codes.len() == n && out.len() == n);
+            let levels = (1u32 << beta) - 1;
+            let tau = 1.0f64 / levels as f64;
+            let step = 2.0 * tau * radius as f64;
+            let step_pd = _mm256_set1_pd(step);
+            let r_pd = _mm256_set1_pd(radius as f64);
+            let half_pd = _mm256_set1_pd(0.5);
+            let zero_pd = _mm256_setzero_pd();
+            let lev_pd = _mm256_set1_pd(levels as f64);
+            let chunks = n / 8;
+            for c in 0..chunks {
+                let gv = _mm256_loadu_ps(g.as_ptr().add(c * 8));
+                let pv = _mm256_loadu_ps(prev.as_ptr().add(c * 8));
+                // f32 subtraction first (one rounding, as in the scalar
+                // path), then widen exactly to f64
+                let d = _mm256_sub_ps(gv, pv);
+                let d_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+                let d_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+                let (q_lo, rec_lo) = laq_lane4(d_lo, step_pd, r_pd, half_pd, zero_pd, lev_pd);
+                let (q_hi, rec_hi) = laq_lane4(d_hi, step_pd, r_pd, half_pd, zero_pd, lev_pd);
+                let cp = codes.as_mut_ptr().add(c * 8);
+                _mm_storeu_si128(cp as *mut __m128i, q_lo);
+                _mm_storeu_si128(cp.add(4) as *mut __m128i, q_hi);
+                let op = out.as_mut_ptr().add(c * 8);
+                let p_lo = _mm256_castps256_ps128(pv);
+                let p_hi = _mm256_extractf128_ps::<1>(pv);
+                _mm_storeu_ps(op, _mm_add_ps(p_lo, rec_lo));
+                _mm_storeu_ps(op.add(4), _mm_add_ps(p_hi, rec_hi));
+            }
+            let done = chunks * 8;
+            super::scalar::laq_quantize(
+                &g[done..],
+                &prev[done..],
+                radius,
+                beta,
+                &mut codes[done..],
+                &mut out[done..],
+            );
         }
-        let done = chunks * 8;
-        super::scalar::laq_quantize(
-            &g[done..],
-            &prev[done..],
-            radius,
-            beta,
-            &mut codes[done..],
-            &mut out[done..],
-        );
     }
 
     /// Fused LAQ dequantize sweep, four codes per iteration; bit-exact
@@ -836,29 +887,34 @@ pub mod avx2 {
         beta: u8,
         out: &mut [f32],
     ) {
-        let n = codes.len();
-        debug_assert!(prev.len() == n && out.len() == n);
-        let levels = (1u32 << beta) - 1;
-        let tau = 1.0f64 / levels as f64;
-        let step = 2.0 * tau * radius as f64;
-        let step_pd = _mm256_set1_pd(step);
-        let r_pd = _mm256_set1_pd(radius as f64);
-        let chunks = n / 4;
-        for c in 0..chunks {
-            // codes are ≤ 2^16−1, so the i32 reinterpretation is exact
-            let q = _mm_loadu_si128(codes.as_ptr().add(c * 4) as *const __m128i);
-            let q_pd = _mm256_cvtepi32_pd(q);
-            let rec = _mm256_sub_pd(_mm256_mul_pd(step_pd, q_pd), r_pd);
-            let p = _mm_loadu_ps(prev.as_ptr().add(c * 4));
-            _mm_storeu_ps(
-                out.as_mut_ptr().add(c * 4),
-                _mm_add_ps(p, _mm256_cvtpd_ps(rec)),
-            );
+        // SAFETY: caller guarantees avx2+fma; loads/stores stay within
+        // the equal-length slices (chunks*4 <= n).
+        unsafe {
+            let n = codes.len();
+            debug_assert!(prev.len() == n && out.len() == n);
+            let levels = (1u32 << beta) - 1;
+            let tau = 1.0f64 / levels as f64;
+            let step = 2.0 * tau * radius as f64;
+            let step_pd = _mm256_set1_pd(step);
+            let r_pd = _mm256_set1_pd(radius as f64);
+            let chunks = n / 4;
+            for c in 0..chunks {
+                // codes are ≤ 2^16−1, so the i32 reinterpretation is exact
+                let q = _mm_loadu_si128(codes.as_ptr().add(c * 4) as *const __m128i);
+                let q_pd = _mm256_cvtepi32_pd(q);
+                let rec = _mm256_sub_pd(_mm256_mul_pd(step_pd, q_pd), r_pd);
+                let p = _mm_loadu_ps(prev.as_ptr().add(c * 4));
+                _mm_storeu_ps(
+                    out.as_mut_ptr().add(c * 4),
+                    _mm_add_ps(p, _mm256_cvtpd_ps(rec)),
+                );
+            }
+            let done = chunks * 4;
+            let tail = &mut out[done..];
+            super::scalar::laq_dequantize(&codes[done..], &prev[done..], radius, beta, tail);
         }
-        let done = chunks * 4;
-        let tail = &mut out[done..];
-        super::scalar::laq_dequantize(&codes[done..], &prev[done..], radius, beta, tail);
     }
+    // qrr-audit: end
 
     /// The 8×8 f32 GEMM register tile:
     /// `acc[r][c] += Σ_p ap[p·8+r] · bp[p·8+c]`, held in eight YMM
@@ -870,35 +926,39 @@ pub mod avx2 {
     /// at least `kc·8` elements.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn gemm_tile_8x8(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; 8]; 8]) {
-        debug_assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8);
-        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
-        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
-        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
-        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
-        let mut c4 = _mm256_loadu_ps(acc[4].as_ptr());
-        let mut c5 = _mm256_loadu_ps(acc[5].as_ptr());
-        let mut c6 = _mm256_loadu_ps(acc[6].as_ptr());
-        let mut c7 = _mm256_loadu_ps(acc[7].as_ptr());
-        for p in 0..kc {
-            let b = _mm256_loadu_ps(bp.as_ptr().add(p * 8));
-            let a = ap.as_ptr().add(p * 8);
-            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), b, c0);
-            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), b, c1);
-            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), b, c2);
-            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), b, c3);
-            c4 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(4)), b, c4);
-            c5 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(5)), b, c5);
-            c6 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(6)), b, c6);
-            c7 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(7)), b, c7);
+        // SAFETY: caller guarantees avx2+fma and that ap/bp hold kc*8
+        // elements (debug-asserted); acc rows are [f32; 8].
+        unsafe {
+            debug_assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8);
+            let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+            let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+            let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+            let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+            let mut c4 = _mm256_loadu_ps(acc[4].as_ptr());
+            let mut c5 = _mm256_loadu_ps(acc[5].as_ptr());
+            let mut c6 = _mm256_loadu_ps(acc[6].as_ptr());
+            let mut c7 = _mm256_loadu_ps(acc[7].as_ptr());
+            for p in 0..kc {
+                let b = _mm256_loadu_ps(bp.as_ptr().add(p * 8));
+                let a = ap.as_ptr().add(p * 8);
+                c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), b, c0);
+                c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), b, c1);
+                c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), b, c2);
+                c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), b, c3);
+                c4 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(4)), b, c4);
+                c5 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(5)), b, c5);
+                c6 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(6)), b, c6);
+                c7 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(7)), b, c7);
+            }
+            _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+            _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+            _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+            _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+            _mm256_storeu_ps(acc[4].as_mut_ptr(), c4);
+            _mm256_storeu_ps(acc[5].as_mut_ptr(), c5);
+            _mm256_storeu_ps(acc[6].as_mut_ptr(), c6);
+            _mm256_storeu_ps(acc[7].as_mut_ptr(), c7);
         }
-        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
-        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
-        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
-        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
-        _mm256_storeu_ps(acc[4].as_mut_ptr(), c4);
-        _mm256_storeu_ps(acc[5].as_mut_ptr(), c5);
-        _mm256_storeu_ps(acc[6].as_mut_ptr(), c6);
-        _mm256_storeu_ps(acc[7].as_mut_ptr(), c7);
     }
 }
 

@@ -6,6 +6,7 @@
 use std::fmt::Write as _;
 
 /// One named series of (x, y) points.
+#[derive(Debug)]
 pub struct Series {
     /// legend label
     pub label: String,

@@ -12,6 +12,7 @@ use crate::util::{PhaseTimes, Rng, Timer};
 use super::scheme::ClientScheme;
 
 /// Everything a client reports back for one round.
+#[derive(Debug)]
 pub struct ClientRoundOutput {
     /// serialized wire message (None = lazily skipped round)
     pub wire: Option<Vec<u8>>,
@@ -36,6 +37,18 @@ pub struct FlClient {
     rng: Rng,
     batch: usize,
     round: u64,
+}
+
+impl std::fmt::Debug for FlClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlClient")
+            .field("id", &self.id)
+            .field("samples", &self.data.len())
+            .field("scheme_mem_bytes", &self.scheme.mem_bytes())
+            .field("batch", &self.batch)
+            .field("round", &self.round)
+            .finish_non_exhaustive()
+    }
 }
 
 impl FlClient {

@@ -21,6 +21,16 @@ pub struct FlServer {
     alpha: f32,
 }
 
+impl std::fmt::Debug for FlServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlServer")
+            .field("params", &self.params.len())
+            .field("clients", &self.per_client.len())
+            .field("alpha", &self.alpha)
+            .finish_non_exhaustive()
+    }
+}
+
 impl FlServer {
     /// New server with initial parameters and one scheme mirror per client.
     pub fn new(params: Vec<Tensor>, per_client: Vec<Box<dyn ServerScheme>>, alpha: f32) -> Self {

@@ -76,6 +76,7 @@ pub trait ParticipationPolicy: Send {
 }
 
 /// Every client, every round — the paper's synchronous setting.
+#[derive(Debug)]
 pub struct FullSync;
 
 impl ParticipationPolicy for FullSync {
@@ -90,6 +91,7 @@ impl ParticipationPolicy for FullSync {
 
 /// Uniformly sample `ceil(fraction · C)` clients per round (partial
 /// participation à la Konečný et al.).
+#[derive(Debug)]
 pub struct UniformSampling {
     /// fraction of clients per round, in (0, 1]
     pub fraction: f64,
@@ -120,6 +122,7 @@ impl ParticipationPolicy for UniformSampling {
 /// compute, but each upload is lost with probability `drop_prob` scaled
 /// by the client's relative link slowness (slowest link in the cohort ⇒
 /// the full `drop_prob`, fastest ⇒ never dropped).
+#[derive(Debug)]
 pub struct LinkDropout {
     /// fraction of clients sampled per round, in (0, 1]
     pub fraction: f64,
@@ -168,6 +171,7 @@ impl ParticipationPolicy for LinkDropout {
 
 /// Straggler cutoff: every client computes, but uploads whose simulated
 /// transmission time exceeds the deadline are discarded.
+#[derive(Debug)]
 pub struct DeadlineCutoff {
     /// round deadline on the simulated uplink
     pub deadline: Duration,
@@ -228,6 +232,7 @@ pub trait Aggregation: Send {
 }
 
 /// Plain sum over clients — paper eq. (2).
+#[derive(Debug)]
 pub struct SumAggregation;
 
 /// Sum a non-empty set of per-client gradient lists elementwise (shared
@@ -265,6 +270,7 @@ impl Aggregation for SumAggregation {
 /// always sum to 1. Undelivered contributions — including SLAQ's stale
 /// gradients, which eq. (2) summation would reuse — are excluded;
 /// a round with no deliveries aggregates to zeros (no step).
+#[derive(Debug)]
 pub struct WeightedMeanAggregation;
 
 impl Aggregation for WeightedMeanAggregation {
@@ -356,6 +362,7 @@ impl MetricsSink for History {
 
 /// Logs each evaluation point (the default sink; silence with
 /// [`FlSessionBuilder::quiet`]).
+#[derive(Debug)]
 pub struct LogSink;
 
 impl MetricsSink for LogSink {
@@ -372,6 +379,7 @@ impl MetricsSink for LogSink {
 
 /// Writes the round/eval CSV series when the run finishes (same files
 /// as `experiments::write_run_outputs`).
+#[derive(Debug)]
 pub struct CsvSink {
     dir: String,
     name: String,
@@ -406,6 +414,7 @@ impl MetricsSink for CsvSink {
 // -------------------------------------------------------------- report
 
 /// Outcome of a session run.
+#[derive(Debug)]
 pub struct RunReport {
     /// metric history (table row + figure series)
     pub history: History,
@@ -438,6 +447,18 @@ pub struct FlSessionBuilder {
     sinks: Vec<Box<dyn MetricsSink>>,
     quiet: bool,
     threads: Option<usize>,
+}
+
+impl std::fmt::Debug for FlSessionBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlSessionBuilder")
+            .field("cfg", &self.cfg)
+            .field("recv_timeout", &self.recv_timeout)
+            .field("sinks", &self.sinks.len())
+            .field("quiet", &self.quiet)
+            .field("threads", &self.threads)
+            .finish_non_exhaustive()
+    }
 }
 
 impl FlSessionBuilder {
@@ -705,6 +726,19 @@ pub struct FlSession {
     /// long-lived workers shared by the client fan-out, the server-side
     /// decode and evaluation — spawned once per session, not per round
     pool: ThreadPool,
+}
+
+impl std::fmt::Debug for FlSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlSession")
+            .field("cfg", &self.cfg)
+            .field("clients", &self.clients.len())
+            .field("server", &self.server)
+            .field("model_len", &self.model_len)
+            .field("cum_bits", &self.cum_bits)
+            .field("cum_down_bits", &self.cum_down_bits)
+            .finish_non_exhaustive()
+    }
 }
 
 impl FlSession {

@@ -47,7 +47,16 @@
 //! Every seam of the round loop is pluggable through the builder —
 //! participation policy, aggregation rule, transport binding and metric
 //! sinks; see [`fl::session`].
+//!
+//! The crate ships its own static-analysis gate, [`audit`] (`qrr audit
+//! --check` in CI): SAFETY-comment and unsafe-allowlist enforcement,
+//! allocation- and panic-free fenced regions, and environment-read
+//! hygiene — see DESIGN.md §9.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_debug_implementations)]
+
+pub mod audit;
 pub mod bench_util;
 pub mod cli;
 pub mod compress;

@@ -73,12 +73,17 @@ impl<'a> MatRef<'a> {
     }
 }
 
-/// Raw output pointer handed to the 2-D tile grid. Safety: each task
-/// owns a disjoint row-band × column-panel region of C, and `for_each`
-/// joins every task before the owning frame returns.
+/// Raw output pointer handed to the 2-D tile grid. Each task owns a
+/// disjoint row-band × column-panel region of C, and `for_each` joins
+/// every task before the owning frame returns.
 struct SendPtr(*mut f32);
 
+// SAFETY: the wrapped pointer is only dereferenced inside pool tasks
+// that each write a disjoint region of the output, and the owning
+// frame outlives every task (for_each joins before returning).
 unsafe impl Send for SendPtr {}
+// SAFETY: shared references to SendPtr only copy the address; all
+// writes through it target task-disjoint regions (see Send above).
 unsafe impl Sync for SendPtr {}
 
 // ------------------------------------------------------------ packing
@@ -159,6 +164,10 @@ const _: () = assert!(MR == 8 && NR == 8);
 /// Dispatches to the explicit AVX2+FMA tile
 /// ([`crate::exec::simd::avx2::gemm_tile_8x8`]) when the process runs
 /// at that level, else to the scalar tile below (DESIGN.md §8).
+//
+// Innermost GEMM code: tiles live entirely in registers and panel
+// slices; any allocation here would dominate the kernel.
+// qrr-audit: no-alloc
 #[inline(always)]
 fn micro_kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
     #[cfg(target_arch = "x86_64")]
@@ -208,13 +217,18 @@ unsafe fn write_tile(
     nr: usize,
     alpha: f32,
 ) {
-    for (r, arow) in acc.iter().enumerate().take(mr) {
-        let crow = c.add(r * ldc);
-        for (j, &v) in arow.iter().enumerate().take(nr) {
-            *crow.add(j) += alpha * v;
+    // SAFETY: the caller guarantees the mr×nr region behind `c` is in
+    // bounds and exclusively owned (the fn-level # Safety contract).
+    unsafe {
+        for (r, arow) in acc.iter().enumerate().take(mr) {
+            let crow = c.add(r * ldc);
+            for (j, &v) in arow.iter().enumerate().take(nr) {
+                *crow.add(j) += alpha * v;
+            }
         }
     }
 }
+// qrr-audit: end
 
 // ------------------------------------------------------------ drivers
 
@@ -244,6 +258,9 @@ fn gemm_region(
             s.b.resize(b_need, 0.0);
         }
         let PackScratch { a: apack, b: bpack } = &mut *s;
+        // Steady-state blocked loops: after the scratch grow above,
+        // packing and tiling must reuse buffers only.
+        // qrr-audit: no-alloc
         for jc in (j0..j1).step_by(NC) {
             let nc = NC.min(j1 - jc);
             for pc in (0..k).step_by(KC) {
@@ -280,6 +297,7 @@ fn gemm_region(
                 }
             }
         }
+        // qrr-audit: end
     });
 }
 

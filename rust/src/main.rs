@@ -5,6 +5,7 @@
 //! qrr train --config cfg.json [--out DIR]
 //! qrr serve --addr 127.0.0.1:0 --model mlp --clients 3 --iters 5
 //! qrr bench [kernels|round|all] [--fast] [--check] [--out DIR]
+//! qrr audit [--check] [--list-rules]
 //! qrr info
 //! ```
 //!
@@ -33,6 +34,7 @@ fn run(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "serve" => qrr::experiments::serve::run_cli(args),
         "bench" => qrr::bench_util::suites::run_cli(args),
+        "audit" => qrr::audit::run_cli(args),
         "schemes" => cmd_schemes(),
         "info" => cmd_info(),
         "" | "help" | "--help" => {
@@ -116,6 +118,9 @@ USAGE:
     qrr serve [options]          run the FL server+clients over real TCP
     qrr bench [suite] [options]  run the perf suites, write BENCH_*.json
                                  suite: kernels | round | all (default)
+    qrr audit [--check]          static-analysis gate: SAFETY comments,
+                                 no-alloc/no-panic fences, env hygiene
+                                 (--list-rules prints the registry)
     qrr schemes                  list compression-pipeline presets + stages
     qrr info                     toolchain / artifact status
 

@@ -113,6 +113,7 @@ pub fn col2im(dcols: &Tensor, b: usize, c: usize, h: usize, w: usize, k: usize, 
 // ---------------------------------------------------------------- conv2d
 
 /// Cached forward state for the conv backward pass.
+#[derive(Debug)]
 pub struct ConvCtx {
     cols: Tensor,
     in_shape: [usize; 4],

@@ -14,6 +14,7 @@ use super::{ModelKind, ModelOps, ModelSpec};
 use layers::*;
 
 /// Pure-Rust model. Construct via [`NativeModel::new`].
+#[derive(Debug)]
 pub struct NativeModel {
     spec: ModelSpec,
 }

@@ -49,6 +49,7 @@ pub trait Transport: Send {
 // ------------------------------------------------------------- in-proc
 
 /// mpsc-channel transport for the single-process simulation.
+#[derive(Debug)]
 pub struct InProcTransport {
     tx: Sender<Vec<u8>>,
     rx: Mutex<Receiver<Vec<u8>>>,
@@ -124,6 +125,7 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
 ///
 /// This is what `fl::session` plugs in for the TCP scenario: the exact
 /// wire bytes cross a real socket while the round loop stays unchanged.
+#[derive(Debug)]
 pub struct TcpTransport {
     listener: TcpListener,
     addr: std::net::SocketAddr,
@@ -252,6 +254,7 @@ impl Transport for TcpTransport {
 
 /// Server-side TCP transport: accepts connections lazily and yields
 /// frames from any connected client.
+#[derive(Debug)]
 pub struct TcpServerTransport {
     listener: TcpListener,
     conns: Mutex<HashMap<std::net::SocketAddr, TcpStream>>,
@@ -286,6 +289,7 @@ impl TcpServerTransport {
 }
 
 /// Client-side TCP sender.
+#[derive(Debug)]
 pub struct TcpClient {
     stream: TcpStream,
 }

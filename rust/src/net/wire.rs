@@ -180,6 +180,7 @@ impl ServerUpdate {
 // ---------------------------------------------------------------- encoder
 
 /// Byte-stream writer.
+#[derive(Debug)]
 pub struct Encoder {
     buf: Vec<u8>,
 }
@@ -200,6 +201,11 @@ impl Encoder {
     /// it pays exactly one exact-size allocation per encode (see
     /// [`ClientUpdate::wire_len`]); this entry point is for callers
     /// that keep a buffer across encodes (benches, long-lived peers).
+    //
+    // The rest of this impl is the encode hot path: it may only grow
+    // the target buffer (push/extend/reserve), never mint fresh
+    // containers, so the reuse promise above stays honest.
+    // qrr-audit: no-alloc
     pub fn encode_into(update: &ClientUpdate, client_id: u32, round: u64, buf: &mut Vec<u8>) {
         buf.clear();
         buf.reserve_exact(update.wire_len());
@@ -327,11 +333,13 @@ impl Encoder {
         // needs only the flat length
         self.buf.extend_from_slice(&q.packed);
     }
+    // qrr-audit: end
 }
 
 // ---------------------------------------------------------------- decoder
 
 /// Byte-stream reader with position tracking.
+#[derive(Debug)]
 pub struct Decoder<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -348,6 +356,14 @@ pub struct DecodedMsg {
     pub update: ClientUpdate,
 }
 
+// The whole decode half runs on attacker-controlled bytes (the TCP
+// server feeds it raw peer input and the contract is discard, never
+// crash — see net::transport): every malformed input must surface as a
+// `WireError`, so panicking constructs are banned here. Declared
+// lengths are honored only after checked arithmetic proves the buffer
+// can actually satisfy them, and preallocations are capped by the
+// bytes that remain.
+// qrr-audit: no-panic
 impl<'a> Decoder<'a> {
     /// Decode a full message produced by [`Encoder::new`].
     pub fn decode(buf: &'a [u8]) -> Result<DecodedMsg, WireError> {
@@ -361,7 +377,7 @@ impl<'a> Decoder<'a> {
         let n = d.u32()? as usize;
         let update = match scheme {
             0 => {
-                let mut grads = Vec::with_capacity(n);
+                let mut grads = Vec::with_capacity(n.min(d.remaining()));
                 for _ in 0..n {
                     d.expect_kind(0)?;
                     grads.push(d.dense()?);
@@ -369,7 +385,7 @@ impl<'a> Decoder<'a> {
                 ClientUpdate::Sgd { grads }
             }
             1 => {
-                let mut params = Vec::with_capacity(n);
+                let mut params = Vec::with_capacity(n.min(d.remaining()));
                 for _ in 0..n {
                     d.expect_kind(1)?;
                     params.push(d.quantized()?);
@@ -377,7 +393,7 @@ impl<'a> Decoder<'a> {
                 ClientUpdate::Slaq { msg: SlaqMsg { params } }
             }
             2 => {
-                let mut msgs = Vec::with_capacity(n);
+                let mut msgs = Vec::with_capacity(n.min(d.remaining()));
                 for _ in 0..n {
                     msgs.push(d.param_msg()?);
                 }
@@ -397,7 +413,7 @@ impl<'a> Decoder<'a> {
         let seq = d.u64()?;
         let round = d.u64()?;
         let n = d.u32()? as usize;
-        let mut msgs = Vec::with_capacity(n);
+        let mut msgs = Vec::with_capacity(n.min(d.remaining()));
         for _ in 0..n {
             msgs.push(d.param_msg()?);
         }
@@ -441,8 +457,17 @@ impl<'a> Decoder<'a> {
         })
     }
 
+    /// Bytes not yet consumed (the cap for length-prefixed
+    /// preallocations: every wire entry costs at least one byte, so no
+    /// honest prefix can promise more entries than this).
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.pos + n > self.buf.len() {
+        // written as a subtraction from len (pos <= len always holds)
+        // so a huge declared `n` cannot overflow `pos + n`
+        if n > self.remaining() {
             return Err(WireError::Truncated(self.pos));
         }
         let s = &self.buf[self.pos..self.pos + n];
@@ -450,17 +475,31 @@ impl<'a> Decoder<'a> {
         Ok(s)
     }
 
+    /// Fixed-width read as an array, for the `from_le_bytes` family.
+    fn take_n<const N: usize>(&mut self) -> Result<[u8; N], WireError> {
+        let mut out = [0u8; N];
+        out.copy_from_slice(self.take(N)?);
+        Ok(out)
+    }
+
+    /// Checked multiply for attacker-declared sizes; overflow means the
+    /// declared payload cannot possibly fit the message, which is the
+    /// same failure as a short buffer.
+    fn sized(&self, a: usize, b: usize) -> Result<usize, WireError> {
+        a.checked_mul(b).ok_or(WireError::Truncated(self.pos))
+    }
+
     fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_n()?))
     }
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_n()?))
     }
     fn f32(&mut self) -> Result<f32, WireError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_n()?))
     }
 
     fn expect_kind(&mut self, k: u8) -> Result<(), WireError> {
@@ -477,24 +516,33 @@ impl<'a> Decoder<'a> {
         for _ in 0..ndim {
             shape.push(self.u32()? as usize);
         }
-        let n: usize = shape.iter().product();
-        let bytes = self.take(n * 4)?;
-        let data: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let mut n = 1usize;
+        for &d in &shape {
+            n = self.sized(n, d)?;
+        }
+        let bytes = self.take(self.sized(n, 4)?)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            let mut w = [0u8; 4];
+            w.copy_from_slice(c);
+            data.push(f32::from_le_bytes(w));
+        }
         Ok(Tensor::from_vec(&shape, data))
     }
 
     fn quantized(&mut self) -> Result<Quantized, WireError> {
         let radius = self.f32()?;
         let beta = self.u8()?;
-        let len = self.u64()? as usize;
-        let nbytes = crate::quant::packed_len_bytes(len, beta);
+        let len64 = self.u64()?;
+        let len = usize::try_from(len64).map_err(|_| WireError::Truncated(self.pos))?;
+        // same count as quant::packed_len_bytes, but checked: the
+        // declared code count is attacker data here
+        let nbytes = self.sized(len, beta as usize)?.div_ceil(8);
         let packed = self.take(nbytes)?.to_vec();
         Ok(Quantized { radius, beta, len, packed })
     }
 }
+// qrr-audit: end
 
 #[cfg(test)]
 mod tests {
@@ -732,6 +780,92 @@ mod tests {
         }
     }
 
+    // ------------------------- hostile byte patterns -------------------
+    // Each of these inputs panicked (debug overflow, `try_into`
+    // unwrap, or capacity overflow/OOM abort) before the decode half
+    // was hardened; they must stay typed `WireError`s forever.
+
+    fn client_header(scheme: u8, n_entries: u32) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC.to_le_bytes());
+        b.push(VERSION);
+        b.push(scheme);
+        b.extend_from_slice(&7u32.to_le_bytes()); // client_id
+        b.extend_from_slice(&1u64.to_le_bytes()); // round
+        b.extend_from_slice(&n_entries.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn hostile_quantized_length_is_an_error_not_a_panic() {
+        // declared code count of u64::MAX: the packed-byte computation
+        // `len * beta / 8` used to overflow
+        let mut b = client_header(1, 1);
+        b.push(1); // kind: quantized
+        b.extend_from_slice(&1.0f32.to_le_bytes()); // radius
+        b.push(8); // beta
+        b.extend_from_slice(&u64::MAX.to_le_bytes()); // len
+        assert!(matches!(Decoder::decode(&b), Err(WireError::Truncated(_))));
+
+        // a count that fits usize but whose bit total does not
+        let mut b = client_header(1, 1);
+        b.push(1);
+        b.extend_from_slice(&1.0f32.to_le_bytes());
+        b.push(12);
+        b.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(Decoder::decode(&b).is_err());
+    }
+
+    #[test]
+    fn hostile_dense_shape_is_an_error_not_a_panic() {
+        // dim product overflows usize
+        let mut b = client_header(0, 1);
+        b.push(0); // kind: dense
+        b.push(4); // ndim
+        for _ in 0..4 {
+            b.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+        }
+        assert!(matches!(Decoder::decode(&b), Err(WireError::Truncated(_))));
+
+        // dim product fits, f32 byte count does not (2^31 * 2^31 * 4)
+        let mut b = client_header(0, 1);
+        b.push(0);
+        b.push(2);
+        b.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        b.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert!(Decoder::decode(&b).is_err());
+    }
+
+    #[test]
+    fn hostile_entry_count_errors_without_preallocating() {
+        // u32::MAX declared entries with an empty body: the decoder
+        // must not reserve u32::MAX tensors up front
+        for scheme in [0u8, 1, 2] {
+            let b = client_header(scheme, u32::MAX);
+            assert!(matches!(Decoder::decode(&b), Err(WireError::Truncated(_))), "scheme {scheme}");
+        }
+        // server broadcast path has the same guard
+        let mut s = Vec::new();
+        s.extend_from_slice(&SERVER_MAGIC.to_le_bytes());
+        s.push(SERVER_VERSION);
+        s.extend_from_slice(&0u64.to_le_bytes());
+        s.extend_from_slice(&0u64.to_le_bytes());
+        s.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Decoder::decode_server(&s), Err(WireError::Truncated(_))));
+    }
+
+    #[test]
+    fn hostile_tucker_factor_count_is_bounded_by_the_buffer() {
+        // kind 3 with max factor count and no factor bytes behind it
+        let mut b = client_header(2, 1);
+        b.push(3); // kind: tucker
+        b.extend_from_slice(&1.0f32.to_le_bytes()); // core radius
+        b.push(1); // core beta
+        b.extend_from_slice(&0u64.to_le_bytes()); // core len = 0
+        b.push(0xFF); // n_factors
+        assert!(matches!(Decoder::decode(&b), Err(WireError::Truncated(_))));
+    }
+
     // ------------------------- property sweeps (testing::prop) --------
 
     use crate::testing::{forall, Gen};
@@ -844,7 +978,7 @@ mod tests {
     fn prop_roundtrip_every_entry_kind() {
         forall(
             0xB1,
-            60,
+            crate::testing::cases(60),
             |g| {
                 let kind = g.usize_in(0, 3) as u8;
                 let client_id = g.usize_in(0, 1000) as u32;
@@ -859,7 +993,7 @@ mod tests {
     fn prop_any_truncation_is_a_decode_error_never_a_panic() {
         forall(
             0xB2,
-            60,
+            crate::testing::cases(60),
             |g| {
                 let kind = g.usize_in(0, 3) as u8;
                 let up = gen_update_of_kind(g, kind);
@@ -881,7 +1015,7 @@ mod tests {
     fn prop_header_corruption_is_a_typed_error() {
         forall(
             0xB3,
-            40,
+            crate::testing::cases(40),
             |g| {
                 let kind = g.usize_in(0, 3) as u8;
                 (gen_update_of_kind(g, kind), g.usize_in(0, 2))
@@ -922,7 +1056,7 @@ mod tests {
     fn prop_bad_entry_kind_is_a_typed_error() {
         forall(
             0xB4,
-            30,
+            crate::testing::cases(30),
             |g| gen_update_of_kind(g, g.usize_in(0, 3) as u8),
             |up| {
                 let mut bytes = Encoder::new(&up, 1, 2);

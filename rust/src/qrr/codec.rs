@@ -190,6 +190,7 @@ impl ParamState {
     /// expects — the precondition for [`decode`](ServerCodec::decode).
     /// Servers use it to discard wire-valid-but-mismatched frames (an
     /// external peer controls the bytes) instead of panicking mid-round.
+    // qrr-audit: no-panic
     pub fn accepts(&self, msg: &ParamMsg) -> bool {
         match (self, msg) {
             (ParamState::Svd { u, s, v, .. }, ParamMsg::Svd { u: mu, s: ms, v: mv }) => {
@@ -214,6 +215,7 @@ impl ParamState {
             _ => false,
         }
     }
+    // qrr-audit: end
 
     /// True if two states agree elementwise within `tol` (test helper).
     pub fn states_close(&self, other: &ParamState, tol: f32) -> bool {
@@ -376,10 +378,12 @@ impl ServerCodec {
     /// True when every message matches this codec's mirrored states —
     /// the precondition under which [`decode`](Self::decode) cannot
     /// panic on externally controlled input.
+    // qrr-audit: no-panic
     pub fn accepts(&self, msgs: &[ParamMsg]) -> bool {
         msgs.len() == self.states.len()
             && self.states.iter().zip(msgs.iter()).all(|(st, m)| st.accepts(m))
     }
+    // qrr-audit: end
 
     /// Decode one message set into reconstructed gradients.
     pub fn decode(&mut self, msgs: &[ParamMsg]) -> Vec<Tensor> {

@@ -62,9 +62,12 @@ mod tests {
     #[test]
     fn roundtrip_all_betas() {
         let mut rng = Rng::new(30);
+        // long enough to cross several u64 bit-buffer words natively;
+        // shrunk under Miri where every load is interpreted
+        let n = crate::testing::cases(1000).max(40);
         for beta in 1..=16u8 {
             let max = (1u64 << beta) as usize;
-            let codes: Vec<u32> = (0..1000).map(|_| rng.below(max) as u32).collect();
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(max) as u32).collect();
             let packed = pack_codes(&codes, beta);
             assert_eq!(packed.len(), packed_len_bytes(codes.len(), beta));
             let back = unpack_codes(&packed, codes.len(), beta);
@@ -88,7 +91,8 @@ mod tests {
         let mut codes_out = Vec::new();
         for beta in [1u8, 7, 8, 13] {
             let max = (1u64 << beta) as usize;
-            let codes: Vec<u32> = (0..257).map(|_| rng.below(max) as u32).collect();
+            let n = crate::testing::cases(257).max(33);
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(max) as u32).collect();
             pack_codes_into(&codes, beta, &mut packed);
             assert_eq!(packed, pack_codes(&codes, beta), "beta={beta}");
             unpack_codes_into(&packed, codes.len(), beta, &mut codes_out);

@@ -63,12 +63,16 @@ impl Quantized {
     /// precondition for dequantizing **peer-controlled** input — the
     /// wire decoder checks syntax only, so servers gate on this before
     /// letting a payload near the asserting dequantize path.
+    // This is the gate peer-controlled payloads pass through before
+    // the asserting dequantize path — the gate itself must not panic.
+    // qrr-audit: no-panic
     pub fn wellformed(&self, expect_len: usize) -> bool {
         self.len == expect_len
             && (1..=16).contains(&self.beta)
             && self.radius.is_finite()
             && self.packed.len() == packed_len_bytes(self.len, self.beta)
     }
+    // qrr-audit: end
 }
 
 /// Exact wire size of quantizing `n` elements at `beta` bits (eq. (16)).

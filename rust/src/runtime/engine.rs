@@ -29,6 +29,7 @@ struct Job {
 
 /// Handle to the PJRT executor thread. Clone freely; drop all clones to
 /// shut the thread down.
+#[derive(Debug)]
 pub struct PjrtEngine {
     tx: Sender<Job>,
     // JoinHandle kept by the first handle only; worker exits when all
@@ -36,6 +37,7 @@ pub struct PjrtEngine {
     _worker: Option<std::sync::Arc<WorkerGuard>>,
 }
 
+#[derive(Debug)]
 struct WorkerGuard {
     handle: Option<JoinHandle<()>>,
 }

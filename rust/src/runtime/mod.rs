@@ -24,9 +24,8 @@ pub use engine::PjrtEngine;
 pub use manifest::{ArtifactEntry, Manifest};
 pub use model::PjrtModel;
 
-/// Directory holding artifacts + manifest; `QRR_ARTIFACTS` overrides.
+/// Directory holding artifacts + manifest; `QRR_ARTIFACTS` overrides
+/// (read once through [`crate::util::env`], the sanctioned seam).
 pub fn artifacts_dir() -> std::path::PathBuf {
-    std::env::var("QRR_ARTIFACTS")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+    crate::util::env::artifacts_dir()
 }

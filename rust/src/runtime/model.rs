@@ -23,6 +23,7 @@ use super::engine::{HostTensor, PjrtEngine};
 use super::manifest::Manifest;
 
 /// PJRT-backed model (see module docs for the artifact contract).
+#[derive(Debug)]
 pub struct PjrtModel {
     spec: ModelSpec,
     engine: PjrtEngine,

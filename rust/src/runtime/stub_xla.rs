@@ -30,6 +30,7 @@ impl std::error::Error for Error {}
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Stub of `xla::PjRtClient` (CPU platform only).
+#[derive(Debug)]
 pub struct PjRtClient;
 
 impl PjRtClient {
@@ -55,6 +56,7 @@ impl PjRtClient {
 }
 
 /// Stub of `xla::HloModuleProto`.
+#[derive(Debug)]
 pub struct HloModuleProto;
 
 impl HloModuleProto {
@@ -65,6 +67,7 @@ impl HloModuleProto {
 }
 
 /// Stub of `xla::XlaComputation`.
+#[derive(Debug)]
 pub struct XlaComputation;
 
 impl XlaComputation {
@@ -75,6 +78,7 @@ impl XlaComputation {
 }
 
 /// Stub of `xla::PjRtLoadedExecutable` (never actually constructed).
+#[derive(Debug)]
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
@@ -85,6 +89,7 @@ impl PjRtLoadedExecutable {
 }
 
 /// Stub of `xla::PjRtBuffer`.
+#[derive(Debug)]
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
@@ -95,6 +100,7 @@ impl PjRtBuffer {
 }
 
 /// Stub of `xla::Literal`.
+#[derive(Debug)]
 pub struct Literal;
 
 impl Literal {
@@ -125,6 +131,7 @@ impl Literal {
 }
 
 /// Stub of `xla::ArrayShape`.
+#[derive(Debug)]
 pub struct ArrayShape;
 
 impl ArrayShape {

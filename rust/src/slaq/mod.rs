@@ -43,10 +43,7 @@ pub struct SlaqConfig {
 impl SlaqConfig {
     /// Paper defaults: β=8, D=10, ξ_d=1/D.
     pub fn paper(alpha: f32, clients: usize) -> Self {
-        let threshold_scale = std::env::var("QRR_SLAQ_SCALE")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0.02);
+        let threshold_scale = crate::util::env::slaq_scale().unwrap_or(0.02);
         SlaqConfig { beta: 8, d: 10, alpha, clients, threshold_scale }
     }
 }
@@ -197,6 +194,7 @@ impl SlaqServerState {
     /// True when `msg` carries one payload per parameter with the
     /// expected lengths — the precondition for [`Self::apply`] on
     /// externally controlled input.
+    // qrr-audit: no-panic
     pub fn accepts(&self, msg: &SlaqMsg) -> bool {
         msg.params.len() == self.states.len()
             && self
@@ -205,6 +203,7 @@ impl SlaqServerState {
                 .zip(msg.params.iter())
                 .all(|(st, q)| q.wellformed(st.value().len()))
     }
+    // qrr-audit: end
 
     /// Apply a received message; afterwards [`Self::latest`] returns the
     /// client's new quantized gradient.

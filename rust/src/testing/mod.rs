@@ -4,3 +4,19 @@
 pub mod prop;
 
 pub use prop::{forall, Gen};
+
+/// Case count for property sweeps, shrunk under Miri.
+///
+/// The interpreter runs ~two orders of magnitude slower than native
+/// code, so the byte-level suites (`net::wire`, `quant::bitpack`) pass
+/// their `forall` counts and heavy loop bounds through this: full
+/// coverage natively, a handful of cases under `cargo miri test`.
+/// Deliberately *not* folded into [`forall`] itself — its case count is
+/// part of that harness' own contract (and tests).
+pub fn cases(n: usize) -> usize {
+    if cfg!(miri) {
+        n.clamp(1, 3)
+    } else {
+        n
+    }
+}

@@ -15,6 +15,7 @@ use crate::tensor::Tensor;
 use crate::util::Rng;
 
 /// Random-input generator handed to property closures.
+#[derive(Debug)]
 pub struct Gen {
     rng: Rng,
 }

@@ -1,0 +1,94 @@
+//! The sanctioned seam for environment configuration.
+//!
+//! `qrr-audit`'s **env-once** rule (DESIGN.md §9) forbids
+//! `std::env::var` everywhere except the read-once dispatch seams
+//! (`exec`, `exec::simd`, `util::logging`) and this module. Every other
+//! module takes its knobs from the accessors here, which come in two
+//! classes:
+//!
+//! * **cached** — process-invariant configuration: read once through a
+//!   `OnceLock`, so every call site sees one consistent value and the
+//!   hot path never pays an env lookup (the same contract as
+//!   `QRR_THREADS`/`QRR_SIMD`, DESIGN.md §4/§8);
+//! * **dynamic** — knobs that tests legitimately flip at runtime
+//!   (`QRR_BENCH_FAST`, `MNIST_DIR`/`CIFAR_DIR`): re-read per call, by
+//!   design — caching them would make `std::env::set_var` in a test a
+//!   silent no-op. None of these sits on a hot path.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+// ------------------------------------------------------------- cached
+
+/// Artifacts directory: `QRR_ARTIFACTS` or `./artifacts` (cached).
+pub fn artifacts_dir() -> PathBuf {
+    static CACHED: OnceLock<PathBuf> = OnceLock::new();
+    CACHED
+        .get_or_init(|| {
+            std::env::var("QRR_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        })
+        .clone()
+}
+
+/// `QRR_SLAQ_SCALE` — the SLAQ skip-threshold calibration constant
+/// (cached; `None` when unset or unparsable).
+pub fn slaq_scale() -> Option<f64> {
+    static CACHED: OnceLock<Option<f64>> = OnceLock::new();
+    *CACHED.get_or_init(|| std::env::var("QRR_SLAQ_SCALE").ok().and_then(|v| v.parse().ok()))
+}
+
+/// `QRR_BENCH_ITERS` — iteration count for the reduced table benches
+/// (cached; `None` when unset or unparsable).
+pub fn bench_iters() -> Option<u64> {
+    static CACHED: OnceLock<Option<u64>> = OnceLock::new();
+    *CACHED.get_or_init(|| std::env::var("QRR_BENCH_ITERS").ok().and_then(|v| v.parse().ok()))
+}
+
+/// `QRR_BENCH_JSON` — directory the `cargo bench` binaries write their
+/// `BENCH_*.json` trail into (cached; `None` = don't write).
+pub fn bench_json_dir() -> Option<String> {
+    static CACHED: OnceLock<Option<String>> = OnceLock::new();
+    CACHED.get_or_init(|| std::env::var("QRR_BENCH_JSON").ok()).clone()
+}
+
+// ------------------------------------------------------------ dynamic
+
+/// `QRR_BENCH_FAST` — reduced bench sampling. Dynamic: the overhead
+/// experiment's tests set it mid-process to keep CI runs short.
+pub fn bench_fast() -> bool {
+    std::env::var("QRR_BENCH_FAST").is_ok()
+}
+
+/// `MNIST_DIR` — directory of real MNIST IDX files. Dynamic: the data
+/// tests unset it to force the synthetic path.
+pub fn mnist_dir() -> Option<String> {
+    std::env::var("MNIST_DIR").ok()
+}
+
+/// `CIFAR_DIR` — directory of real CIFAR-10 binaries. Dynamic,
+/// mirroring [`mnist_dir`].
+pub fn cifar_dir() -> Option<String> {
+    std::env::var("CIFAR_DIR").ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cached_accessors_are_stable() {
+        // cached values must not change across calls even if the
+        // environment does (the read-once contract)
+        assert_eq!(artifacts_dir(), artifacts_dir());
+        assert_eq!(slaq_scale(), slaq_scale());
+        assert_eq!(bench_iters(), bench_iters());
+        assert_eq!(bench_json_dir(), bench_json_dir());
+    }
+
+    #[test]
+    fn artifacts_dir_has_a_default() {
+        assert!(!artifacts_dir().as_os_str().is_empty());
+    }
+}

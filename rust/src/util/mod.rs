@@ -5,6 +5,7 @@
 //! (`rand`, `env_logger`, …) are replaced by the minimal, well-tested
 //! implementations in this module (see DESIGN.md §4).
 
+pub mod env;
 pub mod fmt;
 pub mod logging;
 pub mod rng;

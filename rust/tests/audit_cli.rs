@@ -1,0 +1,104 @@
+//! End-to-end tests for the `qrr_audit` binary: the real source tree
+//! must pass `--check`, a violating tree must fail it with file:line
+//! diagnostics, and `--list-rules` must document the registry.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn audit_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_qrr_audit"))
+}
+
+/// A scratch directory that cleans up after itself.
+struct TempTree {
+    root: PathBuf,
+}
+
+impl TempTree {
+    fn new(tag: &str) -> Self {
+        let root = std::env::temp_dir().join(format!("qrr_audit_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).expect("create temp tree");
+        TempTree { root }
+    }
+
+    fn write(&self, rel: &str, contents: &str) -> PathBuf {
+        let path = self.root.join(rel);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).expect("create fixture dir");
+        }
+        fs::write(&path, contents).expect("write fixture");
+        path
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn real_tree_passes_check() {
+    let out = audit_bin().arg("--check").output().expect("run qrr_audit");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "qrr_audit --check failed on the shipped tree:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        stdout.contains("0 finding(s)"),
+        "expected a clean summary line, got:\n{stdout}"
+    );
+}
+
+#[test]
+fn violating_tree_fails_check_with_location() {
+    let tree = TempTree::new("violation");
+    tree.write(
+        "offender.rs",
+        "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    );
+    let out = audit_bin()
+        .args(["--check", "--root"])
+        .arg(&tree.root)
+        .output()
+        .expect("run qrr_audit");
+    assert!(
+        !out.status.success(),
+        "--check must fail on an unannotated unsafe block"
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("offender.rs:2") && stdout.contains("[unsafe-audit]"),
+        "expected a file:line [unsafe-audit] diagnostic, got:\n{stdout}"
+    );
+}
+
+#[test]
+fn without_check_findings_are_reported_but_not_fatal() {
+    let tree = TempTree::new("report_only");
+    tree.write(
+        "net/wire.rs",
+        "// decode half\n// qrr-audit: no-panic\nfn f(v: Option<u8>) -> u8 {\n    v.unwrap()\n}\n// qrr-audit: end\n",
+    );
+    let out = audit_bin().arg("--root").arg(&tree.root).output().expect("run qrr_audit");
+    assert!(out.status.success(), "report-only mode must exit 0");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("wire.rs:4") && stdout.contains("[no-panic]"),
+        "expected the unwrap to be reported, got:\n{stdout}"
+    );
+}
+
+#[test]
+fn list_rules_documents_the_registry() {
+    let out = audit_bin().arg("--list-rules").output().expect("run qrr_audit");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for rule in ["unsafe-audit", "no-alloc", "no-panic", "env-once"] {
+        assert!(stdout.contains(rule), "missing rule {rule} in:\n{stdout}");
+    }
+}
