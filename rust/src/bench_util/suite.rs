@@ -22,12 +22,34 @@ pub struct Suite {
     name: String,
     bench: Bench,
     results: Vec<BenchResult>,
+    filter: Option<String>,
+    last_skipped: bool,
 }
 
 impl Suite {
     /// New suite named `name` sampling with `bench`.
     pub fn new(name: impl Into<String>, bench: Bench) -> Self {
-        Suite { name: name.into(), bench, results: Vec::new() }
+        Suite { name: name.into(), bench, results: Vec::new(), filter: None, last_skipped: false }
+    }
+
+    /// Restrict the suite to cases whose name contains `needle`
+    /// (plain substring match; `None` clears the filter). Filtered-out
+    /// cases are skipped entirely — not run, not recorded — and a
+    /// following [`Suite::annotate_last`] becomes a no-op instead of
+    /// annotating whatever case came before. `qrr bench --only SUBSTR`
+    /// plugs in here.
+    pub fn set_filter(&mut self, needle: Option<String>) {
+        self.filter = needle;
+    }
+
+    /// Whether `name` passes the active case filter. Case registries
+    /// check this before paying for expensive fixtures (sessions,
+    /// pre-encoded cohorts) whose case would be skipped anyway.
+    pub fn enabled(&self, name: &str) -> bool {
+        match self.filter.as_deref() {
+            Some(needle) => name.contains(needle),
+            None => true,
+        }
     }
 
     /// The underlying sampler.
@@ -41,13 +63,28 @@ impl Suite {
     }
 
     /// Run one repeatedly-sampled case; prints the line, records and
-    /// returns the result.
+    /// returns the result. A case filtered out by [`Suite::set_filter`]
+    /// never runs its closure: a zero-sample placeholder is returned
+    /// and nothing is recorded.
     pub fn case<T>(
         &mut self,
         name: &str,
         units: Option<f64>,
         f: impl FnMut() -> T,
     ) -> BenchResult {
+        if !self.enabled(name) {
+            self.last_skipped = true;
+            println!("{name:<44} skipped (--only filter)");
+            return BenchResult {
+                name: name.to_string(),
+                samples: 0,
+                median: Duration::ZERO,
+                mad: Duration::ZERO,
+                units_per_iter: None,
+                extras: Vec::new(),
+            };
+        }
+        self.last_skipped = false;
         let r = self.bench.run(name, units, f);
         self.results.push(r.clone());
         r
@@ -55,7 +92,9 @@ impl Suite {
 
     /// Run one single-shot case (for expensive end-to-end runs a sampler
     /// would repeat for seconds); records a one-sample result with zero
-    /// MAD and returns the closure's value alongside it.
+    /// MAD and returns the closure's value alongside it. Single-shot
+    /// cases ignore the case filter — the caller needs the closure's
+    /// value either way.
     pub fn once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, BenchResult) {
         let t = std::time::Instant::now();
         let value = f();
@@ -69,6 +108,7 @@ impl Suite {
             extras: Vec::new(),
         };
         println!("{}", r.line());
+        self.last_skipped = false;
         self.results.push(r.clone());
         (value, r)
     }
@@ -76,8 +116,14 @@ impl Suite {
     /// Attach schema-stable numeric annotations to the most recently
     /// recorded case (stored sorted by key; emitted as the case's
     /// `extras` object). The round suite uses this to record the
-    /// uplink/downlink bit accounting next to its timings.
+    /// uplink/downlink bit accounting next to its timings. A no-op when
+    /// the most recent [`Suite::case`] call was skipped by the filter —
+    /// the annotations belong to the skipped case, not whichever one
+    /// happened to be recorded before it.
     pub fn annotate_last(&mut self, mut extras: Vec<(String, f64)>) {
+        if self.last_skipped {
+            return;
+        }
         if let Some(last) = self.results.last_mut() {
             extras.sort_by(|a, b| a.0.cmp(&b.0));
             last.extras = extras;
@@ -371,6 +417,34 @@ mod tests {
         assert_eq!(rep.simd, crate::exec::simd::level().label());
         assert_eq!(rep.cpu, crate::exec::simd::cpu_features());
         assert!(!rep.estimated);
+    }
+
+    #[test]
+    fn filter_skips_cases_and_guards_annotate_last() {
+        let mut s = Suite::new(
+            "demo",
+            Bench {
+                warmup: Duration::from_millis(1),
+                budget: Duration::from_millis(5),
+                max_samples: 5,
+                ..Bench::default()
+            },
+        );
+        s.set_filter(Some("keep".into()));
+        assert!(s.enabled("round/keep_this"));
+        assert!(!s.enabled("round/other"));
+        let kept = s.case("a_keep", None, || std::hint::black_box(1 + 1));
+        assert!(kept.samples >= 1);
+        s.annotate_last(vec![("k".into(), 1.0)]);
+        // the skipped case's closure must never run
+        let skipped = s.case("b_other", None, || -> u32 { panic!("filtered case ran") });
+        assert_eq!(skipped.samples, 0);
+        // annotating after a skip must not touch the recorded case
+        s.annotate_last(vec![("wrong".into(), 2.0)]);
+        let rep = s.finish();
+        assert_eq!(rep.cases.len(), 1);
+        assert_eq!(rep.cases[0].name, "a_keep");
+        assert_eq!(rep.cases[0].extras, vec![("k".to_string(), 1.0)]);
     }
 
     #[test]

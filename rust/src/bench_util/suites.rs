@@ -23,7 +23,9 @@ use crate::cli::Args;
 use crate::compress::{compress_svd, compress_tucker, tucker_ranks};
 use crate::config::{ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig};
 use crate::fl::metrics::{markdown_table, TableRow};
+use crate::fl::scheme::{make_server_scheme, SchemeKind};
 use crate::fl::session::FlSessionBuilder;
+use crate::fl::ShardedAggregator;
 use crate::linalg::{
     gemm_acc, matmul, matmul_nt, matmul_tn, matvec, qr_thin, qr_thin_unblocked, svd_truncated,
     SvdMethod,
@@ -342,6 +344,13 @@ pub fn round_cases(suite: &mut Suite) {
     // accounting of a representative round rides along in the JSON
     // (`extras`: bits_up / bits_down / ratio) next to the timing
     fn run_case(suite: &mut Suite, name: &str, cfg: &ExperimentConfig) {
+        if !suite.enabled(name) {
+            // building the session is the expensive part; respect the
+            // --only filter before paying for it (Suite::case would
+            // skip anyway)
+            suite.case(name, Some(1.0), || ());
+            return;
+        }
         let mut session = FlSessionBuilder::new(cfg).quiet().build().expect("bench session");
         session.step(0).expect("bench prime step");
         let r0 = session.history().rounds[0].clone();
@@ -371,6 +380,55 @@ pub fn round_cases(suite: &mut Suite) {
                 .expect("bench spec"),
         );
         run_case(suite, "round/qrr_p0.2+downlink/full", &cfg);
+    }
+    // cohort scale: one full 10k-client round through the sharded
+    // aggregation path alone (no client compute) — pre-encoded tiny SGD
+    // frames dispatched to shard lanes, absorbed on arrival, partial
+    // sums tree-reduced at close. This is the O(shards)-memory server
+    // loop the scale CI job gates (DESIGN.md §10); units are
+    // clients/sec.
+    {
+        let name = "round/scale_10k";
+        if suite.enabled(name) {
+            let n_clients = 10_000usize;
+            let n_shards = 8usize;
+            let shapes: Vec<Vec<usize>> = vec![vec![16, 8], vec![16]];
+            let mut rng = Rng::new(0x10_000);
+            let frames: Vec<Vec<u8>> = (0..n_clients)
+                .map(|id| {
+                    let grads: Vec<Tensor> =
+                        shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+                    Encoder::new(&ClientUpdate::Sgd { grads }, id as u32, 0)
+                })
+                .collect();
+            let schemes = (0..n_clients)
+                .map(|_| make_server_scheme(SchemeKind::Sgd, &shapes, 8))
+                .collect();
+            let mut agg = ShardedAggregator::new(schemes, shapes, n_shards);
+            let weights = vec![1.0f32; n_clients];
+            // prime one round so the peak-live bound rides along in the
+            // JSON next to the timing
+            agg.begin_round(&weights, true);
+            for (id, frame) in frames.iter().enumerate() {
+                agg.dispatch_frame(id, frame.clone());
+            }
+            let d0 = agg.close_round();
+            suite.case(name, Some(n_clients as f64), move || {
+                agg.begin_round(&weights, true);
+                for (id, frame) in frames.iter().enumerate() {
+                    agg.dispatch_frame(id, frame.clone());
+                }
+                agg.close_round().delivered.iter().filter(|&&d| d).count()
+            });
+            suite.annotate_last(vec![
+                ("clients".into(), n_clients as f64),
+                ("shards".into(), n_shards as f64),
+                ("peak_live".into(), d0.peak_live as f64),
+            ]);
+        } else {
+            // keep the skip line in the output for discoverability
+            suite.case(name, Some(1.0), || ());
+        }
     }
 }
 
@@ -459,7 +517,7 @@ pub fn maybe_write_json(report: &SuiteReport) {
 // ----------------------------------------------------------------- cli
 
 /// Dispatch `qrr bench [kernels|round|all] [--fast] [--out DIR]
-/// [--check] [--threshold PCT]`.
+/// [--check] [--threshold PCT] [--only SUBSTR]`.
 ///
 /// Writes `BENCH_<suite>.json` into `--out` (default `.`). With
 /// `--check`, the committed baseline stays untouched: the current run
@@ -472,6 +530,10 @@ pub fn maybe_write_json(report: &SuiteReport) {
 /// silent bootstrap. A baseline marked `"estimated": true` (hand-written
 /// placeholder numbers, no measured run behind them) is diffed and
 /// reported but never fails the gate — the deltas would be fiction.
+/// `--only SUBSTR` restricts every suite to cases whose name contains
+/// the substring; a filtered run never overwrites (or bootstraps) the
+/// committed baseline — it is written as `BENCH_<suite>.partial.json`
+/// instead.
 pub fn run_cli(args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -481,6 +543,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
     let fast = args.has_flag("fast") || crate::util::env::bench_fast();
     let out_dir = args.get("out").unwrap_or(".");
     let check = args.has_flag("check");
+    let only = args.get("only").map(str::to_string);
     let threshold = args
         .get_parsed::<f64>("threshold")?
         .map(|pct| pct / 100.0)
@@ -505,6 +568,10 @@ pub fn run_cli(args: &Args) -> Result<()> {
             crate::exec::simd::cpu_features()
         );
         let mut suite = Suite::new(name, bench);
+        suite.set_filter(only.clone());
+        if let Some(needle) = &only {
+            println!("   (--only: cases containing {needle:?})");
+        }
         match name {
             "kernels" => kernel_cases(&mut suite),
             "round" => round_cases(&mut suite),
@@ -512,12 +579,27 @@ pub fn run_cli(args: &Args) -> Result<()> {
         }
         let report = suite.finish();
         let path = format!("{out_dir}/BENCH_{name}.json");
-        if !check {
+        if only.is_some() && !check {
+            // a filtered run is partial by construction: never let it
+            // replace the committed full baseline
+            let partial = format!("{out_dir}/BENCH_{name}.partial.json");
+            report.save(&partial)?;
+            println!("wrote {partial} (--only run; baseline {path} untouched)");
+        } else if !check {
             report.save(&path)?;
             println!("wrote {path}");
         } else if !std::path::Path::new(&path).exists() {
-            report.save(&path)?;
-            println!("no baseline at {path}; this run recorded as the new baseline");
+            if only.is_some() {
+                let current = format!("{out_dir}/BENCH_{name}.current.json");
+                report.save(&current)?;
+                println!(
+                    "no baseline at {path}; --only run written to {current} \
+                     (a partial run is never recorded as the baseline)"
+                );
+            } else {
+                report.save(&path)?;
+                println!("no baseline at {path}; this run recorded as the new baseline");
+            }
         } else {
             // a present-but-unreadable baseline must fail the gate
             // loudly instead of being silently replaced
@@ -609,5 +691,34 @@ mod tests {
     fn cli_rejects_unknown_suite() {
         let args = Args::parse(["bench".to_string(), "nope".to_string()]);
         assert!(run_cli(&args).is_err());
+    }
+
+    #[test]
+    fn cli_only_filter_skips_cases_and_spares_baseline() {
+        // a filter matching nothing must skip every case (closures never
+        // run, so this is fast) and must NOT write the baseline file
+        let dir = std::env::temp_dir().join("qrr_bench_only_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = dir.to_str().unwrap().to_string();
+        let args = Args::parse(
+            ["bench", "round", "--fast", "--only", "zzz-no-such-case", "--out", &out]
+                .map(String::from),
+        );
+        run_cli(&args).unwrap();
+        assert!(!dir.join("BENCH_round.json").exists(), "baseline must stay untouched");
+        let partial = dir.join("BENCH_round.partial.json");
+        let report = SuiteReport::load(partial.to_str().unwrap()).unwrap();
+        assert!(report.cases.is_empty(), "filtered-out cases must not be recorded");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scale_case_respects_only_filter_registration() {
+        // the scale_10k case registers (as a skip) even when filtered
+        // out, and the session cases skip without building sessions
+        let mut suite = Suite::new("round", Bench::fast());
+        suite.set_filter(Some("no-match".into()));
+        round_cases(&mut suite);
+        assert!(suite.finish().cases.is_empty());
     }
 }

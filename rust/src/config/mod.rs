@@ -271,6 +271,9 @@ pub struct ExperimentConfig {
     /// downlink compression pipeline: when set, the server broadcasts
     /// compressed parameter deltas instead of full-precision parameters
     pub downlink: Option<PipelineSpec>,
+    /// number of server-side aggregation shards (`None` = auto:
+    /// `min(clients, 8)`); see `fl::shard::ShardedAggregator`
+    pub shards: Option<usize>,
 }
 
 impl ExperimentConfig {
@@ -298,6 +301,7 @@ impl ExperimentConfig {
             aggregation: AggregationConfig::Sum,
             uplink: None,
             downlink: None,
+            shards: None,
         }
     }
 
@@ -440,6 +444,9 @@ impl ExperimentConfig {
         }
         if let Some(spec) = &self.downlink {
             fields.push(("downlink", Json::Str(spec.format())));
+        }
+        if let Some(n) = self.shards {
+            fields.push(("shards", Json::Num(n as f64)));
         }
         Json::obj(fields)
     }
@@ -593,6 +600,13 @@ impl ExperimentConfig {
             spec.validate_downlink()
                 .map_err(|e| anyhow::anyhow!("downlink spec: {e}"))?;
             c.downlink = Some(spec);
+        }
+        if let Some(v) = j.get("shards") {
+            let n = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("shards must be a positive integer"))?;
+            anyhow::ensure!(n > 0, "shards must be positive");
+            c.shards = Some(n);
         }
         anyhow::ensure!(c.clients > 0, "need at least one client");
         anyhow::ensure!(c.batch > 0, "batch must be positive");
@@ -762,6 +776,20 @@ mod tests {
             .unwrap();
         assert_eq!(plain.uplink, None);
         assert_eq!(plain.downlink, None);
+        assert_eq!(plain.shards, None);
+    }
+
+    #[test]
+    fn shards_json_roundtrip_and_validation() {
+        let mut c = ExperimentConfig::table1_default();
+        c.shards = Some(4);
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.shards, Some(4));
+
+        let j = Json::parse(r#"{"shards": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"shards": "many"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 mod pool;
 pub mod simd;
 
-pub use pool::{parallel_for, ThreadPool};
+pub use pool::{parallel_for, ShardExecutor, ThreadPool};
 pub use simd::SimdLevel;
 
 use std::sync::OnceLock;
@@ -46,9 +46,9 @@ pub fn default_threads() -> usize {
 /// consistently — no per-call pool construction or thread spawning —
 /// and because [`ThreadPool::for_each`] degrades to a serial loop when
 /// the calling thread is itself a pool worker, kernels invoked from
-/// inside a session's per-client fan-out (e.g. `absorb_updates_on`)
-/// can never oversubscribe the machine with nested parallelism
-/// (DESIGN.md §6).
+/// inside a session's per-client fan-out (or a [`ShardExecutor`] lane's
+/// decode + absorb) can never oversubscribe the machine with nested
+/// parallelism (DESIGN.md §6).
 pub fn global_pool() -> &'static ThreadPool {
     static POOL: OnceLock<ThreadPool> = OnceLock::new();
     POOL.get_or_init(ThreadPool::default_size)

@@ -8,6 +8,7 @@
 //! once per round.
 
 use std::any::Any;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -199,6 +200,152 @@ impl Drop for ThreadPool {
     }
 }
 
+/// One shard lane: a FIFO queue of jobs plus a flag that is true while
+/// a drain task for this lane is live on the shared pool.
+struct Lane {
+    queue: Mutex<LaneQueue>,
+}
+
+struct LaneQueue {
+    jobs: VecDeque<Job>,
+    /// True while a drain task for this lane is queued or running on
+    /// the pool. Toggled only under the `queue` lock, so a dispatch
+    /// either lands in front of a live drain (which will pop it) or
+    /// observes `false` and submits a fresh drain — never neither.
+    running: bool,
+}
+
+/// N serialized FIFO lanes multiplexed onto [`global_pool`](super::global_pool).
+///
+/// Each lane executes its jobs **in dispatch order, one at a time** —
+/// the ownership discipline the sharded aggregation server relies on:
+/// shard state is touched only from that shard's lane, so per-shard
+/// partial sums need no locking discipline beyond lane membership.
+/// Lanes run concurrently with each other, sharing the crate-wide pool
+/// instead of pinning N extra OS threads; a lane only occupies a worker
+/// while it has queued work (a *drain task*), so idle shards cost
+/// nothing.
+///
+/// Jobs that panic are caught: the lane keeps draining, the executor
+/// stays usable, and [`ShardExecutor::barrier`] re-raises the first
+/// captured payload once every outstanding job has finished — the same
+/// contract as [`ThreadPool::for_each`].
+pub struct ShardExecutor {
+    lanes: Vec<Arc<Lane>>,
+    /// Outstanding-job latch: incremented at dispatch, decremented as
+    /// each job completes (even by panic), zero means quiescent.
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    payload: Arc<PanicSlot>,
+}
+
+impl std::fmt::Debug for ShardExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardExecutor")
+            .field("lanes", &self.lanes.len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl ShardExecutor {
+    /// Executor with `n` lanes (n >= 1) backed by the crate-wide pool.
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let lanes = (0..n)
+            .map(|_| {
+                Arc::new(Lane {
+                    queue: Mutex::new(LaneQueue { jobs: VecDeque::new(), running: false }),
+                })
+            })
+            .collect();
+        ShardExecutor {
+            lanes,
+            pending: Arc::new((Mutex::new(0usize), Condvar::new())),
+            payload: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Queue `job` on lane `shard % lanes()`.
+    ///
+    /// Jobs on the same lane run serially in dispatch order; jobs on
+    /// different lanes may run concurrently. Returns immediately — use
+    /// [`Self::barrier`] to wait for completion.
+    pub fn dispatch(&self, shard: usize, job: impl FnOnce() + Send + 'static) {
+        let lane = &self.lanes[shard % self.lanes.len()];
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        let spawn_drain = {
+            let mut q = lane.queue.lock().unwrap();
+            q.jobs.push_back(Box::new(job));
+            if q.running {
+                false
+            } else {
+                q.running = true;
+                true
+            }
+        };
+        if spawn_drain {
+            let lane = Arc::clone(lane);
+            let pending = Arc::clone(&self.pending);
+            let payload = Arc::clone(&self.payload);
+            super::global_pool().submit(move || drain_lane(&lane, &pending, &payload));
+        }
+    }
+
+    /// Block until every dispatched job has finished, then re-raise the
+    /// first panic payload captured since the last barrier (if any).
+    ///
+    /// Waits on this executor's own latch, so concurrent `for_each` /
+    /// `submit` traffic on the shared pool does not extend the wait.
+    pub fn barrier(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p != 0 {
+            p = cv.wait(p).unwrap();
+        }
+        drop(p);
+        if let Some(payload) = self.payload.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Pop-and-run jobs from `lane` until its queue is empty, then clear
+/// `running` and return the worker to the pool. The empty-check and the
+/// `running` reset happen under one lock acquisition, so a concurrent
+/// dispatch can never leave a queued job with no drain task live.
+fn drain_lane(lane: &Lane, pending: &(Mutex<usize>, Condvar), payload: &PanicSlot) {
+    loop {
+        let job = {
+            let mut q = lane.queue.lock().unwrap();
+            match q.jobs.pop_front() {
+                Some(job) => job,
+                None => {
+                    q.running = false;
+                    return;
+                }
+            }
+        };
+        // a panicking job must neither wedge the lane nor skip the
+        // latch decrement — barrier() re-raises the stashed payload
+        if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+            payload.lock().unwrap().get_or_insert(p);
+        }
+        let (lock, cv) = pending;
+        let mut p = lock.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            cv.notify_all();
+        }
+    }
+}
+
 /// Standalone scoped parallel-for over `0..n` with up to `threads`
 /// OS threads (spawned ad hoc; fine for one-off coarse-grained work —
 /// hot-path kernels use [`crate::exec::global_pool`] instead).
@@ -341,6 +488,110 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.for_each(0, |_| panic!("should not run"));
         parallel_for(4, 0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn shard_lane_preserves_fifo_order() {
+        let ex = ShardExecutor::new(1);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..200u64 {
+            let seen = Arc::clone(&seen);
+            ex.dispatch(0, move || seen.lock().unwrap().push(i));
+        }
+        ex.barrier();
+        let seen = seen.lock().unwrap();
+        assert_eq!(*seen, (0..200).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn shard_lanes_run_independently() {
+        let ex = ShardExecutor::new(4);
+        let sums: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        let sums = Arc::new(sums);
+        for i in 0..400u64 {
+            let sums = Arc::clone(&sums);
+            ex.dispatch(i as usize % 4, move || {
+                sums[i as usize % 4].fetch_add(i, Ordering::SeqCst);
+            });
+        }
+        ex.barrier();
+        for lane in 0..4u64 {
+            let want: u64 = (0..400).filter(|i| i % 4 == lane).sum();
+            assert_eq!(sums[lane as usize].load(Ordering::SeqCst), want, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn shard_jobs_on_one_lane_never_overlap() {
+        // mutual exclusion per lane: a lane job observing another lane
+        // job of the same lane in flight would break shard ownership
+        let ex = ShardExecutor::new(2);
+        let in_flight = Arc::new([AtomicU64::new(0), AtomicU64::new(0)]);
+        let overlapped = Arc::new(AtomicBool::new(false));
+        for i in 0..100usize {
+            let in_flight = Arc::clone(&in_flight);
+            let overlapped = Arc::clone(&overlapped);
+            ex.dispatch(i % 2, move || {
+                let lane = i % 2;
+                if in_flight[lane].fetch_add(1, Ordering::SeqCst) != 0 {
+                    overlapped.store(true, Ordering::SeqCst);
+                }
+                std::thread::yield_now();
+                in_flight[lane].fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        ex.barrier();
+        assert!(!overlapped.load(Ordering::SeqCst), "two jobs ran on one lane at once");
+    }
+
+    #[test]
+    fn shard_barrier_reraises_panic_and_lane_survives() {
+        let ex = ShardExecutor::new(2);
+        let count = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&count);
+        ex.dispatch(0, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        ex.dispatch(0, || panic!("shard job failed"));
+        let c = Arc::clone(&count);
+        ex.dispatch(0, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        let err = catch_unwind(AssertUnwindSafe(|| ex.barrier())).unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("shard job failed"), "payload lost: {msg:?}");
+        // the lane kept draining past the panic and stays usable
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+        let c = Arc::clone(&count);
+        ex.dispatch(1, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        ex.barrier(); // payload already consumed: must not re-raise
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn shard_barrier_on_idle_executor_returns() {
+        let ex = ShardExecutor::new(3);
+        ex.barrier();
+        ex.barrier();
+    }
+
+    #[test]
+    fn shard_dispatch_after_barrier_reuses_lanes() {
+        let ex = ShardExecutor::new(2);
+        let total = Arc::new(AtomicU64::new(0));
+        for round in 0..20u64 {
+            for i in 0..8u64 {
+                let total = Arc::clone(&total);
+                ex.dispatch(i as usize, move || {
+                    total.fetch_add(round * 8 + i, Ordering::Relaxed);
+                });
+            }
+            ex.barrier();
+        }
+        let want: u64 = (0..160).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
     }
 
     #[test]

@@ -74,6 +74,10 @@ pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get_parsed::<u64>("seed")? {
         cfg.seed = v;
     }
+    if let Some(v) = args.get_parsed::<usize>("shards")? {
+        anyhow::ensure!(v > 0, "--shards must be positive");
+        cfg.shards = Some(v);
+    }
     if let Some(v) = args.get("backend") {
         cfg.backend = match v {
             "native" => Backend::Native,
@@ -288,7 +292,7 @@ mod tests {
     fn overrides_apply() {
         let mut cfg = ExperimentConfig::table1_default();
         let args = crate::cli::Args::parse(
-            "exp table1 --iters 7 --clients 3 --seed 9"
+            "exp table1 --iters 7 --clients 3 --seed 9 --shards 2"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -296,6 +300,13 @@ mod tests {
         assert_eq!(cfg.iters, 7);
         assert_eq!(cfg.clients, 3);
         assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.shards, Some(2));
+
+        let bad = crate::cli::Args::parse(
+            "exp table1 --shards 0".split_whitespace().map(String::from),
+        );
+        let mut cfg = ExperimentConfig::table1_default();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
     }
 
     #[test]

@@ -5,23 +5,44 @@
 //! Since the session refactor this is a thin wrapper over
 //! [`FlSessionBuilder`] with the [`TcpTransport`] binding plugged in:
 //! every upload opens a connection, pushes its framed update and
-//! disconnects (sensor-style duty cycle); the server side accepts and
-//! drains frames with `recv_timeout`, so a vanished client cannot hang
-//! a round.
+//! disconnects (sensor-style duty cycle); the server's non-blocking
+//! event loop reassembles frames incrementally and `recv_timeout`
+//! bounds the round, so a vanished or stalled client cannot hang it.
+//! Arriving frames are routed by a header peek to one of `--shards`
+//! aggregation lanes (DESIGN.md §10).
+//!
+//! `--scale-clients N` switches to the scale smoke: N synthetic clients
+//! push tiny pre-encoded SGD frames over loopback TCP into a
+//! [`ShardedAggregator`], and the run fails unless the round completes
+//! with every client delivered and the peak number of simultaneously
+//! live decoded updates within the shard bound.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::cli::Args;
 use crate::config::{ExperimentConfig, PPolicy, SchemeConfig};
+use crate::fl::scheme::{make_server_scheme, SchemeKind};
 use crate::fl::session::FlSessionBuilder;
+use crate::fl::ShardedAggregator;
 use crate::model::ModelKind;
-use crate::net::transport::TcpTransport;
+use crate::net::transport::{TcpClient, TcpTransport, Transport, TransportError};
+use crate::net::{ClientUpdate, Decoder, Encoder};
+use crate::tensor::Tensor;
 use crate::util::fmt::bits_sci;
 
 /// Run `qrr serve` from CLI args.
 pub fn run_cli(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:0");
+    let shards: Option<usize> = args.get_parsed::<usize>("shards")?;
+
+    if let Some(scale) = args.get_parsed::<usize>("scale-clients")? {
+        let report = scale_smoke(scale, shards.unwrap_or(4), addr)?;
+        println!("{report}");
+        return Ok(());
+    }
+
     let model = args
         .get("model")
         .map(|m| ModelKind::parse(m).ok_or_else(|| anyhow::anyhow!("bad model {m}")))
@@ -30,9 +51,8 @@ pub fn run_cli(args: &Args) -> Result<()> {
     let clients: usize = args.get_parsed::<usize>("clients")?.unwrap_or(3);
     let iters: u64 = args.get_parsed::<u64>("iters")?.unwrap_or(5);
     let batch: usize = args.get_parsed::<usize>("batch")?.unwrap_or(32);
-    let addr = args.get("addr").unwrap_or("127.0.0.1:0");
     let p: f64 = args.get_parsed::<f64>("p")?.unwrap_or(0.2);
-    let report = serve(model, clients, iters, batch, addr, p)?;
+    let report = serve(model, clients, iters, batch, addr, p, shards)?;
     println!("{report}");
     Ok(())
 }
@@ -45,6 +65,7 @@ pub fn serve(
     batch: usize,
     addr: &str,
     p: f64,
+    shards: Option<usize>,
 ) -> Result<String> {
     let cfg = {
         let mut c = ExperimentConfig::table1_default();
@@ -54,6 +75,7 @@ pub fn serve(
         c.batch = batch;
         c.iters = iters;
         c.eval_every = iters.max(1);
+        c.shards = shards;
         // small synthetic stream: serve demonstrates transport, not scale
         c.train_n = (batch * 8 * n_clients).max(n_clients);
         c.test_n = 64;
@@ -69,12 +91,110 @@ pub fn serve(
         .recv_timeout(Duration::from_secs(5))
         .build()?;
     let report = session.run()?;
+    let (n_shards, peak) = (session.n_shards(), session.peak_live());
 
     Ok(format!(
         "served {iters} rounds x {n_clients} clients over TCP ({srv_addr}); \
-         payload bits {} across {} communications",
+         payload bits {} across {} communications; \
+         {n_shards} aggregation shard(s), peak {peak} live decoded update(s)",
         bits_sci(report.history.total_bits()),
         report.history.total_comms(),
+    ))
+}
+
+/// The `--scale-clients` loopback smoke: `n_clients` synthetic senders
+/// push one tiny SGD frame each over real sockets; the server routes
+/// every completed frame to its aggregation shard as it arrives.
+/// Errors (non-zero exit from the CLI) if the round does not complete
+/// or the peak count of live decoded updates exceeds the shard count.
+pub fn scale_smoke(n_clients: usize, n_shards: usize, addr: &str) -> Result<String> {
+    anyhow::ensure!(n_clients > 0, "need at least one client");
+    let shapes: Vec<Vec<usize>> = vec![vec![32, 16], vec![32]];
+    let schemes = (0..n_clients)
+        .map(|_| make_server_scheme(SchemeKind::Sgd, &shapes, 8))
+        .collect();
+    let mut agg = ShardedAggregator::new(schemes, shapes.clone(), n_shards);
+
+    let transport = TcpTransport::bind(addr)?;
+    let srv_addr = transport.local_addr();
+    log::info!(
+        "scale smoke on {srv_addr}: {n_clients} clients -> {} shard(s)",
+        agg.n_shards()
+    );
+    agg.begin_round(&vec![1.0f32; n_clients], true);
+
+    // sender fleet: a few threads share the client id space; each id
+    // opens a connection, pushes its framed update and disconnects —
+    // the sensor duty cycle at cohort scale
+    let senders = 8.min(n_clients);
+    let started = Instant::now();
+    let mut handles = Vec::with_capacity(senders);
+    for t in 0..senders {
+        let shapes = shapes.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut id = t;
+            while id < n_clients {
+                let mut rng = crate::util::Rng::new(0x5CA1E ^ id as u64);
+                let grads: Vec<Tensor> =
+                    shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+                let bytes = Encoder::new(&ClientUpdate::Sgd { grads }, id as u32, 0);
+                TcpClient::connect(srv_addr)?.send(&bytes)?;
+                id += senders;
+            }
+            Ok(())
+        }));
+    }
+
+    // server loop: header-only peek routes each completed frame to its
+    // shard lane; the body decode + absorb happen there
+    let mut received = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while received < n_clients && Instant::now() < deadline {
+        match transport.recv_timeout(Duration::from_millis(500)) {
+            Ok(frame) => {
+                let header = match Decoder::peek_header(&frame) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        log::warn!("scale smoke: discarding undecodable frame ({e})");
+                        continue;
+                    }
+                };
+                let id = header.client_id as usize;
+                if id >= n_clients {
+                    log::warn!("scale smoke: discarding out-of-range client id {id}");
+                    continue;
+                }
+                agg.dispatch_frame(id, frame);
+                received += 1;
+            }
+            Err(TransportError::TimedOut(_)) => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("sender thread panicked"))??;
+    }
+
+    let digest = agg.close_round();
+    let delivered = digest.delivered.iter().filter(|&&d| d).count();
+    anyhow::ensure!(
+        delivered == n_clients,
+        "round incomplete: {delivered}/{n_clients} delivered ({} decode failures)",
+        digest.decode_failures
+    );
+    anyhow::ensure!(
+        digest.peak_live <= agg.n_shards(),
+        "peak live decoded updates {} exceeds shard count {}",
+        digest.peak_live,
+        agg.n_shards()
+    );
+    Ok(format!(
+        "scale smoke: {n_clients}/{n_clients} clients delivered through {} shard(s) \
+         in {:.1}s; peak {} live decoded update(s) (bound {})",
+        agg.n_shards(),
+        started.elapsed().as_secs_f64(),
+        digest.peak_live,
+        agg.n_shards()
     ))
 }
 
@@ -84,8 +204,17 @@ mod tests {
 
     #[test]
     fn tcp_round_loop_completes() {
-        let report = serve(ModelKind::Mlp, 2, 2, 8, "127.0.0.1:0", 0.2).unwrap();
+        let report = serve(ModelKind::Mlp, 2, 2, 8, "127.0.0.1:0", 0.2, Some(2)).unwrap();
         assert!(report.contains("served 2 rounds"), "{report}");
         assert!(report.contains("across 4 communications"), "{report}");
+        assert!(report.contains("2 aggregation shard(s)"), "{report}");
+    }
+
+    #[test]
+    fn scale_smoke_bounds_peak_live() {
+        // small cohort here; CI runs the 2k-client variant
+        let report = scale_smoke(64, 4, "127.0.0.1:0").unwrap();
+        assert!(report.contains("64/64 clients delivered"), "{report}");
+        assert!(report.contains("through 4 shard(s)"), "{report}");
     }
 }

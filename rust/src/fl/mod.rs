@@ -11,6 +11,7 @@ pub mod metrics;
 pub mod scheme;
 pub mod server;
 pub mod session;
+pub mod shard;
 
 pub use client::{ClientRoundOutput, FlClient};
 pub use metrics::{EvalPoint, History, RoundMetrics};
@@ -19,6 +20,7 @@ pub use scheme::{
     ClientScheme, SchemeKind, ServerScheme,
 };
 pub use server::FlServer;
+pub use shard::{RoundDigest, ShardedAggregator};
 pub use session::{
     Aggregation, CsvSink, DeadlineCutoff, FlSession, FlSessionBuilder, FullSync, LinkDropout,
     LogSink, MetricsSink, ParticipationPolicy, RunReport, SumAggregation, UniformSampling,

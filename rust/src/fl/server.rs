@@ -1,13 +1,13 @@
-//! The FL server: holds the central model, per-client scheme mirrors and
-//! applies the distributed gradient-descent step (paper eq. (2)).
+//! The FL server: holds the central model and applies the distributed
+//! gradient-descent step (paper eq. (2)).
+//!
+//! Per-client scheme mirrors and the round's streaming absorb live in
+//! [`crate::fl::shard::ShardedAggregator`] (DESIGN.md §10); this type
+//! only owns the parameters, the learning rate and the step.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::exec::ThreadPool;
-use crate::net::{ClientUpdate, Decoder};
 use crate::tensor::Tensor;
-
-use super::scheme::ServerScheme;
 
 /// Aggregation server.
 ///
@@ -17,7 +17,6 @@ use super::scheme::ServerScheme;
 /// (DESIGN.md §5).
 pub struct FlServer {
     params: Arc<Vec<Tensor>>,
-    per_client: Vec<Box<dyn ServerScheme>>,
     alpha: f32,
 }
 
@@ -25,16 +24,15 @@ impl std::fmt::Debug for FlServer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("FlServer")
             .field("params", &self.params.len())
-            .field("clients", &self.per_client.len())
             .field("alpha", &self.alpha)
             .finish_non_exhaustive()
     }
 }
 
 impl FlServer {
-    /// New server with initial parameters and one scheme mirror per client.
-    pub fn new(params: Vec<Tensor>, per_client: Vec<Box<dyn ServerScheme>>, alpha: f32) -> Self {
-        FlServer { params: Arc::new(params), per_client, alpha }
+    /// New server with initial parameters and learning rate.
+    pub fn new(params: Vec<Tensor>, alpha: f32) -> Self {
+        FlServer { params: Arc::new(params), alpha }
     }
 
     /// Current central parameters (broadcast to clients each round).
@@ -59,48 +57,6 @@ impl FlServer {
         self.alpha
     }
 
-    /// Server-side scheme memory across all clients, in bytes.
-    pub fn scheme_mem_bytes(&self) -> usize {
-        self.per_client.iter().map(|s| s.mem_bytes()).sum()
-    }
-
-    /// Feed each client's update (or its absence) through that client's
-    /// scheme mirror, returning one reconstructed gradient contribution
-    /// per client. How the contributions are combined is the session's
-    /// [`Aggregation`](crate::fl::session::Aggregation) seam.
-    pub fn absorb_updates(&mut self, updates: &[Option<ClientUpdate>]) -> Vec<Vec<Tensor>> {
-        assert_eq!(updates.len(), self.per_client.len(), "one slot per client");
-        self.per_client
-            .iter_mut()
-            .zip(updates.iter())
-            .map(|(scheme, up)| scheme.absorb(up.as_ref()))
-            .collect()
-    }
-
-    /// [`Self::absorb_updates`] fanned out over `pool`: each client's
-    /// decode + reconstruction (the SVD/Tucker ℂ⁻¹ matmuls) runs as its
-    /// own task. Scheme mirrors are independent per client, so this is
-    /// exactly the serial result in a deterministic slot order.
-    pub fn absorb_updates_on(
-        &mut self,
-        updates: &[Option<ClientUpdate>],
-        pool: &ThreadPool,
-    ) -> Vec<Vec<Tensor>> {
-        assert_eq!(updates.len(), self.per_client.len(), "one slot per client");
-        let n = self.per_client.len();
-        let mut out: Vec<Vec<Tensor>> = (0..n).map(|_| Vec::new()).collect();
-        {
-            let slots: Vec<Mutex<&mut Vec<Tensor>>> = out.iter_mut().map(Mutex::new).collect();
-            let schemes: Vec<Mutex<&mut Box<dyn ServerScheme>>> =
-                self.per_client.iter_mut().map(Mutex::new).collect();
-            pool.for_each(n, |i| {
-                let mut scheme = schemes[i].lock().unwrap();
-                **slots[i].lock().unwrap() = scheme.absorb(updates[i].as_ref());
-            });
-        }
-        out
-    }
-
     /// Apply the descent step θ^{k+1} = θ^k − α·agg (paper eq. (2) once
     /// `agg` is the eq.-(2) sum). Returns the ℓ2 norm of `agg` (a column
     /// in the paper's tables).
@@ -113,38 +69,11 @@ impl FlServer {
         }
         norm2.sqrt()
     }
-
-    /// Decode raw wire messages (order: one slot per client, `None` for
-    /// skipped uploads), reconstruct per-client gradients, sum them and
-    /// take the descent step. Returns the ℓ2 norm of the aggregated
-    /// gradient.
-    pub fn aggregate_wire(&mut self, wires: &[Option<Vec<u8>>]) -> anyhow::Result<f64> {
-        assert_eq!(wires.len(), self.per_client.len(), "one slot per client");
-        let updates: Vec<Option<ClientUpdate>> = wires
-            .iter()
-            .map(|w| {
-                w.as_ref()
-                    .map(|bytes| Decoder::decode(bytes).map(|d| d.update))
-                    .transpose()
-            })
-            .collect::<Result<_, _>>()?;
-        Ok(self.aggregate(&updates))
-    }
-
-    /// Same as [`Self::aggregate_wire`] but with already-decoded updates:
-    /// absorb every client's update, sum (eq. (2)) and step.
-    pub fn aggregate(&mut self, updates: &[Option<ClientUpdate>]) -> f64 {
-        let contribs = self.absorb_updates(updates);
-        let agg = super::session::sum_contribs(contribs);
-        self.apply_aggregate(&agg)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fl::scheme::{make_client_scheme, make_server_scheme, SchemeKind};
-    use crate::net::Encoder;
     use crate::util::Rng;
 
     fn shapes() -> Vec<Vec<usize>> {
@@ -152,21 +81,19 @@ mod tests {
     }
 
     #[test]
-    fn sgd_aggregate_is_sum_times_alpha() {
+    fn apply_aggregate_steps_by_alpha_times_sum() {
         let shapes = shapes();
         let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-        let per_client = vec![
-            make_server_scheme(SchemeKind::Sgd, &shapes, 8),
-            make_server_scheme(SchemeKind::Sgd, &shapes, 8),
-        ];
-        let mut server = FlServer::new(params, per_client, 0.5);
+        let mut server = FlServer::new(params, 0.5);
         let mut rng = Rng::new(120);
         let g1: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
         let g2: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
-        let norm = server.aggregate(&[
-            Some(ClientUpdate::Sgd { grads: g1.clone() }),
-            Some(ClientUpdate::Sgd { grads: g2.clone() }),
-        ]);
+        let agg: Vec<Tensor> = g1
+            .iter()
+            .zip(g2.iter())
+            .map(|(a, b)| crate::tensor::zip(a, b, |x, y| x + y))
+            .collect();
+        let norm = server.apply_aggregate(&agg);
         assert!(norm > 0.0);
         // params = -alpha*(g1+g2)
         for (i, p) in server.params().iter().enumerate() {
@@ -176,73 +103,22 @@ mod tests {
     }
 
     #[test]
-    fn aggregate_wire_roundtrip() {
+    fn step_norm_is_aggregate_l2_norm() {
         let shapes = shapes();
         let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-        let mut client = make_client_scheme(SchemeKind::Qrr { p: 0.5 }, &shapes, 8, 0.1, 1);
-        let per_client = vec![make_server_scheme(SchemeKind::Qrr { p: 0.5 }, &shapes, 8)];
-        let mut server = FlServer::new(params, per_client, 0.1);
+        let mut server = FlServer::new(params, 0.1);
         let mut rng = Rng::new(121);
-        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
-        let up = client.produce(&[], &grads).unwrap();
-        let wire = Encoder::new(&up, 0, 0);
-        let norm = server.aggregate_wire(&[Some(wire)]).unwrap();
-        assert!(norm.is_finite() && norm > 0.0);
-        // params moved
-        assert!(server.params()[0].fro_norm() > 0.0);
-    }
-
-    #[test]
-    fn garbage_wire_is_error_not_panic() {
-        let shapes = shapes();
-        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-        let per_client = vec![make_server_scheme(SchemeKind::Sgd, &shapes, 8)];
-        let mut server = FlServer::new(params, per_client, 0.1);
-        let res = server.aggregate_wire(&[Some(vec![1, 2, 3])]);
-        assert!(res.is_err());
-    }
-
-    #[test]
-    fn parallel_absorb_matches_serial() {
-        let shapes = shapes();
-        let mk = || {
-            FlServer::new(
-                shapes.iter().map(|s| Tensor::zeros(s)).collect(),
-                vec![
-                    make_server_scheme(SchemeKind::Sgd, &shapes, 8),
-                    make_server_scheme(SchemeKind::Sgd, &shapes, 8),
-                    make_server_scheme(SchemeKind::Sgd, &shapes, 8),
-                ],
-                0.1,
-            )
-        };
-        let mut rng = Rng::new(122);
-        let grads = |rng: &mut Rng| -> Vec<Tensor> {
-            shapes.iter().map(|s| Tensor::randn(s, rng)).collect()
-        };
-        let updates = vec![
-            Some(ClientUpdate::Sgd { grads: grads(&mut rng) }),
-            None,
-            Some(ClientUpdate::Sgd { grads: grads(&mut rng) }),
-        ];
-        let serial = mk().absorb_updates(&updates);
-        let pool = crate::exec::ThreadPool::new(4);
-        let parallel = mk().absorb_updates_on(&updates, &pool);
-        assert_eq!(serial.len(), parallel.len());
-        for (a, b) in serial.iter().zip(parallel.iter()) {
-            assert_eq!(a.len(), b.len());
-            for (x, y) in a.iter().zip(b.iter()) {
-                assert!(x.rel_err(y) < 1e-7);
-            }
-        }
+        let agg: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let norm = server.apply_aggregate(&agg);
+        let expect: f64 = agg.iter().map(crate::tensor::sq_norm).sum::<f64>().sqrt();
+        assert!((norm - expect).abs() < 1e-9);
     }
 
     #[test]
     fn broadcast_handle_is_zero_copy_until_step() {
         let shapes = shapes();
         let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-        let per_client = vec![make_server_scheme(SchemeKind::Sgd, &shapes, 8)];
-        let mut server = FlServer::new(params, per_client, 0.5);
+        let mut server = FlServer::new(params, 0.5);
         let handle = server.params_shared();
         assert!(std::ptr::eq(handle.as_slice().as_ptr(), server.params().as_ptr()));
         // stepping while a reader holds the broadcast clones instead of
@@ -263,8 +139,7 @@ mod tests {
     fn lr_schedule_applied() {
         let shapes = shapes();
         let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-        let per_client = vec![make_server_scheme(SchemeKind::Sgd, &shapes, 8)];
-        let mut server = FlServer::new(params, per_client, 0.01);
+        let mut server = FlServer::new(params, 0.01);
         assert_eq!(server.alpha(), 0.01);
         server.set_alpha(0.001);
         assert_eq!(server.alpha(), 0.001);

@@ -7,7 +7,12 @@
 //!   upload survives it (full sync, uniform sampling, link-driven
 //!   dropout, straggler deadline),
 //! * an [`Aggregation`] — how the server combines client contributions
-//!   (paper eq. (2) sum, or shard-size-weighted FedAvg mean),
+//!   (paper eq. (2) sum, or shard-size-weighted FedAvg mean), applied
+//!   in streaming form by the sharded aggregator
+//!   ([`crate::fl::shard::ShardedAggregator`], DESIGN.md §10): each
+//!   arriving frame is decoded and absorbed on its shard's lane the
+//!   moment it completes, so server memory for decoded updates is
+//!   O(shards), not O(cohort),
 //! * a [`Transport`] binding — how update bytes reach the server
 //!   (in-process channel or real TCP, both from
 //!   [`crate::net::transport`]); the round loop receives with
@@ -40,11 +45,13 @@ use crate::data::{self, Dataset};
 use crate::exec::ThreadPool;
 use crate::model::{native::NativeModel, ModelOps, ModelSpec};
 use crate::net::transport::{InProcTransport, Transport, TransportError};
-use crate::net::{ClientUpdate, Decoder, Encoder, LinkModel};
+use crate::net::{Decoder, Encoder, LinkModel};
 use crate::tensor::Tensor;
 use crate::util::{PhaseTimes, Rng};
 
-use super::{ClientRoundOutput, EvalPoint, FlClient, FlServer, History, RoundMetrics};
+use super::{
+    ClientRoundOutput, EvalPoint, FlClient, FlServer, History, RoundMetrics, ShardedAggregator,
+};
 
 // ------------------------------------------------------- participation
 
@@ -219,13 +226,37 @@ pub fn participation_from_config(cfg: &ParticipationConfig) -> Box<dyn Participa
 /// update); `delivered[i]` says whether client `i`'s upload arrived this
 /// round; `shard_sizes[i]` is its local dataset size.
 pub trait Aggregation: Send {
-    /// Combine contributions into the aggregate gradient.
+    /// Combine contributions into the aggregate gradient (the batch
+    /// form — unit tests and external callers with all contributions in
+    /// hand).
     fn combine(
         &self,
         contribs: Vec<Vec<Tensor>>,
         delivered: &[bool],
         shard_sizes: &[usize],
     ) -> Vec<Tensor>;
+
+    /// Streaming form, used by the sharded round loop: the weight
+    /// client `i`'s contribution carries as it is absorbed into its
+    /// shard's partial sum (default 1 — plain summation).
+    fn client_weight(&self, client: usize, shard_sizes: &[usize]) -> f32 {
+        let _ = (client, shard_sizes);
+        1.0
+    }
+
+    /// Streaming form: whether scheme contributions for clients whose
+    /// upload did not arrive (zeros, or SLAQ's stale gradients) enter
+    /// the sum. Default `true` — eq. (2) reuses stale state.
+    fn include_undelivered(&self) -> bool {
+        true
+    }
+
+    /// Streaming form: scalar applied once to the tree-reduced
+    /// aggregate after the round closes (default 1).
+    fn finalize_scale(&self, delivered: &[bool], shard_sizes: &[usize]) -> f32 {
+        let _ = (delivered, shard_sizes);
+        1.0
+    }
 
     /// Display label.
     fn label(&self) -> &'static str;
@@ -235,10 +266,10 @@ pub trait Aggregation: Send {
 #[derive(Debug)]
 pub struct SumAggregation;
 
-/// Sum a non-empty set of per-client gradient lists elementwise (shared
-/// with the legacy `FlServer::aggregate` path). `axpy(1.0, ·)` routes
-/// to the SIMD [`crate::exec::simd::sum_into`] kernel (the multiply-free
-/// α = 1 fast path) while keeping the per-tensor shape assert.
+/// Sum a non-empty set of per-client gradient lists elementwise.
+/// `axpy(1.0, ·)` routes to the SIMD [`crate::exec::simd::sum_into`]
+/// kernel (the multiply-free α = 1 fast path) while keeping the
+/// per-tensor shape assert.
 pub(crate) fn sum_contribs(contribs: Vec<Vec<Tensor>>) -> Vec<Tensor> {
     let mut it = contribs.into_iter();
     let mut acc = it.next().expect("at least one client");
@@ -312,6 +343,28 @@ impl Aggregation for WeightedMeanAggregation {
             }
         }
         acc.unwrap_or_else(|| zero_shapes.iter().map(|s| Tensor::zeros(s)).collect())
+    }
+
+    fn client_weight(&self, client: usize, shard_sizes: &[usize]) -> f32 {
+        shard_sizes[client] as f32
+    }
+
+    fn include_undelivered(&self) -> bool {
+        false
+    }
+
+    fn finalize_scale(&self, delivered: &[bool], shard_sizes: &[usize]) -> f32 {
+        let mut denom = 0.0f64;
+        for (i, &s) in shard_sizes.iter().enumerate() {
+            if delivered[i] {
+                denom += s as f64;
+            }
+        }
+        if denom > 0.0 {
+            (1.0 / denom) as f32
+        } else {
+            0.0
+        }
     }
 
     fn label(&self) -> &'static str {
@@ -447,6 +500,7 @@ pub struct FlSessionBuilder {
     sinks: Vec<Box<dyn MetricsSink>>,
     quiet: bool,
     threads: Option<usize>,
+    shards: Option<usize>,
 }
 
 impl std::fmt::Debug for FlSessionBuilder {
@@ -457,6 +511,7 @@ impl std::fmt::Debug for FlSessionBuilder {
             .field("sinks", &self.sinks.len())
             .field("quiet", &self.quiet)
             .field("threads", &self.threads)
+            .field("shards", &self.shards)
             .finish_non_exhaustive()
     }
 }
@@ -474,6 +529,7 @@ impl FlSessionBuilder {
             sinks: Vec::new(),
             quiet: false,
             threads: None,
+            shards: None,
         }
     }
 
@@ -526,6 +582,14 @@ impl FlSessionBuilder {
     /// `QRR_THREADS` env override or available parallelism.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Number of server-side aggregation shards (default: the config's
+    /// `shards`, else `min(clients, 8)`). Shard count is independent of
+    /// the thread count, so results never depend on parallelism.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n.max(1));
         self
     }
 
@@ -629,7 +693,15 @@ impl FlSessionBuilder {
                 })
             }
         };
-        let server = FlServer::new(params, server_schemes, cfg.alpha0());
+        // server side splits in two: the slim FlServer owns the central
+        // parameters and the descent step, while the sharded aggregator
+        // owns the per-client scheme mirrors and the O(shards) streaming
+        // absorb (DESIGN.md §10). The shard count is deliberately
+        // decoupled from the thread count: it fixes the summation order,
+        // so it must not drift with available parallelism.
+        let n_shards = self.shards.or(cfg.shards).unwrap_or_else(|| cfg.clients.min(8));
+        let aggregator = ShardedAggregator::new(server_schemes, shapes, n_shards);
+        let server = FlServer::new(params, cfg.alpha0());
 
         let participation = self
             .participation
@@ -666,6 +738,8 @@ impl FlSessionBuilder {
             links,
             shard_sizes,
             server,
+            aggregator,
+            peak_live_max: 0,
             model,
             test,
             participation,
@@ -703,6 +777,12 @@ pub struct FlSession {
     links: Vec<LinkModel>,
     shard_sizes: Vec<usize>,
     server: FlServer,
+    /// sharded streaming aggregation: scheme mirrors, shard partials
+    /// and the absorb-on-complete lanes (DESIGN.md §10)
+    aggregator: ShardedAggregator,
+    /// session-wide high-water mark of simultaneously live decoded
+    /// updates on the server (bounded by the shard count)
+    peak_live_max: usize,
     model: Arc<dyn ModelOps + Sync>,
     test: Dataset,
     participation: Box<dyn ParticipationPolicy>,
@@ -723,8 +803,9 @@ pub struct FlSession {
     /// how many rounds each client has computed (mirrors the client's
     /// wire `round` counter, used to reject stale/duplicate frames)
     client_rounds: Vec<u64>,
-    /// long-lived workers shared by the client fan-out, the server-side
-    /// decode and evaluation — spawned once per session, not per round
+    /// long-lived workers shared by the client fan-out and evaluation —
+    /// spawned once per session, not per round (server-side decode runs
+    /// on the aggregator's shard lanes instead)
     pool: ThreadPool,
 }
 
@@ -762,6 +843,18 @@ impl FlSession {
         &self.server
     }
 
+    /// Number of server-side aggregation shards.
+    pub fn n_shards(&self) -> usize {
+        self.aggregator.n_shards()
+    }
+
+    /// Highest number of decoded client updates simultaneously alive on
+    /// the server across all rounds so far. Structurally bounded by
+    /// [`Self::n_shards`] — the O(shards) memory claim, observable.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live_max
+    }
+
     /// Metric history so far.
     pub fn history(&self) -> &History {
         &self.history
@@ -789,7 +882,7 @@ impl FlSession {
         Ok(RunReport {
             history: self.history.clone(),
             client_mem_bytes: self.clients.iter().map(|c| c.scheme_mem_bytes()).sum(),
-            server_mem_bytes: self.server.scheme_mem_bytes(),
+            server_mem_bytes: self.aggregator.mem_bytes(),
             phases: self.phases.clone(),
         })
     }
@@ -864,6 +957,15 @@ impl FlSession {
             }
         }
 
+        // open the sharded aggregation round: per-client weights and the
+        // silent-member policy come from the aggregation seam, so the
+        // streaming absorb computes the same sum `combine` would
+        let agg_weights: Vec<f32> = (0..n)
+            .map(|i| self.aggregation.client_weight(i, &self.shard_sizes))
+            .collect();
+        self.aggregator
+            .begin_round(&agg_weights, self.aggregation.include_undelivered());
+
         // uplink: admitted updates enter the transport; a policy-dropped
         // upload is simply never sent and is not waited for
         let mut sent = 0usize;
@@ -884,9 +986,12 @@ impl FlSession {
         // server side: collect what actually arrived. One deadline
         // bounds the whole collection — discarded junk frames must not
         // refresh the budget, or a misbehaving peer re-sending garbage
-        // could hold the round open forever
-        let mut updates: Vec<Option<ClientUpdate>> = (0..n).map(|_| None).collect();
-        let mut delivered = vec![false; n];
+        // could hold the round open forever. Routing is header-only
+        // (`peek_header`): the body decode and the scheme absorb run on
+        // the frame's shard lane while this loop keeps draining the
+        // transport, so at most `n_shards` decoded updates are ever
+        // alive at once.
+        let mut dispatched = vec![false; n];
         let mut received = 0usize;
         let collect_deadline = Instant::now() + self.recv_timeout;
         while received < sent {
@@ -905,14 +1010,14 @@ impl FlSession {
                     // abort the run: garbage, unknown senders, stale
                     // rounds and duplicates are all discarded, exactly
                     // like a lost frame
-                    let msg = match Decoder::decode(&frame) {
-                        Ok(msg) => msg,
+                    let header = match Decoder::peek_header(&frame) {
+                        Ok(h) => h,
                         Err(e) => {
                             log::warn!("round {it}: discarding undecodable frame ({e})");
                             continue;
                         }
                     };
-                    let id = msg.client_id as usize;
+                    let id = header.client_id as usize;
                     if id >= n {
                         log::warn!(
                             "round {it}: discarding frame with out-of-range client id {id}"
@@ -922,18 +1027,18 @@ impl FlSession {
                     // a late frame from a past round (straggler drained
                     // by a later accept) or a duplicate must not enter
                     // this round's aggregate or scheme mirrors
-                    if expected_round[id] != Some(msg.round) || updates[id].is_some() {
+                    if expected_round[id] != Some(header.round) || dispatched[id] {
                         log::warn!(
                             "round {it}: discarding unexpected frame from client {id} \
                              (frame round {}, expected {:?})",
-                            msg.round,
+                            header.round,
                             expected_round[id]
                         );
                         continue;
                     }
                     received += 1;
-                    delivered[id] = true;
-                    updates[id] = Some(msg.update);
+                    dispatched[id] = true;
+                    self.aggregator.dispatch_frame(id, frame);
                 }
                 Err(TransportError::TimedOut(_)) => {
                     log::debug!(
@@ -946,6 +1051,14 @@ impl FlSession {
                 Err(e) => return Err(e.into()),
             }
         }
+
+        // close the round: in-flight absorbs drain, silent members
+        // advance their mirrors, shard partials tree-reduce. `delivered`
+        // comes from the digest — a frame that passed the header peek
+        // but failed the body decode on its lane stays undelivered.
+        let digest = self.aggregator.close_round();
+        let delivered = digest.delivered;
+        self.peak_live_max = self.peak_live_max.max(digest.peak_live);
 
         // metrics: bits/comms count what the server actually received;
         // the synchronous round time is the slowest delivered upload
@@ -966,10 +1079,15 @@ impl FlSession {
             }
         }
 
-        // server: per-client scheme absorption (decode + ℂ⁻¹ reconstruct,
-        // fanned out over the pool) → pluggable aggregation → descent step
-        let contribs = self.server.absorb_updates_on(&updates, &self.pool);
-        let agg = self.aggregation.combine(contribs, &delivered, &self.shard_sizes);
+        // finalize: the aggregation seam's closing scalar (1 for sum,
+        // 1/Σ delivered shard sizes for the weighted mean) → descent step
+        let scale = self.aggregation.finalize_scale(&delivered, &self.shard_sizes);
+        let mut agg = digest.aggregate;
+        if scale != 1.0 {
+            for t in agg.iter_mut() {
+                t.scale(scale);
+            }
+        }
         let grad_norm = self.server.apply_aggregate(&agg);
 
         self.cum_bits += bits;
@@ -1260,6 +1378,38 @@ mod tests {
         let b = r4.history.evals.last().unwrap();
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn session_shard_count_resolves_and_bounds_peak_live() {
+        // builder override wins; peak live decoded updates never exceed
+        // the shard count (the O(shards) memory bound, observed)
+        let mut cfg = tiny_cfg(SchemeConfig::Sgd);
+        cfg.iters = 2;
+        cfg.eval_every = 2;
+        let mut session = FlSessionBuilder::new(&cfg)
+            .shards(2)
+            .quiet()
+            .build()
+            .unwrap();
+        assert_eq!(session.n_shards(), 2);
+        session.run().unwrap();
+        assert!(session.peak_live() >= 1, "no decoded update ever live");
+        assert!(
+            session.peak_live() <= session.n_shards(),
+            "peak live {} exceeds shard count {}",
+            session.peak_live(),
+            session.n_shards()
+        );
+
+        // config knob flows through when the builder doesn't override
+        cfg.shards = Some(1);
+        let session = FlSessionBuilder::new(&cfg).quiet().build().unwrap();
+        assert_eq!(session.n_shards(), 1);
+        // default: min(clients, 8)
+        cfg.shards = None;
+        let session = FlSessionBuilder::new(&cfg).quiet().build().unwrap();
+        assert_eq!(session.n_shards(), 3);
     }
 
     #[test]

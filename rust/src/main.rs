@@ -3,7 +3,8 @@
 //! ```text
 //! qrr exp <table1|table2|table3|fig1|overhead|all> [--iters N] […]
 //! qrr train --config cfg.json [--out DIR]
-//! qrr serve --addr 127.0.0.1:0 --model mlp --clients 3 --iters 5
+//! qrr serve --addr 127.0.0.1:0 --model mlp --clients 3 --iters 5 [--shards N]
+//! qrr serve --scale-clients 2000 --shards 4
 //! qrr bench [kernels|round|all] [--fast] [--check] [--out DIR]
 //! qrr audit [--check] [--list-rules]
 //! qrr info
@@ -116,6 +117,10 @@ USAGE:
                                  id: table1 | table2 | table3 | fig1 | overhead | all
     qrr train --config <json>    run a single configured experiment
     qrr serve [options]          run the FL server+clients over real TCP
+                                 --shards N routes uploads to N aggregation
+                                 lanes (absorb-on-arrival, O(shards) memory);
+                                 --scale-clients N runs the loopback scale
+                                 smoke (N senders, asserts the memory bound)
     qrr bench [suite] [options]  run the perf suites, write BENCH_*.json
                                  suite: kernels | round | all (default)
     qrr audit [--check]          static-analysis gate: SAFETY comments,
@@ -129,6 +134,9 @@ BENCH OPTIONS:
     --check           diff against the committed BENCH_*.json baseline
                       and fail on any case regressing past the threshold
     --threshold PCT   regression threshold in percent (default 25)
+    --only SUBSTR     run only cases whose name contains SUBSTR; a
+                      filtered run writes BENCH_*.partial.json and
+                      never replaces the committed baseline
     --out DIR         where BENCH_*.json live — both the baseline read
                       by --check and the written output (default ".",
                       the repo root with its committed baselines)
@@ -143,6 +151,7 @@ COMMON OPTIONS (exp/train):
     --test-n N        test samples (default 10000)
     --eval-every N    evaluation period (default 25)
     --seed N          RNG seed (default 42)
+    --shards N        server-side aggregation shards (default min(clients, 8))
     --out DIR         output directory for CSV/markdown (default results/)
     --participation P who participates each round:
                       full | <fraction> | dropout:<fraction>:<drop_prob> | deadline:<secs>

@@ -19,6 +19,7 @@ pub mod wire;
 
 pub use link::LinkModel;
 pub use transport::{
-    InProcTransport, TcpClient, TcpServerTransport, TcpTransport, Transport, TransportError,
+    FrameAssembler, FrameError, InProcTransport, TcpClient, TcpServerTransport, TcpTransport,
+    Transport, TransportError, MAX_FRAME_BYTES,
 };
-pub use wire::{ClientUpdate, Decoder, Encoder, ServerUpdate, WireError};
+pub use wire::{ClientUpdate, Decoder, Encoder, ServerUpdate, WireError, WireHeader};

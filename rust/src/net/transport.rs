@@ -1,7 +1,12 @@
 //! Byte transports: in-process channels (simulation) and TCP
 //! (cross-process serving / integration tests).
 //!
-//! Framing over TCP: `u32 LE length || payload`.
+//! Framing over TCP: `u32 LE length || payload`. The server side is a
+//! hand-rolled **non-blocking readiness loop** (DESIGN.md §10): the
+//! listener and every accepted socket run in non-blocking mode, each
+//! connection owns a [`FrameAssembler`] that accumulates partial reads,
+//! and one poll pass services every connection — a stalled or trickling
+//! peer can never block the others.
 //!
 //! Every [`Transport`] supports both blocking [`Transport::recv`] and
 //! deadline-bounded [`Transport::recv_timeout`]; the session round loop
@@ -118,18 +123,116 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     Ok(buf)
 }
 
+// --------------------------------------------------- frame assembler
+
+/// Hard cap on a declared frame length ([`FrameAssembler::new`] default):
+/// a hostile 4-byte header must not be able to commission an allocation.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// A partial-frame error: the connection carrying it must be dropped.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum FrameError {
+    /// The 4-byte header declared a length above the assembler's cap.
+    #[error("declared frame length {declared} exceeds cap {max}")]
+    Oversized {
+        /// length the header declared
+        declared: usize,
+        /// the assembler's configured cap
+        max: usize,
+    },
+}
+
+/// Incremental state machine over `u32 LE length || payload` framing.
+///
+/// Bytes arrive in whatever chunks the socket produces; [`Self::push`]
+/// appends them and drains every frame that has become complete, in
+/// order. The declared length is validated against the cap as soon as
+/// the four header bytes are present — *before* any payload allocation —
+/// so a hostile header cannot commission memory (the transport-level
+/// twin of the wire decoder's `sized` guard, DESIGN.md §9).
+#[derive(Debug)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl FrameAssembler {
+    /// Assembler with a declared-length cap of `max_frame` bytes.
+    pub fn new(max_frame: usize) -> Self {
+        FrameAssembler { buf: Vec::new(), max_frame }
+    }
+
+    /// Append `bytes` and return every frame completed by them, in
+    /// arrival order. An [`FrameError::Oversized`] declaration poisons
+    /// the stream — the caller should drop the connection (frames
+    /// completed earlier in the same call are discarded with it: the
+    /// peer is hostile, nothing it sent is trusted).
+    pub fn push(&mut self, bytes: &[u8]) -> std::result::Result<Vec<Vec<u8>>, FrameError> {
+        self.buf.extend_from_slice(bytes);
+        let mut done = Vec::new();
+        let mut at = 0usize;
+        while self.buf.len() - at >= 4 {
+            let declared = u32::from_le_bytes([
+                self.buf[at],
+                self.buf[at + 1],
+                self.buf[at + 2],
+                self.buf[at + 3],
+            ]) as usize;
+            if declared > self.max_frame {
+                self.buf.drain(..at);
+                return Err(FrameError::Oversized { declared, max: self.max_frame });
+            }
+            if self.buf.len() - at < 4 + declared {
+                break;
+            }
+            done.push(self.buf[at + 4..at + 4 + declared].to_vec());
+            at += 4 + declared;
+        }
+        self.buf.drain(..at);
+        Ok(done)
+    }
+
+    /// True if a frame is in flight: header or payload bytes have
+    /// arrived that no completed frame consumed. EOF in this state
+    /// means the peer truncated a frame mid-send.
+    pub fn mid_frame(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Bytes currently buffered (in-flight frame prefix).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+// --------------------------------------------------------- event loop
+
+/// One registered connection of the readiness loop.
+#[derive(Debug)]
+struct Conn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+}
+
 /// Loopback TCP binding implementing [`Transport`] on a single object:
 /// `send` opens a fresh connection to the bound listener and pushes one
 /// frame (the sensor-style duty cycle of `qrr serve`), `recv` /
-/// `recv_timeout` accept pending connections and drain their frames.
+/// `recv_timeout` poll a non-blocking readiness loop that services
+/// every registered connection.
 ///
 /// This is what `fl::session` plugs in for the TCP scenario: the exact
 /// wire bytes cross a real socket while the round loop stays unchanged.
+/// The listener and every accepted socket are non-blocking; each
+/// connection accumulates partial reads in its own [`FrameAssembler`],
+/// so thousands of concurrently trickling clients interleave fairly and
+/// a stalled peer holds up nobody (DESIGN.md §10).
 #[derive(Debug)]
 pub struct TcpTransport {
     listener: TcpListener,
     addr: std::net::SocketAddr,
-    /// frames read from accepted connections but not yet handed out
+    /// registered connections with partial-frame state
+    conns: Mutex<Vec<Conn>>,
+    /// frames completed by the poll loop but not yet handed out
     pending: Mutex<VecDeque<Vec<u8>>>,
 }
 
@@ -137,8 +240,14 @@ impl TcpTransport {
     /// Bind on an address (e.g. "127.0.0.1:0" to pick a free port).
     pub fn bind(addr: impl ToSocketAddrs) -> Result<Self> {
         let listener = TcpListener::bind(addr).context("binding")?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
         let addr = listener.local_addr()?;
-        Ok(TcpTransport { listener, addr, pending: Mutex::new(VecDeque::new()) })
+        Ok(TcpTransport {
+            listener,
+            addr,
+            conns: Mutex::new(Vec::new()),
+            pending: Mutex::new(VecDeque::new()),
+        })
     }
 
     /// The bound address (for out-of-process clients to connect to).
@@ -146,61 +255,82 @@ impl TcpTransport {
         self.addr
     }
 
-    /// Accept one connection before `deadline` and queue every frame it
-    /// carries. Returns `Ok(true)` if at least one frame was queued.
-    fn accept_into_queue(
-        &self,
-        deadline: Instant,
-        timeout: Duration,
-    ) -> std::result::Result<bool, TransportError> {
-        self.listener.set_nonblocking(true)?;
-        let accepted = loop {
-            match self.listener.accept() {
-                Ok((stream, _peer)) => break stream,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        self.listener.set_nonblocking(false).ok();
-                        return Err(TransportError::TimedOut(timeout));
-                    }
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-                Err(e) => {
-                    self.listener.set_nonblocking(false).ok();
-                    return Err(TransportError::Io(e));
-                }
-            }
-        };
-        self.listener.set_nonblocking(false).ok();
+    /// Number of currently registered (live) connections.
+    pub fn live_conns(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
 
-        let mut stream = accepted;
-        // accepted sockets must not inherit the listener's non-blocking
-        // mode, and a half-sent frame must not hang past the deadline
-        stream.set_nonblocking(false)?;
-
-        let mut got = 0usize;
-        let mut q = self.pending.lock().unwrap();
-        // the drain loop is deadline-bounded too: a peer trickling
-        // frames must not hold the queue (and its mutex) open past the
-        // caller's budget
+    /// One pass of the readiness loop: accept every pending connection,
+    /// then give each registered socket one read turn — drain available
+    /// bytes into its assembler, queue completed frames, unregister on
+    /// EOF or error. Never blocks. Returns `true` if any frame was
+    /// queued (so callers can back off with a sleep only when idle).
+    pub fn poll_once(&self) -> std::result::Result<bool, TransportError> {
+        let mut conns = self.conns.lock().unwrap();
+        // accept phase: register every connection the backlog holds
         loop {
-            if Instant::now() >= deadline && got > 0 {
-                break;
-            }
-            let budget = deadline
-                .saturating_duration_since(Instant::now())
-                .max(Duration::from_millis(10));
-            if stream.set_read_timeout(Some(budget)).is_err() {
-                break;
-            }
-            match read_frame(&mut stream) {
-                Ok(frame) => {
-                    q.push_back(frame);
-                    got += 1;
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nonblocking(true)?;
+                    conns.push(Conn { stream, asm: FrameAssembler::new(MAX_FRAME_BYTES) });
                 }
-                Err(_) => break, // EOF / peer closed / read timeout
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(TransportError::Io(e)),
             }
         }
-        Ok(got > 0)
+
+        // read phase: one turn per connection; WouldBlock = not ready,
+        // move on — a stalled peer costs one syscall, not a timeout
+        let mut progressed = false;
+        let mut buf = [0u8; 8192];
+        let mut i = 0;
+        while i < conns.len() {
+            let mut keep = true;
+            loop {
+                match conns[i].stream.read(&mut buf) {
+                    Ok(0) => {
+                        // EOF: a frame in flight at close is hostile
+                        // truncation — drop the tail, keep the loop alive
+                        if conns[i].asm.mid_frame() {
+                            log::warn!(
+                                "tcp transport: peer closed mid-frame ({} bytes dropped)",
+                                conns[i].asm.buffered()
+                            );
+                        }
+                        keep = false;
+                        break;
+                    }
+                    Ok(n) => match conns[i].asm.push(&buf[..n]) {
+                        Ok(frames) => {
+                            let mut q = self.pending.lock().unwrap();
+                            for f in frames {
+                                q.push_back(f);
+                                progressed = true;
+                            }
+                        }
+                        Err(e) => {
+                            log::warn!("tcp transport: dropping connection ({e})");
+                            keep = false;
+                            break;
+                        }
+                    },
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        log::warn!("tcp transport: read error, dropping connection ({e})");
+                        keep = false;
+                        break;
+                    }
+                }
+            }
+            if keep {
+                i += 1;
+            } else {
+                conns.swap_remove(i);
+            }
+        }
+        Ok(progressed)
     }
 }
 
@@ -245,9 +375,15 @@ impl Transport for TcpTransport {
             if let Some(frame) = self.pending.lock().unwrap().pop_front() {
                 return Ok(frame);
             }
-            // empty connections (a peer that connected and vanished) are
-            // skipped; keep accepting until a frame shows up or time runs out
-            self.accept_into_queue(deadline, timeout)?;
+            let progressed = self.poll_once()?;
+            if !progressed {
+                if Instant::now() >= deadline {
+                    return Err(TransportError::TimedOut(timeout));
+                }
+                // nothing ready anywhere: park briefly instead of
+                // spinning the accept/read syscalls at full speed
+                std::thread::sleep(Duration::from_millis(1));
+            }
         }
     }
 }
@@ -309,6 +445,121 @@ impl TcpClient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::{cases, forall};
+
+    /// Encode one `u32 LE length || payload` frame.
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn assembler_whole_frame_in_one_push() {
+        let mut asm = FrameAssembler::new(1024);
+        let frames = asm.push(&framed(b"hello")).unwrap();
+        assert_eq!(frames, vec![b"hello".to_vec()]);
+        assert!(!asm.mid_frame());
+        assert_eq!(asm.buffered(), 0);
+    }
+
+    #[test]
+    fn assembler_byte_by_byte_trickle() {
+        // the frame must complete exactly when the last byte lands,
+        // and never earlier
+        let payload = b"trickled-frame-payload";
+        let bytes = framed(payload);
+        let mut asm = FrameAssembler::new(1024);
+        for (i, b) in bytes.iter().enumerate() {
+            let frames = asm.push(std::slice::from_ref(b)).unwrap();
+            if i + 1 < bytes.len() {
+                assert!(frames.is_empty(), "frame completed early at byte {i}");
+                assert!(asm.mid_frame());
+            } else {
+                assert_eq!(frames, vec![payload.to_vec()]);
+                assert!(!asm.mid_frame());
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_many_frames_one_push() {
+        let mut bytes = Vec::new();
+        for i in 0..5u8 {
+            bytes.extend_from_slice(&framed(&vec![i; i as usize + 1]));
+        }
+        let mut asm = FrameAssembler::new(1024);
+        let frames = asm.push(&bytes).unwrap();
+        assert_eq!(frames.len(), 5);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(*f, vec![i as u8; i + 1]);
+        }
+    }
+
+    #[test]
+    fn assembler_empty_frame_is_legal() {
+        let mut asm = FrameAssembler::new(16);
+        let frames = asm.push(&framed(b"")).unwrap();
+        assert_eq!(frames, vec![Vec::<u8>::new()]);
+    }
+
+    #[test]
+    fn assembler_oversized_header_rejected_before_payload() {
+        // the cap triggers on the 4 header bytes alone: no payload has
+        // to arrive (or be allocated) for the poison verdict
+        let mut asm = FrameAssembler::new(100);
+        let err = asm.push(&101u32.to_le_bytes()).unwrap_err();
+        assert_eq!(err, FrameError::Oversized { declared: 101, max: 100 });
+        assert!(asm.mid_frame(), "poisoned header should count as in-flight");
+    }
+
+    #[test]
+    fn assembler_oversized_after_good_frame() {
+        let mut asm = FrameAssembler::new(100);
+        let mut bytes = framed(b"fine");
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(asm.push(&bytes).is_err());
+    }
+
+    #[test]
+    fn prop_assembler_random_splits_reassemble_exactly() {
+        // any chunking of a frame stream must yield the same frames in
+        // the same order — the state machine is split-invariant
+        forall(
+            0x7C1E,
+            cases(200),
+            |g| {
+                let n_frames = g.usize_in(1, 6);
+                let frames: Vec<Vec<u8>> = (0..n_frames)
+                    .map(|_| {
+                        let len = g.usize_in(0, 300);
+                        (0..len).map(|_| g.usize_in(0, 255) as u8).collect()
+                    })
+                    .collect();
+                let mut stream = Vec::new();
+                for f in &frames {
+                    stream.extend_from_slice(&framed(f));
+                }
+                // random cut points
+                let n_cuts = g.usize_in(0, 12);
+                let mut cuts: Vec<usize> =
+                    (0..n_cuts).map(|_| g.usize_in(0, stream.len())).collect();
+                cuts.sort_unstable();
+                (frames, stream, cuts)
+            },
+            |(frames, stream, cuts)| {
+                let mut asm = FrameAssembler::new(1024);
+                let mut got = Vec::new();
+                let mut prev = 0usize;
+                for cut in cuts.iter().copied().chain(std::iter::once(stream.len())) {
+                    got.extend(asm.push(&stream[prev..cut]).unwrap());
+                    prev = cut;
+                }
+                assert_eq!(got, frames);
+                assert!(!asm.mid_frame());
+            },
+        );
+    }
 
     #[test]
     fn inproc_roundtrip() {
@@ -400,5 +651,116 @@ mod tests {
         let frame = t.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(frame, b"from-afar");
         h.join().unwrap();
+    }
+
+    /// Raw socket helper: connect and write exactly `bytes`, keeping
+    /// the connection open for the returned stream's lifetime.
+    fn raw_send(addr: std::net::SocketAddr, bytes: &[u8]) -> TcpStream {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(bytes).unwrap();
+        s.flush().unwrap();
+        s
+    }
+
+    #[test]
+    fn tcp_event_loop_reassembles_trickled_frame() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        let payload = b"slow-and-steady".to_vec();
+        let bytes = framed(&payload);
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            for b in bytes {
+                s.write_all(&[b]).unwrap();
+                s.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            s
+        });
+        let frame = t.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(frame, payload);
+        drop(h.join().unwrap());
+    }
+
+    #[test]
+    fn tcp_event_loop_interleaves_partial_frames_across_clients() {
+        // two clients send their frames half-at-a-time, interleaved:
+        // per-connection assemblers must keep the streams separate
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        let a = framed(b"frame-from-client-a");
+        let b = framed(b"frame-from-client-b");
+        let mut sa = raw_send(addr, &a[..a.len() / 2]);
+        let mut sb = raw_send(addr, &b[..b.len() / 2]);
+        // let the loop observe both half-frames before the tails arrive
+        t.poll_once().unwrap();
+        sa.write_all(&a[a.len() / 2..]).unwrap();
+        sb.write_all(&b[b.len() / 2..]).unwrap();
+        let mut got = vec![
+            t.recv_timeout(Duration::from_secs(5)).unwrap(),
+            t.recv_timeout(Duration::from_secs(5)).unwrap(),
+        ];
+        got.sort();
+        assert_eq!(got, vec![b"frame-from-client-a".to_vec(), b"frame-from-client-b".to_vec()]);
+        drop((sa, sb));
+    }
+
+    #[test]
+    fn tcp_event_loop_stalled_connection_does_not_block_others() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        // stalled peer: half a frame, then silence (socket stays open)
+        let full = framed(&[0xAB; 64]);
+        let stalled = raw_send(addr, &full[..10]);
+        // healthy peer sends a complete frame afterwards
+        let healthy = raw_send(addr, &framed(b"healthy"));
+        let t0 = Instant::now();
+        let frame = t.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(frame, b"healthy");
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "stalled peer delayed delivery: {:?}",
+            t0.elapsed()
+        );
+        // the stalled connection is still registered, not dropped
+        assert_eq!(t.live_conns(), 2);
+        // ... and can still finish its frame later
+        let mut s = stalled;
+        s.write_all(&full[10..]).unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_secs(5)).unwrap(), vec![0xAB; 64]);
+        drop((s, healthy));
+    }
+
+    #[test]
+    fn tcp_event_loop_survives_hostile_truncation_mid_frame() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        // declare 1000 bytes, deliver 12, vanish
+        let mut hostile = (1000u32).to_le_bytes().to_vec();
+        hostile.extend_from_slice(&[0u8; 12]);
+        drop(raw_send(addr, &hostile));
+        // the loop must shed the truncated stream and keep serving
+        let err = t.recv_timeout(Duration::from_millis(200)).unwrap_err();
+        assert!(matches!(err, TransportError::TimedOut(_)), "{err}");
+        assert_eq!(t.live_conns(), 0, "truncated connection not shed");
+        let mut c = TcpClient::connect(addr).unwrap();
+        c.send(b"after-the-storm").unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_secs(5)).unwrap(), b"after-the-storm");
+    }
+
+    #[test]
+    fn tcp_event_loop_drops_oversized_declaration() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        // header declares more than MAX_FRAME_BYTES: connection must be
+        // dropped without any payload arriving (or being allocated)
+        let s = raw_send(addr, &(u32::MAX).to_le_bytes());
+        let err = t.recv_timeout(Duration::from_millis(200)).unwrap_err();
+        assert!(matches!(err, TransportError::TimedOut(_)), "{err}");
+        assert_eq!(t.live_conns(), 0, "oversized connection not shed");
+        let mut c = TcpClient::connect(addr).unwrap();
+        c.send(b"still-alive").unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_secs(5)).unwrap(), b"still-alive");
+        drop(s);
     }
 }

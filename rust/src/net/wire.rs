@@ -356,6 +356,23 @@ pub struct DecodedMsg {
     pub update: ClientUpdate,
 }
 
+/// The fixed client-update header, validated without decoding the body.
+///
+/// This is the routing handle of the sharded server (DESIGN.md §10):
+/// the session thread peeks `client_id`/`round` to admit and route a
+/// frame, then the full body decode runs on the owning shard's lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireHeader {
+    /// scheme tag (0 = SGD, 1 = SLAQ, 2 = QRR)
+    pub scheme: u8,
+    /// sending client
+    pub client_id: u32,
+    /// FL round index
+    pub round: u64,
+    /// declared entry count (untrusted until the body decodes)
+    pub n_entries: u32,
+}
+
 // The whole decode half runs on attacker-controlled bytes (the TCP
 // server feeds it raw peer input and the contract is discard, never
 // crash — see net::transport): every malformed input must surface as a
@@ -402,6 +419,29 @@ impl<'a> Decoder<'a> {
             s => return Err(WireError::UnknownScheme(s)),
         };
         Ok(DecodedMsg { client_id, round, update })
+    }
+
+    /// Validate and read the fixed header only, leaving the body
+    /// untouched — the incremental entry point of the sharded server:
+    /// header-level rejects (bad magic/version, unknown scheme, short
+    /// buffer) cost a few byte reads on the session thread, while the
+    /// expensive body decode is deferred to the owning shard.
+    ///
+    /// A frame whose header peeks clean may still fail [`Self::decode`]
+    /// later; `n_entries` in particular is attacker data until then.
+    pub fn peek_header(buf: &'a [u8]) -> Result<WireHeader, WireError> {
+        let mut d = Decoder { buf, pos: 0 };
+        if d.u32()? != MAGIC || d.u8()? != VERSION {
+            return Err(WireError::BadHeader);
+        }
+        let scheme = d.u8()?;
+        if scheme > 2 {
+            return Err(WireError::UnknownScheme(scheme));
+        }
+        let client_id = d.u32()?;
+        let round = d.u64()?;
+        let n_entries = d.u32()?;
+        Ok(WireHeader { scheme, client_id, round, n_entries })
     }
 
     /// Decode a server broadcast produced by [`Encoder::server`].
@@ -1048,6 +1088,63 @@ mod tests {
                         ));
                     }
                 }
+            },
+        );
+    }
+
+    #[test]
+    fn peek_header_rejects_what_decode_rejects() {
+        // bad magic
+        let mut rng = Rng::new(111);
+        let up = ClientUpdate::Sgd { grads: vec![Tensor::randn(&[2, 2], &mut rng)] };
+        let mut bytes = Encoder::new(&up, 4, 9);
+        bytes[0] ^= 0xFF;
+        assert!(matches!(Decoder::peek_header(&bytes), Err(WireError::BadHeader)));
+        // unknown scheme tag fails at peek time, not decode time
+        let b = client_header(0x7F, 1);
+        assert!(matches!(
+            Decoder::peek_header(&b),
+            Err(WireError::UnknownScheme(0x7F))
+        ));
+        // short header
+        let b = client_header(0, 1);
+        for cut in 0..b.len() - 1 {
+            assert!(
+                matches!(Decoder::peek_header(&b[..cut]), Err(WireError::Truncated(_))),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_peek_header_agrees_with_full_decode() {
+        forall(
+            0xB5,
+            crate::testing::cases(60),
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                let client_id = g.usize_in(0, 10_000) as u32;
+                let round = g.usize_in(0, 1 << 20) as u64;
+                (gen_update_of_kind(g, kind), client_id, round)
+            },
+            |(up, client_id, round)| {
+                let bytes = Encoder::new(&up, client_id, round);
+                let h = Decoder::peek_header(&bytes).unwrap();
+                let dec = Decoder::decode(&bytes).unwrap();
+                assert_eq!(h.client_id, dec.client_id);
+                assert_eq!(h.round, dec.round);
+                let want_scheme = match &dec.update {
+                    ClientUpdate::Sgd { .. } => 0u8,
+                    ClientUpdate::Slaq { .. } => 1,
+                    ClientUpdate::Qrr { .. } => 2,
+                };
+                assert_eq!(h.scheme, want_scheme);
+                let want_entries = match &dec.update {
+                    ClientUpdate::Sgd { grads } => grads.len(),
+                    ClientUpdate::Slaq { msg } => msg.params.len(),
+                    ClientUpdate::Qrr { msgs } => msgs.len(),
+                };
+                assert_eq!(h.n_entries as usize, want_entries);
             },
         );
     }
