@@ -1114,6 +1114,8 @@ impl PipelineServer {
 /// error.
 #[derive(Debug)]
 pub struct DownlinkEncoder {
+    /// the compiled spec, kept to re-mint fresh codec cores on resync
+    pipe: CompressionPipeline,
     enc: EncCore,
     mirror: DecCore,
     shadow: Vec<Tensor>,
@@ -1130,6 +1132,7 @@ impl DownlinkEncoder {
         Ok(DownlinkEncoder {
             enc: pipe.enc_core(),
             mirror: pipe.dec_core(),
+            pipe,
             shadow: init.to_vec(),
             seq: 0,
         })
@@ -1152,7 +1155,32 @@ impl DownlinkEncoder {
         }
         let seq = self.seq;
         self.seq += 1;
-        ServerUpdate { seq, round, msgs }
+        ServerUpdate { seq, round, msgs, snapshot: false }
+    }
+
+    /// Emit a resync **snapshot**: the shadow (≡ what an unfaulted
+    /// decoder holds right now) as full-precision raw-dense entries,
+    /// and reset this side's differential codec cores so the post-resync
+    /// pair starts from a clean mirrored state. The frame stamps the
+    /// *current* `seq` — the number the next delta will carry — so a
+    /// decoder that [`DownlinkDecoder::apply_snapshot`]s it expects
+    /// exactly that delta and every broadcast it missed is subsumed by
+    /// the snapshot. Does not consume a sequence number.
+    ///
+    /// Resync coherence: the quantizer grids (and any residual state)
+    /// on *both* halves must be rebuilt together, else the first
+    /// post-resync delta decodes against stale grids. The encoder resets
+    /// `enc` + `mirror` here; the decoder resets its mirror inside
+    /// `apply_snapshot`.
+    pub fn snapshot(&mut self, round: u64) -> ServerUpdate {
+        self.enc = self.pipe.enc_core();
+        self.mirror = self.pipe.dec_core();
+        let msgs = self
+            .shadow
+            .iter()
+            .map(|t| ParamMsg::RawDense { t: t.clone() })
+            .collect();
+        ServerUpdate { seq: self.seq, round, msgs, snapshot: true }
     }
 
     /// The server's copy of the clients' current model reconstruction.
@@ -1173,6 +1201,8 @@ impl DownlinkEncoder {
 /// server's [`DownlinkEncoder`] (same spec, same `init`).
 #[derive(Debug)]
 pub struct DownlinkDecoder {
+    /// the compiled spec, kept to re-mint a fresh codec core on resync
+    pipe: CompressionPipeline,
     dec: DecCore,
     params: Vec<Tensor>,
     /// sequence number the next broadcast must carry
@@ -1184,7 +1214,7 @@ impl DownlinkDecoder {
     pub fn new(spec: &PipelineSpec, shapes: &[Vec<usize>], init: &[Tensor]) -> Result<Self> {
         spec.validate_downlink()?;
         let pipe = CompressionPipeline::compile(spec.clone(), shapes)?;
-        Ok(DownlinkDecoder { dec: pipe.dec_core(), params: init.to_vec(), next_seq: 0 })
+        Ok(DownlinkDecoder { dec: pipe.dec_core(), pipe, params: init.to_vec(), next_seq: 0 })
     }
 
     /// Apply one broadcast: decode the delta and advance the local model.
@@ -1196,6 +1226,12 @@ impl DownlinkDecoder {
     /// desynchronize the mirrored quantizer grids forever). Mismatched
     /// message kinds/shapes are rejected the same way.
     pub fn apply(&mut self, update: &ServerUpdate) -> Result<&[Tensor]> {
+        // a snapshot is full state, not a delta — applying one here
+        // (the raw pipeline would happily "add" it) must be impossible
+        ensure!(
+            !update.snapshot,
+            "snapshot frame on the delta path: use apply_snapshot"
+        );
         ensure!(
             update.seq == self.next_seq,
             "broadcast out of sequence: got seq {}, expected {} \
@@ -1214,6 +1250,44 @@ impl DownlinkDecoder {
         self.next_seq += 1;
         Ok(&self.params)
     }
+
+    /// Whether `update` reveals that this decoder missed one or more
+    /// broadcasts — i.e. [`apply`](Self::apply) would reject it with a
+    /// sequence **gap** (or a reorder/replay) — and the session should
+    /// fetch a snapshot instead of feeding the delta in.
+    pub fn needs_resync(&self, update: &ServerUpdate) -> bool {
+        !update.snapshot && update.seq != self.next_seq
+    }
+
+    /// Re-prime from a resync snapshot (see
+    /// [`DownlinkEncoder::snapshot`]): replace the local model with the
+    /// snapshot state, rebuild the differential codec core, and expect
+    /// the snapshot's `seq` next — every broadcast missed in the gap is
+    /// subsumed. Snapshot bytes cross the same hostile wire as deltas,
+    /// so a malformed one (wrong kind, wrong tensor count/shape) is a
+    /// typed error that leaves the decoder untouched.
+    // qrr-audit: no-panic
+    pub fn apply_snapshot(&mut self, update: &ServerUpdate) -> Result<&[Tensor]> {
+        ensure!(update.snapshot, "delta frame on the resync path: use apply");
+        ensure!(
+            update.msgs.len() == self.params.len(),
+            "snapshot carries {} tensors, model has {}",
+            update.msgs.len(),
+            self.params.len()
+        );
+        let mut fresh: Vec<Tensor> = Vec::with_capacity(update.msgs.len());
+        for (msg, cur) in update.msgs.iter().zip(self.params.iter()) {
+            match msg {
+                ParamMsg::RawDense { t } if t.shape() == cur.shape() => fresh.push(t.clone()),
+                _ => bail!("snapshot entry does not match the model (kind/shape mismatch)"),
+            }
+        }
+        self.params = fresh;
+        self.dec = self.pipe.dec_core();
+        self.next_seq = update.seq;
+        Ok(&self.params)
+    }
+    // qrr-audit: end
 
     /// The locally reconstructed model parameters.
     pub fn params(&self) -> &[Tensor] {
@@ -1726,5 +1800,118 @@ mod tests {
             compressed_bits * 2 < dense_bits,
             "compressed {compressed_bits} vs dense {dense_bits}"
         );
+    }
+
+    // --------------------------------------------- snapshot resync
+
+    /// Resync must restore *exactly* the state an unfaulted decoder
+    /// holds — bit-for-bit, not merely close.
+    fn assert_bit_identical(a: &[Tensor], b: &[Tensor]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.shape(), y.shape());
+            for (va, vb) in x.data().iter().zip(y.data().iter()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "state differs in bits");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_resyncs_a_gap_decoder_bit_identically() {
+        use crate::net::wire::{Decoder, Encoder};
+
+        let shapes = mlp_shapes();
+        let mut rng = Rng::new(909);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let spec = PipelineSpec::parse("qrr").unwrap();
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).unwrap();
+        // the unfaulted replay this PR's acceptance bar compares against
+        let mut healthy = DownlinkDecoder::new(&spec, &shapes, &init).unwrap();
+        let mut faulty = DownlinkDecoder::new(&spec, &shapes, &init).unwrap();
+
+        let mut params = init.clone();
+        let step = |params: &mut Vec<Tensor>, rng: &mut Rng| {
+            for p in params.iter_mut() {
+                p.axpy(0.05, &Tensor::randn(p.shape(), rng));
+            }
+        };
+
+        // round 0 reaches both decoders
+        step(&mut params, &mut rng);
+        let upd0 = enc.encode(&params, 0);
+        healthy.apply(&upd0).unwrap();
+        faulty.apply(&upd0).unwrap();
+        // round 1's broadcast is lost on the faulty link
+        step(&mut params, &mut rng);
+        let upd1 = enc.encode(&params, 1);
+        healthy.apply(&upd1).unwrap();
+        // round 2 reveals the gap
+        step(&mut params, &mut rng);
+        let upd2 = enc.encode(&params, 2);
+        healthy.apply(&upd2).unwrap();
+        assert!(faulty.needs_resync(&upd2));
+        assert!(faulty.apply(&upd2).is_err());
+
+        // resync: the snapshot crosses the real wire like any broadcast
+        let snap = enc.snapshot(2);
+        assert!(!faulty.needs_resync(&snap), "a snapshot never demands another resync");
+        let snap = Decoder::decode_server(&Encoder::server(&snap)).unwrap();
+        // full-precision full state: 32 bits per model element
+        assert_eq!(snap.payload_bits(), 32 * (600 + 20 + 108) as u64);
+        faulty.apply_snapshot(&snap).unwrap();
+
+        // post-resync state is bit-identical to the unfaulted replay
+        // (both equal the encoder's shadow by the lock-step invariant)
+        assert_bit_identical(faulty.params(), healthy.params());
+        assert_bit_identical(faulty.params(), enc.shadow());
+
+        // the pair is coherent again: subsequent deltas apply cleanly
+        // and keep tracking the shadow exactly
+        for round in 3..6u64 {
+            step(&mut params, &mut rng);
+            let upd = enc.encode(&params, round);
+            faulty.apply(&upd).unwrap();
+            assert_bit_identical(faulty.params(), enc.shadow());
+        }
+    }
+
+    #[test]
+    fn snapshot_frames_never_cross_the_delta_path() {
+        // raw (identity) downlink: apply() of a snapshot would otherwise
+        // silently *add* full state to the model
+        let shapes = vec![vec![6usize, 4], vec![6]];
+        let mut rng = Rng::new(910);
+        let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+        let spec = PipelineSpec::sgd();
+        let mut enc = DownlinkEncoder::new(&spec, &shapes, &init).unwrap();
+        let mut dec = DownlinkDecoder::new(&spec, &shapes, &init).unwrap();
+
+        let mut params = init.clone();
+        params[0].axpy(0.3, &Tensor::randn(&[6, 4], &mut rng));
+        let upd0 = enc.encode(&params, 0);
+        dec.apply(&upd0).unwrap();
+
+        let snap = enc.snapshot(0);
+        assert!(dec.apply(&snap).is_err(), "snapshot must not apply as a delta");
+        assert!(dec.apply_snapshot(&upd0).is_err(), "delta must not apply as a snapshot");
+
+        // malformed snapshots are typed errors that leave state intact
+        let before = dec.params().to_vec();
+        let mut bad = snap.clone();
+        bad.msgs.pop();
+        assert!(dec.apply_snapshot(&bad).is_err(), "tensor count mismatch must fail");
+        let mut bad = snap.clone();
+        bad.msgs[0] = ParamMsg::RawDense { t: Tensor::zeros(&[3]) };
+        assert!(dec.apply_snapshot(&bad).is_err(), "shape mismatch must fail");
+        for (a, b) in before.iter().zip(dec.params().iter()) {
+            assert_eq!(a, b, "rejected snapshot mutated the model");
+        }
+
+        // the well-formed one applies and restores lock-step
+        dec.apply_snapshot(&snap).unwrap();
+        assert_bit_identical(dec.params(), enc.shadow());
+        params[0].axpy(0.3, &Tensor::randn(&[6, 4], &mut rng));
+        let upd1 = enc.encode(&params, 1);
+        dec.apply(&upd1).unwrap();
     }
 }

@@ -9,6 +9,7 @@ use crate::compress::pipeline::PipelineSpec;
 use crate::data::DatasetKind;
 use crate::fl::SchemeKind;
 use crate::model::ModelKind;
+use crate::net::faults::{FaultPlan, Partition};
 
 /// How QRR's `p` is assigned across clients.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -213,6 +214,70 @@ impl AggregationConfig {
     }
 }
 
+/// Quorum semantics for the resilient round loop (DESIGN.md §11): the
+/// server proceeds once at least `ceil(fraction · selected)` uploads
+/// have arrived; when the first collection deadline leaves the quorum
+/// unmet it re-polls up to `max_repolls` times, window `k` waiting
+/// `base_backoff_ms · 2^(k-1)` (plus a small seeded jitter).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuorumConfig {
+    /// fraction of the round's selected cohort that must arrive, (0, 1]
+    pub fraction: f64,
+    /// bounded number of re-poll windows after the first deadline
+    pub max_repolls: u32,
+    /// first re-poll window length in milliseconds
+    pub base_backoff_ms: u64,
+}
+
+impl Default for QuorumConfig {
+    fn default() -> Self {
+        QuorumConfig { fraction: 1.0, max_repolls: 2, base_backoff_ms: 50 }
+    }
+}
+
+impl QuorumConfig {
+    /// Parse the CLI grammar:
+    /// `<fraction>[:<max_repolls>[:<base_backoff_ms>]]`, e.g. `0.8` or
+    /// `0.8:3:50`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut q = QuorumConfig::default();
+        let mut it = s.trim().split(':');
+        let f = it.next().unwrap_or_default();
+        q.fraction = f
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad quorum fraction {f:?} (want <f>[:<repolls>[:<ms>]])"))?;
+        if let Some(r) = it.next() {
+            q.max_repolls = r
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad quorum max_repolls {r:?}"))?;
+        }
+        if let Some(b) = it.next() {
+            q.base_backoff_ms = b
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad quorum base_backoff_ms {b:?}"))?;
+        }
+        anyhow::ensure!(it.next().is_none(), "too many quorum fields in {s:?}");
+        q.validate()?;
+        Ok(q)
+    }
+
+    /// Canonical spec string; `parse` round-trips it.
+    pub fn format(&self) -> String {
+        format!("{}:{}:{}", self.fraction, self.max_repolls, self.base_backoff_ms)
+    }
+
+    /// Range checks; called by JSON/CLI entry points.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.fraction > 0.0 && self.fraction <= 1.0,
+            "quorum fraction must be in (0,1], got {}",
+            self.fraction
+        );
+        anyhow::ensure!(self.base_backoff_ms > 0, "quorum base_backoff_ms must be positive");
+        Ok(())
+    }
+}
+
 /// Which compute backend evaluates gradients.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -274,6 +339,12 @@ pub struct ExperimentConfig {
     /// number of server-side aggregation shards (`None` = auto:
     /// `min(clients, 8)`); see `fl::shard::ShardedAggregator`
     pub shards: Option<usize>,
+    /// quorum semantics for the round loop (`None` = defaults: full
+    /// quorum, two re-poll windows)
+    pub quorum: Option<QuorumConfig>,
+    /// seeded fault-injection plan (`None` = a faithful network); see
+    /// `net::faults::FaultPlan`
+    pub chaos: Option<FaultPlan>,
 }
 
 impl ExperimentConfig {
@@ -302,6 +373,8 @@ impl ExperimentConfig {
             uplink: None,
             downlink: None,
             shards: None,
+            quorum: None,
+            chaos: None,
         }
     }
 
@@ -447,6 +520,52 @@ impl ExperimentConfig {
         }
         if let Some(n) = self.shards {
             fields.push(("shards", Json::Num(n as f64)));
+        }
+        if let Some(q) = &self.quorum {
+            fields.push((
+                "quorum",
+                Json::obj(vec![
+                    ("fraction", Json::Num(q.fraction)),
+                    ("max_repolls", Json::Num(q.max_repolls as f64)),
+                    ("base_backoff_ms", Json::Num(q.base_backoff_ms as f64)),
+                ]),
+            ));
+        }
+        if let Some(p) = &self.chaos {
+            // the rate/seed/window half uses the CLI spec grammar;
+            // partitions have no CLI form and ride along as JSON
+            let mut ch = vec![("spec", Json::Str(p.format()))];
+            if !p.partitions.is_empty() {
+                ch.push((
+                    "partitions",
+                    Json::Arr(
+                        p.partitions
+                            .iter()
+                            .map(|pt| {
+                                Json::obj(vec![
+                                    (
+                                        "clients",
+                                        Json::Arr(
+                                            pt.clients
+                                                .iter()
+                                                .map(|&c| Json::Num(c as f64))
+                                                .collect(),
+                                        ),
+                                    ),
+                                    (
+                                        "rounds",
+                                        Json::Arr(vec![
+                                            Json::Num(pt.rounds.0 as f64),
+                                            Json::Num(pt.rounds.1 as f64),
+                                        ]),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            fields.push(("chaos", Json::obj(ch)));
         }
         Json::obj(fields)
     }
@@ -607,6 +726,68 @@ impl ExperimentConfig {
                 .ok_or_else(|| anyhow::anyhow!("shards must be a positive integer"))?;
             anyhow::ensure!(n > 0, "shards must be positive");
             c.shards = Some(n);
+        }
+        if let Some(q) = j.get("quorum") {
+            let quorum = if let Some(v) = q.as_f64() {
+                QuorumConfig { fraction: v, ..QuorumConfig::default() }
+            } else if let Some(s) = q.as_str() {
+                QuorumConfig::parse(s)?
+            } else {
+                let mut qc = QuorumConfig::default();
+                if let Some(v) = q.get("fraction").and_then(Json::as_f64) {
+                    qc.fraction = v;
+                }
+                if let Some(v) = q.get("max_repolls").and_then(Json::as_u64) {
+                    qc.max_repolls = v as u32;
+                }
+                if let Some(v) = q.get("base_backoff_ms").and_then(Json::as_u64) {
+                    qc.base_backoff_ms = v;
+                }
+                qc
+            };
+            quorum.validate()?;
+            c.quorum = Some(quorum);
+        }
+        if let Some(ch) = j.get("chaos") {
+            let plan = if let Some(s) = ch.as_str() {
+                FaultPlan::parse(s).map_err(|e| anyhow::anyhow!("chaos: {e}"))?
+            } else {
+                let spec = ch.get("spec").and_then(Json::as_str).ok_or_else(|| {
+                    anyhow::anyhow!("chaos must be a spec string or an object with \"spec\"")
+                })?;
+                let mut p =
+                    FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("chaos spec: {e}"))?;
+                if let Some(parts) = ch.get("partitions").and_then(Json::as_arr) {
+                    for pt in parts {
+                        let clients = pt
+                            .get("clients")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow::anyhow!("partition missing clients array"))?
+                            .iter()
+                            .map(|v| {
+                                v.as_u64().map(|x| x as u32).ok_or_else(|| {
+                                    anyhow::anyhow!("partition client ids must be integers")
+                                })
+                            })
+                            .collect::<anyhow::Result<Vec<u32>>>()?;
+                        let rounds = pt
+                            .get("rounds")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow::anyhow!("partition missing rounds [lo, hi]"))?;
+                        anyhow::ensure!(rounds.len() == 2, "partition rounds must be [lo, hi]");
+                        let lo = rounds[0]
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("partition round bounds must be integers"))?;
+                        let hi = rounds[1]
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("partition round bounds must be integers"))?;
+                        p.partitions.push(Partition { clients, rounds: (lo, hi) });
+                    }
+                    p.validate().map_err(|e| anyhow::anyhow!("chaos partitions: {e}"))?;
+                }
+                p
+            };
+            c.chaos = Some(plan);
         }
         anyhow::ensure!(c.clients > 0, "need at least one client");
         anyhow::ensure!(c.batch > 0, "batch must be positive");
@@ -790,6 +971,62 @@ mod tests {
         assert!(ExperimentConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"shards": "many"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quorum_json_and_cli_roundtrip() {
+        let mut c = ExperimentConfig::table1_default();
+        c.quorum = Some(QuorumConfig { fraction: 0.8, max_repolls: 3, base_backoff_ms: 25 });
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.quorum, c.quorum);
+        assert_eq!(ExperimentConfig::table1_default().quorum, None);
+
+        // CLI grammar round-trips, partial forms fill defaults
+        let q = QuorumConfig::parse("0.8:3:25").unwrap();
+        assert_eq!(q, c.quorum.unwrap());
+        assert_eq!(QuorumConfig::parse(&q.format()).unwrap(), q);
+        let q = QuorumConfig::parse("0.5").unwrap();
+        assert_eq!(q.fraction, 0.5);
+        assert_eq!(q.max_repolls, QuorumConfig::default().max_repolls);
+
+        // bare-number and bad JSON forms
+        let j = Json::parse(r#"{"quorum": 0.7}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&j).unwrap().quorum.unwrap().fraction,
+            0.7
+        );
+        for bad in [r#"{"quorum": 0.0}"#, r#"{"quorum": 1.5}"#, r#"{"quorum": "0.8:1:0"}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        assert!(QuorumConfig::parse("0.8:1:50:9").is_err());
+    }
+
+    #[test]
+    fn chaos_json_roundtrip_with_partitions() {
+        let mut c = ExperimentConfig::table1_default();
+        let mut plan = FaultPlan::parse("drop=0.02,corrupt=0.01,down.drop=0.05,seed=7").unwrap();
+        plan.partitions.push(Partition { clients: vec![1, 2], rounds: (3, 8) });
+        c.chaos = Some(plan.clone());
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.chaos, Some(plan));
+        assert_eq!(ExperimentConfig::table1_default().chaos, None);
+
+        // plain string form parses too
+        let j = Json::parse(r#"{"chaos": "drop=0.1,seed=3"}"#).unwrap();
+        let p = ExperimentConfig::from_json(&j).unwrap().chaos.unwrap();
+        assert_eq!(p.seed, 3);
+        assert_eq!(p.up.drop, 0.1);
+
+        for bad in [
+            r#"{"chaos": "drop=2.0"}"#,
+            r#"{"chaos": 9}"#,
+            r#"{"chaos": {"spec": "drop=0.1", "partitions": [{"clients": [], "rounds": [0, 5]}]}}"#,
+            r#"{"chaos": {"spec": "drop=0.1", "partitions": [{"clients": [1], "rounds": [5]}]}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

@@ -21,8 +21,10 @@ use anyhow::{bail, Result};
 use crate::cli::Args;
 use crate::compress::pipeline::PipelineSpec;
 use crate::config::{
-    AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig,
+    AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, QuorumConfig,
+    SchemeConfig,
 };
+use crate::net::faults::FaultPlan;
 use crate::fl::metrics::{markdown_table, TableRow};
 use crate::fl::session::{FlSessionBuilder, RunReport};
 
@@ -102,6 +104,20 @@ pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
         spec.validate_downlink()
             .map_err(|e| anyhow::anyhow!("--downlink: {e}"))?;
         cfg.downlink = Some(spec);
+    }
+    if let Some(v) = args.get("chaos") {
+        cfg.chaos =
+            Some(FaultPlan::parse(v).map_err(|e| anyhow::anyhow!("--chaos: {e}"))?);
+    }
+    if let Some(v) = args.get_parsed::<u64>("chaos-seed")? {
+        // reseed the plan (creating an otherwise-empty one if --chaos
+        // was absent, e.g. when the plan comes from the config file)
+        cfg.chaos.get_or_insert_with(FaultPlan::default).seed = v;
+    }
+    if let Some(v) = args.get("quorum") {
+        let q = QuorumConfig::parse(v).map_err(|e| anyhow::anyhow!("--quorum: {e}"))?;
+        q.validate().map_err(|e| anyhow::anyhow!("--quorum: {e}"))?;
+        cfg.quorum = Some(q);
     }
     Ok(())
 }

@@ -27,6 +27,22 @@ pub struct RoundMetrics {
     pub grad_norm: f64,
     /// simulated network time of the slowest client (round is synchronous)
     pub net_time: Duration,
+    /// uploads lost before the server could wait on them: participation
+    /// policy drops plus sends whose transport reported `Closed` after
+    /// the reconnect/backoff retries were exhausted
+    pub clients_dropped: u32,
+    /// uploads that were sent but never arrived before the round's
+    /// final collection deadline (`TimedOut`, as opposed to `Closed`)
+    pub clients_timed_out: u32,
+    /// frames that passed header routing but failed the body decode on
+    /// their shard lane (corrupted in flight)
+    pub clients_corrupt: u32,
+    /// frames that arrived only after the first collection deadline,
+    /// i.e. inside a quorum re-poll window
+    pub clients_late: u32,
+    /// downlink snapshot resyncs this round (0 or 1: the broadcast
+    /// decoder is shared)
+    pub resyncs: u32,
 }
 
 /// Periodic test-set evaluation.
@@ -96,6 +112,21 @@ impl History {
         self.rounds.iter().map(|r| r.net_time).sum()
     }
 
+    /// Total uploads lost before collection (policy drops + dead sends).
+    pub fn total_dropped(&self) -> u64 {
+        self.rounds.iter().map(|r| r.clients_dropped as u64).sum()
+    }
+
+    /// Total uploads that missed every collection deadline.
+    pub fn total_timed_out(&self) -> u64 {
+        self.rounds.iter().map(|r| r.clients_timed_out as u64).sum()
+    }
+
+    /// Total downlink snapshot resyncs across the run.
+    pub fn total_resyncs(&self) -> u64 {
+        self.rounds.iter().map(|r| r.resyncs as u64).sum()
+    }
+
     /// One row of the paper's result tables.
     pub fn table_row(&self) -> TableRow {
         TableRow {
@@ -107,13 +138,15 @@ impl History {
             loss: self.final_eval().map(|e| e.loss).unwrap_or(f32::NAN),
             accuracy: self.final_eval().map(|e| e.accuracy).unwrap_or(f64::NAN),
             grad_norm: self.final_grad_norm(),
+            dropped: self.total_dropped(),
+            timed_out: self.total_timed_out(),
         }
     }
 
     /// CSV of the per-round series (for the "vs iterations" figures).
     pub fn rounds_csv(&self) -> String {
         let mut s = String::from(
-            "iter,train_loss,bits,cum_bits,down_bits,cum_down_bits,ratio,comms,grad_norm,net_time_s\n",
+            "iter,train_loss,bits,cum_bits,down_bits,cum_down_bits,ratio,comms,grad_norm,net_time_s,dropped,timed_out,corrupt,late,resyncs\n",
         );
         let mut cum = 0u64;
         let mut cum_down = 0u64;
@@ -122,7 +155,7 @@ impl History {
             cum_down += r.down_bits;
             let _ = writeln!(
                 s,
-                "{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.iter,
                 r.train_loss,
                 r.bits,
@@ -132,7 +165,12 @@ impl History {
                 r.ratio,
                 r.comms,
                 r.grad_norm,
-                r.net_time.as_secs_f64()
+                r.net_time.as_secs_f64(),
+                r.clients_dropped,
+                r.clients_timed_out,
+                r.clients_corrupt,
+                r.clients_late,
+                r.resyncs
             );
         }
         s
@@ -171,25 +209,32 @@ pub struct TableRow {
     pub accuracy: f64,
     /// final aggregated-gradient ℓ2 norm
     pub grad_norm: f64,
+    /// total uploads lost before collection (policy + dead transports)
+    pub dropped: u64,
+    /// total uploads that missed every collection deadline
+    pub timed_out: u64,
 }
 
 /// Render rows as the paper's markdown table (plus the downlink column
-/// the dual-side pipelines add).
+/// the dual-side pipelines add and the loss columns the fault layer
+/// tracks).
 pub fn markdown_table(rows: &[TableRow]) -> String {
     let mut s = String::new();
     s.push_str(
-        "| Algorithm | # Iterations | # Bits | # Down Bits | # Communications | Loss | Accuracy | Gradient l2 norm |\n",
+        "| Algorithm | # Iterations | # Bits | # Down Bits | # Communications | # Dropped | # Timed out | Loss | Accuracy | Gradient l2 norm |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
     for r in rows {
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {} | {:.3} | {} | {:.3} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {:.3} | {} | {:.3} |",
             r.algorithm,
             r.iterations,
             crate::util::fmt::bits_sci(r.bits),
             crate::util::fmt::bits_sci(r.down_bits),
             r.comms,
+            r.dropped,
+            r.timed_out,
             r.loss,
             crate::util::fmt::pct(r.accuracy),
             r.grad_norm
@@ -214,6 +259,11 @@ mod tests {
                 comms: 10,
                 grad_norm: 2.0,
                 net_time: Duration::from_millis(5),
+                clients_dropped: 2,
+                clients_timed_out: 1,
+                clients_corrupt: 0,
+                clients_late: 1,
+                resyncs: if i == 1 { 1 } else { 0 },
             });
         }
         h.evals.push(EvalPoint {
@@ -235,6 +285,9 @@ mod tests {
         assert_eq!(h.iterations(), 3);
         assert_eq!(h.final_grad_norm(), 2.0);
         assert_eq!(h.total_net_time(), Duration::from_millis(15));
+        assert_eq!(h.total_dropped(), 6);
+        assert_eq!(h.total_timed_out(), 3);
+        assert_eq!(h.total_resyncs(), 1);
     }
 
     #[test]
@@ -244,12 +297,17 @@ mod tests {
         assert_eq!(row.algorithm, "QRR(p=0.1)");
         assert_eq!(row.bits, 300);
         assert_eq!(row.down_bits, 120);
+        assert_eq!(row.dropped, 6);
+        assert_eq!(row.timed_out, 3);
         let md = markdown_table(&[row]);
         assert!(md.contains("# Down Bits"));
+        assert!(md.contains("# Dropped"));
+        assert!(md.contains("# Timed out"));
         assert!(md.contains("| QRR(p=0.1) |"));
         assert!(md.contains("90.00%"));
         assert!(md.contains("3.000e2"));
         assert!(md.contains("1.200e2"));
+        assert!(md.contains("| 6 | 3 |"));
     }
 
     #[test]
@@ -260,6 +318,8 @@ mod tests {
         assert_eq!(lines.len(), 4); // header + 3 rows
         assert!(lines[0].contains("down_bits"));
         assert!(lines[0].contains("ratio"));
+        assert!(lines[0].ends_with("dropped,timed_out,corrupt,late,resyncs"));
+        assert!(lines[2].ends_with(",2,1,0,1,1")); // round 1 resynced
         assert!(lines[3].contains(",300,")); // cumulative uplink
         assert!(lines[3].contains(",120,")); // cumulative downlink
         let ecsv = h.evals_csv();

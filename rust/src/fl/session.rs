@@ -40,10 +40,13 @@ use anyhow::Result;
 use crate::compress::pipeline::{
     BuildCtx, CompressionPipeline, DownlinkDecoder, DownlinkEncoder, PipelineSpec,
 };
-use crate::config::{AggregationConfig, Backend, ExperimentConfig, ParticipationConfig};
+use crate::config::{
+    AggregationConfig, Backend, ExperimentConfig, ParticipationConfig, QuorumConfig,
+};
 use crate::data::{self, Dataset};
 use crate::exec::ThreadPool;
 use crate::model::{native::NativeModel, ModelOps, ModelSpec};
+use crate::net::faults::{FaultAction, FaultPlan, FaultyTransport};
 use crate::net::transport::{InProcTransport, Transport, TransportError};
 use crate::net::{Decoder, Encoder, LinkModel};
 use crate::tensor::Tensor;
@@ -52,6 +55,11 @@ use crate::util::{PhaseTimes, Rng};
 use super::{
     ClientRoundOutput, EvalPoint, FlClient, FlServer, History, RoundMetrics, ShardedAggregator,
 };
+
+/// Byte length of the server-frame header (`SERVER_MAGIC` layout):
+/// downlink corruption is injected past it so the frame still routes
+/// but the body decode fails, exactly like bit-rot on the wire.
+const SERVER_HEADER_LEN: usize = 25;
 
 // ------------------------------------------------------- participation
 
@@ -501,6 +509,8 @@ pub struct FlSessionBuilder {
     quiet: bool,
     threads: Option<usize>,
     shards: Option<usize>,
+    quorum: Option<QuorumConfig>,
+    chaos: Option<FaultPlan>,
 }
 
 impl std::fmt::Debug for FlSessionBuilder {
@@ -530,6 +540,8 @@ impl FlSessionBuilder {
             quiet: false,
             threads: None,
             shards: None,
+            quorum: None,
+            chaos: None,
         }
     }
 
@@ -606,6 +618,25 @@ impl FlSessionBuilder {
     /// full-precision parameters, and clients locally reconstruct.
     pub fn downlink(mut self, spec: PipelineSpec) -> Self {
         self.cfg.downlink = Some(spec);
+        self
+    }
+
+    /// Override the quorum policy: proceed once `fraction` of the
+    /// round's selected cohort arrived, re-polling a bounded number of
+    /// times with exponential backoff when the first deadline leaves
+    /// the quorum unmet (default: the config's `quorum`, else
+    /// [`QuorumConfig::default`]).
+    pub fn quorum(mut self, q: QuorumConfig) -> Self {
+        self.quorum = Some(q);
+        self
+    }
+
+    /// Run the session under a seeded fault-injection plan: the uplink
+    /// transport is wrapped in a [`FaultyTransport`] and the plan's
+    /// downlink half is applied to the broadcast bytes each round
+    /// (default: the config's `chaos`, else a faithful network).
+    pub fn chaos(mut self, plan: FaultPlan) -> Self {
+        self.chaos = Some(plan);
         self
     }
 
@@ -709,18 +740,27 @@ impl FlSessionBuilder {
         let aggregation = self
             .aggregation
             .unwrap_or_else(|| aggregation_from_config(cfg.aggregation));
-        let transport = self
+        let quorum = self.quorum.or(cfg.quorum).unwrap_or_default();
+        quorum.validate()?;
+        let chaos = self.chaos.or_else(|| cfg.chaos.clone());
+        let mut transport = self
             .transport
             .unwrap_or_else(|| Box::new(InProcTransport::new()));
+        if let Some(plan) = &chaos {
+            plan.validate()?;
+            log::info!("chaos plan active: {}", plan.format());
+            transport = Box::new(FaultyTransport::new(transport, plan.clone()));
+        }
         let mut sinks = self.sinks;
         if !self.quiet {
             sinks.insert(0, Box::new(LogSink));
         }
         log::debug!(
-            "session: participation={} aggregation={} timeout={:?}",
+            "session: participation={} aggregation={} timeout={:?} quorum={}",
             participation.label(),
             aggregation.label(),
-            self.recv_timeout
+            self.recv_timeout,
+            quorum.format()
         );
 
         let label = cfg
@@ -746,6 +786,8 @@ impl FlSessionBuilder {
             aggregation,
             transport,
             recv_timeout: self.recv_timeout,
+            quorum,
+            chaos,
             sinks,
             history,
             phases: PhaseTimes::new(),
@@ -789,6 +831,11 @@ pub struct FlSession {
     aggregation: Box<dyn Aggregation>,
     transport: Box<dyn Transport>,
     recv_timeout: Duration,
+    /// quorum semantics: arrival target and bounded re-poll windows
+    quorum: QuorumConfig,
+    /// seeded fault plan; the uplink half lives in the wrapped
+    /// transport, the downlink half is applied to broadcast bytes
+    chaos: Option<FaultPlan>,
     sinks: Vec<Box<dyn MetricsSink>>,
     history: History,
     phases: PhaseTimes,
@@ -887,6 +934,42 @@ impl FlSession {
         })
     }
 
+    /// Send one uplink frame, retrying with exponential backoff plus
+    /// jitter when the transport reports [`TransportError::Closed`] —
+    /// the client-side reconnect path (DESIGN.md §11). Returns whether
+    /// the frame was accepted; non-`Closed` errors propagate.
+    fn send_with_retry(&mut self, wire: &[u8]) -> Result<bool> {
+        const MAX_SEND_RETRIES: u32 = 3;
+        const BASE_RETRY_MS: u64 = 2;
+        let mut attempt = 0u32;
+        loop {
+            match self.transport.send(wire) {
+                Ok(()) => return Ok(true),
+                Err(e) => {
+                    let closed = matches!(
+                        e.downcast_ref::<TransportError>(),
+                        Some(TransportError::Closed)
+                    );
+                    if !closed {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    if attempt > MAX_SEND_RETRIES {
+                        return Ok(false);
+                    }
+                    let backoff = BASE_RETRY_MS << (attempt - 1);
+                    let jitter = self.round_rng.below(BASE_RETRY_MS as usize) as u64;
+                    log::debug!(
+                        "send hit closed transport, retry {attempt}/{MAX_SEND_RETRIES} \
+                         in {}ms",
+                        backoff + jitter
+                    );
+                    std::thread::sleep(Duration::from_millis(backoff + jitter));
+                }
+            }
+        }
+    }
+
     /// Execute a single FL iteration: select → parallel client compute →
     /// transport → decode → aggregate → descent step → metrics.
     pub fn step(&mut self, it: u64) -> Result<()> {
@@ -902,17 +985,61 @@ impl FlSession {
         // and the accounting charges the full-precision parameter size.
         // With one, the server delta-encodes through its pipeline into a
         // versioned ServerUpdate, the bytes cross the real wire codec,
-        // and the clients' (shared) decoder locally reconstructs.
+        // and the clients' (shared) decoder locally reconstructs. The
+        // downlink half of the chaos plan acts here: a dropped or
+        // corrupted broadcast leaves the clients on last round's
+        // parameters, and the sequence gap the next delta reveals is
+        // healed by a full snapshot resync (DESIGN.md §11).
         let mut down_bits = 32 * self.model_len as u64;
+        let mut resyncs = 0u32;
+        let down_action = self
+            .chaos
+            .as_ref()
+            .map_or(FaultAction::Deliver, |p| p.down_action(it));
         let weights: Arc<Vec<Tensor>> = match &mut self.downlink {
+            // downlink faults need a downlink pipeline to matter: with a
+            // full-precision broadcast the clients hold no decoder state
+            // a lost frame could desynchronize
             None => self.server.params_shared(),
             Some(dl) => {
                 let upd = dl.encoder.encode(self.server.params(), it);
                 down_bits = upd.payload_bits();
-                let bytes = Encoder::server(&upd);
-                let decoded = Decoder::decode_server(&bytes)
-                    .expect("self-encoded broadcast always decodes");
-                Arc::new(dl.decoder.apply(&decoded)?.to_vec())
+                if down_action == FaultAction::Drop {
+                    // broadcast lost in flight: train on stale params
+                    log::debug!("round {it}: broadcast dropped by chaos plan");
+                    Arc::new(dl.decoder.params().to_vec())
+                } else {
+                    let mut bytes = Encoder::server(&upd);
+                    if down_action == FaultAction::Corrupt {
+                        FaultPlan::corrupt_in_place(&mut bytes, SERVER_HEADER_LEN);
+                    }
+                    match Decoder::decode_server(&bytes) {
+                        Ok(decoded) if dl.decoder.needs_resync(&decoded) => {
+                            // the shared decoder saw a sequence gap (an
+                            // earlier broadcast never landed): ship a full
+                            // snapshot instead of the gap-revealing delta,
+                            // charging its bits to the downlink
+                            let snap = dl.encoder.snapshot(it);
+                            let snap_bytes = Encoder::server(&snap);
+                            let snap_dec = Decoder::decode_server(&snap_bytes)?;
+                            down_bits += snap.payload_bits();
+                            resyncs += 1;
+                            log::info!(
+                                "round {it}: downlink gap detected, snapshot resync ({} bits)",
+                                snap.payload_bits()
+                            );
+                            Arc::new(dl.decoder.apply_snapshot(&snap_dec)?.to_vec())
+                        }
+                        Ok(decoded) => Arc::new(dl.decoder.apply(&decoded)?.to_vec()),
+                        Err(e) => {
+                            // corrupted in flight: the decoder never sees
+                            // the frame, clients stay on stale params; the
+                            // seq gap triggers the snapshot path next round
+                            log::debug!("round {it}: broadcast undecodable in flight ({e})");
+                            Arc::new(dl.decoder.params().to_vec())
+                        }
+                    }
+                }
             }
         };
 
@@ -967,8 +1094,12 @@ impl FlSession {
             .begin_round(&agg_weights, self.aggregation.include_undelivered());
 
         // uplink: admitted updates enter the transport; a policy-dropped
-        // upload is simply never sent and is not waited for
+        // upload is simply never sent and is not waited for. A send that
+        // hits a closed transport retries with backoff (the reconnect
+        // path); exhausting the retries drops the upload like a policy
+        // loss, so one dead client can never abort the round.
         let mut sent = 0usize;
+        let mut clients_dropped = 0u32;
         for (i, out) in outputs.iter().enumerate() {
             let Some(out) = out else { continue };
             let Some(wire) = &out.wire else { continue };
@@ -976,33 +1107,64 @@ impl FlSession {
                 .participation
                 .admit(i, &self.links, out.net_time, &mut self.round_rng)
             {
-                self.transport.send(wire)?;
-                sent += 1;
+                if self.send_with_retry(wire)? {
+                    sent += 1;
+                } else {
+                    log::debug!(
+                        "round {it}: client {i} upload lost (transport closed after retries)"
+                    );
+                    clients_dropped += 1;
+                }
             } else {
                 log::debug!("round {it}: client {i} upload lost (participation policy)");
+                clients_dropped += 1;
             }
         }
 
-        // server side: collect what actually arrived. One deadline
-        // bounds the whole collection — discarded junk frames must not
-        // refresh the budget, or a misbehaving peer re-sending garbage
-        // could hold the round open forever. Routing is header-only
-        // (`peek_header`): the body decode and the scheme absorb run on
-        // the frame's shard lane while this loop keeps draining the
-        // transport, so at most `n_shards` decoded updates are ever
-        // alive at once.
+        // server side: collect what actually arrived. Deadlines bound
+        // the collection — discarded junk frames must not refresh the
+        // budget, or a misbehaving peer re-sending garbage could hold
+        // the round open forever. The quorum policy decides what a
+        // shortfall at the deadline costs: the round proceeds once the
+        // arrival target is met, and a shortfall below it buys at most
+        // `max_repolls` exponentially backed-off extra windows before
+        // the round proceeds without the stragglers (DESIGN.md §11).
+        // Routing is header-only (`peek_header`): the body decode and
+        // the scheme absorb run on the frame's shard lane while this
+        // loop keeps draining the transport, so at most `n_shards`
+        // decoded updates are ever alive at once.
+        let n_selected = active.iter().filter(|a| **a).count();
+        let min_arrivals = (self.quorum.fraction * n_selected as f64).ceil() as usize;
+        let quorum_target = min_arrivals.min(sent);
         let mut dispatched = vec![false; n];
         let mut received = 0usize;
-        let collect_deadline = Instant::now() + self.recv_timeout;
+        let mut clients_late = 0u32;
+        let mut repolls = 0u32;
+        let first_deadline = Instant::now() + self.recv_timeout;
+        let mut deadline = first_deadline;
         while received < sent {
-            let remaining = collect_deadline.saturating_duration_since(Instant::now());
+            let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
+                if received >= quorum_target || repolls >= self.quorum.max_repolls {
+                    log::debug!(
+                        "round {it}: {} upload(s) missing after {} re-poll(s); \
+                         proceeding without them",
+                        sent - received,
+                        repolls
+                    );
+                    break;
+                }
+                repolls += 1;
+                let base = self.quorum.base_backoff_ms << (repolls - 1).min(16);
+                let jitter_span = (self.quorum.base_backoff_ms / 4).max(1) as usize;
+                let jitter = self.round_rng.below(jitter_span) as u64;
+                let window = Duration::from_millis(base + jitter);
                 log::debug!(
-                    "round {it}: {} upload(s) missing after {:?}; proceeding without them",
-                    sent - received,
-                    self.recv_timeout
+                    "round {it}: {received}/{sent} uploads at deadline (quorum target \
+                     {quorum_target}), re-poll {repolls} for {window:?}"
                 );
-                break;
+                deadline = Instant::now() + window;
+                continue;
             }
             match self.transport.recv_timeout(remaining) {
                 Ok(frame) => {
@@ -1037,20 +1199,20 @@ impl FlSession {
                         continue;
                     }
                     received += 1;
+                    if Instant::now() >= first_deadline {
+                        clients_late += 1;
+                    }
                     dispatched[id] = true;
                     self.aggregator.dispatch_frame(id, frame);
                 }
-                Err(TransportError::TimedOut(_)) => {
-                    log::debug!(
-                        "round {it}: {} upload(s) missing after {:?}; proceeding without them",
-                        sent - received,
-                        self.recv_timeout
-                    );
-                    break;
-                }
+                // an empty window is not the end of the round: the
+                // deadline check at the loop top decides whether to
+                // proceed or open a re-poll window
+                Err(TransportError::TimedOut(_)) => continue,
                 Err(e) => return Err(e.into()),
             }
         }
+        let clients_timed_out = (sent - received) as u32;
 
         // close the round: in-flight absorbs drain, silent members
         // advance their mirrors, shard partials tree-reduce. `delivered`
@@ -1105,6 +1267,11 @@ impl FlSession {
             comms,
             grad_norm,
             net_time,
+            clients_dropped,
+            clients_timed_out,
+            clients_corrupt: digest.decode_failures as u32,
+            clients_late,
+            resyncs,
         };
         for s in &mut self.sinks {
             s.on_round(&self.history.label, &m);
@@ -1433,6 +1600,34 @@ mod tests {
         assert_eq!(report.history.total_bits(), 0);
         assert_eq!(report.history.iterations(), 3);
         assert!(report.history.evals.last().unwrap().loss.is_finite());
+    }
+
+    #[test]
+    fn dropout_session_counts_dropped_clients_in_metrics() {
+        // every upload lost before the transport (policy drop): the
+        // fault-layer counters must attribute all three clients per
+        // round to `clients_dropped`, none to `clients_timed_out`
+        let mut cfg = tiny_cfg(SchemeConfig::Sgd);
+        cfg.iters = 3;
+        cfg.eval_every = 3;
+        cfg.link_slow_bps = 1e6;
+        cfg.link_fast_bps = 1e6;
+        cfg.participation = ParticipationConfig::Dropout { fraction: 1.0, drop_prob: 1.0 };
+        let mut session = FlSessionBuilder::new(&cfg)
+            .recv_timeout(Duration::from_millis(10))
+            .quiet()
+            .build()
+            .unwrap();
+        let report = session.run().unwrap();
+        assert_eq!(report.history.total_dropped(), 9);
+        assert_eq!(report.history.total_timed_out(), 0);
+        assert_eq!(report.history.total_resyncs(), 0);
+        for r in &report.history.rounds {
+            assert_eq!(r.clients_dropped, 3);
+            assert_eq!(r.clients_timed_out, 0);
+            assert_eq!(r.clients_corrupt, 0);
+            assert_eq!(r.comms, 0);
+        }
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub struct RoundDigest {
     pub peak_live: usize,
     /// Frames that reached a shard but failed the full body decode.
     pub decode_failures: usize,
+    /// Frames dropped at a lane because their client had already
+    /// absorbed one this round (duplicate delivery).
+    pub duplicates: usize,
 }
 
 /// Per-shard state: touched only from that shard's executor lane while
@@ -66,6 +69,8 @@ struct ShardState {
     include_undelivered: bool,
     /// Frames whose body decode failed on this shard this round.
     decode_failures: usize,
+    /// Frames dropped because their client had already absorbed.
+    duplicates: usize,
 }
 
 impl ShardState {
@@ -138,6 +143,7 @@ impl ShardedAggregator {
                 weights: Vec::new(),
                 include_undelivered: true,
                 decode_failures: 0,
+                duplicates: 0,
             })
             .collect();
         for (id, scheme) in schemes.into_iter().enumerate() {
@@ -177,6 +183,7 @@ impl ShardedAggregator {
             let mut s = shard.lock().unwrap();
             s.partial = None;
             s.decode_failures = 0;
+            s.duplicates = 0;
             s.include_undelivered = include_undelivered;
             for pos in 0..s.members.len() {
                 s.absorbed[pos] = false;
@@ -207,7 +214,9 @@ impl ShardedAggregator {
             let pos = client / n_shards;
             {
                 let mut s = shard.lock().unwrap();
-                if !s.absorbed[pos] {
+                if s.absorbed[pos] {
+                    s.duplicates += 1;
+                } else {
                     match Decoder::decode(&frame) {
                         Ok(msg) => {
                             let contrib = s.schemes[pos].absorb(Some(&msg.update));
@@ -291,9 +300,11 @@ impl ShardedAggregator {
             .unwrap_or_else(|| self.shapes.iter().map(|s| Tensor::zeros(s)).collect());
         let mut delivered = vec![false; self.n_members];
         let mut decode_failures = 0usize;
+        let mut duplicates = 0usize;
         for shard in &self.shards {
             let s = shard.lock().unwrap();
             decode_failures += s.decode_failures;
+            duplicates += s.duplicates;
             for (pos, &id) in s.members.iter().enumerate() {
                 delivered[id] = s.absorbed[pos];
             }
@@ -303,6 +314,7 @@ impl ShardedAggregator {
             delivered,
             peak_live: self.peak_live.load(Ordering::SeqCst),
             decode_failures,
+            duplicates,
         }
     }
 
@@ -468,6 +480,8 @@ mod tests {
         agg.dispatch_frame(0, f0);
         let digest = agg.close_round();
         assert_eq!(digest.delivered, vec![true, false]);
+        assert_eq!(digest.duplicates, 1, "dropped copy not counted");
+        assert_eq!(digest.decode_failures, 0);
         for (a, g) in digest.aggregate.iter().zip(g0.iter()) {
             assert!(a.rel_err(g) < 1e-6, "duplicate frame double-counted");
         }

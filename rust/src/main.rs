@@ -160,6 +160,14 @@ COMMON OPTIONS (exp/train):
                       (preset or stage spec — see `qrr schemes`)
     --downlink SPEC   dual-side: broadcast compressed parameter deltas,
                       e.g. --downlink "svd(p=0.1)+laq(beta=8)"
+    --chaos SPEC      seeded fault-injection plan over the transport,
+                      e.g. --chaos "drop=0.02,corrupt=0.01,down.drop=0.05"
+                      (keys: drop|dup|corrupt|truncate|disconnect|delay,
+                      up./down. prefixes, seed=N, rounds=LO..HI)
+    --chaos-seed N    reseed the chaos plan (same plan + same seed ⇒
+                      byte-identical fault schedule)
+    --quorum Q        round quorum <fraction>[:<max_repolls>[:<backoff_ms>]],
+                      e.g. --quorum 0.8:3:25 (default 1:2:50)
 
 ENVIRONMENT:
     QRR_THREADS       worker threads (default: cores, max 16; read once

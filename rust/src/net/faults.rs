@@ -1,0 +1,666 @@
+//! Deterministic fault injection for transports (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] is a seeded description of how the network
+//! misbehaves — per-direction rates for drop / delay / duplicate /
+//! corrupt / truncate / disconnect, an optional active round window,
+//! and client partitions. A [`FaultyTransport`] wraps any
+//! [`Transport`] (in-proc or TCP) and applies the plan to the uplink;
+//! the session applies the plan's downlink half to broadcast bytes
+//! itself (the broadcast never crosses a `Transport`).
+//!
+//! **Determinism.** Every fault decision is a pure function of
+//! `(seed, direction, client_id, round)`, derived by peeking the frame
+//! header ([`Decoder::peek_header`]) and hashing through `splitmix64`
+//! into a private [`Rng`] stream. Uplink sends may be issued or
+//! delivered in any thread order — the *set* of faulted
+//! `(client, round)` pairs is identical for a given seed, so every
+//! chaos run's `RoundMetrics` counters are byte-reproducible. Frames
+//! whose header does not peek (not a client update) pass through
+//! unfaulted.
+//!
+//! Fault semantics on the uplink:
+//!
+//! * **drop** — the frame is swallowed; the server sees a timeout.
+//! * **duplicate** — the frame is sent twice; the session's
+//!   already-dispatched check discards the copy.
+//! * **corrupt** — the first entry's kind byte is flipped, so the frame
+//!   still routes (header intact) but the body decode fails on the
+//!   shard lane and is counted as a decode failure.
+//! * **truncate** — the frame is cut mid-body (header kept), same
+//!   observable outcome as corrupt.
+//! * **disconnect** — the send fails with [`TransportError::Closed`]
+//!   exactly once per `(client, round)`; the session's
+//!   reconnect-with-backoff retry then succeeds deterministically.
+//! * **delay** — the frame is held and released only once a receive
+//!   deadline has expired, so it arrives "late" (inside the quorum
+//!   re-poll window) instead of on time.
+//! * **partition** — all uplink traffic from the named clients drops
+//!   for the window, regardless of rates.
+//!
+//! On the downlink (applied by the session, see
+//! [`FaultPlan::down_action`]) the vocabulary folds to drop / corrupt:
+//! a delayed or disconnected broadcast is a miss for that round (the
+//! shared decoder resyncs via snapshot), and a duplicated broadcast is
+//! rejected by the seq check with no further effect.
+
+use std::collections::HashSet;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::net::transport::{Transport, TransportError};
+use crate::net::wire::Decoder;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Per-direction fault probabilities, each in `[0, 1]`, summing to at
+/// most 1 (the bands partition a single uniform draw).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultRates {
+    /// frame silently swallowed
+    pub drop: f64,
+    /// frame delivered twice
+    pub duplicate: f64,
+    /// first entry's kind byte flipped (frame routes, body decode fails)
+    pub corrupt: f64,
+    /// frame cut mid-body (header kept)
+    pub truncate: f64,
+    /// send fails `Closed` once; the reconnect retry succeeds
+    pub disconnect: f64,
+    /// frame held until a receive deadline expires (arrives late)
+    pub delay: f64,
+}
+
+impl FaultRates {
+    /// Total fault probability (the complement is clean delivery).
+    pub fn combined(&self) -> f64 {
+        self.drop + self.duplicate + self.corrupt + self.truncate + self.disconnect + self.delay
+    }
+
+    /// Rates must be probabilities and jointly partition one draw.
+    pub fn validate(&self) -> Result<()> {
+        for (name, r) in [
+            ("drop", self.drop),
+            ("duplicate", self.duplicate),
+            ("corrupt", self.corrupt),
+            ("truncate", self.truncate),
+            ("disconnect", self.disconnect),
+            ("delay", self.delay),
+        ] {
+            ensure!(
+                (0.0..=1.0).contains(&r),
+                "fault rate {name}={r} outside [0, 1]"
+            );
+        }
+        ensure!(
+            self.combined() <= 1.0 + 1e-9,
+            "fault rates sum to {} > 1",
+            self.combined()
+        );
+        Ok(())
+    }
+}
+
+/// A client partition: all uplink traffic from `clients` drops while
+/// `rounds = [start, end)` is active.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// partitioned client ids
+    pub clients: Vec<u32>,
+    /// active window `[start, end)`
+    pub rounds: (u64, u64),
+}
+
+/// A seeded, deterministic description of network misbehavior.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// chaos seed — same seed ⇒ same faulted `(client, round)` set
+    pub seed: u64,
+    /// client→server fault rates
+    pub up: FaultRates,
+    /// server→client (broadcast) fault rates
+    pub down: FaultRates,
+    /// optional active window `[start, end)`; `None` = every round
+    pub rounds: Option<(u64, u64)>,
+    /// client partitions (drop-all windows)
+    pub partitions: Vec<Partition>,
+}
+
+/// The outcome of one fault decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// clean delivery
+    Deliver,
+    /// swallow the frame
+    Drop,
+    /// deliver twice
+    Duplicate,
+    /// flip the first entry's kind byte
+    Corrupt,
+    /// cut the frame mid-body
+    Truncate,
+    /// fail the send `Closed` once
+    Disconnect,
+    /// hold until a receive deadline expires
+    Delay,
+}
+
+// domain-separation tags for the two directions
+const UP_TAG: u64 = 0x5550;
+const DOWN_TAG: u64 = 0x444F;
+
+impl FaultPlan {
+    /// Parse the CLI grammar: a comma list of `key=rate` with keys
+    /// `drop|dup|corrupt|truncate|disconnect|delay`, optionally
+    /// prefixed `up.` (the default) or `down.`, plus `seed=N` and
+    /// `rounds=LO..HI`. Example:
+    /// `"drop=0.02,corrupt=0.01,down.drop=0.05,seed=7"`.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, val)) = part.split_once('=') else {
+                bail!("bad chaos spec {part:?}: expected key=value");
+            };
+            let (key, val) = (key.trim(), val.trim());
+            if key == "seed" {
+                plan.seed = val.parse().map_err(|_| {
+                    anyhow::anyhow!("bad chaos seed {val:?}")
+                })?;
+                continue;
+            }
+            if key == "rounds" {
+                let Some((lo, hi)) = val.split_once("..") else {
+                    bail!("bad chaos rounds {val:?}: expected LO..HI");
+                };
+                let lo: u64 = lo.parse().map_err(|_| anyhow::anyhow!("bad round {lo:?}"))?;
+                let hi: u64 = hi.parse().map_err(|_| anyhow::anyhow!("bad round {hi:?}"))?;
+                ensure!(lo < hi, "empty chaos round window {lo}..{hi}");
+                plan.rounds = Some((lo, hi));
+                continue;
+            }
+            let (dir, kind) = match key.split_once('.') {
+                Some(("up", k)) => (&mut plan.up, k),
+                Some(("down", k)) => (&mut plan.down, k),
+                Some((d, _)) => bail!("bad chaos direction {d:?}: expected up or down"),
+                None => (&mut plan.up, key),
+            };
+            let rate: f64 = val
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad chaos rate {val:?}"))?;
+            match kind {
+                "drop" => dir.drop = rate,
+                "dup" | "duplicate" => dir.duplicate = rate,
+                "corrupt" => dir.corrupt = rate,
+                "truncate" => dir.truncate = rate,
+                "disconnect" => dir.disconnect = rate,
+                "delay" => dir.delay = rate,
+                other => bail!(
+                    "unknown chaos key {other:?} (drop|dup|corrupt|truncate|disconnect|delay)"
+                ),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Canonical spec string; `parse` round-trips it (partitions are
+    /// JSON-only and not part of the CLI grammar).
+    pub fn format(&self) -> String {
+        let mut parts = vec![format!("seed={}", self.seed)];
+        let push_rates = |prefix: &str, r: &FaultRates, parts: &mut Vec<String>| {
+            for (name, v) in [
+                ("drop", r.drop),
+                ("dup", r.duplicate),
+                ("corrupt", r.corrupt),
+                ("truncate", r.truncate),
+                ("disconnect", r.disconnect),
+                ("delay", r.delay),
+            ] {
+                if v > 0.0 {
+                    parts.push(format!("{prefix}{name}={v}"));
+                }
+            }
+        };
+        push_rates("", &self.up, &mut parts);
+        push_rates("down.", &self.down, &mut parts);
+        if let Some((lo, hi)) = self.rounds {
+            parts.push(format!("rounds={lo}..{hi}"));
+        }
+        parts.join(",")
+    }
+
+    /// Validate both directions' rates and the windows.
+    pub fn validate(&self) -> Result<()> {
+        self.up.validate()?;
+        self.down.validate()?;
+        if let Some((lo, hi)) = self.rounds {
+            ensure!(lo < hi, "empty chaos round window {lo}..{hi}");
+        }
+        for p in &self.partitions {
+            ensure!(p.rounds.0 < p.rounds.1, "empty partition window");
+            ensure!(!p.clients.is_empty(), "partition names no clients");
+        }
+        Ok(())
+    }
+
+    /// Total per-frame fault probability across both directions.
+    pub fn combined_rate(&self) -> f64 {
+        self.up.combined() + self.down.combined()
+    }
+
+    fn active(&self, round: u64) -> bool {
+        match self.rounds {
+            None => true,
+            Some((lo, hi)) => (lo..hi).contains(&round),
+        }
+    }
+
+    fn partitioned(&self, client: u32, round: u64) -> bool {
+        self.partitions.iter().any(|p| {
+            (p.rounds.0..p.rounds.1).contains(&round) && p.clients.contains(&client)
+        })
+    }
+
+    /// A private stream that is a pure function of
+    /// `(seed, direction, client, round)` — thread arrival order cannot
+    /// perturb any decision.
+    fn rng_for(&self, dir: u64, client: u64, round: u64) -> Rng {
+        let mut s = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ dir
+            ^ client.wrapping_mul(0xD134_2543_DE82_EF95)
+            ^ round.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        Rng::new(splitmix64(&mut s))
+    }
+
+    fn pick(rates: &FaultRates, u: f64) -> FaultAction {
+        // fixed band order: a seed's outcome is stable across releases
+        let bands = [
+            (rates.drop, FaultAction::Drop),
+            (rates.duplicate, FaultAction::Duplicate),
+            (rates.corrupt, FaultAction::Corrupt),
+            (rates.truncate, FaultAction::Truncate),
+            (rates.disconnect, FaultAction::Disconnect),
+            (rates.delay, FaultAction::Delay),
+        ];
+        let mut acc = 0.0;
+        for (rate, action) in bands {
+            acc += rate;
+            if u < acc {
+                return action;
+            }
+        }
+        FaultAction::Deliver
+    }
+
+    /// The uplink decision for `(client, round)`.
+    pub fn up_action(&self, client: u32, round: u64) -> FaultAction {
+        if !self.active(round) {
+            return FaultAction::Deliver;
+        }
+        if self.partitioned(client, round) {
+            return FaultAction::Drop;
+        }
+        let mut rng = self.rng_for(UP_TAG, client as u64, round);
+        Self::pick(&self.up, rng.f64())
+    }
+
+    /// The downlink decision for `round`'s broadcast. The broadcast is
+    /// shared (one frame for the whole cohort), so the decision keys on
+    /// the round alone, and the vocabulary folds to what the in-memory
+    /// broadcast path can express: delay/disconnect behave as a miss
+    /// (`Drop` — the decoder resyncs next round), truncate as
+    /// `Corrupt`, duplicate as `Deliver` (the seq check rejects the
+    /// replay with no effect).
+    pub fn down_action(&self, round: u64) -> FaultAction {
+        if !self.active(round) {
+            return FaultAction::Deliver;
+        }
+        let mut rng = self.rng_for(DOWN_TAG, u64::MAX, round);
+        match Self::pick(&self.down, rng.f64()) {
+            FaultAction::Delay | FaultAction::Disconnect => FaultAction::Drop,
+            FaultAction::Truncate => FaultAction::Corrupt,
+            FaultAction::Duplicate => FaultAction::Deliver,
+            other => other,
+        }
+    }
+
+    /// Deterministic detectable corruption: flip the first entry's kind
+    /// byte (right after the `header_len`-byte fixed header), so the
+    /// frame still routes but its body decode fails with a typed error.
+    /// Frames too short to carry a body get their last byte flipped.
+    // This runs on frames we may not have produced; stay panic-free.
+    // qrr-audit: no-panic
+    pub fn corrupt_in_place(bytes: &mut [u8], header_len: usize) {
+        let Some(last) = bytes.len().checked_sub(1) else {
+            return;
+        };
+        let pos = header_len.min(last);
+        bytes[pos] ^= 0x40;
+    }
+    // qrr-audit: end
+}
+
+/// Counters of faults actually injected (observability + tests; the
+/// session's `RoundMetrics` counters are derived independently from
+/// what it observes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultStats {
+    /// frames swallowed
+    pub dropped: u64,
+    /// extra copies sent
+    pub duplicated: u64,
+    /// kind bytes flipped
+    pub corrupted: u64,
+    /// frames cut short
+    pub truncated: u64,
+    /// sends failed `Closed`
+    pub disconnects: u64,
+    /// frames held for late delivery
+    pub delayed: u64,
+}
+
+/// byte length of the fixed client-update header (`Decoder::peek_header`
+/// reads exactly this much)
+const CLIENT_HEADER_LEN: usize = 22;
+
+/// A chaos wrapper over any [`Transport`]: applies the plan's uplink
+/// half on [`send`](Transport::send), releases delayed frames on
+/// receive-deadline expiry, and passes everything else through.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    /// `(client, round)` pairs whose disconnect already fired — the
+    /// retry after reconnect must succeed deterministically
+    disconnected: Mutex<HashSet<(u32, u64)>>,
+    /// frames held by delay faults, released one per expired deadline
+    held: Mutex<VecDeque<Vec<u8>>>,
+    stats: Mutex<FaultStats>,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        FaultyTransport {
+            inner,
+            plan,
+            disconnected: Mutex::new(HashSet::new()),
+            held: Mutex::new(VecDeque::new()),
+            stats: Mutex::new(FaultStats::default()),
+        }
+    }
+
+    /// Counters of faults injected so far.
+    pub fn stats(&self) -> FaultStats {
+        *self.stats.lock().expect("fault stats poisoned")
+    }
+
+    /// The plan this wrapper runs.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut FaultStats)) {
+        f(&mut self.stats.lock().expect("fault stats poisoned"));
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn send(&self, payload: &[u8]) -> Result<()> {
+        // decisions key on the frame's own identity, not arrival order
+        let Ok(h) = Decoder::peek_header(payload) else {
+            return self.inner.send(payload);
+        };
+        match self.plan.up_action(h.client_id, h.round) {
+            FaultAction::Deliver => self.inner.send(payload),
+            FaultAction::Drop => {
+                self.bump(|s| s.dropped += 1);
+                Ok(())
+            }
+            FaultAction::Duplicate => {
+                self.bump(|s| s.duplicated += 1);
+                self.inner.send(payload)?;
+                self.inner.send(payload)
+            }
+            FaultAction::Corrupt => {
+                self.bump(|s| s.corrupted += 1);
+                let mut bytes = payload.to_vec();
+                FaultPlan::corrupt_in_place(&mut bytes, CLIENT_HEADER_LEN);
+                self.inner.send(&bytes)
+            }
+            FaultAction::Truncate => {
+                if payload.len() <= CLIENT_HEADER_LEN + 1 {
+                    // no body to cut: fold to drop
+                    self.bump(|s| s.dropped += 1);
+                    return Ok(());
+                }
+                self.bump(|s| s.truncated += 1);
+                let mut rng = self.plan.rng_for(UP_TAG ^ 0x7C, h.client_id as u64, h.round);
+                let body = payload.len() - CLIENT_HEADER_LEN - 1;
+                let cut = CLIENT_HEADER_LEN + rng.below(body.max(1));
+                self.inner.send(&payload[..cut])
+            }
+            FaultAction::Disconnect => {
+                let first = self
+                    .disconnected
+                    .lock()
+                    .expect("disconnect set poisoned")
+                    .insert((h.client_id, h.round));
+                if first {
+                    self.bump(|s| s.disconnects += 1);
+                    Err(TransportError::Closed.into())
+                } else {
+                    // the reconnect retry lands here and succeeds
+                    self.inner.send(payload)
+                }
+            }
+            FaultAction::Delay => {
+                self.bump(|s| s.delayed += 1);
+                self.held
+                    .lock()
+                    .expect("held queue poisoned")
+                    .push_back(payload.to_vec());
+                Ok(())
+            }
+        }
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> std::result::Result<Vec<u8>, TransportError> {
+        match self.inner.recv_timeout(timeout) {
+            Err(TransportError::TimedOut(d)) => {
+                // a deadline expired with nothing pending: release one
+                // held frame per expiry so delayed traffic arrives
+                // "late" — after the round's first deadline, inside the
+                // quorum re-poll window
+                match self.held.lock().expect("held queue poisoned").pop_front() {
+                    Some(frame) => Ok(frame),
+                    None => Err(TransportError::TimedOut(d)),
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::InProcTransport;
+    use crate::net::wire::{ClientUpdate, Encoder};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn frame(client: u32, round: u64) -> Vec<u8> {
+        let mut rng = Rng::new(client as u64 + round);
+        let up = ClientUpdate::Sgd { grads: vec![Tensor::randn(&[4, 3], &mut rng)] };
+        Encoder::new(&up, client, round)
+    }
+
+    #[test]
+    fn plan_grammar_round_trips_and_validates() {
+        let plan =
+            FaultPlan::parse("drop=0.02,corrupt=0.01,down.drop=0.05,seed=7,rounds=2..9")
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.up.drop, 0.02);
+        assert_eq!(plan.up.corrupt, 0.01);
+        assert_eq!(plan.down.drop, 0.05);
+        assert_eq!(plan.rounds, Some((2, 9)));
+        assert_eq!(FaultPlan::parse(&plan.format()).unwrap(), plan);
+
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("drop=0.9,dup=0.9").is_err());
+        assert!(FaultPlan::parse("sideways.drop=0.1").is_err());
+        assert!(FaultPlan::parse("flood=0.1").is_err());
+        assert!(FaultPlan::parse("rounds=9..2").is_err());
+    }
+
+    #[test]
+    fn decisions_are_pure_in_seed_client_and_round() {
+        let plan = FaultPlan {
+            seed: 42,
+            up: FaultRates { drop: 0.2, corrupt: 0.2, delay: 0.2, ..Default::default() },
+            ..Default::default()
+        };
+        for client in 0..50u32 {
+            for round in 0..20u64 {
+                let a = plan.up_action(client, round);
+                let b = plan.up_action(client, round);
+                assert_eq!(a, b, "decision not pure at ({client}, {round})");
+            }
+        }
+        // a different seed decides differently somewhere
+        let other = FaultPlan { seed: 43, ..plan.clone() };
+        let differs = (0..50u32).any(|c| {
+            (0..20u64).any(|r| plan.up_action(c, r) != other.up_action(c, r))
+        });
+        assert!(differs, "seed does not influence decisions");
+    }
+
+    #[test]
+    fn round_window_and_partition_gate_the_faults() {
+        let plan = FaultPlan {
+            seed: 1,
+            up: FaultRates { drop: 1.0, ..Default::default() },
+            rounds: Some((5, 6)),
+            partitions: vec![Partition { clients: vec![3], rounds: (0, 100) }],
+            ..Default::default()
+        };
+        assert_eq!(plan.up_action(0, 4), FaultAction::Deliver);
+        assert_eq!(plan.up_action(0, 5), FaultAction::Drop);
+        assert_eq!(plan.up_action(0, 6), FaultAction::Deliver);
+        // partitions apply inside the window regardless of rates…
+        assert_eq!(plan.up_action(3, 5), FaultAction::Drop);
+        // …but are themselves windows over the *plan's* active range
+        assert_eq!(plan.up_action(3, 7), FaultAction::Deliver);
+    }
+
+    #[test]
+    fn faulty_transport_drops_duplicates_and_corrupts_deterministically() {
+        // rate 1.0 of a single kind makes each behavior observable
+        let run = |rates: FaultRates| {
+            let t = FaultyTransport::new(
+                Box::new(InProcTransport::new()),
+                FaultPlan { seed: 9, up: rates, ..Default::default() },
+            );
+            t.send(&frame(1, 0)).unwrap();
+            let mut got = Vec::new();
+            while let Ok(f) = t.recv_timeout(Duration::from_millis(10)) {
+                got.push(f);
+            }
+            (got, t.stats())
+        };
+
+        let (got, stats) = run(FaultRates { drop: 1.0, ..Default::default() });
+        assert!(got.is_empty());
+        assert_eq!(stats.dropped, 1);
+
+        let (got, stats) = run(FaultRates { duplicate: 1.0, ..Default::default() });
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], got[1]);
+        assert_eq!(stats.duplicated, 1);
+
+        let (got, stats) = run(FaultRates { corrupt: 1.0, ..Default::default() });
+        assert_eq!(got.len(), 1);
+        assert_eq!(stats.corrupted, 1);
+        // header still routes, body decode fails
+        let h = Decoder::peek_header(&got[0]).unwrap();
+        assert_eq!(h.client_id, 1);
+        assert!(Decoder::decode(&got[0]).is_err());
+
+        let (got, stats) = run(FaultRates { truncate: 1.0, ..Default::default() });
+        assert_eq!(got.len(), 1);
+        assert_eq!(stats.truncated, 1);
+        assert!(Decoder::peek_header(&got[0]).is_ok());
+        assert!(Decoder::decode(&got[0]).is_err());
+    }
+
+    #[test]
+    fn disconnect_fails_once_then_the_retry_succeeds() {
+        let t = FaultyTransport::new(
+            Box::new(InProcTransport::new()),
+            FaultPlan {
+                seed: 3,
+                up: FaultRates { disconnect: 1.0, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let f = frame(2, 1);
+        let err = t.send(&f).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<TransportError>(),
+            Some(TransportError::Closed)
+        ));
+        // the retry (same client, same round) goes through
+        t.send(&f).unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_millis(50)).unwrap(), f);
+        assert_eq!(t.stats().disconnects, 1);
+    }
+
+    #[test]
+    fn delayed_frames_arrive_only_after_a_deadline_expires() {
+        let t = FaultyTransport::new(
+            Box::new(InProcTransport::new()),
+            FaultPlan {
+                seed: 4,
+                up: FaultRates { delay: 1.0, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let f = frame(0, 2);
+        t.send(&f).unwrap();
+        // the frame is not in the live stream…
+        let first = t.recv_timeout(Duration::from_millis(5));
+        // …it is released by that expiry (or a later one)
+        let got = match first {
+            Ok(frame) => frame,
+            Err(TransportError::TimedOut(_)) => {
+                t.recv_timeout(Duration::from_millis(5)).unwrap()
+            }
+            Err(e) => panic!("unexpected transport error: {e}"),
+        };
+        assert_eq!(got, f);
+        assert_eq!(t.stats().delayed, 1);
+    }
+
+    #[test]
+    fn non_client_frames_pass_through_unfaulted() {
+        let t = FaultyTransport::new(
+            Box::new(InProcTransport::new()),
+            FaultPlan {
+                seed: 5,
+                up: FaultRates { drop: 1.0, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let raw = vec![1u8, 2, 3, 4];
+        t.send(&raw).unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_millis(50)).unwrap(), raw);
+    }
+}

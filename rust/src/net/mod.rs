@@ -12,14 +12,20 @@
 //!   the simulation loop and a real TCP transport (`qrr serve` /
 //!   integration tests) proving the wire format round-trips across
 //!   processes.
+//! * [`faults`] — seeded, deterministic fault injection
+//!   ([`FaultPlan`] / [`FaultyTransport`]): drop / delay / duplicate /
+//!   corrupt / truncate / disconnect / partition, composable over any
+//!   transport, byte-reproducible from a seed (DESIGN.md §11).
 
+pub mod faults;
 pub mod link;
 pub mod transport;
 pub mod wire;
 
+pub use faults::{FaultAction, FaultPlan, FaultRates, FaultStats, FaultyTransport, Partition};
 pub use link::LinkModel;
 pub use transport::{
-    FrameAssembler, FrameError, InProcTransport, TcpClient, TcpServerTransport, TcpTransport,
-    Transport, TransportError, MAX_FRAME_BYTES,
+    Disconnect, FrameAssembler, FrameError, InProcTransport, TcpClient, TcpServerTransport,
+    TcpTransport, Transport, TransportError, MAX_FRAME_BYTES,
 };
 pub use wire::{ClientUpdate, Decoder, Encoder, ServerUpdate, WireError, WireHeader};

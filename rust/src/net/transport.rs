@@ -212,6 +212,22 @@ impl FrameAssembler {
 struct Conn {
     stream: TcpStream,
     asm: FrameAssembler,
+    peer: std::net::SocketAddr,
+}
+
+/// A recorded connection teardown from the readiness loop — the clean
+/// per-client disconnect signal chaos tooling and the session's
+/// resilience layer observe (a dropped peer must never be silent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Disconnect {
+    /// the peer's socket address
+    pub peer: std::net::SocketAddr,
+    /// `true` if the connection died while a frame was in flight — the
+    /// partial buffer was discarded with the connection, never leaked
+    /// into any other stream
+    pub mid_frame: bool,
+    /// partial-frame bytes discarded at teardown
+    pub bytes_dropped: usize,
 }
 
 /// Loopback TCP binding implementing [`Transport`] on a single object:
@@ -234,6 +250,9 @@ pub struct TcpTransport {
     conns: Mutex<Vec<Conn>>,
     /// frames completed by the poll loop but not yet handed out
     pending: Mutex<VecDeque<Vec<u8>>>,
+    /// connection teardowns observed by the poll loop, drained by
+    /// [`Self::take_disconnects`]
+    disconnects: Mutex<Vec<Disconnect>>,
 }
 
 impl TcpTransport {
@@ -247,7 +266,15 @@ impl TcpTransport {
             addr,
             conns: Mutex::new(Vec::new()),
             pending: Mutex::new(VecDeque::new()),
+            disconnects: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Drain the connection teardowns the poll loop has recorded since
+    /// the last call (EOF, poisoned framing, or read error — with
+    /// whether a partial frame was discarded).
+    pub fn take_disconnects(&self) -> Vec<Disconnect> {
+        std::mem::take(&mut self.disconnects.lock().unwrap())
     }
 
     /// The bound address (for out-of-process clients to connect to).
@@ -270,9 +297,13 @@ impl TcpTransport {
         // accept phase: register every connection the backlog holds
         loop {
             match self.listener.accept() {
-                Ok((stream, _peer)) => {
+                Ok((stream, peer)) => {
                     stream.set_nonblocking(true)?;
-                    conns.push(Conn { stream, asm: FrameAssembler::new(MAX_FRAME_BYTES) });
+                    conns.push(Conn {
+                        stream,
+                        asm: FrameAssembler::new(MAX_FRAME_BYTES),
+                        peer,
+                    });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
@@ -327,6 +358,15 @@ impl TcpTransport {
             if keep {
                 i += 1;
             } else {
+                // surface a clean per-client disconnect: the partial
+                // buffer dies with the connection (it can never leak
+                // into another stream — assemblers are per-connection)
+                // and the teardown is observable, not just a log line
+                self.disconnects.lock().unwrap().push(Disconnect {
+                    peer: conns[i].peer,
+                    mid_frame: conns[i].asm.mid_frame(),
+                    bytes_dropped: conns[i].asm.buffered(),
+                });
                 conns.swap_remove(i);
             }
         }
@@ -562,6 +602,33 @@ mod tests {
     }
 
     #[test]
+    fn assembler_single_byte_splits_reassemble_multi_frame_stream() {
+        // the exhaustive worst case: every byte of a multi-frame stream
+        // arrives in its own push. Complements the random-split property
+        // test with the finest possible chunking, deterministically.
+        let frames: Vec<Vec<u8>> = vec![
+            Vec::new(),                        // empty frame
+            vec![0x11],                        // one byte
+            (0..=255u8).collect(),             // every byte value
+            vec![0xEE; 300],                   // longer than any chunk
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&framed(f));
+        }
+        let mut asm = FrameAssembler::new(1024);
+        let mut got = Vec::new();
+        for (i, b) in stream.iter().enumerate() {
+            got.extend(asm.push(std::slice::from_ref(b)).unwrap());
+            // mid-frame must be reported truthfully at every boundary
+            let done = got.iter().map(|f: &Vec<u8>| f.len() + 4).sum::<usize>();
+            assert_eq!(asm.mid_frame(), i + 1 != done, "byte {i}");
+        }
+        assert_eq!(got, frames);
+        assert!(!asm.mid_frame());
+    }
+
+    #[test]
     fn inproc_roundtrip() {
         let t = InProcTransport::new();
         t.send(b"hello").unwrap();
@@ -746,6 +813,44 @@ mod tests {
         let mut c = TcpClient::connect(addr).unwrap();
         c.send(b"after-the-storm").unwrap();
         assert_eq!(t.recv_timeout(Duration::from_secs(5)).unwrap(), b"after-the-storm");
+    }
+
+    #[test]
+    fn tcp_mid_frame_kill_surfaces_clean_disconnect_and_no_stale_bytes() {
+        // a client trickles half a frame byte-by-byte, then dies. The
+        // loop must (a) discard the partial buffer, (b) record an
+        // observable per-client disconnect with the dropped byte count,
+        // and (c) deliver the next client's frame untainted.
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        let full = framed(&[0xCD; 96]);
+        let partial = &full[..full.len() / 2];
+        let h = std::thread::spawn({
+            let partial = partial.to_vec();
+            move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                for b in partial {
+                    s.write_all(&[b]).unwrap();
+                    s.flush().unwrap();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                // socket dropped here: kill mid-frame
+            }
+        });
+        h.join().unwrap();
+        let err = t.recv_timeout(Duration::from_millis(300)).unwrap_err();
+        assert!(matches!(err, TransportError::TimedOut(_)), "{err}");
+        let disc = t.take_disconnects();
+        assert_eq!(disc.len(), 1, "exactly one teardown: {disc:?}");
+        assert!(disc[0].mid_frame, "kill happened mid-frame");
+        assert_eq!(disc[0].bytes_dropped, partial.len());
+        // drained: a second take sees nothing
+        assert!(t.take_disconnects().is_empty());
+        // the partial buffer died with the connection — the next frame
+        // arrives intact, not prefixed by stale bytes
+        let mut c = TcpClient::connect(addr).unwrap();
+        c.send(b"clean-slate").unwrap();
+        assert_eq!(t.recv_timeout(Duration::from_secs(5)).unwrap(), b"clean-slate");
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //! and the same entry encoding — sized exactly by
 //! [`ServerUpdate::wire_len`] like [`ClientUpdate`].
 //!
+//! A broadcast may instead be a **snapshot** frame (magic `"QRRS"`,
+//! same layout otherwise): full state rather than a delta, carried as
+//! raw-dense entries. Snapshots are the resync path — a decoder that
+//! detected a sequence gap re-primes from one instead of staying
+//! desynced forever (see
+//! [`crate::compress::pipeline::DownlinkDecoder::apply_snapshot`]).
+//!
 //! `payload_bits` (what the experiments count) excludes the fixed header
 //! and the shape/rank metadata: exactly the paper's accounting of
 //! factor/code payloads — 32 bits per f32 and β bits per code.
@@ -41,6 +48,11 @@ const VERSION: u8 = 1;
 /// "QRRB" — the server→client broadcast stream.
 const SERVER_MAGIC: u32 = 0x5152_5242;
 const SERVER_VERSION: u8 = 1;
+/// "QRRS" — a broadcast **snapshot** (full state, not a delta): same
+/// layout as `"QRRB"` after the magic, distinguished so a delta can
+/// never be mistaken for a resync (or vice versa) by a bit flip in the
+/// body.
+const SNAPSHOT_MAGIC: u32 = 0x5152_5253;
 
 /// Errors produced when decoding a wire message.
 #[derive(Debug, Error)]
@@ -160,6 +172,12 @@ pub struct ServerUpdate {
     pub round: u64,
     /// per-parameter delta messages in spec order
     pub msgs: Vec<ParamMsg>,
+    /// `true` ⇒ this frame is a resync **snapshot**: `msgs` carry the
+    /// full model state (raw-dense entries), not a delta, and `seq` is
+    /// the sequence number the decoder must expect *next* rather than
+    /// the one being consumed. Encoded under its own magic so the two
+    /// frame families can never be confused on the wire.
+    pub snapshot: bool,
 }
 
 impl ServerUpdate {
@@ -249,7 +267,7 @@ impl Encoder {
     /// Serialize a [`ServerUpdate`] into a fresh, exactly-sized buffer.
     pub fn server(update: &ServerUpdate) -> Vec<u8> {
         let mut e = Encoder { buf: Vec::with_capacity(update.wire_len()) };
-        e.u32(SERVER_MAGIC);
+        e.u32(if update.snapshot { SNAPSHOT_MAGIC } else { SERVER_MAGIC });
         e.u8(SERVER_VERSION);
         e.u64(update.seq);
         e.u64(update.round);
@@ -444,10 +462,18 @@ impl<'a> Decoder<'a> {
         Ok(WireHeader { scheme, client_id, round, n_entries })
     }
 
-    /// Decode a server broadcast produced by [`Encoder::server`].
+    /// Decode a server broadcast produced by [`Encoder::server`]:
+    /// either a delta (`"QRRB"`) or a resync snapshot (`"QRRS"`) — the
+    /// magic sets [`ServerUpdate::snapshot`], everything after it
+    /// decodes identically.
     pub fn decode_server(buf: &'a [u8]) -> Result<ServerUpdate, WireError> {
         let mut d = Decoder { buf, pos: 0 };
-        if d.u32()? != SERVER_MAGIC || d.u8()? != SERVER_VERSION {
+        let snapshot = match d.u32()? {
+            SERVER_MAGIC => false,
+            SNAPSHOT_MAGIC => true,
+            _ => return Err(WireError::BadHeader),
+        };
+        if d.u8()? != SERVER_VERSION {
             return Err(WireError::BadHeader);
         }
         let seq = d.u64()?;
@@ -457,7 +483,7 @@ impl<'a> Decoder<'a> {
         for _ in 0..n {
             msgs.push(d.param_msg()?);
         }
-        Ok(ServerUpdate { seq, round, msgs })
+        Ok(ServerUpdate { seq, round, msgs, snapshot })
     }
 
     fn param_msg(&mut self) -> Result<ParamMsg, WireError> {
@@ -756,7 +782,7 @@ mod tests {
         let shapes = vec![vec![20, 30], vec![20]];
         let mut codec = ClientCodec::new(&shapes, QrrConfig::with_p(0.3));
         let deltas: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
-        let upd = ServerUpdate { seq: 5, round: 41, msgs: codec.encode(&deltas) };
+        let upd = ServerUpdate { seq: 5, round: 41, msgs: codec.encode(&deltas), snapshot: false };
         let bytes = Encoder::server(&upd);
         assert_eq!(bytes.len(), upd.wire_len(), "server wire_len must be exact");
         let back = Decoder::decode_server(&bytes).unwrap();
@@ -779,6 +805,7 @@ mod tests {
             seq: 0,
             round: 0,
             msgs: vec![ParamMsg::RawDense { t: Tensor::randn(&[3], &mut rng) }],
+            snapshot: false,
         };
         let server_bytes = Encoder::server(&upd);
         assert!(matches!(
@@ -794,6 +821,7 @@ mod tests {
             seq: 2,
             round: 7,
             msgs: vec![ParamMsg::RawDense { t: Tensor::randn(&[16], &mut rng) }],
+            snapshot: false,
         };
         let bytes = Encoder::server(&upd);
         for cut in [0, 4, 12, bytes.len() / 2, bytes.len() - 1] {
@@ -1162,6 +1190,117 @@ mod tests {
                 // round u64 | n u32 = 22 bytes
                 bytes[22] = 0x66;
                 match Decoder::decode(&bytes) {
+                    Err(WireError::UnknownKind(0x66)) => {}
+                    other => panic!("expected UnknownKind, got {other:?}"),
+                }
+            },
+        );
+    }
+
+    // ------------------------- snapshot frames -------------------------
+    // The resync snapshot is a second attacker-reachable broadcast kind,
+    // so it gets the same hostile-bytes treatment as the delta frames:
+    // truncation sweep, random byte corruption, bad entry kind.
+
+    /// A random broadcast as the downlink encoder would produce one:
+    /// raw-dense entries for a snapshot, mixed entries for a delta.
+    fn gen_server_update(g: &mut Gen, snapshot: bool) -> ServerUpdate {
+        let n_params = g.usize_in(1, 3);
+        let msgs = (0..n_params)
+            .map(|_| {
+                let ndim = g.usize_in(1, 3);
+                ParamMsg::RawDense { t: g.tensor(ndim, 5) }
+            })
+            .collect();
+        ServerUpdate {
+            seq: g.usize_in(0, 1000) as u64,
+            round: g.usize_in(0, 100_000) as u64,
+            msgs,
+            snapshot,
+        }
+    }
+
+    #[test]
+    fn snapshot_update_roundtrips_with_exact_wire_len() {
+        let mut rng = Rng::new(112);
+        let upd = ServerUpdate {
+            seq: 9,
+            round: 40,
+            msgs: vec![
+                ParamMsg::RawDense { t: Tensor::randn(&[6, 4], &mut rng) },
+                ParamMsg::RawDense { t: Tensor::randn(&[6], &mut rng) },
+            ],
+            snapshot: true,
+        };
+        let bytes = Encoder::server(&upd);
+        assert_eq!(bytes.len(), upd.wire_len(), "snapshot wire_len must be exact");
+        let back = Decoder::decode_server(&bytes).unwrap();
+        assert!(back.snapshot, "snapshot magic must survive the roundtrip");
+        assert_eq!(back.seq, 9);
+        assert_eq!(back.round, 40);
+        assert_eq!(back.payload_bits(), upd.payload_bits());
+        // the two broadcast families differ only in magic
+        let delta_bytes = Encoder::server(&ServerUpdate { snapshot: false, ..upd.clone() });
+        assert_eq!(bytes.len(), delta_bytes.len());
+        assert!(!Decoder::decode_server(&delta_bytes).unwrap().snapshot);
+        // and neither decodes as a client update
+        assert!(matches!(Decoder::decode(&bytes), Err(WireError::BadHeader)));
+    }
+
+    #[test]
+    fn prop_snapshot_truncation_is_an_error_never_a_panic() {
+        forall(
+            0xB6,
+            crate::testing::cases(60),
+            |g| {
+                let bytes = Encoder::server(&gen_server_update(g, true));
+                let cut = g.usize_in(0, bytes.len() - 1);
+                (bytes, cut)
+            },
+            |(bytes, cut)| {
+                assert!(
+                    Decoder::decode_server(&bytes[..cut]).is_err(),
+                    "cut {cut}/{} decoded",
+                    bytes.len()
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn prop_snapshot_random_byte_corruption_never_panics() {
+        forall(
+            0xB7,
+            crate::testing::cases(60),
+            |g| {
+                let snapshot = g.usize_in(0, 1) == 1;
+                let mut bytes = Encoder::server(&gen_server_update(g, snapshot));
+                let pos = g.usize_in(0, bytes.len() - 1);
+                let flip = g.usize_in(1, 255) as u8;
+                bytes[pos] ^= flip;
+                bytes
+            },
+            |bytes| {
+                // a flipped byte may still decode (e.g. a payload f32
+                // bit); the contract is a typed result, never a panic
+                let _ = Decoder::decode_server(&bytes);
+            },
+        );
+    }
+
+    #[test]
+    fn prop_snapshot_bad_entry_kind_is_a_typed_error() {
+        forall(
+            0xB8,
+            crate::testing::cases(30),
+            |g| gen_server_update(g, true),
+            |upd| {
+                let mut bytes = Encoder::server(&upd);
+                // first entry's kind byte sits right after the fixed
+                // server header: magic u32 | ver u8 | seq u64 |
+                // round u64 | n u32 = 25 bytes
+                bytes[25] = 0x66;
+                match Decoder::decode_server(&bytes) {
                     Err(WireError::UnknownKind(0x66)) => {}
                     other => panic!("expected UnknownKind, got {other:?}"),
                 }

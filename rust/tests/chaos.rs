@@ -1,0 +1,225 @@
+//! Chaos suite (DESIGN.md §11): end-to-end fault injection over the
+//! in-proc and TCP transports. The acceptance bar is determinism —
+//! the same seed must reproduce the same per-round fault counters —
+//! plus graceful degradation: no fault mix may hang or abort a round.
+//!
+//! The CI chaos-smoke matrix drives `env_driven_chaos_smoke` with
+//! `QRR_CHAOS_SEED` / `QRR_CHAOS_MIX` (3 seeds × 3 mixes).
+
+use std::time::Duration;
+
+use qrr::compress::pipeline::PipelineSpec;
+use qrr::config::{ExperimentConfig, ParticipationConfig, QuorumConfig, SchemeConfig};
+use qrr::fl::metrics::History;
+use qrr::fl::session::FlSessionBuilder;
+use qrr::net::faults::FaultPlan;
+use qrr::net::transport::TcpTransport;
+
+/// Tiny MLP/MNIST config with a stateless (SGD) uplink — chaos drops
+/// uplink frames, and only the stateless codec tolerates a lost frame
+/// without desyncing its server mirror — plus a delta-coded downlink
+/// so lost broadcasts exercise the snapshot-resync path.
+fn chaos_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::table1_default();
+    c.scheme = SchemeConfig::Sgd;
+    c.clients = 3;
+    c.iters = 10;
+    c.batch = 12;
+    c.train_n = 240;
+    c.test_n = 60;
+    c.eval_every = 10;
+    c.lr_schedule = vec![(0, 0.05)];
+    c.participation = ParticipationConfig::Full;
+    c.downlink = Some(PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap());
+    c
+}
+
+/// The per-round fault counters a seed must reproduce exactly.
+fn counters(h: &History) -> Vec<(u32, u32, u32, u32, u32, u32, u64)> {
+    h.rounds
+        .iter()
+        .map(|r| {
+            (
+                r.clients_dropped,
+                r.clients_timed_out,
+                r.clients_corrupt,
+                r.clients_late,
+                r.resyncs,
+                r.comms,
+                r.bits,
+            )
+        })
+        .collect()
+}
+
+/// Same, minus `clients_late` — under real sockets, whether a frame
+/// beats the first deadline is a wall-clock race, not plan-determined.
+fn fault_counters(h: &History) -> Vec<(u32, u32, u32, u32, u32, u64)> {
+    h.rounds
+        .iter()
+        .map(|r| {
+            (
+                r.clients_dropped,
+                r.clients_timed_out,
+                r.clients_corrupt,
+                r.resyncs,
+                r.comms,
+                r.bits,
+            )
+        })
+        .collect()
+}
+
+/// Every upload is accounted exactly once per round:
+/// delivered + corrupt + timed out + dropped = cohort.
+fn assert_accounting(h: &History, cohort: u32) {
+    for r in &h.rounds {
+        assert_eq!(
+            r.comms + r.clients_corrupt + r.clients_timed_out + r.clients_dropped,
+            cohort,
+            "round {} loses track of an upload: {r:?}",
+            r.iter
+        );
+    }
+}
+
+fn run_inproc(cfg: &ExperimentConfig, plan: &FaultPlan, quorum: &str) -> History {
+    FlSessionBuilder::new(cfg)
+        .chaos(plan.clone())
+        .quorum(QuorumConfig::parse(quorum).unwrap())
+        .recv_timeout(Duration::from_millis(20))
+        .quiet()
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .history
+}
+
+fn run_tcp(cfg: &ExperimentConfig, plan: &FaultPlan, quorum: &str) -> History {
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    FlSessionBuilder::new(cfg)
+        .transport(Box::new(transport))
+        .chaos(plan.clone())
+        .quorum(QuorumConfig::parse(quorum).unwrap())
+        .recv_timeout(Duration::from_millis(250))
+        .quiet()
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .history
+}
+
+#[test]
+fn inproc_chaos_is_deterministic_and_degrades_gracefully() {
+    // every fault kind at once, well over the 2% combined-rate bar:
+    // uplink drop/corrupt/dup/delay/disconnect plus downlink drops
+    // aggressive enough to force snapshot resyncs
+    let spec = "drop=0.15,corrupt=0.1,dup=0.1,delay=0.1,disconnect=0.1,down.drop=0.4";
+    let cfg = chaos_cfg();
+
+    // fault decisions are seed-dependent, so scan a few seeds for one
+    // whose schedule exercises both loss paths within 10 rounds (for
+    // any fixed seed the outcome is the same on every run)
+    let mut chosen = None;
+    for seed in [7u64, 11, 23] {
+        let mut plan = FaultPlan::parse(spec).unwrap();
+        plan.seed = seed;
+        let h = run_inproc(&cfg, &plan, "0.5:2:5");
+        assert_eq!(h.iterations(), 10, "seed {seed}: chaos run did not complete");
+        assert_accounting(&h, 3);
+        if h.total_resyncs() > 0 && h.total_timed_out() > 0 {
+            chosen = Some((plan, h));
+            break;
+        }
+    }
+    let (plan, first) = chosen.expect("no scanned seed exercised resync + loss paths");
+
+    // the headline determinism bar: the same seed reproduces every
+    // per-round counter — including which frames arrived late — twice
+    let second = run_inproc(&cfg, &plan, "0.5:2:5");
+    assert_eq!(counters(&first), counters(&second), "same seed, different schedule");
+
+    // degradation, not collapse: most uploads still land and the
+    // model still produces a finite evaluation
+    assert!(first.total_comms() > 0, "no upload survived the chaos plan");
+    assert!(first.evals.last().unwrap().loss.is_finite());
+    assert!(first.total_resyncs() >= 1, "downlink drops never forced a resync");
+}
+
+#[test]
+fn tcp_chaos_counters_reproduce_across_runs() {
+    // real sockets under the CI-style mix: drops, corruption and
+    // duplicates (no delay — socket scheduling owns the clock there)
+    let spec = "drop=0.1,corrupt=0.05,dup=0.1,down.drop=0.3,seed=7";
+    let plan = FaultPlan::parse(spec).unwrap();
+    let mut cfg = chaos_cfg();
+    cfg.iters = 6;
+    cfg.eval_every = 6;
+
+    let a = run_tcp(&cfg, &plan, "0.5:2:10");
+    let b = run_tcp(&cfg, &plan, "0.5:2:10");
+    assert_eq!(a.iterations(), 6);
+    assert_accounting(&a, 3);
+    assert_eq!(
+        fault_counters(&a),
+        fault_counters(&b),
+        "same seed over TCP, different fault schedule"
+    );
+}
+
+#[test]
+fn quorum_lets_rounds_proceed_without_stragglers() {
+    // drop-heavy uplink with a 1/3 quorum and no re-polls: each round
+    // proceeds the moment the quorum is met (or the deadline passes) —
+    // the run must finish with losses recorded, not stall on them
+    let plan = FaultPlan::parse("drop=0.3,seed=7").unwrap();
+    let cfg = chaos_cfg();
+    let h = run_inproc(&cfg, &plan, "0.34:0");
+    assert_eq!(h.iterations(), 10);
+    assert_accounting(&h, 3);
+    assert!(
+        h.total_timed_out() > 0,
+        "a 30% drop rate over 30 uploads lost nothing — chaos not applied?"
+    );
+    // strict quorum on the same seed sees the identical loss schedule:
+    // quorum changes how long the server waits, never what arrives
+    let strict = run_inproc(&cfg, &plan, "1.0:2:5");
+    assert_eq!(h.total_timed_out(), strict.total_timed_out());
+    assert_eq!(h.total_comms(), strict.total_comms());
+}
+
+#[test]
+fn env_driven_chaos_smoke() {
+    // CI matrix entry point: QRR_CHAOS_SEED × QRR_CHAOS_MIX
+    // (drop2 | corrupt1 | dupreorder), run over TCP loopback twice
+    // and held to the same determinism bar as the fixed tests
+    let seed: u64 = std::env::var("QRR_CHAOS_SEED")
+        .ok()
+        .map(|v| v.parse().expect("QRR_CHAOS_SEED must be an integer"))
+        .unwrap_or(1);
+    let mix = std::env::var("QRR_CHAOS_MIX").unwrap_or_else(|_| "drop2".into());
+    let spec = match mix.as_str() {
+        "drop2" => "drop=0.02,down.drop=0.1",
+        "corrupt1" => "corrupt=0.01,down.corrupt=0.1",
+        "dupreorder" => "dup=0.05,delay=0.05",
+        other => panic!("unknown QRR_CHAOS_MIX {other:?} (drop2|corrupt1|dupreorder)"),
+    };
+    let mut plan = FaultPlan::parse(spec).unwrap();
+    plan.seed = seed;
+    let mut cfg = chaos_cfg();
+    cfg.iters = 5;
+    cfg.eval_every = 5;
+
+    let a = run_tcp(&cfg, &plan, "0.5:2:10");
+    let b = run_tcp(&cfg, &plan, "0.5:2:10");
+    assert_eq!(a.iterations(), 5, "mix {mix} seed {seed}: run did not complete");
+    assert_accounting(&a, 3);
+    assert_eq!(
+        fault_counters(&a),
+        fault_counters(&b),
+        "mix {mix} seed {seed}: counters not reproducible"
+    );
+    assert!(a.evals.last().unwrap().loss.is_finite());
+}
