@@ -106,7 +106,8 @@ pub struct TreeReport {
 /// the decode/precondition surfaces the crate promises stay panic-free
 /// on attacker-controlled bytes; the anchor check stops a pragma
 /// deletion from silently disabling the rule.
-const NO_PANIC_ANCHORS: &[&str] = &["net::wire", "quant::laq", "net::faults", "compress::pipeline"];
+const NO_PANIC_ANCHORS: &[&str] =
+    &["net::wire", "quant::laq", "net::faults", "compress::pipeline", "control"];
 
 /// Modules that must contain at least one `no-alloc` fence (the hot
 /// kernel loops and the encoder hot path).

@@ -381,6 +381,15 @@ pub fn round_cases(suite: &mut Suite) {
         );
         run_case(suite, "round/qrr_p0.2+downlink/full", &cfg);
     }
+    // adaptive control plane: the linkaware controller re-plans each
+    // client's uplink per round, so the step includes the observation →
+    // spec decide path plus any pipeline swap (cached compiles after
+    // round 1 — the steady-state cost the perf gate should see)
+    {
+        let mut cfg = bench_cfg(SchemeConfig::Sgd, ParticipationConfig::Full);
+        cfg.controller = Some(crate::control::ControllerConfig::linkaware());
+        run_case(suite, "round/adaptive_linkaware", &cfg);
+    }
     // cohort scale: one full 10k-client round through the sharded
     // aggregation path alone (no client compute) — pre-encoded tiny SGD
     // frames dispatched to shard lanes, absorbed on arrival, partial

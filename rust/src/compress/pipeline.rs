@@ -460,6 +460,15 @@ impl PipelineSpec {
         parts.join("+")
     }
 
+    /// The headline telemetry knobs `(p, beta)`: the smallest reducer
+    /// rank fraction (`1.0` when nothing factorizes) and the quantizer
+    /// bits (`32` = raw f32). What the per-client metrics CSV records
+    /// and the `control::` policies steer.
+    pub fn knobs(&self) -> (f64, u8) {
+        let p = self.reducers.iter().map(|r| r.p()).fold(1.0, f64::min);
+        (p, self.beta().unwrap_or(32))
+    }
+
     /// True for the all-identity pipeline (the `sgd` preset).
     pub fn is_identity(&self) -> bool {
         self.reducers.is_empty() && self.quantizer.is_none() && !self.lazy

@@ -6,6 +6,7 @@ pub mod json;
 pub use json::{Json, JsonError};
 
 use crate::compress::pipeline::PipelineSpec;
+use crate::control::ControllerConfig;
 use crate::data::DatasetKind;
 use crate::fl::SchemeKind;
 use crate::model::ModelKind;
@@ -336,6 +337,11 @@ pub struct ExperimentConfig {
     /// downlink compression pipeline: when set, the server broadcasts
     /// compressed parameter deltas instead of full-precision parameters
     pub downlink: Option<PipelineSpec>,
+    /// adaptive compression control plane: when set, a
+    /// [`control::CompressionController`](crate::control) re-plans each
+    /// client's uplink pipeline from observed telemetry every round,
+    /// overriding both `scheme` and `uplink`
+    pub controller: Option<ControllerConfig>,
     /// number of server-side aggregation shards (`None` = auto:
     /// `min(clients, 8)`); see `fl::shard::ShardedAggregator`
     pub shards: Option<usize>,
@@ -372,6 +378,7 @@ impl ExperimentConfig {
             aggregation: AggregationConfig::Sum,
             uplink: None,
             downlink: None,
+            controller: None,
             shards: None,
             quorum: None,
             chaos: None,
@@ -517,6 +524,9 @@ impl ExperimentConfig {
         }
         if let Some(spec) = &self.downlink {
             fields.push(("downlink", Json::Str(spec.format())));
+        }
+        if let Some(c) = &self.controller {
+            fields.push(("controller", Json::Str(c.format())));
         }
         if let Some(n) = self.shards {
             fields.push(("shards", Json::Num(n as f64)));
@@ -719,6 +729,15 @@ impl ExperimentConfig {
             spec.validate_downlink()
                 .map_err(|e| anyhow::anyhow!("downlink spec: {e}"))?;
             c.downlink = Some(spec);
+        }
+        if let Some(v) = j.get("controller") {
+            let s = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("controller must be a policy spec string")
+            })?;
+            c.controller = Some(
+                ControllerConfig::parse(s)
+                    .map_err(|e| anyhow::anyhow!("controller spec: {e}"))?,
+            );
         }
         if let Some(v) = j.get("shards") {
             let n = v
@@ -958,6 +977,26 @@ mod tests {
         assert_eq!(plain.uplink, None);
         assert_eq!(plain.downlink, None);
         assert_eq!(plain.shards, None);
+        assert_eq!(plain.controller, None);
+    }
+
+    #[test]
+    fn controller_json_roundtrip() {
+        for spec in ["fixed(p=0.25,beta=6)", "linkaware()", "aimd(target_ms=100)"] {
+            let mut c = ExperimentConfig::table1_default();
+            c.controller = Some(ControllerConfig::parse(spec).unwrap());
+            let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(back.controller, c.controller, "round-trip of {spec}");
+        }
+
+        for bad in [
+            r#"{"controller": "pid(kp=1)"}"#,
+            r#"{"controller": "fixed(p=0)"}"#,
+            r#"{"controller": 3}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,742 @@
+//! Adaptive per-client compression control plane (DESIGN.md §12).
+//!
+//! The paper's premise is that network-critical deployments should
+//! spend as few bits as each link can afford — yet a static config
+//! freezes `(p, beta)` at round 0 for the whole cohort. This module
+//! closes the loop: a [`CompressionController`] maps per-client
+//! *observed* telemetry — estimated link bandwidth from
+//! [`crate::net::link`], measured uplink bits, the delivery outcome the
+//! fault/quorum layer reported, and deadline slack — to next round's
+//! uplink [`PipelineSpec`] for that client (and optionally a new shared
+//! downlink spec).
+//!
+//! Three policies ship behind a spec grammar + preset registry
+//! mirroring [`crate::compress::pipeline`]:
+//!
+//! | policy | behaviour |
+//! |---|---|
+//! | `fixed(p,beta)` | the same QRR spec every round (frontier anchor) |
+//! | `linkaware(p_min,p_max,beta_min,beta_max)` | interpolates `(p, beta)` in log-bandwidth across the cohort |
+//! | `aimd(target_ms,p_min,p_max,beta,cut,grow)` | multiplicative cut of a straggler's budget on timeout/late/over-deadline, additive recovery on on-time delivery |
+//!
+//! Every decision is a **pure function of (policy state, observations)**
+//! — no wall clock, no RNG — so a chaos-seeded run replans identically
+//! on every re-run and the per-round fault counters stay reproducible
+//! (the bar the chaos suite enforces). [`crate::fl::session`] diffs the
+//! returned specs against the ones in force and recompiles/swaps the
+//! mirrored `PipelineClient`/`PipelineServer` halves only for clients
+//! whose spec actually changed.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::pipeline::PipelineSpec;
+
+// ------------------------------------------------------------ telemetry
+
+/// What happened to a client's previous-round upload, as the session's
+/// collection loop and fault accounting observed it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Outcome {
+    /// no upload to observe: first round, not selected, or lazy-skipped
+    #[default]
+    Idle,
+    /// arrived before the round's first deadline and decoded
+    Delivered,
+    /// arrived only in a quorum re-poll window, past the first deadline
+    Late,
+    /// sent but never arrived before the round closed
+    TimedOut,
+    /// never admitted to the wire (send/admission failure)
+    Dropped,
+    /// arrived but failed decode (corrupted frame)
+    Corrupt,
+}
+
+impl Outcome {
+    /// Single-letter CSV code: `i`/`d`/`l`/`t`/`x`/`c`.
+    pub fn code(self) -> char {
+        match self {
+            Outcome::Idle => 'i',
+            Outcome::Delivered => 'd',
+            Outcome::Late => 'l',
+            Outcome::TimedOut => 't',
+            Outcome::Dropped => 'x',
+            Outcome::Corrupt => 'c',
+        }
+    }
+
+    /// True when the upload was sent but the server never absorbed it.
+    pub fn is_loss(self) -> bool {
+        matches!(self, Outcome::TimedOut | Outcome::Dropped | Outcome::Corrupt)
+    }
+}
+
+/// One client's telemetry from the previous round, the controller's
+/// entire view of the world (keeping decisions reproducible).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientObservation {
+    /// client id
+    pub client: u32,
+    /// estimated link bandwidth (bits/s) from the client's [`crate::net::link::LinkModel`]
+    pub bandwidth_bps: f64,
+    /// uplink payload bits actually shipped last round (0 when idle)
+    pub up_bits: u64,
+    /// modeled uplink transmit time for those bits
+    pub net_time: Duration,
+    /// the server's collection deadline for the round
+    pub deadline: Duration,
+    /// what happened to the upload
+    pub outcome: Outcome,
+}
+
+impl ClientObservation {
+    /// Deadline slack in seconds: positive = finished with room to
+    /// spare, negative = the modeled transmit time overran the deadline.
+    pub fn slack(&self) -> f64 {
+        self.deadline.as_secs_f64() - self.net_time.as_secs_f64()
+    }
+}
+
+// ------------------------------------------------------------ trait
+
+/// A per-round policy mapping cohort observations to per-client uplink
+/// specs (and optionally a shared downlink spec).
+///
+/// Contract: `plan` must return exactly one spec per observation, in
+/// the same order, and must be deterministic — a pure function of the
+/// policy's configuration, its own accumulated state, and the
+/// observation sequence. Policies must not consult clocks or RNGs;
+/// that is what keeps chaos-seeded runs bit-reproducible.
+pub trait CompressionController: Send {
+    /// Choose each client's uplink spec for `round` from last round's
+    /// observations.
+    fn plan(&mut self, round: u64, obs: &[ClientObservation]) -> Vec<PipelineSpec>;
+
+    /// Optionally replace the shared downlink spec for `round`.
+    /// `None` (the default) keeps the downlink as configured.
+    fn plan_downlink(&mut self, _round: u64, _obs: &[ClientObservation]) -> Option<PipelineSpec> {
+        None
+    }
+
+    /// The canonical spec string of the policy driving this controller.
+    fn label(&self) -> String;
+}
+
+// ------------------------------------------------------------ config
+
+/// A parsed, validated controller policy description.
+///
+/// Build one from the grammar with [`ControllerConfig::parse`];
+/// [`format`](Self::format) renders the canonical spec string and
+/// `parse ∘ format` is the identity for every shipped policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControllerConfig {
+    /// the same `qrr(p, beta)` uplink for every client, every round
+    Fixed {
+        /// retained rank fraction
+        p: f64,
+        /// LAQ bits per element
+        beta: u8,
+    },
+    /// interpolate `(p, beta)` in log-bandwidth across the observed cohort
+    LinkAware {
+        /// rank fraction assigned to the slowest observed link
+        p_min: f64,
+        /// rank fraction assigned to the fastest observed link
+        p_max: f64,
+        /// quantizer bits at the slowest link
+        beta_min: u8,
+        /// quantizer bits at the fastest link
+        beta_max: u8,
+    },
+    /// additive-increase / multiplicative-decrease on each client's bit budget
+    Aimd {
+        /// modeled uplink transmit time a round should fit in (ms)
+        target_ms: f64,
+        /// floor of the rank-fraction budget
+        p_min: f64,
+        /// ceiling of the rank-fraction budget (every client starts here)
+        p_max: f64,
+        /// LAQ bits per element (AIMD moves rank, not precision)
+        beta: u8,
+        /// multiplicative budget factor on timeout/late/over-target, in (0,1)
+        cut: f64,
+        /// additive budget recovery per on-time round, in (0,1]
+        grow: f64,
+    },
+}
+
+impl ControllerConfig {
+    /// The `fixed` policy with the registry defaults (`qrr` preset knobs).
+    pub fn fixed() -> Self {
+        ControllerConfig::Fixed { p: 0.3, beta: 8 }
+    }
+
+    /// The `linkaware` policy with the registry defaults.
+    pub fn linkaware() -> Self {
+        ControllerConfig::LinkAware { p_min: 0.05, p_max: 0.3, beta_min: 4, beta_max: 8 }
+    }
+
+    /// The `aimd` policy with the registry defaults.
+    pub fn aimd() -> Self {
+        ControllerConfig::Aimd {
+            target_ms: 250.0,
+            p_min: 0.05,
+            p_max: 0.3,
+            beta: 8,
+            cut: 0.5,
+            grow: 0.05,
+        }
+    }
+
+    /// Parse a controller spec string: a policy name (`fixed`,
+    /// `linkaware`, `aimd`), optionally with `(key=value,…)` arguments;
+    /// omitted arguments take the registry defaults.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (name, args) = split_call(s)?;
+        let mut args = ArgMap::new(args);
+        let cfg = match name {
+            "fixed" => ControllerConfig::Fixed {
+                p: args.float("p", 0.3)?,
+                beta: args.bits("beta", 8)?,
+            },
+            "linkaware" => ControllerConfig::LinkAware {
+                p_min: args.float("p_min", 0.05)?,
+                p_max: args.float("p_max", 0.3)?,
+                beta_min: args.bits("beta_min", 4)?,
+                beta_max: args.bits("beta_max", 8)?,
+            },
+            "aimd" => ControllerConfig::Aimd {
+                target_ms: args.float("target_ms", 250.0)?,
+                p_min: args.float("p_min", 0.05)?,
+                p_max: args.float("p_max", 0.3)?,
+                beta: args.bits("beta", 8)?,
+                cut: args.float("cut", 0.5)?,
+                grow: args.float("grow", 0.05)?,
+            },
+            other => bail!("unknown controller policy {other:?} (fixed | linkaware | aimd)"),
+        };
+        args.finish(name)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Range checks (also run by [`parse`](Self::parse)).
+    pub fn validate(&self) -> Result<()> {
+        let frac = |what: &str, p: f64| -> Result<()> {
+            ensure!(p > 0.0 && p <= 1.0 && p.is_finite(), "{what} must be in (0,1], got {p}");
+            Ok(())
+        };
+        let bits = |what: &str, b: u8| -> Result<()> {
+            ensure!((1..=16).contains(&b), "{what} must be in 1..=16, got {b}");
+            Ok(())
+        };
+        match *self {
+            ControllerConfig::Fixed { p, beta } => {
+                frac("p", p)?;
+                bits("beta", beta)?;
+            }
+            ControllerConfig::LinkAware { p_min, p_max, beta_min, beta_max } => {
+                frac("p_min", p_min)?;
+                frac("p_max", p_max)?;
+                ensure!(p_min <= p_max, "p_min ({p_min}) must be <= p_max ({p_max})");
+                bits("beta_min", beta_min)?;
+                bits("beta_max", beta_max)?;
+                ensure!(
+                    beta_min <= beta_max,
+                    "beta_min ({beta_min}) must be <= beta_max ({beta_max})"
+                );
+            }
+            ControllerConfig::Aimd { target_ms, p_min, p_max, beta, cut, grow } => {
+                ensure!(
+                    target_ms > 0.0 && target_ms.is_finite(),
+                    "target_ms must be positive, got {target_ms}"
+                );
+                frac("p_min", p_min)?;
+                frac("p_max", p_max)?;
+                ensure!(p_min <= p_max, "p_min ({p_min}) must be <= p_max ({p_max})");
+                bits("beta", beta)?;
+                ensure!(cut > 0.0 && cut < 1.0, "cut must be in (0,1), got {cut}");
+                frac("grow", grow)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical spec string; [`parse`](Self::parse) inverts it.
+    pub fn format(&self) -> String {
+        match *self {
+            ControllerConfig::Fixed { p, beta } => format!("fixed(p={p},beta={beta})"),
+            ControllerConfig::LinkAware { p_min, p_max, beta_min, beta_max } => format!(
+                "linkaware(p_min={p_min},p_max={p_max},beta_min={beta_min},beta_max={beta_max})"
+            ),
+            ControllerConfig::Aimd { target_ms, p_min, p_max, beta, cut, grow } => format!(
+                "aimd(target_ms={target_ms},p_min={p_min},p_max={p_max},beta={beta},\
+                 cut={cut},grow={grow})"
+            ),
+        }
+    }
+
+    /// The bare policy name (`fixed` / `linkaware` / `aimd`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControllerConfig::Fixed { .. } => "fixed",
+            ControllerConfig::LinkAware { .. } => "linkaware",
+            ControllerConfig::Aimd { .. } => "aimd",
+        }
+    }
+
+    /// Instantiate the policy behind this config.
+    pub fn build(&self) -> Box<dyn CompressionController> {
+        match *self {
+            ControllerConfig::Fixed { p, beta } => Box::new(Fixed { p, beta }),
+            ControllerConfig::LinkAware { p_min, p_max, beta_min, beta_max } => {
+                Box::new(LinkAware { p_min, p_max, beta_min, beta_max })
+            }
+            ControllerConfig::Aimd { target_ms, p_min, p_max, beta, cut, grow } => Box::new(Aimd {
+                target_ms,
+                p_min,
+                p_max,
+                beta,
+                cut,
+                grow,
+                level: Vec::new(),
+            }),
+        }
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+/// One registered controller policy.
+#[derive(Debug)]
+pub struct PolicyInfo {
+    /// registry name (what configs/CLI write)
+    pub name: &'static str,
+    /// the canonical spec the name resolves to (default parameters)
+    pub spec: String,
+    /// one-line description
+    pub summary: &'static str,
+}
+
+/// The policy registry: every shipped controller as a named preset,
+/// mirroring [`crate::compress::pipeline::presets`].
+pub fn policies() -> Vec<PolicyInfo> {
+    vec![
+        PolicyInfo {
+            name: "fixed",
+            spec: ControllerConfig::fixed().format(),
+            summary: "same qrr(p,beta) uplink for every client every round; args p, beta",
+        },
+        PolicyInfo {
+            name: "linkaware",
+            spec: ControllerConfig::linkaware().format(),
+            summary: "interpolate (p,beta) in log-bandwidth across the cohort; \
+                      args p_min, p_max, beta_min, beta_max",
+        },
+        PolicyInfo {
+            name: "aimd",
+            spec: ControllerConfig::aimd().format(),
+            summary: "multiplicative budget cut on timeout/late/over-target, additive \
+                      recovery on time; args target_ms, p_min, p_max, beta, cut, grow",
+        },
+    ]
+}
+
+// ------------------------------------------------------------ policies
+
+/// `fixed`: every client runs the same QRR spec every round.
+#[derive(Debug, Clone)]
+pub struct Fixed {
+    p: f64,
+    beta: u8,
+}
+
+/// `linkaware`: interpolate `(p, beta)` in log-bandwidth between the
+/// slowest and fastest link observed in the cohort.
+#[derive(Debug, Clone)]
+pub struct LinkAware {
+    p_min: f64,
+    p_max: f64,
+    beta_min: u8,
+    beta_max: u8,
+}
+
+/// `aimd`: per-client budget level in `[0,1]` mapped onto
+/// `[p_min, p_max]`; cut multiplicatively when the upload timed out,
+/// arrived late, was lost, or its modeled transmit time overran
+/// `target_ms`; recover additively on on-time delivery.
+#[derive(Debug, Clone)]
+pub struct Aimd {
+    target_ms: f64,
+    p_min: f64,
+    p_max: f64,
+    beta: u8,
+    cut: f64,
+    grow: f64,
+    /// per-client budget level, lazily sized to the cohort
+    level: Vec<f64>,
+}
+
+// The observation→spec decide path must never panic: it runs inside
+// every round of a live session, fed by telemetry the fault layer may
+// have mangled. Guarded by the qrr-audit no-panic gate.
+// qrr-audit: no-panic
+
+impl CompressionController for Fixed {
+    fn plan(&mut self, _round: u64, obs: &[ClientObservation]) -> Vec<PipelineSpec> {
+        obs.iter().map(|_| PipelineSpec::qrr(self.p, self.beta)).collect()
+    }
+
+    fn label(&self) -> String {
+        ControllerConfig::Fixed { p: self.p, beta: self.beta }.format()
+    }
+}
+
+/// Position of `bw` in `[lo, hi]` on a log scale, clamped to `[0,1]`.
+/// A degenerate cohort (`hi <= lo`, e.g. uniform links) maps everyone
+/// to the midpoint rather than letting the 0/0 turn into NaN.
+fn log_position(bw: f64, lo: f64, hi: f64) -> f64 {
+    if !(hi > lo) || lo <= 0.0 {
+        return 0.5;
+    }
+    let t = (bw.max(f64::MIN_POSITIVE).ln() - lo.ln()) / (hi.ln() - lo.ln());
+    if t.is_finite() {
+        t.clamp(0.0, 1.0)
+    } else {
+        0.5
+    }
+}
+
+impl CompressionController for LinkAware {
+    fn plan(&mut self, _round: u64, obs: &[ClientObservation]) -> Vec<PipelineSpec> {
+        let lo = obs.iter().map(|o| o.bandwidth_bps).fold(f64::INFINITY, f64::min);
+        let hi = obs.iter().map(|o| o.bandwidth_bps).fold(0.0, f64::max);
+        obs.iter()
+            .map(|o| {
+                let t = log_position(o.bandwidth_bps, lo, hi);
+                let p = self.p_min + t * (self.p_max - self.p_min);
+                let span = f64::from(self.beta_max) - f64::from(self.beta_min);
+                let beta = (f64::from(self.beta_min) + t * span).round() as u8;
+                PipelineSpec::qrr(p, beta)
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        ControllerConfig::LinkAware {
+            p_min: self.p_min,
+            p_max: self.p_max,
+            beta_min: self.beta_min,
+            beta_max: self.beta_max,
+        }
+        .format()
+    }
+}
+
+impl CompressionController for Aimd {
+    fn plan(&mut self, _round: u64, obs: &[ClientObservation]) -> Vec<PipelineSpec> {
+        if self.level.len() < obs.len() {
+            self.level.resize(obs.len(), 1.0);
+        }
+        obs.iter()
+            .enumerate()
+            .map(|(i, o)| {
+                let over_target = o.net_time.as_secs_f64() * 1e3 > self.target_ms;
+                let level = &mut self.level[i];
+                match o.outcome {
+                    Outcome::Idle => {}
+                    Outcome::Delivered if !over_target => {
+                        *level = (*level + self.grow).min(1.0);
+                    }
+                    // late, lost, or delivered only by overrunning the
+                    // transmit-time target: this client is a straggler
+                    _ => *level *= self.cut,
+                }
+                let p = self.p_min + *level * (self.p_max - self.p_min);
+                PipelineSpec::qrr(p.clamp(self.p_min, self.p_max), self.beta)
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        ControllerConfig::Aimd {
+            target_ms: self.target_ms,
+            p_min: self.p_min,
+            p_max: self.p_max,
+            beta: self.beta,
+            cut: self.cut,
+            grow: self.grow,
+        }
+        .format()
+    }
+}
+
+// qrr-audit: end
+
+// ------------------------------------------------------------ grammar
+
+/// Split `name` or `name(k=v,…)` into the name and its argument pairs.
+fn split_call(s: &str) -> Result<(&str, Vec<(&str, &str)>)> {
+    let s = s.trim();
+    ensure!(!s.is_empty(), "empty controller spec");
+    let (name, body) = match s.find('(') {
+        None => (s, None),
+        Some(open) => {
+            ensure!(s.ends_with(')'), "unbalanced parens in controller spec {s:?}");
+            (s[..open].trim(), Some(&s[open + 1..s.len() - 1]))
+        }
+    };
+    ensure!(
+        !name.is_empty() && name.chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+        "bad controller policy name {name:?}"
+    );
+    let mut args = Vec::new();
+    if let Some(body) = body {
+        for kv in body.split(',') {
+            let kv = kv.trim();
+            ensure!(!kv.is_empty(), "empty argument in controller spec {s:?}");
+            let Some((k, v)) = kv.split_once('=') else {
+                bail!("controller argument {kv:?} is not key=value");
+            };
+            args.push((k.trim(), v.trim()));
+        }
+    }
+    Ok((name, args))
+}
+
+/// Tracks which arguments a policy consumed so leftovers are rejected.
+struct ArgMap<'a> {
+    args: Vec<(&'a str, &'a str)>,
+    used: Vec<bool>,
+}
+
+impl<'a> ArgMap<'a> {
+    fn new(args: Vec<(&'a str, &'a str)>) -> Self {
+        let used = vec![false; args.len()];
+        ArgMap { args, used }
+    }
+
+    fn take(&mut self, key: &str) -> Result<Option<&'a str>> {
+        let mut found = None;
+        for (i, (k, v)) in self.args.iter().enumerate() {
+            if *k == key {
+                ensure!(found.is_none(), "duplicate controller argument {key:?}");
+                self.used[i] = true;
+                found = Some(*v);
+            }
+        }
+        Ok(found)
+    }
+
+    fn float(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.take(key)? {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad {key} value {v:?} (number)"))
+            }
+        }
+    }
+
+    fn bits(&mut self, key: &str, default: u8) -> Result<u8> {
+        match self.take(key)? {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<u8>().map_err(|_| anyhow::anyhow!("bad {key} value {v:?} (integer)"))
+            }
+        }
+    }
+
+    fn finish(self, policy: &str) -> Result<()> {
+        for (i, (k, _)) in self.args.iter().enumerate() {
+            ensure!(self.used[i], "unknown argument {k:?} for controller policy {policy:?}");
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(client: u32, bw: f64, outcome: Outcome, net_ms: u64) -> ClientObservation {
+        ClientObservation {
+            client,
+            bandwidth_bps: bw,
+            up_bits: 1_000,
+            net_time: Duration::from_millis(net_ms),
+            deadline: Duration::from_millis(250),
+            outcome,
+        }
+    }
+
+    #[test]
+    fn every_shipped_policy_round_trips_through_parse_and_format() {
+        for info in policies() {
+            // the canonical default spec round-trips
+            let cfg = ControllerConfig::parse(&info.spec).unwrap();
+            assert_eq!(cfg.format(), info.spec, "{} registry spec not canonical", info.name);
+            // and so does the bare name
+            let bare = ControllerConfig::parse(info.name).unwrap();
+            assert_eq!(bare, cfg, "{}: bare name != default spec", info.name);
+        }
+        // non-default arguments survive the trip too
+        for s in [
+            "fixed(p=0.12,beta=6)",
+            "linkaware(p_min=0.02,p_max=0.4,beta_min=2,beta_max=12)",
+            "aimd(target_ms=80,p_min=0.01,p_max=0.5,beta=6,cut=0.25,grow=0.1)",
+        ] {
+            let cfg = ControllerConfig::parse(s).unwrap();
+            assert_eq!(ControllerConfig::parse(&cfg.format()).unwrap(), cfg, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_policies_args_and_ranges() {
+        assert!(ControllerConfig::parse("pid").is_err());
+        assert!(ControllerConfig::parse("").is_err());
+        assert!(ControllerConfig::parse("fixed(q=0.3)").is_err(), "unknown key");
+        assert!(ControllerConfig::parse("fixed(p=0.3,p=0.2)").is_err(), "duplicate key");
+        assert!(ControllerConfig::parse("fixed(p=0.3").is_err(), "unbalanced parens");
+        assert!(ControllerConfig::parse("fixed(p)").is_err(), "missing value");
+        assert!(ControllerConfig::parse("fixed(p=0)").is_err(), "p out of range");
+        assert!(ControllerConfig::parse("fixed(beta=32)").is_err(), "beta out of range");
+        assert!(ControllerConfig::parse("linkaware(p_min=0.4,p_max=0.1)").is_err());
+        assert!(ControllerConfig::parse("aimd(cut=1.5)").is_err());
+        assert!(ControllerConfig::parse("aimd(target_ms=0)").is_err());
+    }
+
+    #[test]
+    fn fixed_assigns_the_same_spec_to_every_client() {
+        let mut c = ControllerConfig::parse("fixed(p=0.2,beta=8)").unwrap().build();
+        let cohort =
+            vec![obs(0, 250e3, Outcome::Delivered, 900), obs(1, 10e6, Outcome::TimedOut, 20)];
+        let specs = c.plan(1, &cohort);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0], PipelineSpec::qrr(0.2, 8));
+        assert_eq!(specs[0], specs[1]);
+        assert!(c.plan_downlink(1, &cohort).is_none());
+    }
+
+    #[test]
+    fn linkaware_orders_p_by_bandwidth_and_pins_the_extremes() {
+        let mut c = ControllerConfig::linkaware().build();
+        let cohort = vec![
+            obs(0, 250e3, Outcome::Idle, 0),
+            obs(1, 1.5e6, Outcome::Idle, 0),
+            obs(2, 10e6, Outcome::Idle, 0),
+        ];
+        let specs = c.plan(0, &cohort);
+        let ps: Vec<f64> = specs.iter().map(|s| s.knobs().0).collect();
+        assert!(ps[0] < ps[1] && ps[1] < ps[2], "p not monotone in bandwidth: {ps:?}");
+        assert!((ps[0] - 0.05).abs() < 1e-12, "slowest link must get p_min");
+        assert!((ps[2] - 0.3).abs() < 1e-12, "fastest link must get p_max");
+        assert_eq!(specs[0].knobs().1, 4);
+        assert_eq!(specs[2].knobs().1, 8);
+    }
+
+    #[test]
+    fn linkaware_uniform_cohort_takes_the_midpoint_not_nan() {
+        let mut c = ControllerConfig::linkaware().build();
+        let cohort = vec![obs(0, 1e6, Outcome::Idle, 0), obs(1, 1e6, Outcome::Idle, 0)];
+        for spec in c.plan(0, &cohort) {
+            let (p, beta) = spec.knobs();
+            assert!(p.is_finite(), "uniform cohort produced non-finite p");
+            assert!((p - 0.175).abs() < 1e-12, "expected midpoint p, got {p}");
+            assert_eq!(beta, 6);
+        }
+    }
+
+    #[test]
+    fn aimd_cuts_stragglers_and_recovers_on_time_delivery() {
+        let mut c = ControllerConfig::parse("aimd(target_ms=250,cut=0.5,grow=0.05)")
+            .unwrap()
+            .build();
+        // round 1: client 0 overran the target, client 1 was on time
+        let specs = c.plan(
+            1,
+            &[obs(0, 250e3, Outcome::Delivered, 900), obs(1, 10e6, Outcome::Delivered, 20)],
+        );
+        let slow_p = specs[0].knobs().0;
+        let fast_p = specs[1].knobs().0;
+        assert!(slow_p < fast_p, "straggler not cut: {slow_p} vs {fast_p}");
+        assert!((fast_p - 0.3).abs() < 1e-12, "on-time client must stay at p_max");
+        // an explicit timeout cuts again
+        let specs = c.plan(
+            2,
+            &[obs(0, 250e3, Outcome::TimedOut, 900), obs(1, 10e6, Outcome::Delivered, 20)],
+        );
+        assert!(specs[0].knobs().0 < slow_p, "timeout did not cut further");
+        // sustained on-time delivery recovers additively, never past p_max
+        let mut last = specs[0].knobs().0;
+        for round in 3..40 {
+            let specs = c.plan(
+                round,
+                &[obs(0, 250e3, Outcome::Delivered, 10), obs(1, 10e6, Outcome::Delivered, 10)],
+            );
+            let p = specs[0].knobs().0;
+            assert!(p >= last && p <= 0.3 + 1e-12, "recovery not monotone: {last} -> {p}");
+            last = p;
+        }
+        assert!((last - 0.3).abs() < 1e-9, "recovery never reached p_max: {last}");
+    }
+
+    #[test]
+    fn aimd_budget_is_floored_at_p_min() {
+        let mut c = ControllerConfig::parse("aimd(p_min=0.1,p_max=0.3,cut=0.01)")
+            .unwrap()
+            .build();
+        let mut specs = Vec::new();
+        for round in 0..8 {
+            specs = c.plan(round, &[obs(0, 250e3, Outcome::TimedOut, 900)]);
+        }
+        let (p, _) = specs[0].knobs();
+        assert!(p >= 0.1 - 1e-12, "p fell through the floor: {p}");
+        assert!(PipelineSpec::qrr(p, 8).validate().is_ok());
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_the_observation_sequence() {
+        // two independently built controllers fed the identical
+        // observation stream must emit identical spec sequences
+        for cfg in [ControllerConfig::linkaware(), ControllerConfig::aimd()] {
+            let (mut a, mut b) = (cfg.build(), cfg.build());
+            for round in 0..12 {
+                let cohort = vec![
+                    obs(0, 250e3, if round % 3 == 0 { Outcome::TimedOut } else { Outcome::Delivered }, 700),
+                    obs(1, 2e6, Outcome::Delivered, 120),
+                    obs(2, 10e6, if round % 5 == 0 { Outcome::Dropped } else { Outcome::Delivered }, 15),
+                ];
+                assert_eq!(a.plan(round, &cohort), b.plan(round, &cohort), "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn outcome_codes_are_distinct() {
+        let all = [
+            Outcome::Idle,
+            Outcome::Delivered,
+            Outcome::Late,
+            Outcome::TimedOut,
+            Outcome::Dropped,
+            Outcome::Corrupt,
+        ];
+        let codes: Vec<char> = all.iter().map(|o| o.code()).collect();
+        let mut dedup = codes.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), codes.len());
+        assert!(Outcome::TimedOut.is_loss() && !Outcome::Late.is_loss());
+    }
+
+    #[test]
+    fn slack_is_signed() {
+        assert!(obs(0, 1e6, Outcome::Delivered, 20).slack() > 0.0);
+        assert!(obs(0, 1e6, Outcome::Delivered, 900).slack() < 0.0);
+    }
+}

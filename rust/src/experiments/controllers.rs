@@ -1,0 +1,173 @@
+//! Adaptive-compression control-plane comparison (DESIGN.md §12).
+//!
+//! Runs the same FL workload — a [`LinkModel::spread`] cohort from
+//! `link_slow_bps` to `link_fast_bps`, same seed, same (optional)
+//! chaos plan — once per shipped controller policy (`fixed`,
+//! `linkaware`, `aimd`) and reports what each policy spent per client.
+//! The interesting contrast is the per-client bit allocation: a
+//! link-oblivious `fixed` policy charges stragglers as much as
+//! broadband clients, while `linkaware`/`aimd` shift bits toward the
+//! fast links and keep the round deadline honest for the slow ones.
+//!
+//! Outputs per policy: `<out>/controllers_<policy>_{rounds,evals,
+//! clients}.csv`, plus `<out>/controllers.md` with one summary row per
+//! policy.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::config::ExperimentConfig;
+use crate::control::ControllerConfig;
+use crate::fl::session::FlSessionBuilder;
+
+use super::{apply_overrides, slug, write_run_outputs};
+
+/// One controller's summary line.
+#[derive(Debug, Clone)]
+pub struct ControllerRow {
+    /// controller label (e.g. `aimd(target_ms=250,...)`)
+    pub label: String,
+    /// total uplink payload bits across the run
+    pub bits: u64,
+    /// uplink bits spent by the slowest client
+    pub straggler_bits: u64,
+    /// uplink bits spent by the fastest client
+    pub broadband_bits: u64,
+    /// uploads lost to the round deadline
+    pub timed_out: u64,
+    /// final test accuracy (NaN when never evaluated)
+    pub accuracy: f64,
+}
+
+/// The policy lineup the scenario compares.
+fn default_lineup() -> Vec<ControllerConfig> {
+    vec![
+        ControllerConfig::fixed(),
+        ControllerConfig::linkaware(),
+        ControllerConfig::aimd(),
+    ]
+}
+
+/// Run the comparison; writes CSVs + `<out>/controllers.md`.
+pub fn run(args: &Args, out_dir: &str) -> Result<()> {
+    let mut base = ExperimentConfig::table1_default();
+    base.name = "controllers".into();
+    // light defaults so the scenario is interactive; --iters/--clients
+    // and friends raise it back to paper scale
+    base.clients = 6;
+    base.iters = 40;
+    base.batch = 32;
+    base.train_n = 2_000;
+    base.test_n = 500;
+    base.eval_every = 10;
+    apply_overrides(&mut base, args)?;
+
+    let lineup = match args.get("controller") {
+        // an explicit --controller narrows the lineup to that policy
+        Some(v) => vec![ControllerConfig::parse(v)
+            .map_err(|e| anyhow::anyhow!("--controller: {e}"))?],
+        None => default_lineup(),
+    };
+
+    let rows = compare(&base, &lineup, out_dir)?;
+    let md = markdown(&rows);
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/controllers.md"), &md)?;
+    println!("\nCONTROLLER COMPARISON ({} clients, {} iters)\n{md}", base.clients, base.iters);
+    println!("per-policy CSVs in {out_dir}/");
+    Ok(())
+}
+
+/// Run `base` once per controller; identical cfg and seed otherwise.
+pub fn compare(
+    base: &ExperimentConfig,
+    lineup: &[ControllerConfig],
+    out_dir: &str,
+) -> Result<Vec<ControllerRow>> {
+    let mut rows = Vec::new();
+    for ctrl in lineup {
+        let mut cfg = base.clone();
+        cfg.controller = Some(*ctrl);
+        log::info!("=== controllers: {} ===", ctrl.format());
+        let mut session = FlSessionBuilder::new(&cfg).build()?;
+        let report = session.run()?;
+        write_run_outputs(
+            out_dir,
+            &format!("controllers_{}", slug(ctrl.name())),
+            &report,
+        )?;
+        let per_client = report.history.bits_per_client();
+        rows.push(ControllerRow {
+            label: ctrl.format(),
+            bits: report.history.total_bits(),
+            // builder orders links slow -> fast, so client 0 is the
+            // straggler and the last client is broadband
+            straggler_bits: per_client.first().copied().unwrap_or(0),
+            broadband_bits: per_client.last().copied().unwrap_or(0),
+            timed_out: report.history.total_timed_out(),
+            accuracy: report
+                .history
+                .final_eval()
+                .map(|e| e.accuracy)
+                .unwrap_or(f64::NAN),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the summary table.
+fn markdown(rows: &[ControllerRow]) -> String {
+    let mut md = String::from(
+        "| Controller | Total bits | Straggler bits | Broadband bits | Timed out | Accuracy |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            r.label,
+            crate::util::fmt::bits_sci(r.bits),
+            crate::util::fmt::bits_sci(r.straggler_bits),
+            crate::util::fmt::bits_sci(r.broadband_bits),
+            r.timed_out,
+            if r.accuracy.is_finite() {
+                format!("{:.2}%", 100.0 * r.accuracy)
+            } else {
+                "-".into()
+            }
+        ));
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_comparison_writes_outputs_and_orders_bits() {
+        let dir = std::env::temp_dir().join("qrr_controllers_test");
+        let mut base = ExperimentConfig::table1_default();
+        base.clients = 3;
+        base.iters = 4;
+        base.batch = 8;
+        base.train_n = 90;
+        base.test_n = 30;
+        base.eval_every = 2;
+        let lineup = [ControllerConfig::fixed(), ControllerConfig::linkaware()];
+        let rows = compare(&base, &lineup, dir.to_str().unwrap()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(dir.join("controllers_fixed_rounds.csv").exists());
+        assert!(dir.join("controllers_linkaware_clients.csv").exists());
+        // fixed charges every link the same; linkaware compresses the
+        // straggler harder than the broadband client
+        let fixed = &rows[0];
+        let la = &rows[1];
+        assert_eq!(fixed.straggler_bits, fixed.broadband_bits);
+        assert!(
+            la.straggler_bits < la.broadband_bits,
+            "linkaware should under-spend the straggler: {} vs {}",
+            la.straggler_bits,
+            la.broadband_bits
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

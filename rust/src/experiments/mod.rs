@@ -6,11 +6,14 @@
 //! * `table3` — Table III + Figure 4 (VGG-like / CIFAR-10, adaptive p)
 //! * `fig1`   — Figure 1 (singular-value spectrum of an FC gradient)
 //! * `overhead` — §III-B client-side memory / compute overhead
+//! * `controllers` — adaptive-compression control-plane comparison
+//!   over a spread-link cohort (DESIGN.md §12)
 //!
 //! Each driver writes per-scheme CSV series (`<out>/<exp>_<scheme>_
 //! rounds.csv`, `…_evals.csv`) for the "vs iterations" / "vs bits"
 //! figures plus a markdown table mirroring the paper's columns.
 
+pub mod controllers;
 pub mod fig1;
 pub mod overhead;
 pub mod plot;
@@ -24,6 +27,7 @@ use crate::config::{
     AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, QuorumConfig,
     SchemeConfig,
 };
+use crate::control::ControllerConfig;
 use crate::net::faults::FaultPlan;
 use crate::fl::metrics::{markdown_table, TableRow};
 use crate::fl::session::{FlSessionBuilder, RunReport};
@@ -42,6 +46,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         "table3" => run_table(3, args, out),
         "fig1" => fig1::run(args, out),
         "overhead" => overhead::run(args, out),
+        "controllers" => controllers::run(args, out),
         "all" => {
             fig1::run(args, out)?;
             run_table(1, args, out)?;
@@ -49,7 +54,9 @@ pub fn run_cli(args: &Args) -> Result<()> {
             run_table(3, args, out)?;
             overhead::run(args, out)
         }
-        other => bail!("unknown experiment {other:?} (table1|table2|table3|fig1|overhead|all)"),
+        other => bail!(
+            "unknown experiment {other:?} (table1|table2|table3|fig1|overhead|controllers|all)"
+        ),
     }
 }
 
@@ -104,6 +111,11 @@ pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
         spec.validate_downlink()
             .map_err(|e| anyhow::anyhow!("--downlink: {e}"))?;
         cfg.downlink = Some(spec);
+    }
+    if let Some(v) = args.get("controller") {
+        cfg.controller = Some(
+            ControllerConfig::parse(v).map_err(|e| anyhow::anyhow!("--controller: {e}"))?,
+        );
     }
     if let Some(v) = args.get("chaos") {
         cfg.chaos =
@@ -264,6 +276,12 @@ pub fn write_run_outputs(out_dir: &str, name: &str, report: &RunReport) -> Resul
         format!("{out_dir}/{name}_evals.csv"),
         report.history.evals_csv(),
     )?;
+    if !report.history.client_rounds.is_empty() {
+        std::fs::write(
+            format!("{out_dir}/{name}_clients.csv"),
+            report.history.clients_csv(),
+        )?;
+    }
     Ok(())
 }
 
@@ -369,6 +387,29 @@ mod tests {
             );
             assert!(apply_overrides(&mut cfg, &args).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn controller_override_applies() {
+        let mut cfg = ExperimentConfig::table1_default();
+        let args = crate::cli::Args::parse(
+            "exp table1 --controller aimd(target_ms=100)"
+                .split_whitespace()
+                .map(String::from),
+        );
+        apply_overrides(&mut cfg, &args).unwrap();
+        match cfg.controller {
+            Some(ControllerConfig::Aimd { target_ms, .. }) => {
+                assert!((target_ms - 100.0).abs() < 1e-12)
+            }
+            other => panic!("expected aimd controller, got {other:?}"),
+        }
+
+        let bad = crate::cli::Args::parse(
+            "exp table1 --controller pid(kp=1)".split_whitespace().map(String::from),
+        );
+        let mut cfg = ExperimentConfig::table1_default();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
     }
 
     #[test]

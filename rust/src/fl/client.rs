@@ -89,6 +89,14 @@ impl FlClient {
         self.link
     }
 
+    /// Swap in a new update scheme (the control plane re-planned this
+    /// client's pipeline). The wire round counter is deliberately left
+    /// untouched: the server's stale-frame rejection tracks it, and a
+    /// spec change must not make fresh frames look like replays.
+    pub fn set_scheme(&mut self, scheme: Box<dyn ClientScheme>) {
+        self.scheme = scheme;
+    }
+
     /// Run one FL round: sample a batch, compute the local mean gradient,
     /// encode it with the scheme, serialize for the wire.
     pub fn round(&mut self, weights: &[crate::tensor::Tensor]) -> ClientRoundOutput {

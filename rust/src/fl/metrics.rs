@@ -45,6 +45,25 @@ pub struct RoundMetrics {
     pub resyncs: u32,
 }
 
+/// Per-client, per-round record of what the compression control plane
+/// chose and what it cost — the series behind the accuracy-vs-bits
+/// frontier per controller policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientRound {
+    /// iteration index (0-based)
+    pub iter: u64,
+    /// client id
+    pub client: u32,
+    /// rank fraction in force on this client's uplink (1.0 = dense)
+    pub p: f64,
+    /// quantizer bits in force (32 = raw f32)
+    pub beta: u8,
+    /// uplink payload bits this client shipped (0 = idle/skipped)
+    pub bits: u64,
+    /// delivery outcome the collection loop observed
+    pub outcome: crate::control::Outcome,
+}
+
 /// Periodic test-set evaluation.
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
@@ -67,6 +86,8 @@ pub struct History {
     pub label: String,
     /// per-round records
     pub rounds: Vec<RoundMetrics>,
+    /// per-client per-round records (chosen (p, beta), bits, outcome)
+    pub client_rounds: Vec<ClientRound>,
     /// periodic test evaluations
     pub evals: Vec<EvalPoint>,
 }
@@ -174,6 +195,38 @@ impl History {
             );
         }
         s
+    }
+
+    /// CSV of the per-client series: the control plane's chosen
+    /// `(p, beta)` and the bits/outcome each client produced, one row
+    /// per (round, client). Outcome codes: `i`dle, `d`elivered, `l`ate,
+    /// `t`imed out, `x` dropped, `c`orrupt.
+    pub fn clients_csv(&self) -> String {
+        let mut s = String::from("iter,client,p,beta,bits,outcome\n");
+        for c in &self.client_rounds {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{}",
+                c.iter,
+                c.client,
+                c.p,
+                c.beta,
+                c.bits,
+                c.outcome.code()
+            );
+        }
+        s
+    }
+
+    /// Per-client bits summed over the run, indexed by client id
+    /// (empty when no per-client records were collected).
+    pub fn bits_per_client(&self) -> Vec<u64> {
+        let n = self.client_rounds.iter().map(|c| c.client as usize + 1).max().unwrap_or(0);
+        let mut out = vec![0u64; n];
+        for c in &self.client_rounds {
+            out[c.client as usize] += c.bits;
+        }
+        out
     }
 
     /// CSV of evaluation points (for the "vs bits" figures).
@@ -308,6 +361,34 @@ mod tests {
         assert!(md.contains("3.000e2"));
         assert!(md.contains("1.200e2"));
         assert!(md.contains("| 6 | 3 |"));
+    }
+
+    #[test]
+    fn clients_csv_rows_and_totals() {
+        use crate::control::Outcome;
+        let mut h = hist();
+        for (i, outcome) in
+            [Outcome::Delivered, Outcome::TimedOut, Outcome::Late].into_iter().enumerate()
+        {
+            h.client_rounds.push(ClientRound {
+                iter: i as u64,
+                client: i as u32 % 2,
+                p: 0.1 + 0.1 * i as f64,
+                beta: 8,
+                bits: 50 * (i as u64 + 1),
+                outcome,
+            });
+        }
+        let csv = h.clients_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "iter,client,p,beta,bits,outcome");
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1], "0,0,0.1,8,50,d");
+        assert_eq!(lines[2], "1,1,0.2,8,100,t");
+        assert_eq!(h.bits_per_client(), vec![50 + 150, 100]);
+        // an empty series still renders a parseable header
+        assert_eq!(hist().clients_csv().lines().count(), 1);
+        assert!(hist().bits_per_client().is_empty());
     }
 
     #[test]

@@ -32,10 +32,11 @@
 //! Experiments, examples and `qrr serve` all go through the builder
 //! (the old `Coordinator` shim is gone).
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::compress::pipeline::{
     BuildCtx, CompressionPipeline, DownlinkDecoder, DownlinkEncoder, PipelineSpec,
@@ -43,6 +44,7 @@ use crate::compress::pipeline::{
 use crate::config::{
     AggregationConfig, Backend, ExperimentConfig, ParticipationConfig, QuorumConfig,
 };
+use crate::control::{ClientObservation, CompressionController, ControllerConfig, Outcome};
 use crate::data::{self, Dataset};
 use crate::exec::ThreadPool;
 use crate::model::{native::NativeModel, ModelOps, ModelSpec};
@@ -52,6 +54,7 @@ use crate::net::{Decoder, Encoder, LinkModel};
 use crate::tensor::Tensor;
 use crate::util::{PhaseTimes, Rng};
 
+use super::metrics::ClientRound;
 use super::{
     ClientRoundOutput, EvalPoint, FlClient, FlServer, History, RoundMetrics, ShardedAggregator,
 };
@@ -447,7 +450,8 @@ pub struct CsvSink {
 }
 
 impl CsvSink {
-    /// Emit `<dir>/<name>_rounds.csv` and `<dir>/<name>_evals.csv`.
+    /// Emit `<dir>/<name>_rounds.csv`, `<dir>/<name>_evals.csv` and
+    /// `<dir>/<name>_clients.csv`.
     pub fn new(dir: impl Into<String>, name: impl Into<String>) -> Self {
         CsvSink { dir: dir.into(), name: name.into() }
     }
@@ -461,6 +465,12 @@ impl MetricsSink for CsvSink {
                 format!("{}/{}_rounds.csv", self.dir, self.name),
                 history.rounds_csv(),
             )?;
+            if !history.client_rounds.is_empty() {
+                std::fs::write(
+                    format!("{}/{}_clients.csv", self.dir, self.name),
+                    history.clients_csv(),
+                )?;
+            }
             std::fs::write(
                 format!("{}/{}_evals.csv", self.dir, self.name),
                 history.evals_csv(),
@@ -511,6 +521,7 @@ pub struct FlSessionBuilder {
     shards: Option<usize>,
     quorum: Option<QuorumConfig>,
     chaos: Option<FaultPlan>,
+    controller: Option<Box<dyn CompressionController>>,
 }
 
 impl std::fmt::Debug for FlSessionBuilder {
@@ -542,6 +553,7 @@ impl FlSessionBuilder {
             shards: None,
             quorum: None,
             chaos: None,
+            controller: None,
         }
     }
 
@@ -640,6 +652,25 @@ impl FlSessionBuilder {
         self
     }
 
+    /// Drive per-client uplink specs through an adaptive compression
+    /// controller policy (DESIGN.md §12): each round the policy maps
+    /// observed telemetry to `(p, beta)` per client, and the session
+    /// swaps the affected pipeline halves between rounds. Takes
+    /// precedence over both `cfg.uplink` and the per-client scheme
+    /// resolution.
+    pub fn controller(mut self, cfg: ControllerConfig) -> Self {
+        self.cfg.controller = Some(cfg);
+        self
+    }
+
+    /// Install a custom [`CompressionController`] implementation instead
+    /// of a registry policy (the extensibility seam mirror of
+    /// [`Self::participation`] / [`Self::aggregation`]).
+    pub fn custom_controller(mut self, controller: Box<dyn CompressionController>) -> Self {
+        self.controller = Some(controller);
+        self
+    }
+
     /// Assemble the session: load + shard data, build links, per-client
     /// schemes, the server, and wire up the pluggable seams.
     pub fn build(self) -> Result<FlSession> {
@@ -677,26 +708,50 @@ impl FlSessionBuilder {
         let shapes = spec.shapes();
         let mut seed_rng = Rng::new(cfg.seed ^ 0xC11E);
 
+        // uplink resolution, in precedence order: a controller policy
+        // plans per client from initial (idle) observations; an explicit
+        // pipeline spec applies to every client; otherwise the scheme
+        // preset resolves per client (adaptive p)
+        let mut controller = self
+            .controller
+            .or_else(|| cfg.controller.map(|c| c.build()));
+        let client_specs: Vec<PipelineSpec> = match controller.as_mut() {
+            Some(ctrl) => {
+                let obs = initial_observations(&links, self.recv_timeout);
+                let planned = ctrl.plan(0, &obs);
+                ensure!(
+                    planned.len() == cfg.clients,
+                    "controller planned {} specs for {} clients",
+                    planned.len(),
+                    cfg.clients
+                );
+                planned
+            }
+            None => links
+                .iter()
+                .map(|link| match &cfg.uplink {
+                    Some(s) => s.clone(),
+                    None => cfg
+                        .scheme
+                        .kind_for_client(link, cfg.link_slow_bps, cfg.link_fast_bps)
+                        .to_spec(cfg.beta),
+                })
+                .collect(),
+        };
+
         let mut clients = Vec::with_capacity(cfg.clients);
         let mut shard_sizes = Vec::with_capacity(cfg.clients);
         let mut server_schemes = Vec::with_capacity(cfg.clients);
+        let mut pipe_cache: HashMap<String, CompressionPipeline> = HashMap::new();
         let ctx = BuildCtx { alpha: cfg.alpha0(), clients: cfg.clients };
         for (i, (shard, link)) in shards.into_iter().zip(links.iter()).enumerate() {
-            // uplink: an explicit pipeline spec applies to every client;
-            // otherwise the scheme preset resolves per client (adaptive p)
-            let uplink_spec = match &cfg.uplink {
-                Some(s) => s.clone(),
-                None => cfg
-                    .scheme
-                    .kind_for_client(link, cfg.link_slow_bps, cfg.link_fast_bps)
-                    .to_spec(cfg.beta),
-            };
+            let uplink_spec = client_specs[i].clone();
             log::debug!(
                 "client {i}: link {:.0} bps, pipeline {}",
                 link.bandwidth_bps,
                 uplink_spec.format()
             );
-            let pipe = CompressionPipeline::compile(uplink_spec, &shapes)?;
+            let pipe = pipeline_for(&mut pipe_cache, &uplink_spec, &shapes)?;
             shard_sizes.push(shard.len());
             clients.push(FlClient::new(
                 i as u32,
@@ -731,7 +786,7 @@ impl FlSessionBuilder {
         // decoupled from the thread count: it fixes the summation order,
         // so it must not drift with available parallelism.
         let n_shards = self.shards.or(cfg.shards).unwrap_or_else(|| cfg.clients.min(8));
-        let aggregator = ShardedAggregator::new(server_schemes, shapes, n_shards);
+        let aggregator = ShardedAggregator::new(server_schemes, shapes.clone(), n_shards);
         let server = FlServer::new(params, cfg.alpha0());
 
         let participation = self
@@ -763,14 +818,18 @@ impl FlSessionBuilder {
             quorum.format()
         );
 
-        let label = cfg
-            .uplink
-            .as_ref()
-            .map(|s| s.format())
-            .unwrap_or_else(|| cfg.scheme.label());
+        let label = match &controller {
+            Some(c) => c.label(),
+            None => cfg
+                .uplink
+                .as_ref()
+                .map(|s| s.format())
+                .unwrap_or_else(|| cfg.scheme.label()),
+        };
         let history = History::new(label);
         let round_rng = Rng::new(cfg.seed ^ 0xFAC7);
         let cfg_clients = cfg.clients;
+        let downlink_spec = cfg.downlink.clone();
         let pool = ThreadPool::new(self.threads.unwrap_or_else(crate::exec::default_threads));
         Ok(FlSession {
             cfg,
@@ -797,9 +856,50 @@ impl FlSessionBuilder {
             model_len,
             downlink,
             client_rounds: vec![0; cfg_clients],
+            controller,
+            client_specs,
+            pipe_cache,
+            shapes,
+            downlink_spec,
+            last_outcomes: vec![Outcome::Idle; cfg_clients],
+            last_bits: vec![0; cfg_clients],
+            last_net: vec![Duration::ZERO; cfg_clients],
             pool,
         })
     }
+}
+
+/// Initial (round-0) controller observations: nothing has been sent
+/// yet, so every client reports idle with its static link estimate.
+fn initial_observations(links: &[LinkModel], deadline: Duration) -> Vec<ClientObservation> {
+    links
+        .iter()
+        .enumerate()
+        .map(|(i, l)| ClientObservation {
+            client: i as u32,
+            bandwidth_bps: l.bandwidth_bps,
+            up_bits: 0,
+            net_time: Duration::ZERO,
+            deadline,
+            outcome: Outcome::Idle,
+        })
+        .collect()
+}
+
+/// Compile-once cache keyed by the canonical spec string: a cohort
+/// usually converges on a handful of distinct specs, so spec changes
+/// swap pipeline halves without recompiling per client.
+fn pipeline_for<'a>(
+    cache: &'a mut HashMap<String, CompressionPipeline>,
+    spec: &PipelineSpec,
+    shapes: &[Vec<usize>],
+) -> Result<&'a CompressionPipeline> {
+    let key = spec.format();
+    if !cache.contains_key(&key) {
+        let pipe = CompressionPipeline::compile(spec.clone(), shapes)?;
+        cache.insert(key.clone(), pipe);
+    }
+    Ok(&cache[&key])
 }
 
 /// The mirrored downlink codec pair: the server-side delta encoder and
@@ -850,6 +950,25 @@ pub struct FlSession {
     /// how many rounds each client has computed (mirrors the client's
     /// wire `round` counter, used to reject stale/duplicate frames)
     client_rounds: Vec<u64>,
+    /// adaptive compression control plane; `None` = specs frozen at build
+    controller: Option<Box<dyn CompressionController>>,
+    /// the uplink spec currently in force per client (what the metrics
+    /// CSV reports and what controller replans diff against)
+    client_specs: Vec<PipelineSpec>,
+    /// compiled pipelines keyed by canonical spec string, shared across
+    /// clients and rounds so replans don't recompile identical specs
+    pipe_cache: HashMap<String, CompressionPipeline>,
+    /// model parameter shapes (pipeline compilation input)
+    shapes: Vec<Vec<usize>>,
+    /// the downlink spec currently in force (controller replans diff
+    /// against it before rebuilding the mirrored codec pair)
+    downlink_spec: Option<PipelineSpec>,
+    /// previous round's per-client delivery outcome (controller input)
+    last_outcomes: Vec<Outcome>,
+    /// previous round's per-client uplink payload bits (controller input)
+    last_bits: Vec<u64>,
+    /// previous round's per-client modeled transmit time (controller input)
+    last_net: Vec<Duration>,
     /// long-lived workers shared by the client fan-out and evaluation —
     /// spawned once per session, not per round (server-side decode runs
     /// on the aggregator's shard lanes instead)
@@ -970,6 +1089,74 @@ impl FlSession {
         }
     }
 
+    /// The uplink spec currently in force for each client.
+    pub fn client_specs(&self) -> &[PipelineSpec] {
+        &self.client_specs
+    }
+
+    /// Feed last round's per-client observations to the controller and
+    /// swap the pipeline halves of every client whose planned spec
+    /// differs from the one in force. Runs strictly between rounds —
+    /// after the previous [`ShardedAggregator::close_round`] and before
+    /// this round's broadcast/compute — so client and mirror always
+    /// change in lockstep and no in-flight frame straddles a swap
+    /// (including across quorum re-polls, which live inside a round).
+    fn replan(&mut self, it: u64) -> Result<()> {
+        if self.controller.is_none() {
+            return Ok(());
+        }
+        let n = self.clients.len();
+        let obs: Vec<ClientObservation> = (0..n)
+            .map(|i| ClientObservation {
+                client: i as u32,
+                bandwidth_bps: self.links[i].bandwidth_bps,
+                up_bits: self.last_bits[i],
+                net_time: self.last_net[i],
+                deadline: self.recv_timeout,
+                outcome: self.last_outcomes[i],
+            })
+            .collect();
+        let Some(ctrl) = self.controller.as_mut() else { return Ok(()) };
+        let specs = ctrl.plan(it, &obs);
+        let dl_spec = ctrl.plan_downlink(it, &obs);
+        ensure!(
+            specs.len() == n,
+            "controller planned {} specs for {n} clients at round {it}",
+            specs.len()
+        );
+        let ctx = BuildCtx { alpha: self.cfg.alpha0(), clients: n };
+        for (i, spec) in specs.into_iter().enumerate() {
+            if spec == self.client_specs[i] {
+                continue;
+            }
+            let pipe = pipeline_for(&mut self.pipe_cache, &spec, &self.shapes)?;
+            self.clients[i].set_scheme(Box::new(pipe.client(&ctx)));
+            self.aggregator.replace_scheme(i, Box::new(pipe.server()));
+            log::debug!(
+                "round {it}: client {i} pipeline {} -> {}",
+                self.client_specs[i].format(),
+                spec.format()
+            );
+            self.client_specs[i] = spec;
+        }
+        if let Some(dl) = dl_spec {
+            if self.downlink_spec.as_ref() != Some(&dl) {
+                dl.validate_downlink()?;
+                // both halves restart from the current central
+                // parameters, agreed out of band exactly like the
+                // build-time pair — no stale shadow state survives
+                let params = self.server.params();
+                self.downlink = Some(DownlinkState {
+                    encoder: DownlinkEncoder::new(&dl, &self.shapes, params)?,
+                    decoder: DownlinkDecoder::new(&dl, &self.shapes, params)?,
+                });
+                log::info!("round {it}: downlink pipeline -> {}", dl.format());
+                self.downlink_spec = Some(dl);
+            }
+        }
+        Ok(())
+    }
+
     /// Execute a single FL iteration: select → parallel client compute →
     /// transport → decode → aggregate → descent step → metrics.
     pub fn step(&mut self, it: u64) -> Result<()> {
@@ -978,6 +1165,12 @@ impl FlSession {
         if self.server.alpha() != alpha {
             log::info!("iteration {it}: learning rate -> {alpha}");
             self.server.set_alpha(alpha);
+        }
+
+        // adaptive compression: re-plan per-client specs from last
+        // round's observations (round 0 was planned at build time)
+        if it > 0 {
+            self.replan(it)?;
         }
 
         // broadcast. Without a downlink pipeline, clients share a handle
@@ -1099,6 +1292,7 @@ impl FlSession {
         // path); exhausting the retries drops the upload like a policy
         // loss, so one dead client can never abort the round.
         let mut sent = 0usize;
+        let mut sent_mask = vec![false; n];
         let mut clients_dropped = 0u32;
         for (i, out) in outputs.iter().enumerate() {
             let Some(out) = out else { continue };
@@ -1109,6 +1303,7 @@ impl FlSession {
             {
                 if self.send_with_retry(wire)? {
                     sent += 1;
+                    sent_mask[i] = true;
                 } else {
                     log::debug!(
                         "round {it}: client {i} upload lost (transport closed after retries)"
@@ -1137,6 +1332,7 @@ impl FlSession {
         let min_arrivals = (self.quorum.fraction * n_selected as f64).ceil() as usize;
         let quorum_target = min_arrivals.min(sent);
         let mut dispatched = vec![false; n];
+        let mut late = vec![false; n];
         let mut received = 0usize;
         let mut clients_late = 0u32;
         let mut repolls = 0u32;
@@ -1201,6 +1397,7 @@ impl FlSession {
                     received += 1;
                     if Instant::now() >= first_deadline {
                         clients_late += 1;
+                        late[id] = true;
                     }
                     dispatched[id] = true;
                     self.aggregator.dispatch_frame(id, frame);
@@ -1239,6 +1436,43 @@ impl FlSession {
                 comms += 1;
                 net_time = net_time.max(out.net_time);
             }
+        }
+
+        // per-client telemetry: classify each upload's outcome, record
+        // the (p, beta, bits) series behind the per-policy frontier, and
+        // stash the observations the controller replans from next round
+        for i in 0..n {
+            let (payload_bits, client_net, computed) = match &outputs[i] {
+                Some(o) => (o.payload_bits, o.net_time, o.wire.is_some()),
+                None => (0, Duration::ZERO, false),
+            };
+            let outcome = if !computed {
+                Outcome::Idle
+            } else if !sent_mask[i] {
+                Outcome::Dropped
+            } else if delivered[i] {
+                if late[i] {
+                    Outcome::Late
+                } else {
+                    Outcome::Delivered
+                }
+            } else if dispatched[i] {
+                Outcome::Corrupt
+            } else {
+                Outcome::TimedOut
+            };
+            let (p, beta) = self.client_specs[i].knobs();
+            self.history.client_rounds.push(ClientRound {
+                iter: it,
+                client: i as u32,
+                p,
+                beta,
+                bits: payload_bits,
+                outcome,
+            });
+            self.last_outcomes[i] = outcome;
+            self.last_bits[i] = payload_bits;
+            self.last_net[i] = client_net;
         }
 
         // finalize: the aggregation seam's closing scalar (1 for sum,

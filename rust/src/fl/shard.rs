@@ -173,6 +173,19 @@ impl ShardedAggregator {
         self.n_members
     }
 
+    /// Replace one client's scheme mirror (the control plane re-planned
+    /// that client's pipeline; the session swaps the client half and
+    /// this mirror in lockstep). Must be called between rounds — after
+    /// [`Self::close_round`]'s barrier and before the next
+    /// [`Self::begin_round`] — which `&mut self` enforces structurally:
+    /// no `dispatch_frame` borrow can be live across this call.
+    pub fn replace_scheme(&mut self, client: usize, scheme: Box<dyn ServerScheme>) {
+        let n_shards = self.shards.len();
+        assert!(client < self.n_members, "client id out of range");
+        let mut s = self.shards[client % n_shards].lock().unwrap();
+        s.schemes[client / n_shards] = scheme;
+    }
+
     /// Open a round: reset partials, flags and the peak-live counter,
     /// and install this round's per-client `weights` (index = client
     /// id) and silent-member policy. Must not be called with a round
@@ -573,6 +586,37 @@ mod tests {
             let got = crate::tensor::zip(&d1.aggregate[i], &d2.aggregate[i], |a, b| a + b);
             assert!(got.rel_err(&want[i]) < 1e-5, "param {i}");
         }
+    }
+
+    #[test]
+    fn replaced_mirror_decodes_the_new_wire_format() {
+        // a control-plane spec change swaps both halves between rounds:
+        // frames encoded by the new client half must decode through the
+        // replaced mirror with no stale per-client server state
+        let shapes = shapes();
+        let mut rng = Rng::new(708);
+        let mut agg = sgd_aggregator(&shapes, 3, 2);
+        agg.begin_round(&[1.0; 3], true);
+        let (f1, _) = sgd_frame(&shapes, 1, 0, &mut rng);
+        agg.dispatch_frame(1, f1);
+        agg.close_round();
+
+        // client 1 switches SGD -> QRR between rounds
+        agg.replace_scheme(1, make_server_scheme(SchemeKind::Qrr { p: 0.5 }, &shapes, 8));
+        let mut client = make_client_scheme(SchemeKind::Qrr { p: 0.5 }, &shapes, 8, 0.1, 3);
+        let weights: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let up = client.produce(&weights, &grads).unwrap();
+
+        agg.begin_round(&[1.0; 3], true);
+        agg.dispatch_frame(1, Encoder::new(&up, 1, 1));
+        let digest = agg.close_round();
+        assert_eq!(digest.delivered, vec![false, true, false]);
+        assert_eq!(digest.decode_failures, 0, "stale mirror rejected the new format");
+        // rank-0.5 SVD of a random matrix is lossy but close in direction;
+        // the decoded contribution must at least be finite and non-zero
+        assert!(digest.aggregate[0].fro_norm() > 0.0);
+        assert!(digest.aggregate[0].data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //! * [`slaq`] — the SLAQ baseline (lazily aggregated quantized gradients).
 //! * [`fl`] — federated-learning core: clients, server, update schemes,
 //!   round loop, metrics.
+//! * [`control`] — the adaptive compression control plane: per-round
+//!   policies mapping observed link telemetry to each client's
+//!   `(p, beta)` pipeline spec.
 //! * [`net`] — simulated network: wire format, bit accounting, link
 //!   models, in-process and TCP transports.
 //! * [`model`] — parameter schemas shared with the python build path and
@@ -61,6 +64,7 @@ pub mod bench_util;
 pub mod cli;
 pub mod compress;
 pub mod config;
+pub mod control;
 pub mod data;
 pub mod exec;
 pub mod experiments;
@@ -85,6 +89,7 @@ pub mod prelude {
         AggregationConfig, Backend, ExperimentConfig, PPolicy, ParticipationConfig, SchemeConfig,
         Sharding,
     };
+    pub use crate::control::{ClientObservation, CompressionController, ControllerConfig, Outcome};
     pub use crate::data::DatasetKind;
     pub use crate::fl::session::{
         Aggregation, CsvSink, DeadlineCutoff, FlSession, FlSessionBuilder, FullSync, LinkDropout,

@@ -79,9 +79,17 @@ fn cmd_schemes() -> Result<()> {
     for s in pipeline::stages() {
         println!("  {:<18} {}", s.signature, s.summary);
     }
+    println!("\ncontroller policies (adaptive per-client compression, --controller SPEC):");
+    for p in qrr::control::policies() {
+        println!("  {:<10} = {:<48} {}", p.name, p.spec, p.summary);
+        // same self-consistency contract as the pipeline presets
+        qrr::control::ControllerConfig::parse(p.name)?;
+        qrr::control::ControllerConfig::parse(&p.spec)?;
+    }
     println!(
         "\nuplink:   --uplink SPEC   (per-experiment; overrides --schemes)\n\
          downlink: --downlink SPEC (dual-side; server broadcasts compressed deltas)\n\
+         control:  --controller C  (re-plans uplinks per round from telemetry)\n\
          example:  qrr train --config cfg.json --downlink \"svd(p=0.1)+laq(beta=8)\""
     );
     Ok(())
@@ -114,7 +122,10 @@ fn print_help() {
 
 USAGE:
     qrr exp <id> [options]       regenerate a paper table/figure
-                                 id: table1 | table2 | table3 | fig1 | overhead | all
+                                 id: table1 | table2 | table3 | fig1 | overhead |
+                                     controllers | all
+                                 (controllers: adaptive-compression control-plane
+                                 comparison over a spread-link cohort)
     qrr train --config <json>    run a single configured experiment
     qrr serve [options]          run the FL server+clients over real TCP
                                  --shards N routes uploads to N aggregation
@@ -160,6 +171,11 @@ COMMON OPTIONS (exp/train):
                       (preset or stage spec — see `qrr schemes`)
     --downlink SPEC   dual-side: broadcast compressed parameter deltas,
                       e.g. --downlink "svd(p=0.1)+laq(beta=8)"
+    --controller C    adaptive compression control plane: re-plan each
+                      client's uplink pipeline per round from observed
+                      telemetry (overrides --schemes/--uplink), e.g.
+                      --controller "aimd(target_ms=250)" — policies:
+                      fixed | linkaware | aimd (see `qrr schemes`)
     --chaos SPEC      seeded fault-injection plan over the transport,
                       e.g. --chaos "drop=0.02,corrupt=0.01,down.drop=0.05"
                       (keys: drop|dup|corrupt|truncate|disconnect|delay,

@@ -53,9 +53,15 @@ impl LinkModel {
     /// Map link speed to the paper's compression fraction `p ∈ [p_min,
     /// p_max]`: slowest link gets `p_min` (most compression), fastest
     /// gets `p_max`. Linear in log-bandwidth between `slow` and `fast`.
+    /// A degenerate cohort (`slow_bps >= fast_bps`) has no spread to
+    /// interpolate over; the midpoint is returned rather than letting
+    /// the 0/0 produce a NaN that would survive `clamp` and poison `p`.
     pub fn adaptive_p(&self, slow_bps: f64, fast_bps: f64, p_min: f64, p_max: f64) -> f64 {
         let lo = slow_bps.ln();
         let hi = fast_bps.ln();
+        if hi <= lo {
+            return 0.5 * (p_min + p_max);
+        }
         let t = ((self.bandwidth_bps.ln() - lo) / (hi - lo)).clamp(0.0, 1.0);
         p_min + t * (p_max - p_min)
     }
@@ -96,6 +102,21 @@ mod tests {
         assert!((p2 - 0.3).abs() < 1e-9);
         let pm = links[1].adaptive_p(1e5, 1e7, 0.1, 0.3);
         assert!(pm > 0.1 && pm < 0.3);
+    }
+
+    #[test]
+    fn adaptive_p_equal_cohort_bounds_returns_midpoint_not_nan() {
+        // regression: slow_bps == fast_bps made (hi - lo) zero and the
+        // resulting NaN survived clamp, poisoning p downstream
+        let l = LinkModel::iot();
+        let p = l.adaptive_p(250e3, 250e3, 0.1, 0.3);
+        assert!(p.is_finite(), "degenerate cohort produced NaN p");
+        assert!((p - 0.2).abs() < 1e-12, "expected midpoint, got {p}");
+        // an inverted range is equally degenerate
+        let p = l.adaptive_p(1e7, 1e5, 0.1, 0.3);
+        assert!(p.is_finite() && (p - 0.2).abs() < 1e-12);
+        // the fix must not disturb a healthy cohort
+        assert!((l.adaptive_p(250e3, 1e7, 0.1, 0.3) - 0.1).abs() < 1e-9);
     }
 
     #[test]

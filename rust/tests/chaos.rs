@@ -4,7 +4,9 @@
 //! plus graceful degradation: no fault mix may hang or abort a round.
 //!
 //! The CI chaos-smoke matrix drives `env_driven_chaos_smoke` with
-//! `QRR_CHAOS_SEED` / `QRR_CHAOS_MIX` (3 seeds × 3 mixes).
+//! `QRR_CHAOS_SEED` / `QRR_CHAOS_MIX` (3 seeds × 3 mixes), plus two
+//! `QRR_CHAOS_CONTROLLER` legs (linkaware, aimd) that hold the
+//! adaptive control plane to the same determinism bar.
 
 use std::time::Duration;
 
@@ -211,6 +213,45 @@ fn env_driven_chaos_smoke() {
     let mut cfg = chaos_cfg();
     cfg.iters = 5;
     cfg.eval_every = 5;
+
+    let controller = std::env::var("QRR_CHAOS_CONTROLLER")
+        .ok()
+        .filter(|v| !v.is_empty());
+    if let Some(ctrl) = controller {
+        cfg.controller = Some(
+            qrr::control::ControllerConfig::parse(&ctrl)
+                .expect("QRR_CHAOS_CONTROLLER must be a valid controller spec"),
+        );
+        // an adaptive controller folds last round's Late/Delivered
+        // outcome into its next decision, and over real sockets whether
+        // a frame beats the first deadline is a wall-clock race — so
+        // the controller legs run in-proc, where the full counter set
+        // (late included) and every per-client (p, beta, bits) decision
+        // must reproduce exactly under the same chaos seed
+        let a = run_inproc(&cfg, &plan, "0.5:2:10");
+        let b = run_inproc(&cfg, &plan, "0.5:2:10");
+        assert_eq!(a.iterations(), 5, "controller {ctrl} seed {seed}: run did not complete");
+        assert_accounting(&a, 3);
+        assert_eq!(
+            counters(&a),
+            counters(&b),
+            "controller {ctrl} seed {seed}: counters not reproducible"
+        );
+        let decisions = |h: &History| {
+            h.client_rounds
+                .iter()
+                .map(|c| (c.iter, c.client, c.p, c.beta, c.bits))
+                .collect::<Vec<_>>()
+        };
+        assert!(!a.client_rounds.is_empty(), "controller run recorded no per-client telemetry");
+        assert_eq!(
+            decisions(&a),
+            decisions(&b),
+            "controller {ctrl} seed {seed}: per-client decisions not reproducible"
+        );
+        assert!(a.evals.last().unwrap().loss.is_finite());
+        return;
+    }
 
     let a = run_tcp(&cfg, &plan, "0.5:2:10");
     let b = run_tcp(&cfg, &plan, "0.5:2:10");

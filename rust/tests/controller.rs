@@ -1,0 +1,176 @@
+//! Integration tests for the adaptive compression control plane
+//! (DESIGN.md §12): determinism under chaos, lockstep client/server
+//! pipeline swaps across quorum re-polls, and the straggler bit
+//! allocation the AIMD policy exists to produce.
+
+use std::time::Duration;
+
+use qrr::compress::pipeline::PipelineSpec;
+use qrr::config::{ExperimentConfig, ParticipationConfig, QuorumConfig, SchemeConfig};
+use qrr::control::{ClientObservation, CompressionController, ControllerConfig};
+use qrr::fl::metrics::History;
+use qrr::fl::session::FlSessionBuilder;
+use qrr::net::faults::FaultPlan;
+
+/// Small MLP/MNIST cohort on the default spread links (250 kbit/s up to
+/// 10 Mbit/s, so client 0 is the straggler and the last client is
+/// broadband).
+fn spread_cfg(clients: usize, iters: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::table1_default();
+    c.scheme = SchemeConfig::Sgd;
+    c.clients = clients;
+    c.iters = iters;
+    c.batch = 8;
+    c.train_n = 40 * clients;
+    c.test_n = 40;
+    c.eval_every = iters;
+    c.lr_schedule = vec![(0, 0.05)];
+    c.participation = ParticipationConfig::Full;
+    c
+}
+
+fn run(cfg: &ExperimentConfig, plan: Option<&FaultPlan>, quorum: &str) -> History {
+    let mut b = FlSessionBuilder::new(cfg)
+        .quorum(QuorumConfig::parse(quorum).unwrap())
+        .recv_timeout(Duration::from_millis(20))
+        .quiet();
+    if let Some(p) = plan {
+        b = b.chaos(p.clone());
+    }
+    b.build().unwrap().run().unwrap().history
+}
+
+/// Per-round per-client decisions + spend, the controller's full output.
+fn decisions(h: &History) -> Vec<(u64, u32, f64, u8, u64, char)> {
+    h.client_rounds
+        .iter()
+        .map(|c| (c.iter, c.client, c.p, c.beta, c.bits, c.outcome.code()))
+        .collect()
+}
+
+#[test]
+fn controller_decisions_are_deterministic_under_chaos() {
+    // the bar from DESIGN.md §12: same (chaos seed, controller) twice
+    // must reproduce every per-round per-client (p, beta) decision and
+    // every bits counter exactly — no wall clock or RNG in the loop
+    let plan = FaultPlan::parse("drop=0.1,delay=0.15,seed=9").unwrap();
+    for ctrl in [ControllerConfig::linkaware(), ControllerConfig::aimd()] {
+        let mut cfg = spread_cfg(3, 6);
+        cfg.controller = Some(ctrl);
+        let a = run(&cfg, Some(&plan), "0.5:2:5");
+        let b = run(&cfg, Some(&plan), "0.5:2:5");
+        assert_eq!(a.iterations(), 6, "{}: run did not complete", ctrl.format());
+        assert!(!a.client_rounds.is_empty(), "{}: no telemetry recorded", ctrl.format());
+        assert_eq!(decisions(&a), decisions(&b), "{}: decisions diverged", ctrl.format());
+        let bits = |h: &History| {
+            h.rounds.iter().map(|r| (r.bits, r.down_bits)).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&a), bits(&b), "{}: bit accounting diverged", ctrl.format());
+    }
+}
+
+/// A controller that flips client 1 between two incompatible wire
+/// formats every round — the worst case for client/server spec
+/// agreement across quorum re-polls.
+struct Flipper;
+
+impl CompressionController for Flipper {
+    fn plan(&mut self, round: u64, obs: &[ClientObservation]) -> Vec<PipelineSpec> {
+        obs.iter()
+            .map(|o| {
+                if o.client == 1 && round % 2 == 1 {
+                    PipelineSpec::qrr(0.4, 6)
+                } else {
+                    PipelineSpec::qrr(0.2, 8)
+                }
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        "flipper".into()
+    }
+}
+
+#[test]
+fn spec_change_swaps_client_and_server_in_lockstep_across_repolls() {
+    // delay chaos pushes frames into quorum re-poll windows, so the
+    // server is still collecting a round while the controller has
+    // already planned the next spec flip for client 1. The swap must be
+    // lockstep: a stale mirror would fail decode and show up as corrupt.
+    let plan = FaultPlan::parse("delay=0.3,seed=5").unwrap();
+    let cfg = spread_cfg(3, 8);
+    let mut session = FlSessionBuilder::new(&cfg)
+        .custom_controller(Box::new(Flipper))
+        .chaos(plan)
+        .quorum(QuorumConfig::parse("0.5:2:5").unwrap())
+        .recv_timeout(Duration::from_millis(20))
+        .quiet()
+        .build()
+        .unwrap();
+    let history = session.run().unwrap().history;
+
+    assert_eq!(history.iterations(), 8);
+    for r in &history.rounds {
+        assert_eq!(
+            r.clients_corrupt, 0,
+            "round {}: a flipped spec left a stale server mirror: {r:?}",
+            r.iter
+        );
+        // every upload accounted exactly once, delay or not
+        assert_eq!(
+            r.comms + r.clients_corrupt + r.clients_timed_out + r.clients_dropped,
+            3,
+            "round {} loses track of an upload: {r:?}",
+            r.iter
+        );
+    }
+    assert!(history.total_comms() > 0, "no upload survived the flip schedule");
+    // the last replan (round 7, odd) put client 1 on the alternate spec
+    assert_eq!(session.client_specs()[1], PipelineSpec::qrr(0.4, 6));
+    assert_eq!(session.client_specs()[0], PipelineSpec::qrr(0.2, 8));
+    // the flip is visible in the telemetry: client 1 ran both formats
+    let c1_betas: Vec<u8> = history
+        .client_rounds
+        .iter()
+        .filter(|c| c.client == 1)
+        .map(|c| c.beta)
+        .collect();
+    assert!(c1_betas.contains(&6) && c1_betas.contains(&8), "flip never took effect: {c1_betas:?}");
+}
+
+#[test]
+fn aimd_underspends_stragglers_without_extra_timeouts() {
+    // the acceptance scenario: a spread cohort under light drop chaos.
+    // aimd must assign the straggler strictly fewer uplink bits than
+    // the broadband client, and — because fault decisions are payload-
+    // independent pure functions of (seed, client, round) — lose no
+    // more uploads to timeouts than the link-oblivious fixed policy on
+    // the same seed
+    let plan = FaultPlan::parse("drop=0.02,seed=11").unwrap();
+    let run_with = |ctrl: ControllerConfig| {
+        let mut cfg = spread_cfg(4, 8);
+        cfg.controller = Some(ctrl);
+        run(&cfg, Some(&plan), "1.0:2:5")
+    };
+    let fixed = run_with(ControllerConfig::fixed());
+    let aimd = run_with(ControllerConfig::aimd());
+
+    let aimd_bits = aimd.bits_per_client();
+    assert_eq!(aimd_bits.len(), 4);
+    let straggler = aimd_bits[0];
+    let broadband = aimd_bits[3];
+    assert!(
+        straggler < broadband,
+        "aimd spent as much on the straggler as on broadband: {straggler} vs {broadband}"
+    );
+    // fixed is link-oblivious: every client gets the same per-round spec
+    let fixed_bits = fixed.bits_per_client();
+    assert_eq!(fixed_bits[0], fixed_bits[3], "fixed policy should not discriminate");
+    assert!(
+        aimd.total_timed_out() <= fixed.total_timed_out(),
+        "aimd lost more uploads than fixed on the same seed: {} vs {}",
+        aimd.total_timed_out(),
+        fixed.total_timed_out()
+    );
+}
