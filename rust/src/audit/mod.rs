@@ -107,7 +107,7 @@ pub struct TreeReport {
 /// on attacker-controlled bytes; the anchor check stops a pragma
 /// deletion from silently disabling the rule.
 const NO_PANIC_ANCHORS: &[&str] =
-    &["net::wire", "quant::laq", "net::faults", "compress::pipeline", "control"];
+    &["net::wire", "quant::laq", "net::faults", "compress::pipeline", "control", "fl::shard"];
 
 /// Modules that must contain at least one `no-alloc` fence (the hot
 /// kernel loops and the encoder hot path).

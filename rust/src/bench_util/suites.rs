@@ -232,6 +232,25 @@ pub fn kernel_cases(suite: &mut Suite) {
         "qrr_tucker",
         &ClientUpdate::Qrr { msgs: tucker_codec.encode(&conv_grad) },
     );
+    // streamed framing: encode every per-layer chunk frame, then decode
+    // and reassemble them — the full chunked wire cycle one client costs
+    // per round in streaming mode (DESIGN.md §13)
+    {
+        let mut chunk_codec = ClientCodec::new(&shapes, QrrConfig::with_p(0.2));
+        let update = ClientUpdate::Qrr { msgs: chunk_codec.encode(&grads) };
+        let bytes_per = (update.payload_bits() / 8) as f64;
+        suite.case("wire/chunk_encode_decode", Some(bytes_per), move || {
+            let frames = Encoder::chunk_frames(&update, 0, 0);
+            let mut bodies = Vec::with_capacity(frames.len());
+            let mut scheme = 0u8;
+            for f in &frames {
+                let (h, b) = Decoder::decode_chunk(f).expect("bench chunk decode");
+                scheme = h.scheme;
+                bodies.push(b);
+            }
+            Decoder::assemble_update(scheme, bodies).expect("bench chunk assemble")
+        });
+    }
 
     // full QRR client encode / server decode (MLP shapes, p=0.2),
     // serial and fanned over the pool
@@ -381,6 +400,19 @@ pub fn round_cases(suite: &mut Suite) {
         );
         run_case(suite, "round/qrr_p0.2+downlink/full", &cfg);
     }
+    // streamed rounds: the same dual-side QRR round with chunked
+    // per-layer uplink framing, decode-on-arrival reassembly and the
+    // double-buffered broadcast (DESIGN.md §13) — the perf gate pins the
+    // overlap win against the sequential row above
+    {
+        let mut cfg = bench_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)), ParticipationConfig::Full);
+        cfg.downlink = Some(
+            crate::compress::pipeline::PipelineSpec::parse("svd(p=0.1)+laq(beta=8)")
+                .expect("bench spec"),
+        );
+        cfg.streaming = true;
+        run_case(suite, "round/streaming/full", &cfg);
+    }
     // adaptive control plane: the linkaware controller re-plans each
     // client's uplink per round, so the step includes the observation →
     // spec decide path plus any pipeline swap (cached compiles after
@@ -436,6 +468,67 @@ pub fn round_cases(suite: &mut Suite) {
             ]);
         } else {
             // keep the skip line in the output for discoverability
+            suite.case(name, Some(1.0), || ());
+        }
+    }
+    // the same 10k-client round through the streamed path: every update
+    // crosses as per-layer chunk frames, reassembled decode-on-arrival
+    // on the shard lanes. Dispatch is contiguous per client (as one TCP
+    // connection delivers it), so the O(shards) live-memory bound must
+    // hold exactly as in whole-frame mode — asserted on the primed
+    // round, annotated for the scale gate.
+    {
+        let name = "round/scale_10k_streamed";
+        if suite.enabled(name) {
+            let n_clients = 10_000usize;
+            let n_shards = 8usize;
+            let shapes: Vec<Vec<usize>> = vec![vec![16, 8], vec![16]];
+            let mut rng = Rng::new(0x10_001);
+            let frames: Vec<Vec<Vec<u8>>> = (0..n_clients)
+                .map(|id| {
+                    let grads: Vec<Tensor> =
+                        shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+                    Encoder::chunk_frames(&ClientUpdate::Sgd { grads }, id as u32, 0)
+                })
+                .collect();
+            let schemes = (0..n_clients)
+                .map(|_| make_server_scheme(SchemeKind::Sgd, &shapes, 8))
+                .collect();
+            let mut agg = ShardedAggregator::new(schemes, shapes, n_shards);
+            let weights = vec![1.0f32; n_clients];
+            agg.begin_round(&weights, true);
+            for (id, chunks) in frames.iter().enumerate() {
+                for frame in chunks {
+                    agg.dispatch_chunk(id, frame.clone());
+                }
+            }
+            let d0 = agg.close_round();
+            assert!(
+                d0.peak_live <= n_shards,
+                "streamed peak live {} exceeds shard bound {}",
+                d0.peak_live,
+                n_shards
+            );
+            assert_eq!(
+                d0.delivered.iter().filter(|&&d| d).count(),
+                n_clients,
+                "streamed scale round incomplete"
+            );
+            suite.case(name, Some(n_clients as f64), move || {
+                agg.begin_round(&weights, true);
+                for (id, chunks) in frames.iter().enumerate() {
+                    for frame in chunks {
+                        agg.dispatch_chunk(id, frame.clone());
+                    }
+                }
+                agg.close_round().delivered.iter().filter(|&&d| d).count()
+            });
+            suite.annotate_last(vec![
+                ("clients".into(), n_clients as f64),
+                ("shards".into(), n_shards as f64),
+                ("peak_live".into(), d0.peak_live as f64),
+            ]);
+        } else {
             suite.case(name, Some(1.0), || ());
         }
     }

@@ -1020,6 +1020,30 @@ impl PipelineClient {
         }
     }
 
+    /// Streamed variant of [`produce`](Self::produce): encode the
+    /// update, then hand each layer's chunk frame to `emit` the moment
+    /// it is serialized (DESIGN.md §13) — the caller overlaps encode of
+    /// layer *l+1* with transmit of layer *l* by sending inside `emit`.
+    /// Returns the update's whole-message `payload_bits` (`None` =
+    /// lazily skipped round, nothing emitted). Chunk bodies are
+    /// byte-identical to the whole-message entries, so server-side
+    /// reassembly is bit-exact with the sequential path and the bit
+    /// accounting sums to the same totals.
+    pub fn produce_chunked(
+        &mut self,
+        weights: &[Tensor],
+        grads: &[Tensor],
+        client_id: u32,
+        round: u64,
+        emit: &mut dyn FnMut(Vec<u8>),
+    ) -> Option<u64> {
+        let update = self.produce(weights, grads)?;
+        for layer in 0..update.n_layers() {
+            emit(crate::net::wire::Encoder::chunk(&update, layer, client_id, round));
+        }
+        Some(update.payload_bits())
+    }
+
     /// Client-side pipeline state, in bytes (overhead experiment).
     pub fn mem_bytes(&self) -> usize {
         match &self.core {
@@ -1520,6 +1544,47 @@ mod tests {
         }
         assert_eq!(c.mem_bytes(), 0);
         assert_eq!(s.mem_bytes(), 0);
+    }
+
+    #[test]
+    fn produce_chunked_streams_bit_identical_frames() {
+        use crate::net::wire::{Decoder, Encoder};
+
+        let shapes = mlp_shapes();
+        let spec = PipelineSpec::qrr(0.3, 8);
+        let pipe = CompressionPipeline::compile(spec, &shapes).unwrap();
+        let mut rng = Rng::new(911);
+        let grads: Vec<Tensor> = shapes.iter().map(|sh| Tensor::randn(sh, &mut rng)).collect();
+
+        // the sequential oracle
+        let mut seq = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+        let whole = seq.produce(&[], &grads).unwrap();
+
+        // the streamed path emits one frame per layer as it serializes
+        let mut streamed = pipe.client(&BuildCtx { alpha: 0.01, clients: 2 });
+        let mut frames = Vec::new();
+        let bits = streamed
+            .produce_chunked(&[], &grads, 7, 3, &mut |f| frames.push(f))
+            .unwrap();
+        assert_eq!(bits, whole.payload_bits(), "streamed bit accounting drifted");
+        assert_eq!(frames.len(), whole.n_layers());
+
+        let mut bodies = Vec::new();
+        let mut scheme = 0;
+        for (layer, f) in frames.iter().enumerate() {
+            let (h, body) = Decoder::decode_chunk(f).unwrap();
+            assert_eq!((h.client_id, h.round), (7, 3));
+            assert_eq!(h.layer as usize, layer);
+            assert_eq!(h.last, layer + 1 == frames.len());
+            scheme = h.scheme;
+            bodies.push(body);
+        }
+        let back = Decoder::assemble_update(scheme, bodies).unwrap();
+        assert_eq!(
+            Encoder::new(&back, 7, 3),
+            Encoder::new(&whole, 7, 3),
+            "reassembled update is not bit-identical"
+        );
     }
 
     #[test]

@@ -351,6 +351,11 @@ pub struct ExperimentConfig {
     /// seeded fault-injection plan (`None` = a faithful network); see
     /// `net::faults::FaultPlan`
     pub chaos: Option<FaultPlan>,
+    /// streamed rounds (DESIGN.md §13): clients ship each layer as its
+    /// own chunk frame, the server reassembles decode-on-arrival, and
+    /// the downlink encode for round r+1 overlaps round r's eval.
+    /// Bit-identical to the sequential path on clean networks.
+    pub streaming: bool,
 }
 
 impl ExperimentConfig {
@@ -382,6 +387,7 @@ impl ExperimentConfig {
             shards: None,
             quorum: None,
             chaos: None,
+            streaming: false,
         }
     }
 
@@ -576,6 +582,9 @@ impl ExperimentConfig {
                 ));
             }
             fields.push(("chaos", Json::obj(ch)));
+        }
+        if self.streaming {
+            fields.push(("streaming", Json::Bool(true)));
         }
         Json::obj(fields)
     }
@@ -807,6 +816,9 @@ impl ExperimentConfig {
                 p
             };
             c.chaos = Some(plan);
+        }
+        if let Some(v) = j.get("streaming").and_then(Json::as_bool) {
+            c.streaming = v;
         }
         anyhow::ensure!(c.clients > 0, "need at least one client");
         anyhow::ensure!(c.batch > 0, "batch must be positive");
@@ -1066,6 +1078,22 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn streaming_json_roundtrip() {
+        let mut c = ExperimentConfig::table1_default();
+        assert!(!c.streaming);
+        // off is the default and is omitted from the JSON form
+        assert_eq!(c.to_json().get("streaming"), None);
+        c.streaming = true;
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert!(back.streaming);
+
+        let j = Json::parse(r#"{"streaming": true}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).unwrap().streaming);
+        let j = Json::parse(r#"{"streaming": false}"#).unwrap();
+        assert!(!ExperimentConfig::from_json(&j).unwrap().streaming);
     }
 
     #[test]

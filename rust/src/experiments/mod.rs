@@ -131,6 +131,9 @@ pub fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
         q.validate().map_err(|e| anyhow::anyhow!("--quorum: {e}"))?;
         cfg.quorum = Some(q);
     }
+    if args.has_flag("streaming") {
+        cfg.streaming = true;
+    }
     Ok(())
 }
 
@@ -335,6 +338,14 @@ mod tests {
         assert_eq!(cfg.clients, 3);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.shards, Some(2));
+        assert!(!cfg.streaming, "--streaming must be opt-in");
+
+        let mut cfg2 = ExperimentConfig::table1_default();
+        let args = crate::cli::Args::parse(
+            "exp table1 --streaming".split_whitespace().map(String::from),
+        );
+        apply_overrides(&mut cfg2, &args).unwrap();
+        assert!(cfg2.streaming);
 
         let bad = crate::cli::Args::parse(
             "exp table1 --shards 0".split_whitespace().map(String::from),

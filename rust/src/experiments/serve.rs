@@ -38,7 +38,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
     let shards: Option<usize> = args.get_parsed::<usize>("shards")?;
 
     if let Some(scale) = args.get_parsed::<usize>("scale-clients")? {
-        let report = scale_smoke(scale, shards.unwrap_or(4), addr)?;
+        let report = scale_smoke(scale, shards.unwrap_or(4), addr, args.has_flag("streaming"))?;
         println!("{report}");
         return Ok(());
     }
@@ -103,13 +103,25 @@ pub fn serve(
 }
 
 /// The `--scale-clients` loopback smoke: `n_clients` synthetic senders
-/// push one tiny SGD frame each over real sockets; the server routes
-/// every completed frame to its aggregation shard as it arrives.
-/// Errors (non-zero exit from the CLI) if the round does not complete
-/// or the peak count of live decoded updates exceeds the shard count.
-pub fn scale_smoke(n_clients: usize, n_shards: usize, addr: &str) -> Result<String> {
+/// push tiny SGD updates over real sockets; the server routes every
+/// completed frame to its aggregation shard as it arrives. With
+/// `streaming`, each update crosses as per-layer chunk frames and the
+/// server reassembles decode-on-arrival (DESIGN.md §13): every sender
+/// thread then holds one persistent connection whose clients all map to
+/// the same shard, so per-connection TCP ordering keeps at most one
+/// chunk assembly open per shard lane and the `peak_live <= shards`
+/// bound stays sharp. Errors (non-zero exit from the CLI) if the round
+/// does not complete or the peak count of live decoded updates exceeds
+/// the shard count.
+pub fn scale_smoke(
+    n_clients: usize,
+    n_shards: usize,
+    addr: &str,
+    streaming: bool,
+) -> Result<String> {
     anyhow::ensure!(n_clients > 0, "need at least one client");
     let shapes: Vec<Vec<usize>> = vec![vec![32, 16], vec![32]];
+    let n_layers = shapes.len();
     let schemes = (0..n_clients)
         .map(|_| make_server_scheme(SchemeKind::Sgd, &shapes, 8))
         .collect();
@@ -118,27 +130,42 @@ pub fn scale_smoke(n_clients: usize, n_shards: usize, addr: &str) -> Result<Stri
     let transport = TcpTransport::bind(addr)?;
     let srv_addr = transport.local_addr();
     log::info!(
-        "scale smoke on {srv_addr}: {n_clients} clients -> {} shard(s)",
-        agg.n_shards()
+        "scale smoke on {srv_addr}: {n_clients} clients -> {} shard(s){}",
+        agg.n_shards(),
+        if streaming { ", streamed chunks" } else { "" }
     );
     agg.begin_round(&vec![1.0f32; n_clients], true);
 
-    // sender fleet: a few threads share the client id space; each id
-    // opens a connection, pushes its framed update and disconnects —
-    // the sensor duty cycle at cohort scale
-    let senders = 8.min(n_clients);
+    // sender fleet: threads share the client id space. Whole-frame mode:
+    // each id opens a connection, pushes its framed update and
+    // disconnects — the sensor duty cycle at cohort scale. Streaming
+    // mode: sender count equals the shard count so thread t's clients
+    // (t, t+s, ...) all land in shard t, and one persistent connection
+    // serializes their chunks.
+    let senders = if streaming { agg.n_shards().min(n_clients) } else { 8.min(n_clients) };
     let started = Instant::now();
     let mut handles = Vec::with_capacity(senders);
     for t in 0..senders {
         let shapes = shapes.clone();
         handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut conn = if streaming { Some(TcpClient::connect(srv_addr)?) } else { None };
             let mut id = t;
             while id < n_clients {
                 let mut rng = crate::util::Rng::new(0x5CA1E ^ id as u64);
                 let grads: Vec<Tensor> =
                     shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
-                let bytes = Encoder::new(&ClientUpdate::Sgd { grads }, id as u32, 0);
-                TcpClient::connect(srv_addr)?.send(&bytes)?;
+                let update = ClientUpdate::Sgd { grads };
+                match conn.as_mut() {
+                    Some(c) => {
+                        for layer in 0..update.n_layers() {
+                            c.send(&Encoder::chunk(&update, layer, id as u32, 0))?;
+                        }
+                    }
+                    None => {
+                        let bytes = Encoder::new(&update, id as u32, 0);
+                        TcpClient::connect(srv_addr)?.send(&bytes)?;
+                    }
+                }
                 id += senders;
             }
             Ok(())
@@ -148,10 +175,28 @@ pub fn scale_smoke(n_clients: usize, n_shards: usize, addr: &str) -> Result<Stri
     // server loop: header-only peek routes each completed frame to its
     // shard lane; the body decode + absorb happen there
     let mut received = 0usize;
+    let expected = if streaming { n_clients * n_layers } else { n_clients };
     let deadline = Instant::now() + Duration::from_secs(120);
-    while received < n_clients && Instant::now() < deadline {
+    while received < expected && Instant::now() < deadline {
         match transport.recv_timeout(Duration::from_millis(500)) {
             Ok(frame) => {
+                if streaming {
+                    let header = match Decoder::peek_chunk_header(&frame) {
+                        Ok(h) => h,
+                        Err(e) => {
+                            log::warn!("scale smoke: discarding undecodable chunk ({e})");
+                            continue;
+                        }
+                    };
+                    let id = header.client_id as usize;
+                    if id >= n_clients {
+                        log::warn!("scale smoke: discarding out-of-range client id {id}");
+                        continue;
+                    }
+                    agg.dispatch_chunk(id, frame);
+                    received += 1;
+                    continue;
+                }
                 let header = match Decoder::peek_header(&frame) {
                     Ok(h) => h,
                     Err(e) => {
@@ -189,8 +234,9 @@ pub fn scale_smoke(n_clients: usize, n_shards: usize, addr: &str) -> Result<Stri
         agg.n_shards()
     );
     Ok(format!(
-        "scale smoke: {n_clients}/{n_clients} clients delivered through {} shard(s) \
+        "scale smoke{}: {n_clients}/{n_clients} clients delivered through {} shard(s) \
          in {:.1}s; peak {} live decoded update(s) (bound {})",
+        if streaming { " (streamed)" } else { "" },
         agg.n_shards(),
         started.elapsed().as_secs_f64(),
         digest.peak_live,
@@ -213,8 +259,16 @@ mod tests {
     #[test]
     fn scale_smoke_bounds_peak_live() {
         // small cohort here; CI runs the 2k-client variant
-        let report = scale_smoke(64, 4, "127.0.0.1:0").unwrap();
+        let report = scale_smoke(64, 4, "127.0.0.1:0", false).unwrap();
         assert!(report.contains("64/64 clients delivered"), "{report}");
         assert!(report.contains("through 4 shard(s)"), "{report}");
+    }
+
+    #[test]
+    fn streamed_scale_smoke_bounds_peak_live() {
+        // chunked frames over real sockets; CI runs the 2k-client variant
+        let report = scale_smoke(64, 4, "127.0.0.1:0", true).unwrap();
+        assert!(report.contains("scale smoke (streamed)"), "{report}");
+        assert!(report.contains("64/64 clients delivered"), "{report}");
     }
 }

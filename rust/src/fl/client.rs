@@ -14,8 +14,13 @@ use super::scheme::ClientScheme;
 /// Everything a client reports back for one round.
 #[derive(Debug)]
 pub struct ClientRoundOutput {
-    /// serialized wire message (None = lazily skipped round)
+    /// serialized wire message (None = lazily skipped round, or
+    /// streaming mode — see `chunks`)
     pub wire: Option<Vec<u8>>,
+    /// streamed chunk frames, one per layer, in layer order (streaming
+    /// mode only; `wire` is None). The frames carry byte-identical
+    /// entry encodings, so `payload_bits` is the same either way.
+    pub chunks: Option<Vec<Vec<u8>>>,
     /// the paper's `#bits` for this upload (0 when skipped)
     pub payload_bits: u64,
     /// local mean training loss on this round's batch
@@ -37,6 +42,7 @@ pub struct FlClient {
     rng: Rng,
     batch: usize,
     round: u64,
+    streaming: bool,
 }
 
 impl std::fmt::Debug for FlClient {
@@ -71,7 +77,14 @@ impl FlClient {
             rng: Rng::new(seed),
             batch,
             round: 0,
+            streaming: false,
         }
+    }
+
+    /// Switch the uplink to chunked per-layer framing (DESIGN.md §13):
+    /// `round` then fills `chunks` instead of `wire`.
+    pub fn set_streaming(&mut self, on: bool) {
+        self.streaming = on;
     }
 
     /// Samples in this client's shard.
@@ -114,13 +127,16 @@ impl FlClient {
         phases.add("encode", t.elapsed());
 
         let t = Timer::start();
-        let (wire, payload_bits) = match &update {
+        let (wire, chunks, payload_bits) = match &update {
             Some(u) => {
-                let bytes = Encoder::new(u, self.id, self.round);
                 let bits = u.payload_bits();
-                (Some(bytes), bits)
+                if self.streaming {
+                    (None, Some(Encoder::chunk_frames(u, self.id, self.round)), bits)
+                } else {
+                    (Some(Encoder::new(u, self.id, self.round)), None, bits)
+                }
             }
-            None => (None, 0),
+            None => (None, None, 0),
         };
         phases.add("serialize", t.elapsed());
 
@@ -130,7 +146,7 @@ impl FlClient {
             Duration::ZERO
         };
         self.round += 1;
-        ClientRoundOutput { wire, payload_bits, train_loss: loss, net_time, phases }
+        ClientRoundOutput { wire, chunks, payload_bits, train_loss: loss, net_time, phases }
     }
 }
 
@@ -180,6 +196,29 @@ mod tests {
         assert_eq!(d1.client_id, 0);
         assert_eq!(d1.round, 0);
         assert_eq!(d2.round, 1);
+    }
+
+    #[test]
+    fn streaming_round_ships_chunks_with_identical_bits() {
+        let (mut c, w) = mk_client(SchemeKind::Qrr { p: 0.2 });
+        let seq = c.round(&w);
+        let (mut c2, _) = mk_client(SchemeKind::Qrr { p: 0.2 });
+        c2.set_streaming(true);
+        let streamed = c2.round(&w);
+        assert!(streamed.wire.is_none());
+        let chunks = streamed.chunks.unwrap();
+        assert!(!chunks.is_empty());
+        assert_eq!(streamed.payload_bits, seq.payload_bits);
+        // the chunks reassemble to the exact whole-message bytes
+        let mut bodies = Vec::new();
+        let mut scheme = 0;
+        for f in &chunks {
+            let (h, b) = crate::net::Decoder::decode_chunk(f).unwrap();
+            scheme = h.scheme;
+            bodies.push(b);
+        }
+        let back = crate::net::Decoder::assemble_update(scheme, bodies).unwrap();
+        assert_eq!(Encoder::new(&back, 0, 0), seq.wire.unwrap());
     }
 
     #[test]

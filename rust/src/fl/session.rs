@@ -50,7 +50,7 @@ use crate::exec::ThreadPool;
 use crate::model::{native::NativeModel, ModelOps, ModelSpec};
 use crate::net::faults::{FaultAction, FaultPlan, FaultyTransport};
 use crate::net::transport::{InProcTransport, Transport, TransportError};
-use crate::net::{Decoder, Encoder, LinkModel};
+use crate::net::{Decoder, Encoder, LinkModel, ServerUpdate};
 use crate::tensor::Tensor;
 use crate::util::{PhaseTimes, Rng};
 
@@ -652,6 +652,18 @@ impl FlSessionBuilder {
         self
     }
 
+    /// Streamed, overlapped rounds (DESIGN.md §13): clients ship each
+    /// layer as its own chunk frame the moment it serializes, the
+    /// server reassembles decode-on-arrival on its shard lanes, and
+    /// round r+1's downlink encode overlaps round r's metrics and
+    /// eval on a prefetch thread. Bit-identical to the sequential
+    /// default on clean networks — same final parameters, same
+    /// `RoundMetrics`, same bit totals.
+    pub fn streaming(mut self, on: bool) -> Self {
+        self.cfg.streaming = on;
+        self
+    }
+
     /// Drive per-client uplink specs through an adaptive compression
     /// controller policy (DESIGN.md §12): each round the policy maps
     /// observed telemetry to `(p, beta)` per client, and the session
@@ -764,6 +776,11 @@ impl FlSessionBuilder {
             ));
             server_schemes.push(Box::new(pipe.server()) as Box<dyn super::ServerScheme>);
         }
+        if cfg.streaming {
+            for c in &mut clients {
+                c.set_streaming(true);
+            }
+        }
 
         let params = spec.init_params(cfg.seed ^ 0x1217);
         let model_len: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
@@ -829,6 +846,7 @@ impl FlSessionBuilder {
         let history = History::new(label);
         let round_rng = Rng::new(cfg.seed ^ 0xFAC7);
         let cfg_clients = cfg.clients;
+        let streaming = cfg.streaming;
         let downlink_spec = cfg.downlink.clone();
         let pool = ThreadPool::new(self.threads.unwrap_or_else(crate::exec::default_threads));
         Ok(FlSession {
@@ -855,6 +873,8 @@ impl FlSessionBuilder {
             cum_down_bits: 0,
             model_len,
             downlink,
+            streaming,
+            downlink_prefetch: None,
             client_rounds: vec![0; cfg_clients],
             controller,
             client_specs,
@@ -947,6 +967,13 @@ pub struct FlSession {
     model_len: usize,
     /// dual-side compression state; `None` = full-precision broadcast
     downlink: Option<DownlinkState>,
+    /// streamed rounds (DESIGN.md §13): chunked uplink framing plus the
+    /// double-buffered downlink prefetch
+    streaming: bool,
+    /// the downlink codec state running ahead on a prefetch thread,
+    /// carrying round r+1's already-encoded broadcast; joined (and the
+    /// state restored) at the next broadcast
+    downlink_prefetch: Option<std::thread::JoinHandle<(DownlinkState, ServerUpdate)>>,
     /// how many rounds each client has computed (mirrors the client's
     /// wire `round` counter, used to reject stale/duplicate frames)
     client_rounds: Vec<u64>,
@@ -1189,13 +1216,30 @@ impl FlSession {
             .chaos
             .as_ref()
             .map_or(FaultAction::Deliver, |p| p.down_action(it));
+        // streamed rounds: this round's broadcast may already be encoded
+        // on the prefetch thread (spawned after last round's descent
+        // step, overlapping its metrics and eval). Join it and restore
+        // the codec state first — the thread saw the exact parameters
+        // the sequential path would encode and the encode-then-snapshot
+        // order is preserved, so the bytes are bit-identical.
+        let mut prefetched: Option<ServerUpdate> = None;
+        if let Some(handle) = self.downlink_prefetch.take() {
+            let (state, upd) = handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("downlink prefetch thread panicked"))?;
+            self.downlink = Some(state);
+            prefetched = Some(upd);
+        }
         let weights: Arc<Vec<Tensor>> = match &mut self.downlink {
             // downlink faults need a downlink pipeline to matter: with a
             // full-precision broadcast the clients hold no decoder state
             // a lost frame could desynchronize
             None => self.server.params_shared(),
             Some(dl) => {
-                let upd = dl.encoder.encode(self.server.params(), it);
+                let upd = match prefetched.take() {
+                    Some(u) => u,
+                    None => dl.encoder.encode(self.server.params(), it),
+                };
                 down_bits = upd.payload_bits();
                 if down_action == FaultAction::Drop {
                     // broadcast lost in flight: train on stale params
@@ -1296,12 +1340,30 @@ impl FlSession {
         let mut clients_dropped = 0u32;
         for (i, out) in outputs.iter().enumerate() {
             let Some(out) = out else { continue };
-            let Some(wire) = &out.wire else { continue };
+            if out.wire.is_none() && out.chunks.is_none() {
+                continue; // lazily skipped round: nothing to ship
+            }
             if self
                 .participation
                 .admit(i, &self.links, out.net_time, &mut self.round_rng)
             {
-                if self.send_with_retry(wire)? {
+                let accepted = if let Some(wire) = &out.wire {
+                    self.send_with_retry(wire)?
+                } else {
+                    // streamed upload: the layer chunks leave in order;
+                    // a mid-stream transport loss drops the remainder
+                    // and the server's gap discipline leaves the update
+                    // undelivered — all-or-nothing, like the whole frame
+                    let mut all = true;
+                    for f in out.chunks.as_deref().unwrap_or(&[]) {
+                        if !self.send_with_retry(f)? {
+                            all = false;
+                            break;
+                        }
+                    }
+                    all
+                };
+                if accepted {
                     sent += 1;
                     sent_mask[i] = true;
                 } else {
@@ -1331,6 +1393,17 @@ impl FlSession {
         let n_selected = active.iter().filter(|a| **a).count();
         let min_arrivals = (self.quorum.fraction * n_selected as f64).ceil() as usize;
         let quorum_target = min_arrivals.min(sent);
+        // streamed mode: per-client layer bitsets — a client counts as
+        // received once every distinct layer's chunk has landed. The
+        // shard assembly tracks its own gaps; this mirror only drives
+        // the quorum / deadline accounting up here.
+        let n_layers = self.shapes.len();
+        let mut seen_layers: Vec<Vec<bool>> = if self.streaming {
+            vec![vec![false; n_layers]; n]
+        } else {
+            Vec::new()
+        };
+        let mut seen_count = vec![0usize; n];
         let mut dispatched = vec![false; n];
         let mut late = vec![false; n];
         let mut received = 0usize;
@@ -1368,6 +1441,57 @@ impl FlSession {
                     // abort the run: garbage, unknown senders, stale
                     // rounds and duplicates are all discarded, exactly
                     // like a lost frame
+                    if self.streaming {
+                        let header = match Decoder::peek_chunk_header(&frame) {
+                            Ok(h) => h,
+                            Err(e) => {
+                                log::warn!("round {it}: discarding undecodable chunk ({e})");
+                                continue;
+                            }
+                        };
+                        let id = header.client_id as usize;
+                        if id >= n {
+                            log::warn!(
+                                "round {it}: discarding chunk with out-of-range client id {id}"
+                            );
+                            continue;
+                        }
+                        if expected_round[id] != Some(header.round) || dispatched[id] {
+                            log::warn!(
+                                "round {it}: discarding unexpected chunk from client {id} \
+                                 (frame round {}, expected {:?})",
+                                header.round,
+                                expected_round[id]
+                            );
+                            continue;
+                        }
+                        let layer = header.layer as usize;
+                        if layer >= n_layers {
+                            log::warn!(
+                                "round {it}: discarding chunk with out-of-spec layer {layer} \
+                                 from client {id}"
+                            );
+                            continue;
+                        }
+                        if !seen_layers[id][layer] {
+                            seen_layers[id][layer] = true;
+                            seen_count[id] += 1;
+                        }
+                        // every admitted chunk reaches the client's shard
+                        // lane: reassembly there absorbs on the last gap
+                        // fill, tolerates out-of-order arrival, and counts
+                        // duplicates once per (client, layer)
+                        self.aggregator.dispatch_chunk(id, frame);
+                        if seen_count[id] == n_layers {
+                            received += 1;
+                            if Instant::now() >= first_deadline {
+                                clients_late += 1;
+                                late[id] = true;
+                            }
+                            dispatched[id] = true;
+                        }
+                        continue;
+                    }
                     let header = match Decoder::peek_header(&frame) {
                         Ok(h) => h,
                         Err(e) => {
@@ -1409,15 +1533,23 @@ impl FlSession {
                 Err(e) => return Err(e.into()),
             }
         }
-        let clients_timed_out = (sent - received) as u32;
-
         // close the round: in-flight absorbs drain, silent members
         // advance their mirrors, shard partials tree-reduce. `delivered`
         // comes from the digest — a frame that passed the header peek
         // but failed the body decode on its lane stays undelivered.
         let digest = self.aggregator.close_round();
         let delivered = digest.delivered;
+        let failed = digest.failed;
         self.peak_live_max = self.peak_live_max.max(digest.peak_live);
+
+        // a streamed client can be both gappy (never completed up here)
+        // and corrupt (a bad chunk failed it on its shard lane); count
+        // it corrupt, not timed out, so the outcome partition stays
+        // exact. In whole-message mode failed ⊆ dispatched, so this is
+        // bit-identical to the old `sent - received`.
+        let clients_timed_out = (0..n)
+            .filter(|&i| sent_mask[i] && !dispatched[i] && !failed[i])
+            .count() as u32;
 
         // metrics: bits/comms count what the server actually received;
         // the synchronous round time is the slowest delivered upload
@@ -1443,7 +1575,7 @@ impl FlSession {
         // stash the observations the controller replans from next round
         for i in 0..n {
             let (payload_bits, client_net, computed) = match &outputs[i] {
-                Some(o) => (o.payload_bits, o.net_time, o.wire.is_some()),
+                Some(o) => (o.payload_bits, o.net_time, o.wire.is_some() || o.chunks.is_some()),
                 None => (0, Duration::ZERO, false),
             };
             let outcome = if !computed {
@@ -1456,7 +1588,7 @@ impl FlSession {
                 } else {
                     Outcome::Delivered
                 }
-            } else if dispatched[i] {
+            } else if dispatched[i] || failed[i] {
                 Outcome::Corrupt
             } else {
                 Outcome::TimedOut
@@ -1485,6 +1617,23 @@ impl FlSession {
             }
         }
         let grad_norm = self.server.apply_aggregate(&agg);
+
+        // streamed rounds: kick round it+1's downlink encode onto a
+        // prefetch thread so it overlaps this round's metrics and eval
+        // (double-buffered broadcast, DESIGN.md §13). Gated off under a
+        // controller, whose replan may rebuild the codec pair before
+        // the next broadcast would consume this work.
+        if self.streaming && self.controller.is_none() {
+            if let Some(dl) = self.downlink.take() {
+                let params = self.server.params_shared();
+                let next = it + 1;
+                self.downlink_prefetch = Some(std::thread::spawn(move || {
+                    let mut dl = dl;
+                    let upd = dl.encoder.encode(params.as_slice(), next);
+                    (dl, upd)
+                }));
+            }
+        }
 
         self.cum_bits += bits;
         self.cum_down_bits += down_bits;
@@ -1729,6 +1878,60 @@ mod tests {
         let b = r2.history.evals.last().unwrap();
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn streamed_session_bit_identical_to_sequential() {
+        // the tentpole parity oracle: chunked per-layer framing,
+        // decode-on-arrival reassembly, and the double-buffered
+        // broadcast must reproduce the sequential path bit for bit on
+        // a clean network — same metrics, same bit totals, same evals
+        let cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        let dl = crate::compress::pipeline::PipelineSpec::parse("svd(p=0.1)+laq(beta=8)").unwrap();
+        let run = |streaming: bool| {
+            FlSessionBuilder::new(&cfg)
+                .downlink(dl.clone())
+                .streaming(streaming)
+                .quiet()
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let (seq, st) = (run(false), run(true));
+        assert_eq!(seq.history.rounds.len(), st.history.rounds.len());
+        for (a, b) in seq.history.rounds.iter().zip(&st.history.rounds) {
+            assert_eq!(a.bits, b.bits, "round {} uplink bits differ", a.iter);
+            assert_eq!(a.down_bits, b.down_bits, "round {} downlink bits differ", a.iter);
+            assert_eq!(a.comms, b.comms, "round {} comms differ", a.iter);
+            assert_eq!(a.grad_norm, b.grad_norm, "round {} aggregate differs", a.iter);
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.clients_timed_out, b.clients_timed_out);
+            assert_eq!(a.clients_corrupt, b.clients_corrupt);
+        }
+        for (a, b) in seq.history.evals.iter().zip(&st.history.evals) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.cum_bits, b.cum_bits);
+            assert_eq!(a.cum_down_bits, b.cum_down_bits);
+        }
+    }
+
+    #[test]
+    fn streamed_session_matches_sequential_without_downlink() {
+        let mut cfg = tiny_cfg(SchemeConfig::Qrr(PPolicy::Fixed(0.2)));
+        let seq = FlSession::from_config(&cfg).unwrap().run().unwrap();
+        cfg.streaming = true;
+        let mut s = FlSession::from_config(&cfg).unwrap();
+        let st = s.run().unwrap();
+        assert_eq!(seq.history.total_bits(), st.history.total_bits());
+        let a = seq.history.evals.last().unwrap();
+        let b = st.history.evals.last().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.accuracy, b.accuracy);
+        // decode-on-arrival kept at most one live update per shard
+        assert!(s.peak_live() >= 1);
+        assert!(s.peak_live() <= s.n_shards(), "peak {} > shards", s.peak_live());
     }
 
     #[test]

@@ -24,6 +24,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::exec::ShardExecutor;
+use crate::net::wire::ChunkBody;
 use crate::net::Decoder;
 use crate::tensor::Tensor;
 
@@ -40,11 +41,71 @@ pub struct RoundDigest {
     /// Peak number of decoded updates alive at once — the O(shards)
     /// memory bound, structurally ≤ the shard count.
     pub peak_live: usize,
-    /// Frames that reached a shard but failed the full body decode.
+    /// Frames that reached a shard but failed the full body decode —
+    /// in streaming mode, counted at most once per client per round
+    /// (the first bad chunk fails the member's whole update).
     pub decode_failures: usize,
-    /// Frames dropped at a lane because their client had already
-    /// absorbed one this round (duplicate delivery).
+    /// Duplicate deliveries dropped at a lane: whole frames whose
+    /// client had already absorbed one this round, and duplicated
+    /// *chunks* — counted exactly once per (client, layer) however
+    /// many extra copies land.
     pub duplicates: usize,
+    /// Per client: did this round reject one of its frames as a decode
+    /// failure? In streaming mode a client can be *both* corrupt and
+    /// gappy — this flag lets the session classify such a client as
+    /// corrupt rather than timed out, keeping the per-round outcome
+    /// partition exact. (A hostile client can be delivered *and*
+    /// flagged: a stray chunk after an absorbed whole frame; delivery
+    /// wins in the session's classification.)
+    pub failed: Vec<bool>,
+}
+
+/// Per-member uplink mode for the open round: the first frame fixes
+/// it, and a client mixing chunked and whole-message frames within a
+/// round is rejected (DESIGN.md §13).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Unset,
+    Whole,
+    Chunked,
+}
+
+/// Per-(client, round) chunk reassembly state (streaming mode): the
+/// decoded per-layer bodies of one update, gathered out-of-order until
+/// every gap fills, at which point the update absorbs atomically —
+/// exactly what the sequential path absorbs after a whole-message
+/// decode, so a bad chunk can never half-apply an update.
+struct ChunkAssembly {
+    /// scheme tag fixed by the first chunk; later chunks must agree
+    scheme: u8,
+    /// decoded bodies by layer (`None` = gap); freed on completion or
+    /// rejection so only in-flight assemblies hold memory
+    bodies: Vec<Option<ChunkBody>>,
+    /// distinct layers decoded so far
+    received: usize,
+    /// layers whose duplicate delivery has been counted — exactly once
+    /// per (client, layer), however many copies land; retained after
+    /// completion so late copies still count once
+    dup_counted: Vec<bool>,
+    /// update rejected (bad chunk bytes, layer-count/scheme mismatch,
+    /// mode mixing): the member stays undelivered and further chunks
+    /// are discarded silently
+    failed: bool,
+    /// every layer landed and the update absorbed into the partial
+    complete: bool,
+}
+
+impl ChunkAssembly {
+    fn new(scheme: u8, n_layers: usize) -> Self {
+        ChunkAssembly {
+            scheme,
+            bodies: vec![None; n_layers],
+            received: 0,
+            dup_counted: vec![false; n_layers],
+            failed: false,
+            complete: false,
+        }
+    }
 }
 
 /// Per-shard state: touched only from that shard's executor lane while
@@ -69,8 +130,15 @@ struct ShardState {
     include_undelivered: bool,
     /// Frames whose body decode failed on this shard this round.
     decode_failures: usize,
+    /// Parallel to `members`: a frame of theirs failed this round.
+    failed: Vec<bool>,
     /// Frames dropped because their client had already absorbed.
     duplicates: usize,
+    /// Parallel to `members`: this round's uplink mode per member.
+    modes: Vec<Mode>,
+    /// Parallel to `members`: streaming reassembly state, `None` until
+    /// the member's first chunk of the round.
+    chunks: Vec<Option<ChunkAssembly>>,
 }
 
 impl ShardState {
@@ -94,6 +162,144 @@ impl ShardState {
             }
         }
     }
+
+    // The chunk reassembly path runs on attacker-controlled bytes like
+    // the wire decoder itself (the TCP server feeds it raw peer input):
+    // every malformed chunk must surface as a counted reject, never a
+    // panic, so panicking constructs are banned here.
+    // qrr-audit: no-panic
+
+    /// Reject member `pos`'s streamed round: drop any gathered bodies,
+    /// count one decode failure the first time, and leave a failed
+    /// marker so further chunks (and mixing evidence) are discarded
+    /// silently. Returns whether this call closed an open,
+    /// body-holding assembly (for the caller's live accounting).
+    fn fail_chunk_round(&mut self, pos: usize, expected_layers: usize) -> bool {
+        if self.chunks[pos].is_none() {
+            self.chunks[pos] = Some(ChunkAssembly::new(0, expected_layers));
+        }
+        let mut closed = false;
+        if let Some(a) = self.chunks[pos].as_mut() {
+            if a.failed || a.complete {
+                return false;
+            }
+            a.failed = true;
+            closed = a.received > 0;
+            a.bodies = Vec::new();
+            a.received = 0;
+        }
+        self.decode_failures += 1;
+        if let Some(f) = self.failed.get_mut(pos) {
+            *f = true;
+        }
+        closed
+    }
+
+    /// One chunk frame for member `pos` (global id `client`): decode
+    /// on arrival, dedup per (client, layer), and absorb the update
+    /// atomically the moment its last gap fills. Returns `(opened,
+    /// closed)` — whether this call opened / closed the member's live
+    /// assembly — for the lane job's live/peak accounting.
+    fn chunk_frame(
+        &mut self,
+        pos: usize,
+        client: usize,
+        frame: &[u8],
+        expected_layers: usize,
+    ) -> (bool, bool) {
+        if self.modes[pos] == Mode::Whole {
+            // chunked frames mixed into a whole-message round
+            log::warn!("client {client} mixed chunked and whole-message frames");
+            return (false, self.fail_chunk_round(pos, expected_layers));
+        }
+        self.modes[pos] = Mode::Chunked;
+        if matches!(&self.chunks[pos], Some(a) if a.failed) {
+            // round already rejected for this member
+            return (false, false);
+        }
+        let (header, body) = match Decoder::decode_chunk(frame) {
+            Ok(hb) => hb,
+            Err(e) => {
+                log::warn!("chunk decode failed for client {client}: {e}");
+                return (false, self.fail_chunk_round(pos, expected_layers));
+            }
+        };
+        if header.n_layers as usize != expected_layers {
+            // `n_layers` is attacker data until checked against the
+            // model spec — this also caps reassembly allocation at the
+            // spec's layer count, never a declared u32::MAX
+            log::warn!(
+                "client {client} declared {} layers, model has {expected_layers}",
+                header.n_layers
+            );
+            return (false, self.fail_chunk_round(pos, expected_layers));
+        }
+        if matches!(&self.chunks[pos], Some(a) if a.scheme != header.scheme) {
+            log::warn!("client {client} switched schemes mid-update");
+            return (false, self.fail_chunk_round(pos, expected_layers));
+        }
+        let opened = self.chunks[pos].is_none();
+        // peek validated layer < n_layers == expected_layers
+        let layer = header.layer as usize;
+        let a = match self.chunks[pos].as_mut() {
+            Some(a) => a,
+            None => {
+                self.chunks[pos] = Some(ChunkAssembly::new(header.scheme, expected_layers));
+                match self.chunks[pos].as_mut() {
+                    Some(a) => a,
+                    None => return (false, false), // unreachable: just stored
+                }
+            }
+        };
+        if a.complete || a.bodies.get(layer).map(Option::is_some).unwrap_or(false) {
+            // duplicate delivery, counted once per (client, layer)
+            if !a.dup_counted[layer] {
+                a.dup_counted[layer] = true;
+                self.duplicates += 1;
+            }
+            return (opened, false);
+        }
+        a.bodies[layer] = Some(body);
+        a.received += 1;
+        if a.received < expected_layers {
+            return (opened, false);
+        }
+        // last gap filled: gather in layer order and absorb whole
+        a.complete = true;
+        let scheme = a.scheme;
+        let gathered = std::mem::take(&mut a.bodies);
+        let mut bodies = Vec::with_capacity(expected_layers);
+        for b in gathered {
+            if let Some(b) = b {
+                bodies.push(b);
+            }
+        }
+        if bodies.len() != expected_layers {
+            // unreachable: received == expected_layers implies no gaps
+            self.decode_failures += 1;
+            if let Some(f) = self.failed.get_mut(pos) {
+                *f = true;
+            }
+            return (opened, true);
+        }
+        match Decoder::assemble_update(scheme, bodies) {
+            Ok(update) => {
+                let contrib = self.schemes[pos].absorb(Some(&update));
+                let w = self.weights[pos];
+                self.accumulate(contrib, w);
+                self.absorbed[pos] = true;
+            }
+            Err(e) => {
+                log::warn!("chunk reassembly failed for client {client}: {e}");
+                self.decode_failures += 1;
+                if let Some(f) = self.failed.get_mut(pos) {
+                    *f = true;
+                }
+            }
+        }
+        (opened, true)
+    }
+    // qrr-audit: end
 }
 
 /// N-shard streaming aggregator over the full cohort's scheme mirrors.
@@ -143,7 +349,10 @@ impl ShardedAggregator {
                 weights: Vec::new(),
                 include_undelivered: true,
                 decode_failures: 0,
+                failed: Vec::new(),
                 duplicates: 0,
+                modes: Vec::new(),
+                chunks: Vec::new(),
             })
             .collect();
         for (id, scheme) in schemes.into_iter().enumerate() {
@@ -152,6 +361,9 @@ impl ShardedAggregator {
             b.schemes.push(scheme);
             b.absorbed.push(false);
             b.weights.push(1.0);
+            b.failed.push(false);
+            b.modes.push(Mode::Unset);
+            b.chunks.push(None);
         }
         ShardedAggregator {
             shards: buckets.into_iter().map(|b| Arc::new(Mutex::new(b))).collect(),
@@ -202,6 +414,9 @@ impl ShardedAggregator {
                 s.absorbed[pos] = false;
                 let id = s.members[pos];
                 s.weights[pos] = weights[id];
+                s.failed[pos] = false;
+                s.modes[pos] = Mode::Unset;
+                s.chunks[pos] = None;
             }
         }
         self.peak_live.store(0, Ordering::SeqCst);
@@ -221,15 +436,22 @@ impl ShardedAggregator {
         let shard = Arc::clone(&self.shards[client % n_shards]);
         let live = Arc::clone(&self.live);
         let peak = Arc::clone(&self.peak_live);
+        let expected_layers = self.shapes.len();
         self.exec.dispatch(client % n_shards, move || {
             let now = live.fetch_add(1, Ordering::SeqCst) + 1;
             peak.fetch_max(now, Ordering::SeqCst);
             let pos = client / n_shards;
+            let mut assembly_closed = false;
             {
                 let mut s = shard.lock().unwrap();
                 if s.absorbed[pos] {
                     s.duplicates += 1;
+                } else if s.modes[pos] == Mode::Chunked {
+                    // a whole-message frame mixed into a chunked round
+                    log::warn!("client {client} mixed whole-message and chunked frames");
+                    assembly_closed = s.fail_chunk_round(pos, expected_layers);
                 } else {
+                    s.modes[pos] = Mode::Whole;
                     match Decoder::decode(&frame) {
                         Ok(msg) => {
                             let contrib = s.schemes[pos].absorb(Some(&msg.update));
@@ -240,11 +462,57 @@ impl ShardedAggregator {
                         Err(e) => {
                             log::warn!("shard decode failed for client {client}: {e}");
                             s.decode_failures += 1;
+                            s.failed[pos] = true;
                         }
                     }
                 }
             }
+            if assembly_closed {
+                live.fetch_sub(1, Ordering::SeqCst);
+            }
             live.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+
+    /// Hand one **chunk** frame for `client` to its owning shard's
+    /// lane (streaming mode) and return immediately. The lane job
+    /// decodes the body on arrival and merges it into the member's
+    /// per-round [`ChunkAssembly`]; the moment the last gap fills, the
+    /// reassembled update absorbs through the client's mirror exactly
+    /// like a whole-message frame — all-or-nothing, so a bad chunk can
+    /// never half-apply an update. Out-of-order and duplicate chunks
+    /// are tolerated (a duplicated chunk counts toward
+    /// [`RoundDigest::duplicates`] exactly once per (client, layer));
+    /// gaps leave the member undelivered at round close; a client
+    /// mixing chunked and whole-message frames within one round is
+    /// rejected as a decode failure.
+    ///
+    /// Live accounting: an open assembly counts as one live decoded
+    /// update from its first chunk until it absorbs or fails, so when
+    /// each client's chunks are dispatched contiguously (the session's
+    /// send order) peak live memory stays O(shards), as
+    /// [`RoundDigest::peak_live`] asserts. The caller routes by
+    /// (client, round) admission — like [`Self::dispatch_frame`], a
+    /// stale round's frames must not reach this method.
+    pub fn dispatch_chunk(&self, client: usize, frame: Vec<u8>) {
+        let n_shards = self.shards.len();
+        debug_assert!(client < self.n_members, "client id out of range");
+        let shard = Arc::clone(&self.shards[client % n_shards]);
+        let live = Arc::clone(&self.live);
+        let peak = Arc::clone(&self.peak_live);
+        let expected_layers = self.shapes.len();
+        self.exec.dispatch(client % n_shards, move || {
+            let pos = client / n_shards;
+            let mut s = shard.lock().unwrap();
+            let (opened, closed) = s.chunk_frame(pos, client, &frame, expected_layers);
+            drop(s);
+            if opened {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+            }
+            if closed {
+                live.fetch_sub(1, Ordering::SeqCst);
+            }
         });
     }
 
@@ -312,14 +580,25 @@ impl ShardedAggregator {
             .take()
             .unwrap_or_else(|| self.shapes.iter().map(|s| Tensor::zeros(s)).collect());
         let mut delivered = vec![false; self.n_members];
+        let mut failed = vec![false; self.n_members];
         let mut decode_failures = 0usize;
         let mut duplicates = 0usize;
         for shard in &self.shards {
-            let s = shard.lock().unwrap();
+            let mut s = shard.lock().unwrap();
             decode_failures += s.decode_failures;
             duplicates += s.duplicates;
             for (pos, &id) in s.members.iter().enumerate() {
                 delivered[id] = s.absorbed[pos];
+                failed[id] = s.failed[pos];
+            }
+            // free incomplete (gappy) assemblies — their members stay
+            // undelivered — and reconcile the live counter for them
+            for pos in 0..s.chunks.len() {
+                if let Some(a) = s.chunks[pos].take() {
+                    if !a.failed && !a.complete && a.received > 0 {
+                        self.live.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
             }
         }
         RoundDigest {
@@ -328,10 +607,12 @@ impl ShardedAggregator {
             peak_live: self.peak_live.load(Ordering::SeqCst),
             decode_failures,
             duplicates,
+            failed,
         }
     }
 
-    /// Server-side memory: scheme mirrors plus any live partials.
+    /// Server-side memory: scheme mirrors, any live partials, plus
+    /// in-flight chunk reassembly bodies (streaming mode).
     pub fn mem_bytes(&self) -> usize {
         self.shards
             .iter()
@@ -343,7 +624,19 @@ impl ShardedAggregator {
                     .as_ref()
                     .map(|p| p.iter().map(|t| 4 * t.len()).sum())
                     .unwrap_or(0);
-                mirrors + partial
+                let assemblies: usize = s
+                    .chunks
+                    .iter()
+                    .flatten()
+                    .map(|a| {
+                        a.bodies
+                            .iter()
+                            .flatten()
+                            .map(|b| (b.payload_bits() / 8) as usize)
+                            .sum::<usize>()
+                    })
+                    .sum();
+                mirrors + partial + assemblies
             })
             .sum()
     }
@@ -625,5 +918,225 @@ mod tests {
         let agg = sgd_aggregator(&shapes, 4, 2);
         // SGD mirrors are stateless and no partials are live
         assert_eq!(agg.mem_bytes(), 0);
+    }
+
+    // ------------------------- chunked (streaming) dispatch ------------
+
+    use crate::net::faults::{FaultAction, FaultPlan};
+
+    fn chunk_frames(
+        shapes: &[Vec<usize>],
+        id: u32,
+        round: u64,
+        rng: &mut Rng,
+    ) -> (Vec<Vec<u8>>, Vec<Tensor>) {
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, rng)).collect();
+        let up = ClientUpdate::Sgd { grads: grads.clone() };
+        (Encoder::chunk_frames(&up, id, round), grads)
+    }
+
+    #[test]
+    fn chunked_dispatch_matches_whole_frame_aggregate_bit_for_bit() {
+        let shapes = shapes();
+        let mut rng = Rng::new(709);
+        let n_clients = 5;
+        let updates: Vec<Vec<Tensor>> = (0..n_clients)
+            .map(|_| shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect())
+            .collect();
+        let run = |chunked: bool, reverse_layers: bool| {
+            let mut agg = sgd_aggregator(&shapes, n_clients, 2);
+            agg.begin_round(&vec![1.0; n_clients], true);
+            for (i, grads) in updates.iter().enumerate() {
+                let up = ClientUpdate::Sgd { grads: grads.clone() };
+                if chunked {
+                    let mut frames = Encoder::chunk_frames(&up, i as u32, 0);
+                    if reverse_layers {
+                        frames.reverse(); // out-of-order arrival
+                    }
+                    for f in frames {
+                        agg.dispatch_chunk(i, f);
+                    }
+                } else {
+                    agg.dispatch_frame(i, Encoder::new(&up, i as u32, 0));
+                }
+            }
+            agg.close_round()
+        };
+        let whole = run(false, false);
+        for digest in [run(true, false), run(true, true)] {
+            assert_eq!(digest.delivered, vec![true; n_clients]);
+            assert_eq!(digest.decode_failures, 0);
+            assert_eq!(digest.duplicates, 0);
+            assert!(digest.peak_live <= 2, "peak {} > shard count", digest.peak_live);
+            for (a, b) in digest.aggregate.iter().zip(whole.aggregate.iter()) {
+                assert_eq!(a.data(), b.data(), "chunked aggregate must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicated_chunks_count_once_per_client_layer() {
+        // regression (ISSUE 10): a FaultPlan-duplicated chunk must bump
+        // `duplicates` exactly once per (client, layer), however many
+        // copies land — including copies after the update completed
+        let shapes = shapes();
+        let mut rng = Rng::new(710);
+        let plan = FaultPlan::parse("dup=1.0,seed=9").unwrap();
+        let mut agg = sgd_aggregator(&shapes, 2, 2);
+        agg.begin_round(&[1.0, 1.0], true);
+        let (frames, g0) = chunk_frames(&shapes, 0, 0, &mut rng);
+        let mut expected_dups = 0;
+        for (layer, f) in frames.iter().enumerate() {
+            agg.dispatch_chunk(0, f.clone());
+            if matches!(plan.chunk_action(0, 0, layer as u32), FaultAction::Duplicate) {
+                agg.dispatch_chunk(0, f.clone());
+                expected_dups += 1;
+            }
+        }
+        // a third copy of layer 0 lands after the update absorbed
+        agg.dispatch_chunk(0, frames[0].clone());
+        let digest = agg.close_round();
+        assert_eq!(digest.delivered, vec![true, false]);
+        assert_eq!(expected_dups, shapes.len(), "dup=1.0 must duplicate every chunk");
+        assert_eq!(digest.duplicates, expected_dups, "each (client, layer) counted once");
+        assert_eq!(digest.decode_failures, 0);
+        for (a, g) in digest.aggregate.iter().zip(g0.iter()) {
+            assert!(a.rel_err(g) < 1e-6, "duplicate chunk double-counted");
+        }
+    }
+
+    #[test]
+    fn gappy_chunks_leave_member_undelivered_and_reset_cleanly() {
+        let shapes = shapes();
+        let mut rng = Rng::new(711);
+        let mut agg = sgd_aggregator(&shapes, 3, 2);
+        agg.begin_round(&[1.0; 3], true);
+        let (frames, _) = chunk_frames(&shapes, 1, 0, &mut rng);
+        agg.dispatch_chunk(1, frames[0].clone()); // layer 1 never arrives
+        let d1 = agg.close_round();
+        assert_eq!(d1.delivered, vec![false; 3]);
+        assert_eq!(d1.decode_failures, 0, "a gap is a timeout, not a decode failure");
+        for a in &d1.aggregate {
+            assert_eq!(a.fro_norm(), 0.0, "partial update leaked into the aggregate");
+        }
+        // next round: the same client streams a full update cleanly
+        agg.begin_round(&[1.0; 3], true);
+        let (frames, g) = chunk_frames(&shapes, 1, 1, &mut rng);
+        for f in frames {
+            agg.dispatch_chunk(1, f);
+        }
+        let d2 = agg.close_round();
+        assert_eq!(d2.delivered, vec![false, true, false]);
+        assert_eq!(d2.peak_live, 1, "leftover assembly leaked into the live count");
+        for (a, gi) in d2.aggregate.iter().zip(g.iter()) {
+            assert!(a.rel_err(gi) < 1e-6, "stale chunk state leaked across rounds");
+        }
+    }
+
+    #[test]
+    fn corrupt_chunk_rejects_the_whole_update() {
+        let shapes = shapes();
+        let mut rng = Rng::new(712);
+        let mut agg = sgd_aggregator(&shapes, 2, 2);
+        agg.begin_round(&[1.0, 1.0], true);
+        let (frames, _) = chunk_frames(&shapes, 0, 0, &mut rng);
+        agg.dispatch_chunk(0, frames[0].clone());
+        let mut bad = frames[1].clone();
+        bad[crate::net::wire::CHUNK_HEADER_LEN] ^= 0x40; // body corruption, header intact
+        agg.dispatch_chunk(0, bad);
+        // a late good copy cannot resurrect the rejected round
+        agg.dispatch_chunk(0, frames[1].clone());
+        let digest = agg.close_round();
+        assert_eq!(digest.delivered, vec![false, false]);
+        assert_eq!(digest.decode_failures, 1, "one failure per client, not per chunk");
+        assert_eq!(digest.duplicates, 0);
+        for a in &digest.aggregate {
+            assert_eq!(a.fro_norm(), 0.0, "corrupt update half-applied");
+        }
+    }
+
+    #[test]
+    fn mode_mixing_within_a_round_is_rejected() {
+        let shapes = shapes();
+        let mut rng = Rng::new(713);
+        // chunks first, then a whole frame: the member's round fails
+        let mut agg = sgd_aggregator(&shapes, 2, 2);
+        agg.begin_round(&[1.0, 1.0], true);
+        let (frames, _) = chunk_frames(&shapes, 0, 0, &mut rng);
+        let (whole, _) = sgd_frame(&shapes, 0, 0, &mut rng);
+        agg.dispatch_chunk(0, frames[0].clone());
+        agg.dispatch_frame(0, whole);
+        // further chunks are discarded silently
+        agg.dispatch_chunk(0, frames[1].clone());
+        let digest = agg.close_round();
+        assert_eq!(digest.delivered, vec![false, false]);
+        assert_eq!(digest.decode_failures, 1);
+
+        // whole frame first, then chunks: the stray chunk is rejected
+        // without un-delivering the already-absorbed update
+        let mut agg = sgd_aggregator(&shapes, 2, 2);
+        agg.begin_round(&[1.0, 1.0], true);
+        let (whole, g1) = sgd_frame(&shapes, 1, 0, &mut rng);
+        agg.dispatch_frame(1, whole);
+        let (frames, _) = chunk_frames(&shapes, 1, 0, &mut rng);
+        agg.dispatch_chunk(1, frames[0].clone());
+        let digest = agg.close_round();
+        assert_eq!(digest.delivered, vec![false, true]);
+        assert_eq!(digest.decode_failures, 1);
+        for (a, g) in digest.aggregate.iter().zip(g1.iter()) {
+            assert!(a.rel_err(g) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hostile_layer_count_is_rejected_not_allocated() {
+        // a declared n_layers disagreeing with the model spec fails the
+        // member's round; reassembly allocation is capped by the spec's
+        // layer count, never an attacker-declared one
+        let shapes = shapes(); // 2 layers
+        let mut rng = Rng::new(714);
+        let mut agg = sgd_aggregator(&shapes, 2, 2);
+        agg.begin_round(&[1.0, 1.0], true);
+        // an update with 5 layers against a 2-layer model
+        let grads: Vec<Tensor> = (0..5).map(|_| Tensor::randn(&[3], &mut rng)).collect();
+        let up = ClientUpdate::Sgd { grads };
+        agg.dispatch_chunk(0, Encoder::chunk(&up, 0, 0, 0));
+        let digest = agg.close_round();
+        assert_eq!(digest.delivered, vec![false, false]);
+        assert_eq!(digest.decode_failures, 1);
+    }
+
+    #[test]
+    fn two_thousand_streamed_clients_peak_live_bounded_by_shards() {
+        // the O(shards) bound holds in streaming mode when each
+        // client's chunks are dispatched contiguously (the send order
+        // the session and the scale harness both use)
+        let shapes = vec![vec![16, 8], vec![16]];
+        let n_clients = 2000;
+        let n_shards = 8;
+        let mut rng = Rng::new(715);
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, &mut rng)).collect();
+        let up = ClientUpdate::Sgd { grads: grads.clone() };
+        let mut agg = sgd_aggregator(&shapes, n_clients, n_shards);
+        agg.begin_round(&vec![1.0; n_clients], true);
+        for i in 0..n_clients {
+            for f in Encoder::chunk_frames(&up, i as u32, 0) {
+                agg.dispatch_chunk(i, f);
+            }
+        }
+        let digest = agg.close_round();
+        assert!(
+            digest.peak_live <= n_shards,
+            "peak {} live assemblies > {} shards",
+            digest.peak_live,
+            n_shards
+        );
+        assert!(digest.peak_live >= 1);
+        assert_eq!(digest.delivered.iter().filter(|&&d| d).count(), n_clients);
+        assert_eq!(digest.duplicates, 0);
+        for (a, g) in digest.aggregate.iter().zip(grads.iter()) {
+            let want = crate::tensor::zip(g, g, |x, _| x * n_clients as f32);
+            assert!(a.rel_err(&want) < 1e-3);
+        }
     }
 }

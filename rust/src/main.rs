@@ -131,7 +131,8 @@ USAGE:
                                  --shards N routes uploads to N aggregation
                                  lanes (absorb-on-arrival, O(shards) memory);
                                  --scale-clients N runs the loopback scale
-                                 smoke (N senders, asserts the memory bound)
+                                 smoke (N senders, asserts the memory bound);
+                                 --streaming sends per-layer chunk frames
     qrr bench [suite] [options]  run the perf suites, write BENCH_*.json
                                  suite: kernels | round | all (default)
     qrr audit [--check]          static-analysis gate: SAFETY comments,
@@ -184,6 +185,10 @@ COMMON OPTIONS (exp/train):
                       byte-identical fault schedule)
     --quorum Q        round quorum <fraction>[:<max_repolls>[:<backoff_ms>]],
                       e.g. --quorum 0.8:3:25 (default 1:2:50)
+    --streaming       streamed rounds (DESIGN.md §13): ship each layer as
+                      its own chunk frame with decode-on-arrival reassembly
+                      and a double-buffered broadcast; bit-identical to the
+                      sequential default on clean networks
 
 ENVIRONMENT:
     QRR_THREADS       worker threads (default: cores, max 16; read once

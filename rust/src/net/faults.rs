@@ -14,9 +14,13 @@
 //! into a private [`Rng`] stream. Uplink sends may be issued or
 //! delivered in any thread order — the *set* of faulted
 //! `(client, round)` pairs is identical for a given seed, so every
-//! chaos run's `RoundMetrics` counters are byte-reproducible. Frames
-//! whose header does not peek (not a client update) pass through
-//! unfaulted.
+//! chaos run's `RoundMetrics` counters are byte-reproducible. Streamed
+//! chunk frames (DESIGN.md §13) get their own chunk-granular decisions
+//! keyed on `(seed, client, round, layer)` via
+//! [`FaultPlan::chunk_action`], so a chaos seed faults individual
+//! layers of a streamed upload just as reproducibly. Frames whose
+//! header peeks as neither a whole client update nor a chunk pass
+//! through unfaulted.
 //!
 //! Fault semantics on the uplink:
 //!
@@ -51,7 +55,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Result};
 
 use crate::net::transport::{Transport, TransportError};
-use crate::net::wire::Decoder;
+use crate::net::wire::{Decoder, CHUNK_HEADER_LEN};
 use crate::util::rng::{splitmix64, Rng};
 
 /// Per-direction fault probabilities, each in `[0, 1]`, summing to at
@@ -149,6 +153,9 @@ pub enum FaultAction {
 // domain-separation tags for the two directions
 const UP_TAG: u64 = 0x5550;
 const DOWN_TAG: u64 = 0x444F;
+// chunked (streamed) uplink frames decide per layer under their own tag
+const CHUNK_TAG: u64 = 0x4348;
+const LAYER_MIX: u64 = 0xA24B_AED4_963E_E407;
 
 impl FaultPlan {
     /// Parse the CLI grammar: a comma list of `key=rate` with keys
@@ -307,6 +314,24 @@ impl FaultPlan {
         Self::pick(&self.up, rng.f64())
     }
 
+    /// The uplink decision for one streamed chunk
+    /// `(client, round, layer)`. A pure function of the chunk's own
+    /// identity — independent of the whole-frame stream and of every
+    /// other layer — so streamed chaos runs reproduce their counters
+    /// exactly like whole-message runs. Partition and round-window
+    /// gating match [`up_action`](Self::up_action).
+    pub fn chunk_action(&self, client: u32, round: u64, layer: u32) -> FaultAction {
+        if !self.active(round) {
+            return FaultAction::Deliver;
+        }
+        if self.partitioned(client, round) {
+            return FaultAction::Drop;
+        }
+        let tag = CHUNK_TAG ^ (layer as u64).wrapping_mul(LAYER_MIX);
+        let mut rng = self.rng_for(tag, client as u64, round);
+        Self::pick(&self.up, rng.f64())
+    }
+
     /// The downlink decision for `round`'s broadcast. The broadcast is
     /// shared (one frame for the whole cohort), so the decision keys on
     /// the round alone, and the vocabulary folds to what the in-memory
@@ -405,13 +430,79 @@ impl FaultyTransport {
     fn bump(&self, f: impl FnOnce(&mut FaultStats)) {
         f(&mut self.stats.lock().expect("fault stats poisoned"));
     }
+
+    /// The chunk-frame half of `send`: chunk frames get chunk-granular
+    /// decisions from [`FaultPlan::chunk_action`]; anything that peeks
+    /// as neither a whole client update nor a chunk passes through
+    /// unfaulted. Corruption and truncation land in the chunk *body*
+    /// (header intact) so the frame still routes and the reassembly
+    /// path rejects the client's whole round as one decode failure.
+    fn chunk_send(&self, payload: &[u8]) -> Result<()> {
+        let Ok(h) = Decoder::peek_chunk_header(payload) else {
+            return self.inner.send(payload);
+        };
+        match self.plan.chunk_action(h.client_id, h.round, h.layer) {
+            FaultAction::Deliver => self.inner.send(payload),
+            FaultAction::Drop => {
+                self.bump(|s| s.dropped += 1);
+                Ok(())
+            }
+            FaultAction::Duplicate => {
+                self.bump(|s| s.duplicated += 1);
+                self.inner.send(payload)?;
+                self.inner.send(payload)
+            }
+            FaultAction::Corrupt => {
+                self.bump(|s| s.corrupted += 1);
+                let mut bytes = payload.to_vec();
+                FaultPlan::corrupt_in_place(&mut bytes, CHUNK_HEADER_LEN);
+                self.inner.send(&bytes)
+            }
+            FaultAction::Truncate => {
+                if payload.len() <= CHUNK_HEADER_LEN + 1 {
+                    // no body to cut: fold to drop
+                    self.bump(|s| s.dropped += 1);
+                    return Ok(());
+                }
+                self.bump(|s| s.truncated += 1);
+                let tag = CHUNK_TAG ^ 0x7C ^ (h.layer as u64).wrapping_mul(LAYER_MIX);
+                let mut rng = self.plan.rng_for(tag, h.client_id as u64, h.round);
+                let body = payload.len() - CHUNK_HEADER_LEN - 1;
+                let cut = CHUNK_HEADER_LEN + rng.below(body.max(1));
+                self.inner.send(&payload[..cut])
+            }
+            FaultAction::Disconnect => {
+                // one Closed per (client, round): the first faulted
+                // chunk fires it, the re-sent stream then goes through
+                let first = self
+                    .disconnected
+                    .lock()
+                    .expect("disconnect set poisoned")
+                    .insert((h.client_id, h.round));
+                if first {
+                    self.bump(|s| s.disconnects += 1);
+                    Err(TransportError::Closed.into())
+                } else {
+                    self.inner.send(payload)
+                }
+            }
+            FaultAction::Delay => {
+                self.bump(|s| s.delayed += 1);
+                self.held
+                    .lock()
+                    .expect("held queue poisoned")
+                    .push_back(payload.to_vec());
+                Ok(())
+            }
+        }
+    }
 }
 
 impl Transport for FaultyTransport {
     fn send(&self, payload: &[u8]) -> Result<()> {
         // decisions key on the frame's own identity, not arrival order
         let Ok(h) = Decoder::peek_header(payload) else {
-            return self.inner.send(payload);
+            return self.chunk_send(payload);
         };
         match self.plan.up_action(h.client_id, h.round) {
             FaultAction::Deliver => self.inner.send(payload),
@@ -647,6 +738,86 @@ mod tests {
         };
         assert_eq!(got, f);
         assert_eq!(t.stats().delayed, 1);
+    }
+
+    fn chunk_frames_for(client: u32, round: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(900 + client as u64);
+        let up = ClientUpdate::Sgd {
+            grads: vec![Tensor::randn(&[4, 3], &mut rng), Tensor::randn(&[4], &mut rng)],
+        };
+        Encoder::chunk_frames(&up, client, round)
+    }
+
+    #[test]
+    fn chunk_decisions_are_pure_and_layer_granular() {
+        let plan = FaultPlan {
+            seed: 11,
+            up: FaultRates { drop: 0.3, corrupt: 0.3, ..Default::default() },
+            ..Default::default()
+        };
+        for client in 0..20u32 {
+            for round in 0..10u64 {
+                for layer in 0..4u32 {
+                    let a = plan.chunk_action(client, round, layer);
+                    let b = plan.chunk_action(client, round, layer);
+                    assert_eq!(a, b, "chunk decision not pure at ({client}, {round}, {layer})");
+                }
+            }
+        }
+        // layers decide independently: somewhere two layers of the same
+        // (client, round) disagree…
+        let layer_differs = (0..20u32).any(|c| {
+            (0..10u64).any(|r| plan.chunk_action(c, r, 0) != plan.chunk_action(c, r, 1))
+        });
+        assert!(layer_differs, "layer does not influence chunk decisions");
+        // …and the chunk stream is independent of the whole-frame stream
+        let stream_differs = (0..20u32).any(|c| {
+            (0..10u64).any(|r| plan.chunk_action(c, r, 0) != plan.up_action(c, r))
+        });
+        assert!(stream_differs, "chunk stream shadows the whole-frame stream");
+    }
+
+    #[test]
+    fn faulty_transport_faults_chunks_individually() {
+        let run = |rates: FaultRates| {
+            let t = FaultyTransport::new(
+                Box::new(InProcTransport::new()),
+                FaultPlan { seed: 13, up: rates, ..Default::default() },
+            );
+            for f in chunk_frames_for(1, 0) {
+                t.send(&f).unwrap();
+            }
+            let mut got = Vec::new();
+            while let Ok(f) = t.recv_timeout(Duration::from_millis(10)) {
+                got.push(f);
+            }
+            (got, t.stats())
+        };
+
+        let (got, stats) = run(FaultRates { drop: 1.0, ..Default::default() });
+        assert!(got.is_empty());
+        assert_eq!(stats.dropped, 2, "each chunk dropped individually");
+
+        let (got, stats) = run(FaultRates { duplicate: 1.0, ..Default::default() });
+        assert_eq!(got.len(), 4);
+        assert_eq!(stats.duplicated, 2, "each chunk duplicated individually");
+
+        let (got, stats) = run(FaultRates { corrupt: 1.0, ..Default::default() });
+        assert_eq!(got.len(), 2);
+        assert_eq!(stats.corrupted, 2);
+        for f in &got {
+            // header still routes; the body decode fails
+            assert!(Decoder::peek_chunk_header(f).is_ok());
+            assert!(Decoder::decode_chunk(f).is_err());
+        }
+
+        let (got, stats) = run(FaultRates { truncate: 1.0, ..Default::default() });
+        assert_eq!(got.len(), 2);
+        assert_eq!(stats.truncated, 2);
+        for f in &got {
+            assert!(Decoder::peek_chunk_header(f).is_ok());
+            assert!(Decoder::decode_chunk(f).is_err());
+        }
     }
 
     #[test]

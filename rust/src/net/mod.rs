@@ -28,4 +28,7 @@ pub use transport::{
     Disconnect, FrameAssembler, FrameError, InProcTransport, TcpClient, TcpServerTransport,
     TcpTransport, Transport, TransportError, MAX_FRAME_BYTES,
 };
-pub use wire::{ClientUpdate, Decoder, Encoder, ServerUpdate, WireError, WireHeader};
+pub use wire::{
+    ChunkBody, ChunkHeader, ClientUpdate, Decoder, Encoder, ServerUpdate, WireError, WireHeader,
+    CHUNK_HEADER_LEN,
+};

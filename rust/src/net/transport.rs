@@ -629,6 +629,43 @@ mod tests {
     }
 
     #[test]
+    fn chunk_frames_trickle_through_assembler_and_reassemble_bit_exact() {
+        // a streamed upload crossing a real socket one byte at a time:
+        // each per-layer chunk frame completes exactly at its last
+        // byte, decodes on arrival, and the reassembled update is
+        // bit-identical to the whole-message wire encoding
+        use crate::net::wire::{ClientUpdate, Decoder, Encoder};
+        let mut rng = crate::util::Rng::new(0x7C1F);
+        let grads: Vec<crate::tensor::Tensor> = [vec![5usize, 4], vec![5]]
+            .iter()
+            .map(|s| crate::tensor::Tensor::randn(s, &mut rng))
+            .collect();
+        let update = ClientUpdate::Sgd { grads };
+        let whole = Encoder::new(&update, 9, 4);
+        let mut stream = Vec::new();
+        for f in Encoder::chunk_frames(&update, 9, 4) {
+            stream.extend_from_slice(&framed(&f));
+        }
+        let mut asm = FrameAssembler::new(MAX_FRAME_BYTES);
+        let mut bodies = Vec::new();
+        let mut scheme = 0u8;
+        for b in &stream {
+            for frame in asm.push(std::slice::from_ref(b)).unwrap() {
+                let (h, body) = Decoder::decode_chunk(&frame).unwrap();
+                assert_eq!(h.client_id, 9);
+                assert_eq!(h.round, 4);
+                assert_eq!(h.layer as usize, bodies.len());
+                assert_eq!(h.last, bodies.len() + 1 == update.n_layers());
+                scheme = h.scheme;
+                bodies.push(body);
+            }
+        }
+        assert!(!asm.mid_frame());
+        let back = Decoder::assemble_update(scheme, bodies).unwrap();
+        assert_eq!(Encoder::new(&back, 9, 4), whole);
+    }
+
+    #[test]
     fn inproc_roundtrip() {
         let t = InProcTransport::new();
         t.send(b"hello").unwrap();

@@ -53,6 +53,18 @@ const SERVER_VERSION: u8 = 1;
 /// never be mistaken for a resync (or vice versa) by a bit flip in the
 /// body.
 const SNAPSHOT_MAGIC: u32 = 0x5152_5253;
+/// "QRRC" — a chunked per-layer uplink frame (streaming mode): one
+/// wire entry per frame so the server can decode-and-absorb layer *l*
+/// while layer *l+1* is still in flight.
+const CHUNK_MAGIC: u32 = 0x5152_5243;
+const CHUNK_VERSION: u8 = 1;
+/// Chunk flag bit 0: this frame carries the final layer. Redundant
+/// with `layer + 1 == n_layers` and validated against it, so a bit
+/// flip in either encoding is caught at peek time.
+const CHUNK_FLAG_LAST: u8 = 1;
+/// Fixed chunk header: magic u32 | version u8 | scheme u8 | flags u8 |
+/// client_id u32 | round u64 | layer u32 | n_layers u32.
+pub const CHUNK_HEADER_LEN: usize = 4 + 1 + 1 + 1 + 4 + 8 + 4 + 4;
 
 /// Errors produced when decoding a wire message.
 #[derive(Debug, Error)]
@@ -69,6 +81,11 @@ pub enum WireError {
     /// scheme tag not recognised
     #[error("unknown scheme tag {0}")]
     UnknownScheme(u8),
+    /// chunk header internally inconsistent (layer out of range, zero
+    /// layer count, last-flag disagreeing with the indices, unknown
+    /// flag bits) or a chunk body whose kind disagrees with its scheme
+    #[error("invalid chunk frame")]
+    BadChunk,
 }
 
 /// A client update, scheme-tagged.
@@ -125,6 +142,81 @@ impl ClientUpdate {
             ClientUpdate::Qrr { msgs } => msgs.iter().map(param_msg_len).sum(),
         };
         HEADER + body
+    }
+
+    /// Number of per-layer chunk frames this update splits into — one
+    /// wire entry per frame, so it equals the whole-message
+    /// `n_entries`.
+    pub fn n_layers(&self) -> usize {
+        match self {
+            ClientUpdate::Sgd { grads } => grads.len(),
+            ClientUpdate::Slaq { msg } => msg.params.len(),
+            ClientUpdate::Qrr { msgs } => msgs.len(),
+        }
+    }
+
+    /// Exact serialized size of the chunk frame carrying `layer`,
+    /// mirroring [`Encoder::chunk`] byte for byte: the fixed chunk
+    /// header plus that layer's whole-message entry encoding,
+    /// unchanged.
+    pub fn chunk_wire_len(&self, layer: usize) -> usize {
+        CHUNK_HEADER_LEN
+            + match self {
+                ClientUpdate::Sgd { grads } => 1 + dense_len(&grads[layer]),
+                ClientUpdate::Slaq { msg } => 1 + q_len(&msg.params[layer]),
+                ClientUpdate::Qrr { msgs } => param_msg_len(&msgs[layer]),
+            }
+    }
+}
+
+/// The fixed header of one per-layer **chunk** frame (streaming mode).
+///
+/// Chunks carry the same per-entry encoding as the sequential frame —
+/// one entry per chunk — so reassembling every layer reproduces the
+/// whole-message [`ClientUpdate`] bit for bit, and per-layer
+/// `payload_bits` sum to the whole-message total by construction.
+/// Internal consistency (layer within range, last-flag agreeing with
+/// the indices) is validated at peek time; the body stays attacker
+/// data until [`Decoder::decode_chunk`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkHeader {
+    /// scheme tag (0 = SGD, 1 = SLAQ, 2 = QRR)
+    pub scheme: u8,
+    /// sending client
+    pub client_id: u32,
+    /// FL round index
+    pub round: u64,
+    /// 0-based layer index within the update (`< n_layers`)
+    pub layer: u32,
+    /// total layer count the sender declares (same in every chunk of
+    /// one update; untrusted until the receiver checks it against the
+    /// model spec)
+    pub n_layers: u32,
+    /// `true` ⇔ the final layer (`layer + 1 == n_layers`)
+    pub last: bool,
+}
+
+/// The decoded body of one chunk frame: exactly one layer, in the same
+/// representation the whole-message decoder produces for that entry.
+#[derive(Debug, Clone)]
+pub enum ChunkBody {
+    /// scheme 0 (SGD): one dense-f32 gradient
+    Dense(Tensor),
+    /// scheme 1 (SLAQ): one quantized innovation
+    Quantized(Quantized),
+    /// scheme 2 (QRR): one per-parameter factor message
+    Msg(ParamMsg),
+}
+
+impl ChunkBody {
+    /// Paper bits accounting for this layer alone; summed over an
+    /// update's chunks this equals [`ClientUpdate::payload_bits`].
+    pub fn payload_bits(&self) -> u64 {
+        match self {
+            ChunkBody::Dense(t) => 32 * t.len() as u64,
+            ChunkBody::Quantized(q) => 32 + q.beta as u64 * q.len as u64,
+            ChunkBody::Msg(m) => m.wire_bits(),
+        }
     }
 }
 
@@ -277,6 +369,56 @@ impl Encoder {
         }
         debug_assert_eq!(e.buf.len(), update.wire_len(), "wire_len drifted from encoder");
         e.buf
+    }
+
+    /// Serialize layer `layer` of `update` as one chunk frame
+    /// (`"QRRC"`) into a fresh, exactly-sized buffer. The body is the
+    /// layer's whole-message entry encoding, unchanged — reassembling
+    /// every chunk reproduces [`Encoder::new`]'s update bit for bit.
+    pub fn chunk(update: &ClientUpdate, layer: usize, client_id: u32, round: u64) -> Vec<u8> {
+        let n_layers = update.n_layers();
+        debug_assert!(layer < n_layers, "chunk layer out of range");
+        let mut e = Encoder { buf: Vec::with_capacity(update.chunk_wire_len(layer)) };
+        e.u32(CHUNK_MAGIC);
+        e.u8(CHUNK_VERSION);
+        e.u8(update.scheme_tag());
+        e.u8(if layer + 1 == n_layers { CHUNK_FLAG_LAST } else { 0 });
+        e.u32(client_id);
+        e.u64(round);
+        e.u32(layer as u32);
+        e.u32(n_layers as u32);
+        match update {
+            ClientUpdate::Sgd { grads } => {
+                e.u8(0);
+                e.dense(&grads[layer]);
+            }
+            ClientUpdate::Slaq { msg } => {
+                e.u8(1);
+                e.quantized(&msg.params[layer]);
+            }
+            ClientUpdate::Qrr { msgs } => e.param_msg(&msgs[layer]),
+        }
+        debug_assert_eq!(
+            e.buf.len(),
+            update.chunk_wire_len(layer),
+            "chunk_wire_len drifted from encoder"
+        );
+        e.buf
+    }
+
+    /// All per-layer chunk frames of `update` in layer order — the
+    /// streaming uplink's send units. Each layer is serialized lazily
+    /// inside the loop, so a caller transmitting frame *l* as it is
+    /// returned overlaps the serialize of layer *l+1* with the send of
+    /// layer *l* (see `compress::pipeline::PipelineClient::
+    /// produce_chunked` for the emission seam).
+    pub fn chunk_frames(update: &ClientUpdate, client_id: u32, round: u64) -> Vec<Vec<u8>> {
+        let n = update.n_layers();
+        let mut frames = Vec::with_capacity(n);
+        for layer in 0..n {
+            frames.push(Self::chunk(update, layer, client_id, round));
+        }
+        frames
     }
 
     fn param_msg(&mut self, m: &ParamMsg) {
@@ -484,6 +626,104 @@ impl<'a> Decoder<'a> {
             msgs.push(d.param_msg()?);
         }
         Ok(ServerUpdate { seq, round, msgs, snapshot })
+    }
+
+    /// Validate and read a chunk frame's fixed header only — the
+    /// streaming analogue of [`Self::peek_header`], and like it the
+    /// routing entry point: the session thread peeks
+    /// `client_id`/`round`/`layer` to admit and route a chunk, then
+    /// the body decode runs on the owning shard's lane.
+    ///
+    /// Internal consistency is enforced here so routing can trust the
+    /// indices: unknown flag bits, a zero layer count, `layer ≥
+    /// n_layers`, or a last-flag disagreeing with the indices are all
+    /// typed rejects. The body (and `n_layers` against the model spec)
+    /// stays untrusted until [`Self::decode_chunk`] and reassembly.
+    pub fn peek_chunk_header(buf: &'a [u8]) -> Result<ChunkHeader, WireError> {
+        let mut d = Decoder { buf, pos: 0 };
+        if d.u32()? != CHUNK_MAGIC || d.u8()? != CHUNK_VERSION {
+            return Err(WireError::BadHeader);
+        }
+        let scheme = d.u8()?;
+        if scheme > 2 {
+            return Err(WireError::UnknownScheme(scheme));
+        }
+        let flags = d.u8()?;
+        let client_id = d.u32()?;
+        let round = d.u64()?;
+        let layer = d.u32()?;
+        let n_layers = d.u32()?;
+        if flags & !CHUNK_FLAG_LAST != 0 || n_layers == 0 || layer >= n_layers {
+            return Err(WireError::BadChunk);
+        }
+        let last = flags & CHUNK_FLAG_LAST != 0;
+        if last != (layer + 1 == n_layers) {
+            return Err(WireError::BadChunk);
+        }
+        Ok(ChunkHeader { scheme, client_id, round, layer, n_layers, last })
+    }
+
+    /// Decode one chunk frame produced by [`Encoder::chunk`]: the
+    /// validated header plus the single layer entry it carries, in
+    /// whole-message entry encoding.
+    pub fn decode_chunk(buf: &'a [u8]) -> Result<(ChunkHeader, ChunkBody), WireError> {
+        let h = Self::peek_chunk_header(buf)?;
+        let mut d = Decoder { buf, pos: CHUNK_HEADER_LEN };
+        let body = match h.scheme {
+            0 => {
+                d.expect_kind(0)?;
+                ChunkBody::Dense(d.dense()?)
+            }
+            1 => {
+                d.expect_kind(1)?;
+                ChunkBody::Quantized(d.quantized()?)
+            }
+            _ => ChunkBody::Msg(d.param_msg()?),
+        };
+        Ok((h, body))
+    }
+
+    /// Rebuild the whole-message [`ClientUpdate`] from every layer's
+    /// decoded chunk body, in layer order. Bodies are the same
+    /// per-entry decodes [`Self::decode`] performs, so the reassembled
+    /// update — and its `payload_bits` — is bit-identical to decoding
+    /// the sequential frame. A body whose kind disagrees with `scheme`
+    /// (only reachable if the caller mixed schemes across one client's
+    /// chunks) is a typed error, never a panic.
+    pub fn assemble_update(scheme: u8, bodies: Vec<ChunkBody>) -> Result<ClientUpdate, WireError> {
+        match scheme {
+            0 => {
+                let mut grads = Vec::with_capacity(bodies.len());
+                for b in bodies {
+                    match b {
+                        ChunkBody::Dense(t) => grads.push(t),
+                        _ => return Err(WireError::BadChunk),
+                    }
+                }
+                Ok(ClientUpdate::Sgd { grads })
+            }
+            1 => {
+                let mut params = Vec::with_capacity(bodies.len());
+                for b in bodies {
+                    match b {
+                        ChunkBody::Quantized(q) => params.push(q),
+                        _ => return Err(WireError::BadChunk),
+                    }
+                }
+                Ok(ClientUpdate::Slaq { msg: SlaqMsg { params } })
+            }
+            2 => {
+                let mut msgs = Vec::with_capacity(bodies.len());
+                for b in bodies {
+                    match b {
+                        ChunkBody::Msg(m) => msgs.push(m),
+                        _ => return Err(WireError::BadChunk),
+                    }
+                }
+                Ok(ClientUpdate::Qrr { msgs })
+            }
+            s => Err(WireError::UnknownScheme(s)),
+        }
     }
 
     fn param_msg(&mut self) -> Result<ParamMsg, WireError> {
@@ -1306,5 +1546,182 @@ mod tests {
                 }
             },
         );
+    }
+
+    // ------------------------- chunked per-layer frames ----------------
+    // The streaming uplink's frame family ("QRRC"): one entry per
+    // frame, validated under the same no-panic contract as the
+    // whole-message decoder. The load-bearing property is
+    // bit-identity: reassembling every chunk must reproduce the
+    // sequential frame's update exactly, bits accounting included.
+
+    /// Raw chunk header bytes, field by field — the hostile-input
+    /// builder (the encoder can't emit inconsistent headers).
+    fn chunk_header_bytes(scheme: u8, flags: u8, layer: u32, n_layers: u32) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&CHUNK_MAGIC.to_le_bytes());
+        b.push(CHUNK_VERSION);
+        b.push(scheme);
+        b.push(flags);
+        b.extend_from_slice(&7u32.to_le_bytes()); // client_id
+        b.extend_from_slice(&1u64.to_le_bytes()); // round
+        b.extend_from_slice(&layer.to_le_bytes());
+        b.extend_from_slice(&n_layers.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn prop_chunk_frames_reassemble_bit_identical_to_whole_message() {
+        forall(
+            0xB9,
+            crate::testing::cases(60),
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                let client_id = g.usize_in(0, 1000) as u32;
+                let round = g.usize_in(0, 100_000) as u64;
+                (gen_update_of_kind(g, kind), client_id, round)
+            },
+            |(up, client_id, round)| {
+                let whole = Encoder::new(&up, client_id, round);
+                let frames = Encoder::chunk_frames(&up, client_id, round);
+                assert_eq!(frames.len(), up.n_layers());
+                let mut bodies = Vec::new();
+                let mut chunk_bits = 0u64;
+                for (i, f) in frames.iter().enumerate() {
+                    assert_eq!(f.len(), up.chunk_wire_len(i), "chunk wire_len must be exact");
+                    let h = Decoder::peek_chunk_header(f).unwrap();
+                    assert_eq!(h.client_id, client_id);
+                    assert_eq!(h.round, round);
+                    assert_eq!(h.layer as usize, i);
+                    assert_eq!(h.n_layers as usize, up.n_layers());
+                    assert_eq!(h.last, i + 1 == up.n_layers());
+                    let (h2, body) = Decoder::decode_chunk(f).unwrap();
+                    assert_eq!(h, h2);
+                    chunk_bits += body.payload_bits();
+                    bodies.push(body);
+                }
+                assert_eq!(chunk_bits, up.payload_bits(), "chunk bits must sum to the total");
+                let scheme = Decoder::peek_chunk_header(&frames[0]).unwrap().scheme;
+                let back = Decoder::assemble_update(scheme, bodies).unwrap();
+                // the reassembled update re-serializes to the exact
+                // sequential frame — bit-identity, not just equivalence
+                assert_eq!(Encoder::new(&back, client_id, round), whole);
+            },
+        );
+    }
+
+    #[test]
+    fn prop_chunk_truncation_is_an_error_never_a_panic() {
+        forall(
+            0xBA,
+            crate::testing::cases(60),
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                let up = gen_update_of_kind(g, kind);
+                let layer = g.usize_in(0, up.n_layers() - 1);
+                let bytes = Encoder::chunk(&up, layer, 1, 2);
+                let cut = g.usize_in(0, bytes.len() - 1);
+                (bytes, cut)
+            },
+            |(bytes, cut)| {
+                assert!(
+                    Decoder::decode_chunk(&bytes[..cut]).is_err(),
+                    "cut {cut}/{} decoded",
+                    bytes.len()
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn prop_chunk_random_byte_corruption_never_panics() {
+        forall(
+            0xBB,
+            crate::testing::cases(60),
+            |g| {
+                let kind = g.usize_in(0, 3) as u8;
+                let up = gen_update_of_kind(g, kind);
+                let layer = g.usize_in(0, up.n_layers() - 1);
+                let mut bytes = Encoder::chunk(&up, layer, 1, 2);
+                let pos = g.usize_in(0, bytes.len() - 1);
+                let flip = g.usize_in(1, 255) as u8;
+                bytes[pos] ^= flip;
+                bytes
+            },
+            |bytes| {
+                // a flipped payload bit may still decode; the contract
+                // is a typed result, never a panic
+                let _ = Decoder::decode_chunk(&bytes);
+            },
+        );
+    }
+
+    #[test]
+    fn chunk_header_consistency_is_enforced_at_peek() {
+        // layer index out of range
+        let b = chunk_header_bytes(0, 0, 3, 3);
+        assert!(matches!(Decoder::peek_chunk_header(&b), Err(WireError::BadChunk)));
+        // zero declared layers
+        let b = chunk_header_bytes(0, CHUNK_FLAG_LAST, 0, 0);
+        assert!(matches!(Decoder::peek_chunk_header(&b), Err(WireError::BadChunk)));
+        // final layer without the last flag
+        let b = chunk_header_bytes(0, 0, 2, 3);
+        assert!(matches!(Decoder::peek_chunk_header(&b), Err(WireError::BadChunk)));
+        // last flag on a non-final layer
+        let b = chunk_header_bytes(0, CHUNK_FLAG_LAST, 0, 3);
+        assert!(matches!(Decoder::peek_chunk_header(&b), Err(WireError::BadChunk)));
+        // unknown flag bits
+        let b = chunk_header_bytes(0, 0x02, 0, 3);
+        assert!(matches!(Decoder::peek_chunk_header(&b), Err(WireError::BadChunk)));
+        // unknown scheme fails at peek time
+        let b = chunk_header_bytes(9, CHUNK_FLAG_LAST, 0, 1);
+        assert!(matches!(
+            Decoder::peek_chunk_header(&b),
+            Err(WireError::UnknownScheme(9))
+        ));
+        // header truncation sweep
+        let b = chunk_header_bytes(0, CHUNK_FLAG_LAST, 0, 1);
+        assert_eq!(b.len(), CHUNK_HEADER_LEN);
+        for cut in 0..b.len() {
+            assert!(
+                matches!(Decoder::peek_chunk_header(&b[..cut]), Err(WireError::Truncated(_))),
+                "cut={cut}"
+            );
+        }
+        // a consistent header peeks clean but has no body to decode
+        assert!(Decoder::peek_chunk_header(&b).is_ok());
+        assert!(Decoder::decode_chunk(&b).is_err());
+    }
+
+    #[test]
+    fn chunk_and_whole_message_frames_do_not_cross_decode() {
+        let mut rng = Rng::new(113);
+        let up = ClientUpdate::Sgd { grads: vec![Tensor::randn(&[3, 2], &mut rng)] };
+        let whole = Encoder::new(&up, 2, 5);
+        let chunk = Encoder::chunk(&up, 0, 2, 5);
+        // chunk bytes are not a whole-message frame…
+        assert!(matches!(Decoder::peek_header(&chunk), Err(WireError::BadHeader)));
+        assert!(matches!(Decoder::decode(&chunk), Err(WireError::BadHeader)));
+        // …whole-message bytes are not a chunk…
+        assert!(matches!(Decoder::peek_chunk_header(&whole), Err(WireError::BadHeader)));
+        assert!(matches!(Decoder::decode_chunk(&whole), Err(WireError::BadHeader)));
+        // …and neither family is a server broadcast
+        assert!(matches!(Decoder::decode_server(&chunk), Err(WireError::BadHeader)));
+    }
+
+    #[test]
+    fn assemble_update_rejects_scheme_body_mismatch() {
+        let mut rng = Rng::new(114);
+        let t = Tensor::randn(&[4], &mut rng);
+        // a dense body under the SLAQ scheme is a typed error
+        assert!(matches!(
+            Decoder::assemble_update(1, vec![ChunkBody::Dense(t.clone())]),
+            Err(WireError::BadChunk)
+        ));
+        // unknown scheme tag
+        assert!(matches!(
+            Decoder::assemble_update(7, vec![ChunkBody::Dense(t)]),
+            Err(WireError::UnknownScheme(7))
+        ));
     }
 }

@@ -6,7 +6,9 @@
 //! The CI chaos-smoke matrix drives `env_driven_chaos_smoke` with
 //! `QRR_CHAOS_SEED` / `QRR_CHAOS_MIX` (3 seeds × 3 mixes), plus two
 //! `QRR_CHAOS_CONTROLLER` legs (linkaware, aimd) that hold the
-//! adaptive control plane to the same determinism bar.
+//! adaptive control plane to the same determinism bar, and
+//! `QRR_CHAOS_STREAMING` legs that run the streamed (chunked-framing)
+//! path under the same mixes (DESIGN.md §13).
 
 use std::time::Duration;
 
@@ -193,6 +195,44 @@ fn quorum_lets_rounds_proceed_without_stragglers() {
 }
 
 #[test]
+fn streamed_chaos_keeps_accounting_exact() {
+    // chunk-granular faults (DESIGN.md §13): a client whose upload
+    // loses one layer chunk times out at the deadline, one whose chunk
+    // is corrupted in flight is counted corrupt via the digest's
+    // per-client failure flags — and never both, so the
+    // delivered + corrupt + timed-out + dropped partition stays exact.
+    // Held to the same determinism bar as the whole-frame tests.
+    let spec = "drop=0.1,corrupt=0.1,dup=0.1,down.drop=0.2";
+    let mut cfg = chaos_cfg();
+    cfg.streaming = true;
+
+    let total_corrupt =
+        |h: &History| h.rounds.iter().map(|r| r.clients_corrupt as u64).sum::<u64>();
+    let mut chosen = None;
+    for seed in [7u64, 11, 23, 41] {
+        let mut plan = FaultPlan::parse(spec).unwrap();
+        plan.seed = seed;
+        let h = run_inproc(&cfg, &plan, "0.5:2:5");
+        assert_eq!(h.iterations(), 10, "seed {seed}: streamed chaos run did not complete");
+        assert_accounting(&h, 3);
+        if h.total_timed_out() > 0 && total_corrupt(&h) > 0 {
+            chosen = Some((plan, h));
+            break;
+        }
+    }
+    let (plan, first) = chosen.expect("no scanned seed exercised both streamed loss paths");
+
+    let second = run_inproc(&cfg, &plan, "0.5:2:5");
+    assert_eq!(
+        counters(&first),
+        counters(&second),
+        "same seed, different streamed fault schedule"
+    );
+    assert!(first.total_comms() > 0, "no streamed upload survived the chaos plan");
+    assert!(first.evals.last().unwrap().loss.is_finite());
+}
+
+#[test]
 fn env_driven_chaos_smoke() {
     // CI matrix entry point: QRR_CHAOS_SEED × QRR_CHAOS_MIX
     // (drop2 | corrupt1 | dupreorder), run over TCP loopback twice
@@ -213,6 +253,11 @@ fn env_driven_chaos_smoke() {
     let mut cfg = chaos_cfg();
     cfg.iters = 5;
     cfg.eval_every = 5;
+    // streamed legs: same mixes, but every upload crosses as per-layer
+    // chunk frames with chunk-granular fault decisions (DESIGN.md §13)
+    if std::env::var("QRR_CHAOS_STREAMING").map(|v| !v.is_empty()).unwrap_or(false) {
+        cfg.streaming = true;
+    }
 
     let controller = std::env::var("QRR_CHAOS_CONTROLLER")
         .ok()
